@@ -1,0 +1,56 @@
+//! E1 — Quickstart (paper Fig. 2 / aihwkit example 01).
+//!
+//! Defines an `AnalogLinear(4, 2)` layer on a ReRAM-ES crossbar, trains it
+//! with the analog-pulsed `AnalogSGD` on a toy regression task, and prints
+//! the loss curve. This is the Rust rendition of the paper's code listing:
+//!
+//! ```text
+//! rpu_config = SingleRPUConfig(device=ReRamESPresetDevice())
+//! model      = AnalogLinear(4, 2, bias=True, rpu_config=config)
+//! opt        = AnalogSGD(model.parameters(), lr=0.1)
+//! for epoch in range(100): ... loss.backward(); opt.step()
+//! ```
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aihwsim::config::{presets, RPUConfig};
+use aihwsim::data::regression_toy;
+use aihwsim::nn::loss::mse_loss;
+use aihwsim::nn::{AnalogLinear, Module};
+use aihwsim::optim::AnalogSGD;
+use aihwsim::util::rng::Rng;
+
+fn main() {
+    // Define crossbar (RPU) config with the ReRAM exponential-step preset.
+    let rpu_config = RPUConfig::single(presets::reram_es());
+    let mut rng = Rng::new(42);
+
+    // Define a single-layer analog network.
+    let mut model = AnalogLinear::new(4, 2, true, rpu_config, &mut rng);
+
+    // Define the analog-aware optimizer.
+    let mut opt = AnalogSGD::new(0.1);
+
+    // Data: y = W·x + b for a fixed random W.
+    let (x, y) = regression_toy(32, &mut rng);
+
+    println!("epoch,loss");
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for epoch in 0..200 {
+        let pred = model.forward(&x); // analog forward pass
+        let (loss, grad) = mse_loss(&pred, &y);
+        model.backward(&grad); // analog backward pass
+        opt.step(&mut model); // analog pulsed update
+        if epoch == 0 {
+            first = loss;
+        }
+        last = loss;
+        if epoch % 20 == 0 || epoch == 199 {
+            println!("{epoch},{loss:.5}");
+        }
+    }
+    println!("# loss {first:.4} -> {last:.4} (device: ReRam-ES, pulsed SGD)");
+    assert!(last < first * 0.7, "training must reduce the loss");
+    println!("# quickstart OK");
+}

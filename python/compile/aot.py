@@ -1,0 +1,167 @@
+"""AOT pipeline: lower the L2 model functions to HLO *text* artifacts that
+the Rust runtime loads via the PJRT C API.
+
+HLO text (NOT `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the published xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifacts (written to --out, default ../artifacts):
+  hwa_train_step.hlo.txt   (params..., x, onehot, seed, lr) -> (params', loss)
+  fp_train_step.hlo.txt    (params..., x, onehot, lr)       -> (params', loss)
+  analog_infer.hlo.txt     (params..., x, seed)             -> (logp,)
+  analog_mvm.hlo.txt       (x, w, nout, nw)                 -> (y,)  kernel-only
+  manifest.json            shapes/dtypes/argument order of each artifact
+
+Run once at build time: `make artifacts`. Nothing here executes at request
+time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.analog_mvm import analog_mvm
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def param_specs():
+    out = []
+    for i in range(len(model.LAYER_SIZES) - 1):
+        out.append(spec((model.LAYER_SIZES[i], model.LAYER_SIZES[i + 1])))
+        out.append(spec((model.LAYER_SIZES[i + 1],)))
+    return out
+
+
+def build_artifacts(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    b = model.BATCH
+    nin, nout = model.LAYER_SIZES[0], model.LAYER_SIZES[-1]
+    pshapes = [jax.ShapeDtypeStruct(tuple(s["shape"]), F32) for s in param_specs()]
+    x = jax.ShapeDtypeStruct((b, nin), F32)
+    onehot = jax.ShapeDtypeStruct((b, nout), F32)
+    seed = jax.ShapeDtypeStruct((), I32)
+    lr = jax.ShapeDtypeStruct((), F32)
+
+    manifest = {"layer_sizes": list(model.LAYER_SIZES), "batch": b, "artifacts": {}}
+
+    def emit(name, fn, *args, arg_names, num_outputs):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_names,
+            "num_outputs": num_outputs,
+        }
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    nparams = len(pshapes)
+    pnames = []
+    for i in range(nparams // 2):
+        pnames += [f"w{i + 1}", f"b{i + 1}"]
+
+    def hwa_step(*args):
+        params = list(args[:nparams])
+        x_, onehot_, seed_, lr_ = args[nparams:]
+        return model.hwa_train_step(params, x_, onehot_, seed_, lr_)
+
+    emit(
+        "hwa_train_step",
+        hwa_step,
+        *pshapes,
+        x,
+        onehot,
+        seed,
+        lr,
+        arg_names=pnames + ["x", "onehot", "seed", "lr"],
+        num_outputs=nparams + 1,
+    )
+
+    def fp_step(*args):
+        params = list(args[:nparams])
+        x_, onehot_, lr_ = args[nparams:]
+        return model.fp_train_step(params, x_, onehot_, lr_)
+
+    emit(
+        "fp_train_step",
+        fp_step,
+        *pshapes,
+        x,
+        onehot,
+        lr,
+        arg_names=pnames + ["x", "onehot", "lr"],
+        num_outputs=nparams + 1,
+    )
+
+    def infer(*args):
+        params = list(args[:nparams])
+        x_, seed_ = args[nparams:]
+        return (model.analog_infer(params, x_, seed_),)
+
+    emit(
+        "analog_infer",
+        infer,
+        *pshapes,
+        x,
+        seed,
+        arg_names=pnames + ["x", "seed"],
+        num_outputs=1,
+    )
+
+    # Kernel-only artifact: one fused analog MVM (runtime smoke test + L1
+    # bench target).
+    k, n = 256, 128
+    emit(
+        "analog_mvm",
+        lambda x_, w_, no_, nw_: (analog_mvm(x_, w_, no_, nw_),),
+        jax.ShapeDtypeStruct((b, k), F32),
+        jax.ShapeDtypeStruct((k, n), F32),
+        jax.ShapeDtypeStruct((b, n), F32),
+        jax.ShapeDtypeStruct((b, n), F32),
+        arg_names=["x", "w", "noise_out", "noise_w"],
+        num_outputs=1,
+    )
+    manifest["artifacts"]["analog_mvm"]["shapes"] = {
+        "x": [b, k],
+        "w": [k, n],
+        "noise_out": [b, n],
+        "noise_w": [b, n],
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

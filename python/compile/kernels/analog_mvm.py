@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: the fused analog matrix-vector multiply of Eq. (1).
+
+The paper's RPUCUDA core fuses DAC discretization, the MVM, weight/output
+noise injection, and ADC clipping into single CUDA kernels. On TPU the same
+fusion is expressed as one Pallas kernel tiled for VMEM/the MXU (see
+DESIGN.md §Hardware-Adaptation):
+
+  * the (batch, in) x (in, out) matmul is tiled into (BB, K) x (K, BN)
+    VMEM blocks feeding the MXU;
+  * the DAC quantize/clip of the inputs is fused into the x-block load;
+  * weight read noise is *output-referred*: sum_j sigma_w xi_ij x_j is
+    N(0, sigma_w^2 ||x||^2) per output, so the kernel adds
+    sigma_w * ||x_row|| * xi with xi ~ N(0,1) supplied as an input tensor
+    (distribution-exact, same trick as the Rust core and RPUCUDA);
+  * output noise and ADC clip/quantize are fused into the store.
+
+Noise tensors are sampled in L2 (jax.random, threaded PRNG key) and passed
+in, keeping the kernel deterministic and replayable.
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness is what we validate here (see ref.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default IO parameters (mirror rust config::io defaults; resolutions are
+# step sizes as a fraction of the full range, see IOParameters docs).
+DEFAULT_IO = dict(
+    inp_bound=1.0,
+    inp_res=1.0 / 126.0,  # 7-bit DAC
+    out_bound=12.0,
+    out_res=1.0 / 510.0,  # 9-bit ADC
+    out_noise=0.06,
+    w_noise=0.0,
+)
+
+
+def _quantize(v, step):
+    if step <= 0.0:
+        return v
+    return jnp.round(v / step) * step
+
+
+def _analog_mvm_kernel(
+    x_ref, w_ref, nout_ref, nw_ref, scale_ref, o_ref, *, io
+):
+    """One (BB, BN) output block: fused DAC -> MXU matmul -> noise -> ADC.
+
+    scale_ref holds the per-row noise-management scale (absmax), computed
+    in L2 so every grid column sees the same scale.
+    """
+    x = x_ref[...]  # (BB, K)
+    scale = scale_ref[...]  # (BB, 1)
+    # --- DAC: scale into [-inp_bound, inp_bound], clip, quantize ---
+    inp_step = io["inp_res"] * 2.0 * io["inp_bound"]
+    xs = x / scale
+    xs = jnp.clip(xs, -io["inp_bound"], io["inp_bound"])
+    xq = _quantize(xs, inp_step)
+    # --- analog MVM on the MXU ---
+    acc = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    # --- weight read noise (output-referred, distribution-exact) ---
+    if io["w_noise"] > 0.0:
+        xnorm = jnp.sqrt(jnp.sum(xq * xq, axis=-1, keepdims=True))
+        acc = acc + io["w_noise"] * xnorm * nw_ref[...]
+    # --- output noise ---
+    if io["out_noise"] > 0.0:
+        acc = acc + io["out_noise"] * nout_ref[...]
+    # --- ADC: clip, quantize, undo input scaling ---
+    out_step = io["out_res"] * 2.0 * io["out_bound"]
+    acc = jnp.clip(acc, -io["out_bound"], io["out_bound"])
+    acc = _quantize(acc, out_step)
+    o_ref[...] = acc * scale
+
+
+def analog_mvm(x, w, noise_out, noise_w, io=None, block_b=128, block_n=128):
+    """Fused analog MVM: y = f_adc(f_dac(x) @ w + noise) (Eq. 1).
+
+    Args:
+      x: (B, K) inputs.
+      w: (K, N) weights in normalized units.
+      noise_out: (B, N) standard normals (output noise).
+      noise_w: (B, N) standard normals (weight read noise).
+      io: dict of IO parameters (DEFAULT_IO fields).
+
+    Returns (B, N) outputs.
+    """
+    io = {**DEFAULT_IO, **(io or {})}
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert noise_out.shape == (b, n)
+    assert noise_w.shape == (b, n)
+    # noise management: per-row absmax input scale (computed outside the
+    # kernel so all column blocks agree)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+
+    bb = min(block_b, b)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(b, bb), pl.cdiv(n, bn))
+    kernel = functools.partial(_analog_mvm_kernel, io=io)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, noise_out, noise_w, scale)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the analog MVM kernel (the correctness reference).
+
+Implements exactly the pipeline of Eq. (1) that analog_mvm.py fuses into a
+Pallas kernel, in straight jax.numpy. pytest asserts allclose between the
+two across shapes and IO-parameter sweeps.
+"""
+
+import jax.numpy as jnp
+
+from .analog_mvm import DEFAULT_IO
+
+
+def quantize_ref(v, step):
+    if step <= 0.0:
+        return v
+    return jnp.round(v / step) * step
+
+
+def analog_mvm_ref(x, w, noise_out, noise_w, io=None):
+    """Reference analog MVM: same math as the Pallas kernel, no tiling."""
+    io = {**DEFAULT_IO, **(io or {})}
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+    inp_step = io["inp_res"] * 2.0 * io["inp_bound"]
+    xs = jnp.clip(x / scale, -io["inp_bound"], io["inp_bound"])
+    xq = quantize_ref(xs, inp_step)
+    acc = xq @ w
+    if io["w_noise"] > 0.0:
+        xnorm = jnp.sqrt(jnp.sum(xq * xq, axis=-1, keepdims=True))
+        acc = acc + io["w_noise"] * xnorm * noise_w
+    if io["out_noise"] > 0.0:
+        acc = acc + io["out_noise"] * noise_out
+    out_step = io["out_res"] * 2.0 * io["out_bound"]
+    acc = jnp.clip(acc, -io["out_bound"], io["out_bound"])
+    acc = quantize_ref(acc, out_step)
+    return acc * scale

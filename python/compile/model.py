@@ -1,0 +1,140 @@
+"""L2 JAX model: hardware-aware training and analog inference for a fixed
+MLP (784-256-128-10), built on the L1 Pallas kernel.
+
+Hardware-aware training (paper section 5): the forward pass runs through the
+*noisy analog* MVM (Pallas kernel), while backward and update are "perfect"
+(exact FP gradients) — implemented with jax.custom_vjp straight-through
+layers. The whole train step (fwd + bwd + SGD update) lowers to a single
+HLO module that the Rust runtime executes; Python never runs at request
+time.
+
+Weights follow the (in, out) convention here; the Rust coordinator stores
+(out, in) row-major and transposes when marshaling (see runtime/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.analog_mvm import DEFAULT_IO, analog_mvm
+from .kernels.ref import analog_mvm_ref
+
+# Fixed architecture for the AOT artifacts.
+LAYER_SIZES = (784, 256, 128, 10)
+BATCH = 64
+
+# HWA forward IO: PCM-inference-like noise (mirrors
+# IOParameters::inference_default in rust).
+HWA_IO = {**DEFAULT_IO, "out_noise": 0.04, "w_noise": 0.0175}
+
+
+def init_params(key):
+    """Kaiming-uniform init, matching the rust AnalogLinear init."""
+    params = []
+    for i in range(len(LAYER_SIZES) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = LAYER_SIZES[i]
+        bound = 1.0 / float(fan_in) ** 0.5
+        w = jax.random.uniform(
+            sub, (LAYER_SIZES[i], LAYER_SIZES[i + 1]), jnp.float32, -bound, bound
+        )
+        b = jnp.zeros((LAYER_SIZES[i + 1],), jnp.float32)
+        params += [w, b]
+    return params
+
+
+@jax.custom_vjp
+def hwa_linear(x, w, noise_out, noise_w):
+    """Analog-noisy forward, exact ("perfect") backward — the HWA layer."""
+    return analog_mvm(x, w, noise_out, noise_w, io=HWA_IO)
+
+
+def _hwa_fwd(x, w, noise_out, noise_w):
+    y = analog_mvm(x, w, noise_out, noise_w, io=HWA_IO)
+    return y, (x, w)
+
+
+def _hwa_bwd(res, g):
+    x, w = res
+    return g @ w.T, x.T @ g, None, None
+
+
+hwa_linear.defvjp(_hwa_fwd, _hwa_bwd)
+
+
+def _split_params(params):
+    assert len(params) == 2 * (len(LAYER_SIZES) - 1)
+    return [(params[2 * i], params[2 * i + 1]) for i in range(len(LAYER_SIZES) - 1)]
+
+
+def hwa_forward(params, x, seed):
+    """Analog forward through all layers (tanh hidden units, log-softmax
+    head) with fresh noise per layer derived from `seed`."""
+    key = jax.random.PRNGKey(seed)
+    h = x
+    layers = _split_params(params)
+    for li, (w, b) in enumerate(layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        nout = jax.random.normal(k1, (h.shape[0], w.shape[1]), jnp.float32)
+        nw = jax.random.normal(k2, (h.shape[0], w.shape[1]), jnp.float32)
+        h = hwa_linear(h, w, nout, nw) + b
+        if li + 1 < len(layers):
+            h = jnp.tanh(h)
+    return jax.nn.log_softmax(h, axis=-1)
+
+
+def fp_forward(params, x):
+    """Exact FP forward (baseline)."""
+    h = x
+    layers = _split_params(params)
+    for li, (w, b) in enumerate(layers):
+        h = h @ w + b
+        if li + 1 < len(layers):
+            h = jnp.tanh(h)
+    return jax.nn.log_softmax(h, axis=-1)
+
+
+def _nll(logp, onehot):
+    return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+
+def hwa_train_step(params, x, onehot, seed, lr):
+    """One hardware-aware SGD step. Returns (new_params..., loss)."""
+
+    def loss_fn(ps):
+        return _nll(hwa_forward(ps, x, seed), onehot)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def fp_train_step(params, x, onehot, lr):
+    """One exact FP SGD step (the baseline of footnote 3)."""
+
+    def loss_fn(ps):
+        return _nll(fp_forward(ps, x), onehot)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def analog_infer(params, x, seed):
+    """Noisy analog inference forward (drifted weights are computed by the
+    Rust inference tile and passed in as `params`). Returns log-probs."""
+    return hwa_forward(params, x, seed)
+
+
+def reference_forward(params, x, seed):
+    """Oracle forward using ref.py (used in pytest only)."""
+    key = jax.random.PRNGKey(seed)
+    h = x
+    layers = _split_params(params)
+    for li, (w, b) in enumerate(layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        nout = jax.random.normal(k1, (h.shape[0], w.shape[1]), jnp.float32)
+        nw = jax.random.normal(k2, (h.shape[0], w.shape[1]), jnp.float32)
+        h = analog_mvm_ref(h, w, nout, nw, io=HWA_IO) + b
+        if li + 1 < len(layers):
+            h = jnp.tanh(h)
+    return jax.nn.log_softmax(h, axis=-1)

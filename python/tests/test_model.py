@@ -1,0 +1,89 @@
+"""L2 model tests: shapes, HWA semantics (noisy fwd / exact bwd), training
+step progress, and kernel-vs-oracle consistency at the model level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def small_batch(b=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kl = jax.random.split(key)
+    x = jax.random.uniform(kx, (b, model.LAYER_SIZES[0]), jnp.float32)
+    labels = jax.random.randint(kl, (b,), 0, model.LAYER_SIZES[-1])
+    onehot = jax.nn.one_hot(labels, model.LAYER_SIZES[-1], dtype=jnp.float32)
+    return x, onehot
+
+
+class TestForward:
+    def test_shapes_and_normalization(self):
+        params = model.init_params(jax.random.PRNGKey(0))
+        x, _ = small_batch()
+        logp = model.hwa_forward(params, x, 7)
+        assert logp.shape == (8, model.LAYER_SIZES[-1])
+        p = np.exp(np.asarray(logp)).sum(axis=-1)
+        np.testing.assert_allclose(p, 1.0, atol=1e-4)
+
+    def test_kernel_matches_reference_forward(self):
+        params = model.init_params(jax.random.PRNGKey(1))
+        x, _ = small_batch(b=4, seed=1)
+        a = model.hwa_forward(params, x, 3)
+        b = model.reference_forward(params, x, 3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_noise_varies_with_seed(self):
+        params = model.init_params(jax.random.PRNGKey(2))
+        x, _ = small_batch(b=4, seed=2)
+        a = model.hwa_forward(params, x, 1)
+        b = model.hwa_forward(params, x, 2)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_fp_forward_deterministic(self):
+        params = model.init_params(jax.random.PRNGKey(3))
+        x, _ = small_batch(b=4, seed=3)
+        a = model.fp_forward(params, x)
+        b = model.fp_forward(params, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestHWATraining:
+    def test_gradients_are_clean(self):
+        """HWA backward must be the *exact* FP gradient of the clean path
+        (straight-through custom_vjp), not a gradient of the noise."""
+        params = model.init_params(jax.random.PRNGKey(4))
+        x, onehot = small_batch(b=4, seed=4)
+
+        def loss_hwa(ps):
+            logp = model.hwa_forward(ps, x, 5)
+            return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+        g = jax.grad(loss_hwa)(params)
+        # gradient must be finite and nonzero
+        for gi in g:
+            arr = np.asarray(gi)
+            assert np.all(np.isfinite(arr))
+        assert any(np.abs(np.asarray(gi)).max() > 0 for gi in g)
+
+    def test_train_step_reduces_loss(self):
+        params = model.init_params(jax.random.PRNGKey(5))
+        x, onehot = small_batch(b=16, seed=5)
+        step = jax.jit(model.hwa_train_step)
+        losses = []
+        for i in range(30):
+            out = step(params, x, onehot, i, 0.2)
+            params = list(out[:-1])
+            losses.append(float(out[-1]))
+        assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+    def test_fp_train_step_reduces_loss(self):
+        params = model.init_params(jax.random.PRNGKey(6))
+        x, onehot = small_batch(b=16, seed=6)
+        step = jax.jit(model.fp_train_step)
+        losses = []
+        for _ in range(30):
+            out = step(params, x, onehot, 0.2)
+            params = list(out[:-1])
+            losses.append(float(out[-1]))
+        assert losses[-1] < losses[0] * 0.8

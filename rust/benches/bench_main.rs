@@ -1,0 +1,230 @@
+//! Benchmark harness (custom, `harness = false` — criterion is not in the
+//! offline vendor set). One section per paper table/figure/claim; each
+//! prints the rows the paper reports plus raw timings, and everything is
+//! duplicated into bench CSVs under results/.
+//!
+//! Sections:
+//!   [E4 / footnote 3]  analog vs FP training epoch time → the 2-5× ratio
+//!   [Fig 3B]           device-response regeneration throughput
+//!   [Fig 3C]           PCM drift-model throughput
+//!   [Eq. 1]            analog MVM pipeline vs plain GEMV (size sweep)
+//!   [Eq. 2]            pulsed-update throughput per device model
+//!   [E7]               PJRT step latency: hwa_train_step vs fp_train_step
+//!
+//! Run: `cargo bench` (or `cargo bench -- <filter>` with a section prefix)
+
+use std::time::Instant;
+
+use aihwsim::config::{presets, DeviceConfig, IOParameters, RPUConfig, UpdateParameters};
+use aihwsim::coordinator::experiments::{device_response, pcm_drift};
+use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
+use aihwsim::coordinator::trainer::{train_classifier, TrainConfig};
+use aihwsim::data::synthetic_images;
+use aihwsim::device::build;
+use aihwsim::nn::sequential::{mlp, Backend};
+use aihwsim::runtime::Runtime;
+use aihwsim::tile::forward::{analog_mvm, mvm_plain, MvmScratch};
+use aihwsim::tile::pulsed_ops::{pulsed_update_batch, UpdateScratch};
+use aihwsim::util::logging::CsvLogger;
+use aihwsim::util::rng::Rng;
+
+/// Median wall time (seconds) of `reps` runs of `f` after one warmup.
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn section(name: &str, filter: &Option<String>) -> bool {
+    let run = filter.as_ref().map(|f| name.starts_with(f.as_str())).unwrap_or(true);
+    if run {
+        println!("\n=== {name} ===");
+    }
+    run
+}
+
+// --------------------------------------------------------------- E4
+
+fn bench_train_throughput(csv: &mut CsvLogger) {
+    // The footnote-3 claim: full analog pulsed training is 2-5× slower
+    // than FP training of the same network on the same hardware.
+    let mut rng = Rng::new(1);
+    let ds = synthetic_images(256, 10, 16, 1, &mut rng);
+    let dims = [256usize, 128, 10];
+    let tc = TrainConfig { epochs: 1, batch_size: 32, lr: 0.1, seed: 9, log_every: 0, csv_path: None };
+
+    let time_backend = |label: &str, backend: Backend, cfg: &RPUConfig| -> f64 {
+        let t = time_median(3, || {
+            let mut r = Rng::new(5);
+            let mut model = mlp(&dims, backend, cfg, &mut r);
+            let _ = train_classifier(&mut model, &ds, &ds, &tc);
+        });
+        println!("  {label:26} {:8.1} ms/epoch", t * 1e3);
+        t
+    };
+
+    let fp = time_backend("FP (digital baseline)", Backend::FloatingPoint, &RPUConfig::perfect());
+    let mut analog_cfg = RPUConfig::default();
+    analog_cfg.device = DeviceConfig::Single(presets::gokmen_vlasov());
+    let analog = time_backend("analog pulsed (ConstantStep)", Backend::Analog, &analog_cfg);
+    let mut reram_cfg = RPUConfig::default();
+    reram_cfg.device = DeviceConfig::Single(presets::reram_es());
+    let reram = time_backend("analog pulsed (ReRam-ES)", Backend::Analog, &reram_cfg);
+
+    println!(
+        "  -> analog/FP epoch-time ratio: {:.1}x (ConstantStep), {:.1}x (ReRam-ES); paper: 2-5x",
+        analog / fp,
+        reram / fp
+    );
+    csv.row_str(&[
+        "train_throughput".into(),
+        format!("{:.4}", fp * 1e3),
+        format!("{:.4}", analog * 1e3),
+        format!("{:.2}", analog / fp),
+    ])
+    .unwrap();
+}
+
+// --------------------------------------------------------------- Fig 3B/3C
+
+fn bench_fig3(csv: &mut CsvLogger) {
+    let t3b = time_median(3, || {
+        let _ = device_response("reram_es", 64, 1000, 1);
+    });
+    let pulses = 64.0 * 2000.0;
+    println!("  Fig3B staircase (64 dev × 2000 pulses): {:7.1} ms  ({:.2} Mpulses/s)",
+        t3b * 1e3, pulses / t3b / 1e6);
+    let times: Vec<f32> = (0..25).map(|i| 25.0 * 10f32.powf(i as f32 * 0.25)).collect();
+    let t3c = time_median(3, || {
+        let _ = pcm_drift(&[22.5, 15.0, 7.5, 2.5], &times, 2000, 1);
+    });
+    println!("  Fig3C drift (4 levels × 2000 dev × 25 t): {:6.1} ms", t3c * 1e3);
+    csv.row_str(&["fig3b_ms".into(), format!("{:.3}", t3b * 1e3), String::new(), String::new()]).unwrap();
+    csv.row_str(&["fig3c_ms".into(), format!("{:.3}", t3c * 1e3), String::new(), String::new()]).unwrap();
+}
+
+// --------------------------------------------------------------- Eq. 1
+
+fn bench_mvm(csv: &mut CsvLogger) {
+    let io = IOParameters::default();
+    let mut rng = Rng::new(2);
+    let mut scratch = MvmScratch::default();
+    println!("  {:>10} {:>12} {:>12} {:>8}", "size", "plain µs", "analog µs", "ratio");
+    for &n in &[64usize, 128, 256, 512] {
+        let w: Vec<f32> = (0..n * n).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform_f32() - 0.5).collect();
+        let mut y = vec![0.0f32; n];
+        let tp = time_median(9, || {
+            for _ in 0..16 {
+                mvm_plain(&w, n, n, &x, &mut y, false);
+            }
+        }) / 16.0;
+        let ta = time_median(9, || {
+            for _ in 0..16 {
+                analog_mvm(&w, n, n, &x, &mut y, &io, None, false, &mut rng, &mut scratch);
+            }
+        }) / 16.0;
+        println!("  {:>10} {:>12.2} {:>12.2} {:>8.2}", format!("{n}x{n}"), tp * 1e6, ta * 1e6, ta / tp);
+        csv.row_str(&[
+            format!("mvm_{n}"),
+            format!("{:.3}", tp * 1e6),
+            format!("{:.3}", ta * 1e6),
+            format!("{:.2}", ta / tp),
+        ])
+        .unwrap();
+    }
+}
+
+// --------------------------------------------------------------- Eq. 2
+
+fn bench_pulsed_update(csv: &mut CsvLogger) {
+    let up = UpdateParameters::default();
+    let mut scratch = UpdateScratch::default();
+    println!("  {:>16} {:>14} {:>14}", "device", "µs/update", "Mpulses/s");
+    for name in ["gokmen_vlasov", "reram_es", "reram_sb", "idealized"] {
+        let cfg = presets::by_name(name).unwrap();
+        let mut rng = Rng::new(3);
+        let mut dev = build(&cfg, 128, 256, &mut rng);
+        let x: Vec<f32> = (0..256).map(|_| rng.uniform_f32() - 0.5).collect();
+        let d: Vec<f32> = (0..128).map(|_| rng.uniform_f32() - 0.5).collect();
+        let mut pulses = 0u64;
+        let t = time_median(5, || {
+            let s = pulsed_update_batch(dev.as_mut(), &x, &d, 1, 0.05, &up, &mut rng, &mut scratch);
+            pulses = s.pulses;
+        });
+        println!(
+            "  {:>16} {:>14.1} {:>14.2}",
+            name,
+            t * 1e6,
+            pulses as f64 / t / 1e6
+        );
+        csv.row_str(&[
+            format!("update_{name}"),
+            format!("{:.3}", t * 1e6),
+            format!("{:.1}", pulses as f64 / t / 1e6),
+            String::new(),
+        ])
+        .unwrap();
+    }
+}
+
+// --------------------------------------------------------------- E7
+
+fn bench_pjrt(csv: &mut CsvLogger) {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("  skipped (run `make artifacts`)");
+        return;
+    }
+    let mut rng = Rng::new(4);
+    let ds = synthetic_images(256, 10, 28, 1, &mut rng);
+    for artifact in ["hwa_train_step", "fp_train_step"] {
+        let mut pipe = HwaPipeline::new(&dir, 42).expect("runtime");
+        let rep = pipe.train(artifact, &ds, 20, 0.1, 0).expect("train");
+        let ms = 1e3 * rep.wall_s / rep.steps as f64;
+        println!(
+            "  {artifact:16} {:7.2} ms/step  ({:.0}% in PJRT execute)",
+            ms,
+            100.0 * rep.exec_s / rep.wall_s
+        );
+        csv.row_str(&[
+            format!("pjrt_{artifact}"),
+            format!("{:.3}", ms),
+            format!("{:.3}", 1e3 * rep.exec_s / rep.steps as f64),
+            String::new(),
+        ])
+        .unwrap();
+    }
+}
+
+fn main() {
+    // `cargo bench -- <filter>` passes the filter as an argument
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = CsvLogger::create("results/bench.csv", &["bench", "a", "b", "c"]).unwrap();
+
+    if section("E4_train_throughput (footnote 3: analog 2-5x FP)", &filter) {
+        bench_train_throughput(&mut csv);
+    }
+    if section("Fig3B_device_response", &filter) {
+        bench_fig3(&mut csv);
+    }
+    if section("Eq1_analog_mvm", &filter) {
+        bench_mvm(&mut csv);
+    }
+    if section("Eq2_pulsed_update", &filter) {
+        bench_pulsed_update(&mut csv);
+    }
+    if section("E7_pjrt_step", &filter) {
+        bench_pjrt(&mut csv);
+    }
+    csv.flush().unwrap();
+    println!("\nwrote results/bench.csv");
+}

@@ -1,0 +1,313 @@
+//! Resistive device parameter structs (material response curves + their
+//! device-to-device and cycle-to-cycle variability knobs).
+//!
+//! Mirrors aihwkit's `PulsedDevice` hierarchy: a set of *base* parameters
+//! shared by all pulsed devices (minimal update granularity `dw_min`,
+//! conductance bounds, up/down asymmetry, decay/diffusion lifetimes — each
+//! with a `*_dtod` device-to-device spread) plus a *kind* selecting the
+//! step nonlinearity (constant, linear/soft-bounds, exponential, power,
+//! piecewise). Compound (unit-cell) configurations live in
+//! [`DeviceConfig`]: vectors of sub-devices, Tiki-Taka transfer pairs,
+//! one-sided pairs.
+
+/// Base pulsed-device parameters, in normalized weight units.
+#[derive(Clone, Debug)]
+pub struct PulsedDeviceParams {
+    /// Mean weight change per single pulse (update granularity).
+    pub dw_min: f32,
+    /// Device-to-device spread of `dw_min` (relative).
+    pub dw_min_dtod: f32,
+    /// Cycle-to-cycle (write) noise per pulse, relative to `dw_min`.
+    pub dw_min_std: f32,
+    /// Upper weight (conductance) bound.
+    pub w_max: f32,
+    /// Lower weight bound (negative).
+    pub w_min: f32,
+    /// D2d spread of bounds (relative).
+    pub w_max_dtod: f32,
+    pub w_min_dtod: f32,
+    /// Systematic up-vs-down step asymmetry: scale_up = dw_min*(1+up_down),
+    /// scale_down = dw_min*(1-up_down).
+    pub up_down: f32,
+    /// D2d spread of the asymmetry.
+    pub up_down_dtod: f32,
+    /// Weight decay lifetime in mini-batches (0 disables): each batch,
+    /// w *= (1 - 1/lifetime).
+    pub lifetime: f32,
+    pub lifetime_dtod: f32,
+    /// Diffusion strength (0 disables): per batch w += diffusion * ξ.
+    pub diffusion: f32,
+    pub diffusion_dtod: f32,
+    /// Reset: std of the post-reset weight around 0.
+    pub reset_std: f32,
+}
+
+impl Default for PulsedDeviceParams {
+    /// aihwkit `ConstantStepDevice`-like defaults.
+    fn default() -> Self {
+        PulsedDeviceParams {
+            dw_min: 0.001,
+            dw_min_dtod: 0.3,
+            dw_min_std: 0.3,
+            w_max: 0.6,
+            w_min: -0.6,
+            w_max_dtod: 0.3,
+            w_min_dtod: 0.3,
+            up_down: 0.0,
+            up_down_dtod: 0.01,
+            lifetime: 0.0,
+            lifetime_dtod: 0.0,
+            diffusion: 0.0,
+            diffusion_dtod: 0.0,
+            reset_std: 0.01,
+        }
+    }
+}
+
+impl PulsedDeviceParams {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dw_min <= 0.0 {
+            return Err("dw_min must be > 0".into());
+        }
+        if self.w_max <= 0.0 || self.w_min >= 0.0 {
+            return Err("need w_min < 0 < w_max".into());
+        }
+        for (name, v) in [
+            ("dw_min_dtod", self.dw_min_dtod),
+            ("dw_min_std", self.dw_min_std),
+            ("w_max_dtod", self.w_max_dtod),
+            ("w_min_dtod", self.w_min_dtod),
+            ("up_down_dtod", self.up_down_dtod),
+        ] {
+            if v < 0.0 {
+                return Err(format!("{name} must be >= 0"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expected number of states between the bounds, (w_max - w_min)/dw_min.
+    pub fn num_states(&self) -> f32 {
+        (self.w_max - self.w_min) / self.dw_min
+    }
+}
+
+/// The step-response nonlinearity of a single pulsed device.
+#[derive(Clone, Debug)]
+pub enum StepKind {
+    /// Δw independent of the current weight.
+    ConstantStep,
+    /// Δw shrinks linearly with w: up step ∝ (1 - γ_up·w).
+    LinearStep {
+        gamma_up: f32,
+        gamma_down: f32,
+        gamma_dtod: f32,
+        /// Write noise multiplicative (∝ step size) instead of additive.
+        mult_noise: bool,
+    },
+    /// Soft bounds: LinearStep with slopes tied to the bounds so that the
+    /// step vanishes exactly at w_max/w_min (aihwkit `SoftBoundsDevice`).
+    SoftBounds { mult_noise: bool },
+    /// Exponential saturation (aihwkit `ExpStepDevice`, fitted to ReRAM
+    /// measurements of Gong et al. 2018):
+    /// Δw_up = max(0, 1 - A_up·exp(γ_up·z)) · scale_up, with
+    /// z = 2a·w/(w_max - w_min) + b.
+    ExpStep { a_up: f32, a_down: f32, gamma_up: f32, gamma_down: f32, a: f32, b: f32 },
+    /// Power-law dependence on the normalized distance to the bound:
+    /// Δw_up ∝ ((w_max - w)/(w_max - w_min))^γ.
+    PowStep { pow_gamma: f32, pow_gamma_dtod: f32 },
+    /// Piecewise-linear interpolation of the step size over the weight
+    /// range; `nodes_up`/`nodes_down` are relative step sizes sampled at
+    /// equally spaced weights in [w_min, w_max].
+    PiecewiseStep { nodes_up: Vec<f32>, nodes_down: Vec<f32> },
+}
+
+/// A single-device configuration: base params + step nonlinearity.
+#[derive(Clone, Debug)]
+pub struct SingleDeviceConfig {
+    pub params: PulsedDeviceParams,
+    pub kind: StepKind,
+}
+
+impl SingleDeviceConfig {
+    pub fn constant_step(params: PulsedDeviceParams) -> Self {
+        SingleDeviceConfig { params, kind: StepKind::ConstantStep }
+    }
+    pub fn soft_bounds(params: PulsedDeviceParams) -> Self {
+        SingleDeviceConfig { params, kind: StepKind::SoftBounds { mult_noise: true } }
+    }
+}
+
+impl Default for SingleDeviceConfig {
+    fn default() -> Self {
+        SingleDeviceConfig::constant_step(PulsedDeviceParams::default())
+    }
+}
+
+/// How a multi-device unit cell distributes update pulses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VectorUpdatePolicy {
+    /// All sub-devices receive every pulse.
+    All,
+    /// Round-robin: one sub-device per mini-batch.
+    SingleSequential,
+    /// A random sub-device per mini-batch.
+    SingleRandom,
+}
+
+/// Full device configuration of a tile, possibly compound (paper §4).
+#[derive(Clone, Debug)]
+pub enum DeviceConfig {
+    /// One device per crosspoint.
+    Single(SingleDeviceConfig),
+    /// Unit cell of several devices; effective weight = Σ γ_k · w_k.
+    Vector {
+        devices: Vec<SingleDeviceConfig>,
+        gammas: Vec<f32>,
+        policy: VectorUpdatePolicy,
+    },
+    /// Tiki-Taka (Gokmen & Haensch 2020; paper Fig. 4): gradient tile A
+    /// (fast) + weight tile C (slow). SGD pulses go to A; every
+    /// `transfer_every` mini-batches one column of A is read (with analog
+    /// noise) and transferred to C by pulsed update with rate
+    /// `transfer_lr`. Effective weight = γ·A + C.
+    Transfer {
+        fast: Box<SingleDeviceConfig>,
+        slow: Box<SingleDeviceConfig>,
+        gamma: f32,
+        transfer_every: u32,
+        transfer_lr: f32,
+        /// Number of columns transferred per transfer event.
+        n_reads_per_transfer: u32,
+    },
+    /// Two uni-directional devices (G+, G-); w = g+ − g-. Up pulses
+    /// potentiate g+, down pulses potentiate g-. When either saturates
+    /// past `refresh_at` (fraction of its range), both are reprogrammed
+    /// to represent the same w with minimal conductances.
+    OneSided { device: Box<SingleDeviceConfig>, refresh_at: f32 },
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig::Single(SingleDeviceConfig::default())
+    }
+}
+
+impl DeviceConfig {
+    /// Representative update granularity (used for LR → pulse conversion).
+    pub fn dw_min(&self) -> f32 {
+        match self {
+            DeviceConfig::Single(d) => d.params.dw_min,
+            DeviceConfig::Vector { devices, .. } => {
+                devices.iter().map(|d| d.params.dw_min).fold(f32::INFINITY, f32::min)
+            }
+            DeviceConfig::Transfer { fast, .. } => fast.params.dw_min,
+            DeviceConfig::OneSided { device, .. } => device.params.dw_min,
+        }
+    }
+
+    /// Representative weight bound (max |w| representable).
+    pub fn w_bound(&self) -> f32 {
+        match self {
+            DeviceConfig::Single(d) => d.params.w_max,
+            DeviceConfig::Vector { devices, gammas, .. } => devices
+                .iter()
+                .zip(gammas.iter())
+                .map(|(d, g)| d.params.w_max * g.abs())
+                .sum(),
+            DeviceConfig::Transfer { slow, .. } => slow.params.w_max,
+            DeviceConfig::OneSided { device, .. } => device.params.w_max,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            DeviceConfig::Single(d) => d.params.validate(),
+            DeviceConfig::Vector { devices, gammas, .. } => {
+                if devices.is_empty() {
+                    return Err("vector cell needs >= 1 device".into());
+                }
+                if devices.len() != gammas.len() {
+                    return Err("gammas must match devices".into());
+                }
+                for d in devices {
+                    d.params.validate()?;
+                }
+                Ok(())
+            }
+            DeviceConfig::Transfer { fast, slow, transfer_every, .. } => {
+                if *transfer_every == 0 {
+                    return Err("transfer_every must be >= 1".into());
+                }
+                fast.params.validate()?;
+                slow.params.validate()
+            }
+            DeviceConfig::OneSided { device, refresh_at } => {
+                if !(0.0..=1.0).contains(refresh_at) {
+                    return Err("refresh_at must be in [0,1]".into());
+                }
+                device.params.validate()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_valid() {
+        assert!(PulsedDeviceParams::default().validate().is_ok());
+        assert!(DeviceConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn num_states_default() {
+        let p = PulsedDeviceParams::default();
+        assert!((p.num_states() - 1200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let mut p = PulsedDeviceParams::default();
+        p.dw_min = 0.0;
+        assert!(p.validate().is_err());
+        let mut p2 = PulsedDeviceParams::default();
+        p2.w_min = 0.1;
+        assert!(p2.validate().is_err());
+    }
+
+    #[test]
+    fn vector_validation() {
+        let d = DeviceConfig::Vector {
+            devices: vec![SingleDeviceConfig::default(); 2],
+            gammas: vec![1.0],
+            policy: VectorUpdatePolicy::All,
+        };
+        assert!(d.validate().is_err());
+        let ok = DeviceConfig::Vector {
+            devices: vec![SingleDeviceConfig::default(); 2],
+            gammas: vec![1.0, 1.0],
+            policy: VectorUpdatePolicy::All,
+        };
+        assert!(ok.validate().is_ok());
+        assert!((ok.w_bound() - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transfer_dw_min_uses_fast_tile() {
+        let mut fast = SingleDeviceConfig::default();
+        fast.params.dw_min = 0.002;
+        let cfg = DeviceConfig::Transfer {
+            fast: Box::new(fast),
+            slow: Box::new(SingleDeviceConfig::default()),
+            gamma: 0.0,
+            transfer_every: 2,
+            transfer_lr: 1.0,
+            n_reads_per_transfer: 1,
+        };
+        assert!((cfg.dw_min() - 0.002).abs() < 1e-9);
+        assert!(cfg.validate().is_ok());
+    }
+}

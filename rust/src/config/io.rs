@@ -1,0 +1,171 @@
+//! Forward / backward pass non-ideality parameters (the paper's Eq. (1)).
+//!
+//! These correspond to aihwkit's `IOParameters`: everything between the
+//! digital input vector and the digital output vector of one analog MVM —
+//! DAC discretization and clipping, input noise, weight read noise, output
+//! noise, ADC discretization and clipping, plus the dynamic-range
+//! management schemes (noise management = dynamic input scaling, bound
+//! management = iterative output rescaling).
+//!
+//! Values are in the paper's *normalized units*: inputs nominally in
+//! [-1, 1], weights in [-1, 1] (device bounds usually ±0.6), outputs
+//! bounded by `out_bound`.
+
+/// Input scaling strategy ("noise management" in RPU terms): how the input
+/// vector is rescaled into the DAC range before conversion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseManagement {
+    /// No rescaling; inputs clip at `inp_bound`.
+    None,
+    /// Scale by the absolute maximum of the input vector (default).
+    AbsMax,
+    /// Scale by a constant factor.
+    Constant,
+}
+
+/// Output-range strategy ("bound management"): what to do when outputs clip
+/// at the ADC bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundManagement {
+    /// Accept clipping.
+    None,
+    /// Iteratively halve the input scale and redo the MVM until nothing
+    /// clips (up to `max_bm_factor` halvings). Models the chip re-issuing
+    /// the read at a lower input range.
+    Iterative,
+}
+
+/// Weight read-noise model applied during the MVM (not persistent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightNoiseType {
+    /// Additive Gaussian with std `w_noise` (in units of the weight range).
+    AdditiveConstant,
+    /// Std proportional to |w|: `w_noise * |w|`.
+    RelativeToWeight,
+}
+
+/// Analog MVM non-ideality parameters for one direction (forward or
+/// backward — the paper allows them to differ, §3).
+#[derive(Clone, Debug)]
+pub struct IOParameters {
+    /// If true the pass is ideal (pure FP MVM) — used for hardware-aware
+    /// training where backward/update are "perfect" (paper §5).
+    pub is_perfect: bool,
+    /// Input (DAC) clipping bound.
+    pub inp_bound: f32,
+    /// Input quantization resolution as a fraction of the full range
+    /// [-inp_bound, inp_bound]; `0` disables discretization.
+    /// A 7-bit DAC is `1.0 / (2^7 - 2)`.
+    pub inp_res: f32,
+    /// Additive Gaussian noise std on the converted input (σ_inp).
+    pub inp_noise: f32,
+    /// Stochastic rounding in the DAC.
+    pub inp_sto_round: bool,
+    /// Output (ADC) clipping bound.
+    pub out_bound: f32,
+    /// Output quantization resolution (fraction of [-out_bound, out_bound]);
+    /// a 9-bit ADC is `1.0 / (2^9 - 2)`. `0` disables.
+    pub out_res: f32,
+    /// Additive Gaussian noise std on the analog output (σ_out).
+    pub out_noise: f32,
+    /// Stochastic rounding in the ADC.
+    pub out_sto_round: bool,
+    /// Weight read-noise std (σ_w); see `w_noise_type`.
+    pub w_noise: f32,
+    pub w_noise_type: WeightNoiseType,
+    /// Dynamic input scaling.
+    pub noise_management: NoiseManagement,
+    /// Constant scale used when `noise_management == Constant`.
+    pub nm_constant: f32,
+    /// Output clipping strategy.
+    pub bound_management: BoundManagement,
+    /// Max number of iterative halvings for `BoundManagement::Iterative`.
+    pub max_bm_factor: u32,
+}
+
+impl Default for IOParameters {
+    /// aihwkit-like defaults: 7-bit DAC, 9-bit ADC, σ_out = 0.06,
+    /// AbsMax noise management, iterative bound management.
+    fn default() -> Self {
+        IOParameters {
+            is_perfect: false,
+            inp_bound: 1.0,
+            inp_res: 1.0 / 126.0,
+            inp_noise: 0.0,
+            inp_sto_round: false,
+            out_bound: 12.0,
+            out_res: 1.0 / 510.0,
+            out_noise: 0.06,
+            out_sto_round: false,
+            w_noise: 0.0,
+            w_noise_type: WeightNoiseType::AdditiveConstant,
+            noise_management: NoiseManagement::AbsMax,
+            nm_constant: 1.0,
+            bound_management: BoundManagement::Iterative,
+            max_bm_factor: 5,
+        }
+    }
+}
+
+impl IOParameters {
+    /// Fully ideal pass (used by hardware-aware training and FP baselines).
+    pub fn perfect() -> Self {
+        IOParameters { is_perfect: true, ..Default::default() }
+    }
+
+    /// An "inference-like" forward: PCM-style output noise plus mild
+    /// relative weight read noise; no input noise.
+    pub fn inference_default() -> Self {
+        IOParameters {
+            out_noise: 0.04,
+            w_noise: 0.0175,
+            w_noise_type: WeightNoiseType::RelativeToWeight,
+            ..Default::default()
+        }
+    }
+
+    /// Effective number of DAC levels (0 if continuous). `inp_res` is the
+    /// step size as a fraction of the full range `2·inp_bound`, so a
+    /// b-bit converter has `inp_res = 1/(2^b - 2)` → `2^b - 1` levels.
+    pub fn dac_levels(&self) -> u32 {
+        if self.inp_res <= 0.0 {
+            0
+        } else {
+            (1.0 / self.inp_res).round() as u32 + 1
+        }
+    }
+
+    /// Effective number of ADC levels (0 if continuous); see [`Self::dac_levels`].
+    pub fn adc_levels(&self) -> u32 {
+        if self.out_res <= 0.0 {
+            0
+        } else {
+            (1.0 / self.out_res).round() as u32 + 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_resolutions() {
+        let io = IOParameters::default();
+        assert_eq!(io.dac_levels(), 127); // 7-bit
+        assert_eq!(io.adc_levels(), 511); // 9-bit
+    }
+
+    #[test]
+    fn perfect_flag() {
+        assert!(IOParameters::perfect().is_perfect);
+        assert!(!IOParameters::default().is_perfect);
+    }
+
+    #[test]
+    fn zero_res_means_continuous() {
+        let io = IOParameters { inp_res: 0.0, out_res: 0.0, ..Default::default() };
+        assert_eq!(io.dac_levels(), 0);
+        assert_eq!(io.adc_levels(), 0);
+    }
+}

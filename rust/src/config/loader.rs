@@ -1,0 +1,325 @@
+//! JSON config-file loading: the CLI's `--config <file>` entry point.
+//!
+//! Schema (all fields optional, falling back to defaults / presets):
+//! ```json
+//! {
+//!   "device": {"preset": "reram_es"},
+//!   "device": {
+//!     "kind": "soft_bounds", "dw_min": 0.002, "dw_min_dtod": 0.1,
+//!     "w_max": 1.0, "w_min": -1.0, "up_down": 0.0, ...
+//!   },
+//!   "device": {"kind": "transfer", "fast": {...}, "slow": {...},
+//!              "transfer_every": 2, "transfer_lr": 1.0, "gamma": 0.0},
+//!   "forward":  {"out_noise": 0.06, "inp_res_bits": 7, "out_res_bits": 9,
+//!                "w_noise": 0.0, "is_perfect": false, ...},
+//!   "backward": { ... },
+//!   "update":   {"desired_bl": 31, "update_management": true, ...},
+//!   "modifier": {"kind": "add_normal", "std": 0.1},
+//!   "weight_scaling_omega": 0.6
+//! }
+//! ```
+
+use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
+use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use super::update::{PulseType, UpdateParameters};
+use super::{presets, RPUConfig, WeightModifier};
+use crate::util::json::Json;
+
+/// Load an [`RPUConfig`] from a JSON file.
+pub fn load_rpu_config(path: &str) -> Result<RPUConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    rpu_config_from_json(&json)
+}
+
+/// Build an [`RPUConfig`] from parsed JSON.
+pub fn rpu_config_from_json(j: &Json) -> Result<RPUConfig, String> {
+    let mut cfg = RPUConfig::default();
+    if let Some(dev) = j.get("device") {
+        cfg.device = device_from_json(dev)?;
+    }
+    if let Some(fwd) = j.get("forward") {
+        cfg.forward = io_from_json(fwd, IOParameters::default())?;
+    }
+    if let Some(bwd) = j.get("backward") {
+        cfg.backward = io_from_json(bwd, cfg.forward.clone())?;
+    }
+    if let Some(upd) = j.get("update") {
+        cfg.update = update_from_json(upd)?;
+    }
+    if let Some(m) = j.get("modifier") {
+        cfg.modifier = modifier_from_json(m)?;
+    }
+    cfg.weight_scaling_omega =
+        j.f64_or("weight_scaling_omega", cfg.weight_scaling_omega as f64) as f32;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn device_from_json(j: &Json) -> Result<DeviceConfig, String> {
+    if let Some(name) = j.get("preset").and_then(Json::as_str) {
+        return presets::by_name(name).ok_or_else(|| format!("unknown preset '{name}'"));
+    }
+    let kind = j.str_or("kind", "constant_step").to_string();
+    match kind.as_str() {
+        "transfer" | "tiki_taka" => {
+            let fast = j
+                .get("fast")
+                .map(single_from_json)
+                .transpose()?
+                .unwrap_or_else(presets::reram_sb);
+            let slow = j
+                .get("slow")
+                .map(single_from_json)
+                .transpose()?
+                .unwrap_or_else(presets::reram_sb);
+            Ok(DeviceConfig::Transfer {
+                fast: Box::new(fast),
+                slow: Box::new(slow),
+                gamma: j.f64_or("gamma", 0.0) as f32,
+                transfer_every: j.f64_or("transfer_every", 2.0) as u32,
+                transfer_lr: j.f64_or("transfer_lr", 1.0) as f32,
+                n_reads_per_transfer: j.f64_or("n_reads_per_transfer", 1.0) as u32,
+            })
+        }
+        "one_sided" => {
+            let dev = j
+                .get("device")
+                .map(single_from_json)
+                .transpose()?
+                .unwrap_or_else(presets::reram_sb);
+            Ok(DeviceConfig::OneSided {
+                device: Box::new(dev),
+                refresh_at: j.f64_or("refresh_at", 0.75) as f32,
+            })
+        }
+        "vector" => {
+            let devices: Result<Vec<SingleDeviceConfig>, String> = j
+                .get("devices")
+                .and_then(Json::as_arr)
+                .ok_or("vector device needs 'devices' array")?
+                .iter()
+                .map(single_from_json)
+                .collect();
+            let devices = devices?;
+            let gammas = j
+                .get("gammas")
+                .and_then(Json::to_f32_vec)
+                .unwrap_or_else(|| vec![1.0; devices.len()]);
+            Ok(DeviceConfig::Vector {
+                devices,
+                gammas,
+                policy: super::VectorUpdatePolicy::All,
+            })
+        }
+        _ => Ok(DeviceConfig::Single(single_from_json(j)?)),
+    }
+}
+
+fn single_from_json(j: &Json) -> Result<SingleDeviceConfig, String> {
+    if let Some(name) = j.get("preset").and_then(Json::as_str) {
+        return match presets::by_name(name) {
+            Some(DeviceConfig::Single(d)) => Ok(d),
+            Some(_) => Err(format!("preset '{name}' is not a single device")),
+            None => Err(format!("unknown preset '{name}'")),
+        };
+    }
+    let d = PulsedDeviceParams::default();
+    let params = PulsedDeviceParams {
+        dw_min: j.f64_or("dw_min", d.dw_min as f64) as f32,
+        dw_min_dtod: j.f64_or("dw_min_dtod", d.dw_min_dtod as f64) as f32,
+        dw_min_std: j.f64_or("dw_min_std", d.dw_min_std as f64) as f32,
+        w_max: j.f64_or("w_max", d.w_max as f64) as f32,
+        w_min: j.f64_or("w_min", d.w_min as f64) as f32,
+        w_max_dtod: j.f64_or("w_max_dtod", d.w_max_dtod as f64) as f32,
+        w_min_dtod: j.f64_or("w_min_dtod", d.w_min_dtod as f64) as f32,
+        up_down: j.f64_or("up_down", d.up_down as f64) as f32,
+        up_down_dtod: j.f64_or("up_down_dtod", d.up_down_dtod as f64) as f32,
+        lifetime: j.f64_or("lifetime", d.lifetime as f64) as f32,
+        lifetime_dtod: j.f64_or("lifetime_dtod", d.lifetime_dtod as f64) as f32,
+        diffusion: j.f64_or("diffusion", d.diffusion as f64) as f32,
+        diffusion_dtod: j.f64_or("diffusion_dtod", d.diffusion_dtod as f64) as f32,
+        reset_std: j.f64_or("reset_std", d.reset_std as f64) as f32,
+    };
+    let kind = match j.str_or("kind", "constant_step") {
+        "constant_step" => StepKind::ConstantStep,
+        "linear_step" => StepKind::LinearStep {
+            gamma_up: j.f64_or("gamma_up", 0.1) as f32,
+            gamma_down: j.f64_or("gamma_down", 0.1) as f32,
+            gamma_dtod: j.f64_or("gamma_dtod", 0.05) as f32,
+            mult_noise: j.bool_or("mult_noise", false),
+        },
+        "soft_bounds" => StepKind::SoftBounds { mult_noise: j.bool_or("mult_noise", true) },
+        "exp_step" => StepKind::ExpStep {
+            a_up: j.f64_or("a_up", 0.00081) as f32,
+            a_down: j.f64_or("a_down", 0.36833) as f32,
+            gamma_up: j.f64_or("gamma_up", 12.44625) as f32,
+            gamma_down: j.f64_or("gamma_down", 12.78785) as f32,
+            a: j.f64_or("a", 0.244) as f32,
+            b: j.f64_or("b", 0.2425) as f32,
+        },
+        "pow_step" => StepKind::PowStep {
+            pow_gamma: j.f64_or("pow_gamma", 1.0) as f32,
+            pow_gamma_dtod: j.f64_or("pow_gamma_dtod", 0.1) as f32,
+        },
+        "piecewise_step" => StepKind::PiecewiseStep {
+            nodes_up: j
+                .get("nodes_up")
+                .and_then(Json::to_f32_vec)
+                .ok_or("piecewise_step needs nodes_up")?,
+            nodes_down: j
+                .get("nodes_down")
+                .and_then(Json::to_f32_vec)
+                .ok_or("piecewise_step needs nodes_down")?,
+        },
+        other => return Err(format!("unknown device kind '{other}'")),
+    };
+    Ok(SingleDeviceConfig { params, kind })
+}
+
+fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
+    let mut io = base;
+    io.is_perfect = j.bool_or("is_perfect", io.is_perfect);
+    io.inp_bound = j.f64_or("inp_bound", io.inp_bound as f64) as f32;
+    io.out_bound = j.f64_or("out_bound", io.out_bound as f64) as f32;
+    io.inp_noise = j.f64_or("inp_noise", io.inp_noise as f64) as f32;
+    io.out_noise = j.f64_or("out_noise", io.out_noise as f64) as f32;
+    io.w_noise = j.f64_or("w_noise", io.w_noise as f64) as f32;
+    if let Some(bits) = j.get("inp_res_bits").and_then(Json::as_f64) {
+        io.inp_res = if bits <= 0.0 { 0.0 } else { 1.0 / (2f32.powi(bits as i32) - 2.0) };
+    } else {
+        io.inp_res = j.f64_or("inp_res", io.inp_res as f64) as f32;
+    }
+    if let Some(bits) = j.get("out_res_bits").and_then(Json::as_f64) {
+        io.out_res = if bits <= 0.0 { 0.0 } else { 1.0 / (2f32.powi(bits as i32) - 2.0) };
+    } else {
+        io.out_res = j.f64_or("out_res", io.out_res as f64) as f32;
+    }
+    io.w_noise_type = match j.str_or("w_noise_type", "additive") {
+        "relative" | "relative_to_weight" => WeightNoiseType::RelativeToWeight,
+        _ => WeightNoiseType::AdditiveConstant,
+    };
+    io.noise_management = match j.str_or("noise_management", "abs_max") {
+        "none" => NoiseManagement::None,
+        "constant" => NoiseManagement::Constant,
+        _ => NoiseManagement::AbsMax,
+    };
+    io.bound_management = match j.str_or("bound_management", "iterative") {
+        "none" => BoundManagement::None,
+        _ => BoundManagement::Iterative,
+    };
+    Ok(io)
+}
+
+fn update_from_json(j: &Json) -> Result<UpdateParameters, String> {
+    let mut u = UpdateParameters::default();
+    u.desired_bl = j.f64_or("desired_bl", u.desired_bl as f64) as u32;
+    u.update_management = j.bool_or("update_management", u.update_management);
+    u.update_bl_management = j.bool_or("update_bl_management", u.update_bl_management);
+    u.pulse_type = match j.str_or("pulse_type", "stochastic_compressed") {
+        "none" => PulseType::None,
+        "deterministic_implicit" => PulseType::DeterministicImplicit,
+        _ => PulseType::StochasticCompressed,
+    };
+    u.validate()?;
+    Ok(u)
+}
+
+fn modifier_from_json(j: &Json) -> Result<WeightModifier, String> {
+    match j.str_or("kind", "none") {
+        "none" => Ok(WeightModifier::None),
+        "add_normal" => Ok(WeightModifier::AddNormal { std: j.f64_or("std", 0.1) as f32 }),
+        "mult_normal" => Ok(WeightModifier::MultNormal { std: j.f64_or("std", 0.1) as f32 }),
+        "discretize" => Ok(WeightModifier::Discretize {
+            levels: j.f64_or("levels", 32.0) as u32,
+            std: j.f64_or("std", 0.0) as f32,
+        }),
+        other => Err(format!("unknown modifier kind '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_json_gives_defaults() {
+        let cfg = rpu_config_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!((cfg.forward.out_noise - 0.06).abs() < 1e-9);
+        assert_eq!(cfg.update.desired_bl, 31);
+    }
+
+    #[test]
+    fn preset_reference() {
+        let j = Json::parse(r#"{"device": {"preset": "reram_es"}}"#).unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        match cfg.device {
+            DeviceConfig::Single(d) => match d.kind {
+                StepKind::ExpStep { .. } => {}
+                _ => panic!("expected ExpStep"),
+            },
+            _ => panic!("expected single device"),
+        }
+    }
+
+    #[test]
+    fn explicit_device_params() {
+        let j = Json::parse(
+            r#"{"device": {"kind": "soft_bounds", "dw_min": 0.005, "w_max": 0.8, "w_min": -0.8},
+                "forward": {"out_noise": 0.1, "inp_res_bits": 8},
+                "update": {"desired_bl": 15}}"#,
+        )
+        .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.update.desired_bl, 15);
+        assert!((cfg.forward.out_noise - 0.1).abs() < 1e-9);
+        assert!((cfg.forward.inp_res - 1.0 / 254.0).abs() < 1e-9);
+        match cfg.device {
+            DeviceConfig::Single(d) => {
+                assert!((d.params.dw_min - 0.005).abs() < 1e-9);
+                assert!((d.params.w_max - 0.8).abs() < 1e-9);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn transfer_device_json() {
+        let j = Json::parse(
+            r#"{"device": {"kind": "tiki_taka", "transfer_every": 4,
+                           "fast": {"preset": "reram_sb"}, "slow": {"preset": "reram_sb"}}}"#,
+        )
+        .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        match cfg.device {
+            DeviceConfig::Transfer { transfer_every, .. } => assert_eq!(transfer_every, 4),
+            _ => panic!("expected transfer device"),
+        }
+    }
+
+    #[test]
+    fn bad_inputs_error() {
+        assert!(rpu_config_from_json(
+            &Json::parse(r#"{"device": {"preset": "nope"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(rpu_config_from_json(
+            &Json::parse(r#"{"device": {"kind": "warp_core"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(rpu_config_from_json(
+            &Json::parse(r#"{"update": {"desired_bl": 99}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn modifier_parsing() {
+        let j = Json::parse(r#"{"modifier": {"kind": "discretize", "levels": 16}}"#).unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        match cfg.modifier {
+            WeightModifier::Discretize { levels, .. } => assert_eq!(levels, 16),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! The `rpu_config` system: everything that defines an analog tile's
+//! behaviour (paper §3) — forward/backward non-idealities, pulsed-update
+//! parameters, the resistive device (possibly compound), and the
+//! inference-time noise model.
+
+pub mod device;
+pub mod io;
+pub mod loader;
+pub mod presets;
+pub mod update;
+
+pub use device::{
+    DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind, VectorUpdatePolicy,
+};
+pub use io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+pub use update::{PulseType, UpdateParameters};
+
+use crate::noise::pcm::PCMNoiseParams;
+
+/// Weight-noise injection used during hardware-aware training (paper §5):
+/// reversibly perturbs the weights for forward/backward within one
+/// mini-batch, restored before the update.
+#[derive(Clone, Debug)]
+pub enum WeightModifier {
+    None,
+    /// Additive Gaussian, std relative to the weight bound.
+    AddNormal { std: f32 },
+    /// Multiplicative Gaussian: w *= (1 + std·ξ).
+    MultNormal { std: f32 },
+    /// Discretize to `levels` levels over the weight range (+ optional
+    /// additive noise) — models a quantized target hardware.
+    Discretize { levels: u32, std: f32 },
+}
+
+impl Default for WeightModifier {
+    fn default() -> Self {
+        WeightModifier::None
+    }
+}
+
+/// Full configuration of a *training* analog tile.
+#[derive(Clone, Debug)]
+pub struct RPUConfig {
+    pub forward: IOParameters,
+    pub backward: IOParameters,
+    pub update: UpdateParameters,
+    pub device: DeviceConfig,
+    /// HWA weight noise (applied per mini-batch when training).
+    pub modifier: WeightModifier,
+    /// Output scaling α mapping device range to DNN weight range
+    /// (`weight_scaling_omega` in aihwkit): target max |w| after mapping.
+    pub weight_scaling_omega: f32,
+}
+
+impl Default for RPUConfig {
+    fn default() -> Self {
+        RPUConfig {
+            forward: IOParameters::default(),
+            backward: IOParameters::default(),
+            update: UpdateParameters::default(),
+            device: DeviceConfig::default(),
+            modifier: WeightModifier::None,
+            weight_scaling_omega: 0.6,
+        }
+    }
+}
+
+impl RPUConfig {
+    /// A `SingleRPUConfig(device=...)` equivalent.
+    pub fn single(device: SingleDeviceConfig) -> Self {
+        RPUConfig { device: DeviceConfig::Single(device), ..Default::default() }
+    }
+
+    /// Fully ideal configuration (FP reference behaviour through the same
+    /// code path).
+    pub fn perfect() -> Self {
+        RPUConfig {
+            forward: IOParameters::perfect(),
+            backward: IOParameters::perfect(),
+            update: UpdateParameters::perfect(),
+            device: DeviceConfig::Single(presets::idealized()),
+            modifier: WeightModifier::None,
+            weight_scaling_omega: 0.0,
+        }
+    }
+
+    /// Hardware-aware training config (paper §5): noisy forward, perfect
+    /// backward + update, weight noise during training.
+    pub fn hwa_training(modifier: WeightModifier) -> Self {
+        RPUConfig {
+            forward: IOParameters::inference_default(),
+            backward: IOParameters::perfect(),
+            update: UpdateParameters::perfect(),
+            device: DeviceConfig::Single(presets::idealized()),
+            modifier,
+            weight_scaling_omega: 1.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.update.validate()?;
+        self.device.validate()
+    }
+}
+
+/// Configuration of an *inference* analog tile (paper §5): ideal training
+/// behaviour, but `program()`/`drift()` apply the statistical PCM model.
+#[derive(Clone, Debug)]
+pub struct InferenceRPUConfig {
+    pub forward: IOParameters,
+    pub noise_model: PCMNoiseParams,
+    /// Enable global drift compensation (reference-read rescaling).
+    pub drift_compensation: bool,
+    pub modifier: WeightModifier,
+    pub weight_scaling_omega: f32,
+}
+
+impl Default for InferenceRPUConfig {
+    fn default() -> Self {
+        InferenceRPUConfig {
+            forward: IOParameters::inference_default(),
+            noise_model: PCMNoiseParams::default(),
+            drift_compensation: true,
+            modifier: WeightModifier::None,
+            weight_scaling_omega: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        assert!(RPUConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn perfect_config_is_perfect() {
+        let c = RPUConfig::perfect();
+        assert!(c.forward.is_perfect);
+        assert!(c.backward.is_perfect);
+        assert_eq!(c.update.pulse_type, PulseType::None);
+    }
+
+    #[test]
+    fn hwa_config_shape() {
+        let c = RPUConfig::hwa_training(WeightModifier::AddNormal { std: 0.1 });
+        assert!(!c.forward.is_perfect);
+        assert!(c.backward.is_perfect);
+        matches!(c.modifier, WeightModifier::AddNormal { .. })
+            .then_some(())
+            .expect("modifier kept");
+    }
+}

@@ -1,0 +1,223 @@
+//! Hardware-calibrated device presets (paper §3/§4, "we also provide a
+//! number of presets calibrated on hardware data").
+//!
+//! Constants follow the aihwkit preset collection: the ReRAM presets are
+//! fitted to the HfO₂ measurements of Gong et al., Nat. Commun. 9, 2102
+//! (2018) (ExpStep and SoftBounds fits); `gokmen_vlasov` is the idealized
+//! constant-step device of Gokmen & Vlasov, Front. Neurosci. 10:333 (2016);
+//! `ecram` models Li-ion electrochemical devices; `capacitor` a trench-cap
+//! unit cell; `idealized` a near-perfect many-state device.
+
+use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
+
+/// ReRAM exponential-step preset (ReRam-ES): HfO₂ ReRAM fitted with the
+/// ExpStep response; ~1200 states, strong d2d and write noise.
+pub fn reram_es() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.00135,
+            dw_min_dtod: 0.2,
+            dw_min_std: 5.0, // ReRAM write noise is large (c2c)
+            w_max: 0.66,
+            w_min: -0.66,
+            w_max_dtod: 0.05,
+            w_min_dtod: 0.05,
+            up_down: 0.0,
+            up_down_dtod: 0.01,
+            ..Default::default()
+        },
+        kind: StepKind::ExpStep {
+            a_up: 0.00081,
+            a_down: 0.36833,
+            gamma_up: 12.44625,
+            gamma_down: 12.78785,
+            a: 0.244,
+            b: 0.2425,
+        },
+    }
+}
+
+/// ReRAM soft-bounds preset (ReRam-SB): same hardware fitted with the
+/// SoftBounds response (used by the Tiki-Taka examples, paper Fig. 4).
+pub fn reram_sb() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.002,
+            dw_min_dtod: 0.1,
+            dw_min_std: 1.0,
+            w_max: 1.0,
+            w_min: -1.0,
+            w_max_dtod: 0.3,
+            w_min_dtod: 0.3,
+            up_down: 0.0,
+            up_down_dtod: 0.01,
+            ..Default::default()
+        },
+        kind: StepKind::SoftBounds { mult_noise: true },
+    }
+}
+
+/// Constant-step device of Gokmen & Vlasov 2016 (the original RPU spec):
+/// 1200 states, 30% d2d/c2c variation.
+pub fn gokmen_vlasov() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.001,
+            dw_min_dtod: 0.3,
+            dw_min_std: 0.3,
+            w_max: 0.6,
+            w_min: -0.6,
+            w_max_dtod: 0.3,
+            w_min_dtod: 0.3,
+            ..Default::default()
+        },
+        kind: StepKind::ConstantStep,
+    }
+}
+
+/// Li-ion ECRAM: very linear (small γ), small write noise, slow.
+pub fn ecram() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.0005,
+            dw_min_dtod: 0.098,
+            dw_min_std: 0.2,
+            w_max: 1.0,
+            w_min: -1.0,
+            w_max_dtod: 0.1,
+            w_min_dtod: 0.1,
+            up_down: 0.0,
+            up_down_dtod: 0.05,
+            ..Default::default()
+        },
+        kind: StepKind::LinearStep {
+            gamma_up: 0.135,
+            gamma_down: 0.135,
+            gamma_dtod: 0.05,
+            mult_noise: false,
+        },
+    }
+}
+
+/// CMOS trench-capacitor cell: linear but leaky (finite retention).
+pub fn capacitor() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.004,
+            dw_min_dtod: 0.07,
+            dw_min_std: 0.04,
+            w_max: 0.6,
+            w_min: -0.6,
+            w_max_dtod: 0.07,
+            w_min_dtod: 0.07,
+            lifetime: 100.0, // leakage: decays with ~100 mini-batch lifetime
+            lifetime_dtod: 0.3,
+            ..Default::default()
+        },
+        kind: StepKind::LinearStep {
+            gamma_up: 0.05,
+            gamma_down: 0.05,
+            gamma_dtod: 0.01,
+            mult_noise: false,
+        },
+    }
+}
+
+/// Idealized device: 20k states, tiny variations (algorithm-development
+/// baseline).
+pub fn idealized() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.0001,
+            dw_min_dtod: 0.0,
+            dw_min_std: 0.0,
+            w_max: 1.0,
+            w_min: -1.0,
+            w_max_dtod: 0.0,
+            w_min_dtod: 0.0,
+            up_down: 0.0,
+            up_down_dtod: 0.0,
+            ..Default::default()
+        },
+        kind: StepKind::ConstantStep,
+    }
+}
+
+/// PCM-like asymmetric training device: strongly asymmetric (PCM SET is
+/// gradual, RESET abrupt → modeled as one-sided pair in practice).
+pub fn pcm_like() -> SingleDeviceConfig {
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: 0.002,
+            dw_min_dtod: 0.3,
+            dw_min_std: 1.0,
+            w_max: 1.0,
+            w_min: -1.0,
+            w_max_dtod: 0.2,
+            w_min_dtod: 0.2,
+            up_down: 0.1,
+            up_down_dtod: 0.05,
+            ..Default::default()
+        },
+        kind: StepKind::PowStep { pow_gamma: 1.8, pow_gamma_dtod: 0.1 },
+    }
+}
+
+/// Tiki-Taka preset: TransferCompound of two ReRam-SB devices (paper Fig. 4).
+pub fn tiki_taka_reram() -> DeviceConfig {
+    DeviceConfig::Transfer {
+        fast: Box::new(reram_sb()),
+        slow: Box::new(reram_sb()),
+        gamma: 0.0,
+        transfer_every: 2,
+        transfer_lr: 1.0,
+        n_reads_per_transfer: 1,
+    }
+}
+
+/// Look a preset up by name (CLI / config-file entry point).
+pub fn by_name(name: &str) -> Option<DeviceConfig> {
+    let single = |d: SingleDeviceConfig| Some(DeviceConfig::Single(d));
+    match name {
+        "reram_es" | "ReRamES" => single(reram_es()),
+        "reram_sb" | "ReRamSB" => single(reram_sb()),
+        "gokmen_vlasov" | "GokmenVlasov" | "constant_step" => single(gokmen_vlasov()),
+        "ecram" | "EcRam" => single(ecram()),
+        "capacitor" | "Capacitor" => single(capacitor()),
+        "idealized" | "Idealized" => single(idealized()),
+        "pcm_like" | "PCM" => single(pcm_like()),
+        "tiki_taka" | "TikiTaka" => Some(tiki_taka_reram()),
+        _ => None,
+    }
+}
+
+/// All single-device preset names (used by the device-response experiment).
+pub const SINGLE_PRESET_NAMES: &[&str] =
+    &["reram_es", "reram_sb", "gokmen_vlasov", "ecram", "capacitor", "idealized", "pcm_like"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_valid() {
+        for name in SINGLE_PRESET_NAMES {
+            let cfg = by_name(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        by_name("tiki_taka").unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_preset_none() {
+        assert!(by_name("not_a_device").is_none());
+    }
+
+    #[test]
+    fn reram_es_has_expstep() {
+        match reram_es().kind {
+            StepKind::ExpStep { .. } => {}
+            _ => panic!("reram_es must be ExpStep"),
+        }
+    }
+}

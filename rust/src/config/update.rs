@@ -1,0 +1,83 @@
+//! Pulsed-update parameters (the paper's Eq. (2) machinery).
+//!
+//! The rank-1 update `w += λ d ⊗ x` is realized as stochastic pulse trains:
+//! each train has `desired_bl` slots; slot bits fire with probability
+//! proportional to |x_j| (columns) and |d_i| (rows); a *coincidence* of
+//! row and column bits triggers one device pulse at crosspoint (i, j).
+//! Update management (UM) balances the x/d probability split; update-BL
+//! management (UBLM) shortens trains when the gradients are small.
+
+/// How pulse trains are generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PulseType {
+    /// No pulsing: apply the exact FP rank-1 update through the device's
+    /// granularity (used for debugging / FP reference).
+    None,
+    /// Stochastic compressed (default; RPU concept of [5]): one shared
+    /// Bernoulli train per row and per column, coincidence = AND.
+    StochasticCompressed,
+    /// Deterministic implicit: the expected number of coincidences is
+    /// applied as repeated pulses (round-to-nearest), preserving the
+    /// device nonlinearity but removing train stochasticity.
+    DeterministicImplicit,
+}
+
+/// Parameters of the pulsed update.
+#[derive(Clone, Debug)]
+pub struct UpdateParameters {
+    /// Desired pulse-train length (BL). Max 63 (bit-packed trains).
+    pub desired_bl: u32,
+    /// Update management: rescale row/column probabilities by
+    /// sqrt(d_max/x_max) so both stay ≤ 1 (Gokmen & Vlasov 2016).
+    pub update_management: bool,
+    /// Update-BL management: choose BL adaptively from the actual
+    /// x_max·d_max product so small gradients use short trains.
+    pub update_bl_management: bool,
+    pub pulse_type: PulseType,
+}
+
+impl Default for UpdateParameters {
+    fn default() -> Self {
+        UpdateParameters {
+            desired_bl: 31,
+            update_management: true,
+            update_bl_management: true,
+            pulse_type: PulseType::StochasticCompressed,
+        }
+    }
+}
+
+impl UpdateParameters {
+    /// FP-exact update (no pulsing) — for ideal-update HWA training.
+    pub fn perfect() -> Self {
+        UpdateParameters { pulse_type: PulseType::None, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.desired_bl == 0 || self.desired_bl > 63 {
+            return Err(format!("desired_bl must be in 1..=63, got {}", self.desired_bl));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        assert!(UpdateParameters::default().validate().is_ok());
+    }
+
+    #[test]
+    fn bl_bounds_enforced() {
+        let mut u = UpdateParameters::default();
+        u.desired_bl = 0;
+        assert!(u.validate().is_err());
+        u.desired_bl = 64;
+        assert!(u.validate().is_err());
+        u.desired_bl = 63;
+        assert!(u.validate().is_ok());
+    }
+}

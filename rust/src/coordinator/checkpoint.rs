@@ -1,0 +1,162 @@
+//! Checkpointing: JSON serialization of trained layer weights, used to
+//! hand networks between the trainer, the inference evaluator, and the
+//! runtime pipeline (and to persist runs across CLI invocations).
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::hwa_pipeline::MlpParams;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+
+/// A checkpoint: ordered (weight, bias) layers.
+pub type Layers = Vec<(Matrix, Vec<f32>)>;
+
+/// Serialize layers to a JSON document.
+pub fn layers_to_json(layers: &Layers) -> Json {
+    let items: Vec<Json> = layers
+        .iter()
+        .map(|(w, b)| {
+            Json::obj(vec![
+                ("rows", Json::num(w.rows() as f64)),
+                ("cols", Json::num(w.cols() as f64)),
+                ("weights", Json::arr_f32(w.data())),
+                ("bias", Json::arr_f32(b)),
+            ])
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("format".to_string(), Json::str("aihwsim-checkpoint-v1"));
+    top.insert("layers".to_string(), Json::Arr(items));
+    Json::Obj(top)
+}
+
+/// Parse layers back from JSON.
+pub fn layers_from_json(j: &Json) -> Result<Layers, String> {
+    if j.str_or("format", "") != "aihwsim-checkpoint-v1" {
+        return Err("not an aihwsim checkpoint".into());
+    }
+    let items = j.get("layers").and_then(Json::as_arr).ok_or("missing layers")?;
+    let mut out = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let rows = item.get("rows").and_then(Json::as_usize).ok_or(format!("layer {i}: rows"))?;
+        let cols = item.get("cols").and_then(Json::as_usize).ok_or(format!("layer {i}: cols"))?;
+        let w = item
+            .get("weights")
+            .and_then(Json::to_f32_vec)
+            .ok_or(format!("layer {i}: weights"))?;
+        if w.len() != rows * cols {
+            return Err(format!("layer {i}: weight size {} != {rows}x{cols}", w.len()));
+        }
+        let b = item.get("bias").and_then(Json::to_f32_vec).ok_or(format!("layer {i}: bias"))?;
+        out.push((Matrix::from_vec(rows, cols, w), b));
+    }
+    Ok(out)
+}
+
+/// Write a checkpoint file.
+pub fn save(path: &str, layers: &Layers) -> std::io::Result<()> {
+    std::fs::write(path, layers_to_json(layers).to_string())
+}
+
+/// Read a checkpoint file.
+pub fn load(path: &str) -> Result<Layers, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    layers_from_json(&j)
+}
+
+/// Convert pipeline parameters ((in,out) convention) into checkpoint
+/// layers ((out,in) convention) and back.
+pub fn from_pipeline(params: &MlpParams) -> Layers {
+    params
+        .weights
+        .iter()
+        .zip(params.biases.iter())
+        .map(|(w, b)| (w.transpose(), b.clone()))
+        .collect()
+}
+
+/// Load checkpoint layers into pipeline parameters (shapes must match).
+pub fn into_pipeline(layers: &Layers, params: &mut MlpParams) -> Result<(), String> {
+    if layers.len() != params.weights.len() {
+        return Err(format!(
+            "layer count mismatch: checkpoint {} vs model {}",
+            layers.len(),
+            params.weights.len()
+        ));
+    }
+    for (k, (w, b)) in layers.iter().enumerate() {
+        let expect = (params.weights[k].cols(), params.weights[k].rows());
+        if (w.rows(), w.cols()) != expect {
+            return Err(format!("layer {k}: shape {:?} != {:?}", (w.rows(), w.cols()), expect));
+        }
+        params.weights[k] = w.transpose();
+        params.biases[k] = b.clone();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_layers() -> Layers {
+        let mut rng = Rng::new(1);
+        vec![
+            (Matrix::rand_uniform(3, 4, -1.0, 1.0, &mut rng), vec![0.1, -0.2, 0.3]),
+            (Matrix::rand_uniform(2, 3, -1.0, 1.0, &mut rng), vec![0.0, 0.5]),
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let layers = sample_layers();
+        let j = layers_to_json(&layers);
+        let back = layers_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        for ((w1, b1), (w2, b2)) in layers.iter().zip(back.iter()) {
+            assert_eq!(w1, w2);
+            assert_eq!(b1, b2);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let layers = sample_layers();
+        let dir = std::env::temp_dir().join("aihwsim_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        save(path.to_str().unwrap(), &layers).unwrap();
+        let back = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back[0].0, layers[0].0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(layers_from_json(&Json::parse(r#"{"format":"other"}"#).unwrap()).is_err());
+        assert!(layers_from_json(
+            &Json::parse(r#"{"format":"aihwsim-checkpoint-v1","layers":[{"rows":2,"cols":2,"weights":[1],"bias":[]}]}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pipeline_roundtrip() {
+        let mut rng = Rng::new(2);
+        let sizes = [4usize, 3, 2];
+        let mut params = MlpParams::init(&sizes, &mut rng);
+        let layers = from_pipeline(&params);
+        assert_eq!(layers[0].0.rows(), 3); // (out, in)
+        assert_eq!(layers[0].0.cols(), 4);
+        let orig = params.weights[0].clone();
+        params.weights[0] = Matrix::zeros(4, 3);
+        into_pipeline(&layers, &mut params).unwrap();
+        assert_eq!(params.weights[0], orig);
+        // shape mismatch rejected
+        let bad = vec![(Matrix::zeros(9, 9), vec![0.0; 9]); 2];
+        assert!(into_pipeline(&bad, &mut params).is_err());
+    }
+}

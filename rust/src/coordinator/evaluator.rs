@@ -1,0 +1,190 @@
+//! Inference-over-time evaluation (paper §5): program a trained network
+//! onto PCM inference tiles and track accuracy as the devices drift.
+
+use crate::config::InferenceRPUConfig;
+use crate::data::Dataset;
+use crate::nn::loss::accuracy;
+use crate::tile::{InferenceTile, Tile};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// An MLP whose weight matrices are programmed onto PCM inference tiles
+/// (biases and tanh stay digital).
+pub struct InferenceMlp {
+    tiles: Vec<InferenceTile>,
+    biases: Vec<Vec<f32>>,
+}
+
+impl InferenceMlp {
+    /// Build from trained per-layer (weights, bias) pairs. `weights[k]` is
+    /// out_k × in_k.
+    pub fn from_weights(
+        layers: &[(Matrix, Vec<f32>)],
+        config: &InferenceRPUConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut tiles = Vec::new();
+        let mut biases = Vec::new();
+        for (w, b) in layers {
+            let mut tile =
+                InferenceTile::new(w.rows(), w.cols(), config.clone(), rng.split());
+            tile.set_weights(w);
+            tiles.push(tile);
+            biases.push(b.clone());
+        }
+        InferenceMlp { tiles, biases }
+    }
+
+    /// Program all tiles (applies programming noise) at t = t0.
+    pub fn program(&mut self) {
+        for t in self.tiles.iter_mut() {
+            t.program();
+        }
+    }
+
+    /// Advance all tiles to inference time `t` seconds after programming.
+    pub fn drift_to(&mut self, t: f32) {
+        for tile in self.tiles.iter_mut() {
+            tile.drift_to(t);
+        }
+    }
+
+    /// Noisy analog forward (log-softmax head).
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut h = x.clone();
+        let n = self.tiles.len();
+        for (k, tile) in self.tiles.iter_mut().enumerate() {
+            let mut y = Matrix::zeros(h.rows(), tile.out_size());
+            tile.forward_batch(&h, &mut y);
+            let bias = &self.biases[k];
+            for b in 0..y.rows() {
+                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
+                    *v += bb;
+                }
+            }
+            if k + 1 < n {
+                y.map_inplace(|v| v.tanh());
+            }
+            h = y;
+        }
+        // log-softmax
+        for b in 0..h.rows() {
+            let row = h.row_mut(b);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            row.iter_mut().for_each(|v| *v -= lse);
+        }
+        h
+    }
+
+    /// Classification accuracy on a dataset at the current drift time.
+    pub fn accuracy(&mut self, ds: &Dataset, batch: usize) -> f64 {
+        let mut acc_sum = 0.0;
+        let mut n = 0usize;
+        let total = ds.len();
+        let mut start = 0;
+        while start < total {
+            let end = (start + batch).min(total);
+            let rows = end - start;
+            let mut xb = Matrix::zeros(rows, ds.dim());
+            let mut yb = Vec::with_capacity(rows);
+            for r in 0..rows {
+                xb.row_mut(r).copy_from_slice(ds.x.row(start + r));
+                yb.push(ds.y[start + r]);
+            }
+            let logp = self.forward(&xb);
+            acc_sum += accuracy(&logp, &yb) * rows as f64;
+            n += rows;
+            start = end;
+        }
+        acc_sum / n as f64
+    }
+
+    /// Mean GDC factor across tiles (observability).
+    pub fn mean_gdc(&self) -> f64 {
+        self.tiles.iter().map(|t| t.gdc_factor() as f64).sum::<f64>() / self.tiles.len() as f64
+    }
+}
+
+/// Accuracy-vs-time sweep: returns (t, accuracy) pairs. The §5 experiment.
+pub fn accuracy_over_time(
+    net: &mut InferenceMlp,
+    ds: &Dataset,
+    times: &[f32],
+    batch: usize,
+) -> Vec<(f32, f64)> {
+    times
+        .iter()
+        .map(|&t| {
+            net.drift_to(t);
+            (t, net.accuracy(ds, batch))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{InferenceRPUConfig, RPUConfig};
+    use crate::coordinator::trainer::{train_classifier, TrainConfig};
+    use crate::data::synthetic_images;
+    use crate::nn::sequential::{mlp, Backend};
+    use crate::nn::AnalogLinear;
+
+    /// Train a small FP MLP and extract its layer weights.
+    fn trained_layers(rng: &mut Rng) -> (Vec<(Matrix, Vec<f32>)>, crate::data::Dataset) {
+        let ds = synthetic_images(240, 4, 8, 1, rng);
+        let cfg = RPUConfig::perfect();
+        let mut model = mlp(&[64, 32, 4], Backend::FloatingPoint, &cfg, rng);
+        let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, log_every: 0, ..Default::default() };
+        let report = train_classifier(&mut model, &ds, &ds, &tc);
+        assert!(report.final_test_acc() > 0.9, "{:?}", report.epoch_test_acc);
+        // layers 0 and 2 are the AnalogLinear modules (1 = Tanh, 3 = LogSoftmax)
+        let mut layers = Vec::new();
+        for idx in [0usize, 2] {
+            let lin = model
+                .module_mut(idx)
+                .as_any_mut()
+                .and_then(|a| a.downcast_mut::<AnalogLinear>())
+                .expect("AnalogLinear at this index");
+            let w = lin.get_weights();
+            let b = lin.get_bias().unwrap().to_vec();
+            layers.push((w, b));
+        }
+        (layers, ds)
+    }
+
+    #[test]
+    fn programmed_network_keeps_most_accuracy_at_t0() {
+        let mut rng = Rng::new(10);
+        let (layers, ds) = trained_layers(&mut rng);
+        let cfg = InferenceRPUConfig::default();
+        let mut net = InferenceMlp::from_weights(&layers, &cfg, &mut rng);
+        net.program();
+        let acc = net.accuracy(&ds, 32);
+        assert!(acc > 0.8, "acc after programming {acc}");
+    }
+
+    #[test]
+    fn gdc_beats_no_gdc_at_long_times() {
+        let mut rng = Rng::new(11);
+        let (layers, ds) = trained_layers(&mut rng);
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.drift_compensation = true;
+        let mut with = InferenceMlp::from_weights(&layers, &cfg, &mut Rng::new(77));
+        with.program();
+        cfg.drift_compensation = false;
+        let mut without = InferenceMlp::from_weights(&layers, &cfg, &mut Rng::new(77));
+        without.program();
+        let t = 3e7; // ~1 year
+        with.drift_to(t);
+        without.drift_to(t);
+        let a_with = with.accuracy(&ds, 32);
+        let a_without = without.accuracy(&ds, 32);
+        assert!(
+            a_with >= a_without - 0.02,
+            "GDC must not hurt: with {a_with} vs without {a_without}"
+        );
+        assert!(with.mean_gdc() > 1.0);
+    }
+}

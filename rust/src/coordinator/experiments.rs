@@ -1,0 +1,180 @@
+//! Experiment drivers: one function per paper figure/claim (see the
+//! experiment index in DESIGN.md). Each returns plain data series so
+//! examples, benches, and the CLI can render/record them uniformly.
+
+use crate::config::{presets, DeviceConfig, RPUConfig, SingleDeviceConfig};
+use crate::data::Dataset;
+use crate::device::single::SingleDeviceArray;
+use crate::device::DeviceArray;
+use crate::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
+use crate::nn::sequential::{mlp, Backend};
+use crate::coordinator::trainer::{train_classifier, TrainConfig, TrainReport};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------- Fig 3B
+
+/// One device-response trace: mean ± std of the weight across a device
+/// population during an up/down pulse staircase.
+#[derive(Clone, Debug)]
+pub struct ResponseTrace {
+    pub preset: String,
+    /// Pulse index (0..2·n_pulses).
+    pub pulse: Vec<usize>,
+    /// Population mean weight after each pulse.
+    pub mean: Vec<f64>,
+    /// Population std after each pulse.
+    pub std: Vec<f64>,
+    /// Noise-free single-device reference (the "ideal" curve).
+    pub ideal: Vec<f64>,
+}
+
+/// Fig. 3B: drive `n_devices` devices with `n_pulses` up then `n_pulses`
+/// down pulses; record the population statistics and the ideal curve.
+pub fn device_response(preset: &str, n_devices: usize, n_pulses: usize, seed: u64) -> ResponseTrace {
+    let cfg = match presets::by_name(preset) {
+        Some(DeviceConfig::Single(c)) => c,
+        _ => panic!("'{preset}' is not a single-device preset"),
+    };
+    let mut rng = Rng::new(seed);
+    let mut arr = SingleDeviceArray::new(&cfg, 1, n_devices, &mut rng);
+    // ideal: same kind, no dtod / c2c variation
+    let ideal_cfg = SingleDeviceConfig {
+        params: crate::config::PulsedDeviceParams {
+            dw_min_dtod: 0.0,
+            dw_min_std: 0.0,
+            w_max_dtod: 0.0,
+            w_min_dtod: 0.0,
+            up_down_dtod: 0.0,
+            ..cfg.params.clone()
+        },
+        kind: cfg.kind.clone(),
+    };
+    let mut ideal_rng = Rng::new(seed + 1);
+    let mut ideal = SingleDeviceArray::new(&ideal_cfg, 1, 1, &mut ideal_rng);
+
+    let mut trace = ResponseTrace {
+        preset: preset.to_string(),
+        pulse: Vec::new(),
+        mean: Vec::new(),
+        std: Vec::new(),
+        ideal: Vec::new(),
+    };
+    let mut record = |k: usize, arr: &mut SingleDeviceArray, ideal: &mut SingleDeviceArray| {
+        let w = arr.weights();
+        let mean = w.iter().map(|&v| v as f64).sum::<f64>() / w.len() as f64;
+        let var =
+            w.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        trace.pulse.push(k);
+        trace.mean.push(mean);
+        trace.std.push(var.sqrt());
+        trace.ideal.push(ideal.weights()[0] as f64);
+    };
+    record(0, &mut arr, &mut ideal);
+    for k in 0..2 * n_pulses {
+        let up = k < n_pulses;
+        for d in 0..n_devices {
+            arr.pulse(d, up, &mut rng);
+        }
+        ideal.pulse(0, up, &mut ideal_rng);
+        record(k + 1, &mut arr, &mut ideal);
+    }
+    trace
+}
+
+// ---------------------------------------------------------------- Fig 3C
+
+/// Fig. 3C: program a device population at several conductance targets and
+/// track (mean, std) conductance over time.
+#[derive(Clone, Debug)]
+pub struct DriftTrace {
+    /// seconds after programming
+    pub times: Vec<f32>,
+    /// per target level: (target µS, mean-over-time, std-over-time)
+    pub levels: Vec<(f32, Vec<f64>, Vec<f64>)>,
+}
+
+pub fn pcm_drift(targets_us: &[f32], times: &[f32], devices_per_level: usize, seed: u64) -> DriftTrace {
+    let params = PCMNoiseParams::default();
+    let mut rng = Rng::new(seed);
+    let mut levels = Vec::new();
+    for &g in targets_us {
+        let w = vec![g / params.g_max; devices_per_level];
+        let prog = ProgrammedWeights::program(&w, 1.0, &params, &mut rng);
+        let mut means = Vec::new();
+        let mut stds = Vec::new();
+        for &t in times {
+            let (m, s) = prog.mean_conductance_at(t);
+            means.push(m);
+            stds.push(s);
+        }
+        levels.push((g, means, stds));
+    }
+    DriftTrace { times: times.to_vec(), levels }
+}
+
+// ----------------------------------------------------------------- Fig 4
+
+/// Fig. 4 / Tiki-Taka: train the same MLP on the same data with (a) plain
+/// SGD on a single noisy device and (b) the Tiki-Taka transfer compound;
+/// returns both reports.
+pub fn tiki_taka_comparison(
+    train: &Dataset,
+    test: &Dataset,
+    dims: &[usize],
+    epochs: usize,
+    seed: u64,
+) -> (TrainReport, TrainReport) {
+    let tc = TrainConfig {
+        epochs,
+        batch_size: 10,
+        lr: 0.1,
+        seed,
+        log_every: 0,
+        csv_path: None,
+    };
+    // (a) plain analog SGD on ReRam-SB
+    let mut rng = Rng::new(seed);
+    let mut cfg_sgd = RPUConfig::single(presets::reram_sb());
+    cfg_sgd.weight_scaling_omega = 0.6;
+    let mut model_sgd = mlp(dims, Backend::Analog, &cfg_sgd, &mut rng);
+    let rep_sgd = train_classifier(&mut model_sgd, train, test, &tc);
+    // (b) Tiki-Taka on the same device pair
+    let mut rng2 = Rng::new(seed);
+    let mut cfg_tt = RPUConfig::default();
+    cfg_tt.device = presets::tiki_taka_reram();
+    cfg_tt.weight_scaling_omega = 0.6;
+    let mut model_tt = mlp(dims, Backend::Analog, &cfg_tt, &mut rng2);
+    let rep_tt = train_classifier(&mut model_tt, train, test, &tc);
+    (rep_sgd, rep_tt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3b_reram_es_staircase_saturates() {
+        let tr = device_response("reram_es", 32, 400, 1);
+        // monotone rise then fall
+        let peak = tr.mean[400];
+        assert!(peak > tr.mean[0] + 0.1, "up phase must raise mean: {peak}");
+        assert!(tr.mean[800] < peak - 0.1, "down phase must lower mean");
+        // d2d + write noise → nonzero spread after pulsing
+        assert!(tr.std[400] > 0.01, "population spread {}", tr.std[400]);
+        // ideal curve is smooth & saturating: first step ≥ later steps
+        let d_first = tr.ideal[1] - tr.ideal[0];
+        let d_late = tr.ideal[399] - tr.ideal[398];
+        assert!(d_first >= d_late - 1e-6, "ExpStep saturates: {d_first} vs {d_late}");
+    }
+
+    #[test]
+    fn fig3c_mean_decays_spread_grows() {
+        let tr = pcm_drift(&[20.0, 10.0, 5.0], &[25.0, 1e3, 1e5, 1e7], 400, 2);
+        for (g, means, stds) in &tr.levels {
+            assert!(means[0] > means[3], "level {g}: mean decays {means:?}");
+            assert!(stds[3] > 0.0, "level {g}: spread {stds:?}");
+        }
+        // higher target keeps higher conductance throughout
+        assert!(tr.levels[0].1[3] > tr.levels[2].1[3]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Runtime-backed (AOT/PJRT) hardware-aware training pipeline — the E2E
+//! driver core: the Rust coordinator owns the parameters, batches the
+//! data, and executes the single-HLO `hwa_train_step` / `fp_train_step`
+//! artifacts compiled from the JAX/Pallas model. All three layers compose
+//! here with no Python on the step path.
+
+use anyhow::{Context, Result};
+
+use crate::data::{BatchIter, Dataset};
+use crate::runtime::{literal_to_matrix, matrix_to_literal, scalar_f32, scalar_i32, Runtime};
+use crate::util::logging::Stopwatch;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Parameter set of the fixed AOT MLP (alternating weight/bias).
+pub struct MlpParams {
+    /// `w[k]` is (in_k, out_k) — the JAX convention of the artifacts.
+    pub weights: Vec<Matrix>,
+    pub biases: Vec<Vec<f32>>,
+    pub layer_sizes: Vec<usize>,
+}
+
+impl MlpParams {
+    /// Kaiming-uniform init matching `model.init_params`.
+    pub fn init(layer_sizes: &[usize], rng: &mut Rng) -> Self {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for k in 0..layer_sizes.len() - 1 {
+            let bound = 1.0 / (layer_sizes[k] as f32).sqrt();
+            weights.push(Matrix::rand_uniform(layer_sizes[k], layer_sizes[k + 1], -bound, bound, rng));
+            biases.push(vec![0.0; layer_sizes[k + 1]]);
+        }
+        MlpParams { weights, biases, layer_sizes: layer_sizes.to_vec() }
+    }
+
+    fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::new();
+        for (w, b) in self.weights.iter().zip(self.biases.iter()) {
+            out.push(matrix_to_literal(w)?);
+            out.push(crate::runtime::vec_to_literal(b));
+        }
+        Ok(out)
+    }
+
+    fn update_from_literals(&mut self, lits: &[xla::Literal]) -> Result<()> {
+        anyhow::ensure!(lits.len() >= 2 * self.weights.len());
+        for k in 0..self.weights.len() {
+            let (r, c) = (self.weights[k].rows(), self.weights[k].cols());
+            self.weights[k] = literal_to_matrix(&lits[2 * k], r, c)?;
+            self.biases[k] = lits[2 * k + 1].to_vec::<f32>()?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of a runtime-backed training run.
+#[derive(Debug, Default, Clone)]
+pub struct PipelineReport {
+    pub step_loss: Vec<f32>,
+    pub wall_s: f64,
+    pub steps: u64,
+    /// Wall seconds spent inside PJRT execute calls.
+    pub exec_s: f64,
+}
+
+/// Hardware-aware (or FP-baseline) trainer over the AOT artifacts.
+pub struct HwaPipeline {
+    runtime: Runtime,
+    pub params: MlpParams,
+    batch: usize,
+    rng: Rng,
+}
+
+impl HwaPipeline {
+    /// Open the artifact dir and initialize parameters.
+    pub fn new(artifact_dir: &std::path::Path, seed: u64) -> Result<Self> {
+        let runtime = Runtime::open(artifact_dir)?;
+        let sizes = runtime.layer_sizes();
+        anyhow::ensure!(!sizes.is_empty(), "manifest missing layer_sizes");
+        let batch = runtime.batch();
+        let mut rng = Rng::new(seed);
+        let params = MlpParams::init(&sizes, &mut rng);
+        Ok(HwaPipeline { runtime, params, batch, rng })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Run `steps` training steps over the dataset with the chosen
+    /// artifact ("hwa_train_step" or "fp_train_step").
+    pub fn train(
+        &mut self,
+        artifact: &str,
+        ds: &Dataset,
+        steps: usize,
+        lr: f32,
+        log_every: usize,
+    ) -> Result<PipelineReport> {
+        let hwa = artifact == "hwa_train_step";
+        anyhow::ensure!(
+            hwa || artifact == "fp_train_step",
+            "unknown train artifact '{artifact}'"
+        );
+        let classes = *self.params.layer_sizes.last().unwrap();
+        let in_dim = self.params.layer_sizes[0];
+        anyhow::ensure!(ds.dim() == in_dim, "dataset dim {} != model {}", ds.dim(), in_dim);
+        // compile once before timing
+        self.runtime.load(artifact)?;
+        let mut report = PipelineReport::default();
+        let sw = Stopwatch::start();
+        let mut step = 0usize;
+        'outer: loop {
+            let mut epoch_rng = self.rng.split();
+            for (x, y) in BatchIter::new(ds, self.batch, &mut epoch_rng) {
+                if x.rows() < self.batch {
+                    continue; // artifacts are fixed-shape; skip ragged tail
+                }
+                let mut onehot = Matrix::zeros(self.batch, classes);
+                for (r, &lab) in y.iter().enumerate() {
+                    onehot.set(r, lab, 1.0);
+                }
+                let mut inputs = self.params.to_literals()?;
+                inputs.push(matrix_to_literal(&x)?);
+                inputs.push(matrix_to_literal(&onehot)?);
+                if hwa {
+                    inputs.push(scalar_i32(self.rng.next_u64() as i32));
+                }
+                inputs.push(scalar_f32(lr));
+                let esw = Stopwatch::start();
+                let exec = self.runtime.load(artifact)?;
+                let out = exec.run(&inputs).context("train step execution")?;
+                report.exec_s += esw.elapsed_s();
+                self.params.update_from_literals(&out)?;
+                let loss = out.last().unwrap().to_vec::<f32>()?[0];
+                report.step_loss.push(loss);
+                report.steps += 1;
+                if log_every > 0 && step % log_every == 0 {
+                    crate::util::logging::info(&format!("step {step:4}  loss {loss:.4}"));
+                }
+                step += 1;
+                if step >= steps {
+                    break 'outer;
+                }
+            }
+        }
+        report.wall_s = sw.elapsed_s();
+        Ok(report)
+    }
+
+    /// Evaluate accuracy with the analog inference artifact.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let classes = *self.params.layer_sizes.last().unwrap();
+        let exec_batch = self.batch;
+        self.runtime.load("analog_infer")?;
+        let mut correct = 0usize;
+        let mut n = 0usize;
+        let mut start = 0usize;
+        while start + exec_batch <= ds.len() {
+            let mut x = Matrix::zeros(exec_batch, ds.dim());
+            for r in 0..exec_batch {
+                x.row_mut(r).copy_from_slice(ds.x.row(start + r));
+            }
+            let mut inputs = self.params.to_literals()?;
+            inputs.push(matrix_to_literal(&x)?);
+            inputs.push(scalar_i32(self.rng.next_u64() as i32));
+            let exec = self.runtime.load("analog_infer")?;
+            let out = exec.run(&inputs)?;
+            let logp = out[0].to_vec::<f32>()?;
+            for r in 0..exec_batch {
+                let row = &logp[r * classes..(r + 1) * classes];
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                if best == ds.y[start + r] {
+                    correct += 1;
+                }
+            }
+            n += exec_batch;
+            start += exec_batch;
+        }
+        anyhow::ensure!(n > 0, "dataset smaller than one batch");
+        Ok(correct as f64 / n as f64)
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordination: training orchestration, drift evaluation, the
+//! runtime-backed (AOT/PJRT) pipeline, and the experiment drivers that
+//! regenerate every figure of the paper (see DESIGN.md experiment index).
+
+pub mod checkpoint;
+pub mod evaluator;
+pub mod experiments;
+pub mod hwa_pipeline;
+pub mod trainer;
+
+pub use evaluator::InferenceMlp;
+pub use trainer::{evaluate, train_classifier, TrainConfig, TrainReport};

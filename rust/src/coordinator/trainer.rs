@@ -1,0 +1,162 @@
+//! Native training orchestrator: epochs over a dataset, metrics, CSV logs.
+
+use crate::data::{BatchIter, Dataset};
+use crate::nn::loss::{accuracy, nll_loss};
+use crate::nn::{Module, Sequential};
+use crate::optim::AnalogSGD;
+use crate::util::logging::{CsvLogger, Stopwatch};
+use crate::util::rng::Rng;
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Print a log line every n epochs (0 = silent).
+    pub log_every: usize,
+    /// Optional CSV path for per-epoch metrics.
+    pub csv_path: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            batch_size: 32,
+            lr: 0.1,
+            seed: 1234,
+            log_every: 1,
+            csv_path: None,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub epoch_loss: Vec<f64>,
+    pub epoch_train_acc: Vec<f64>,
+    pub epoch_test_acc: Vec<f64>,
+    pub wall_s: f64,
+    pub steps: u64,
+}
+
+impl TrainReport {
+    pub fn final_test_acc(&self) -> f64 {
+        *self.epoch_test_acc.last().unwrap_or(&0.0)
+    }
+    pub fn final_loss(&self) -> f64 {
+        *self.epoch_loss.last().unwrap_or(&f64::NAN)
+    }
+}
+
+/// Evaluate classification (mean NLL, accuracy) without training side
+/// effects.
+pub fn evaluate(model: &mut Sequential, ds: &Dataset, batch: usize, rng: &mut Rng) -> (f64, f64) {
+    model.set_train(false);
+    let mut loss_sum = 0.0f64;
+    let mut acc_sum = 0.0f64;
+    let mut n = 0usize;
+    for (x, y) in BatchIter::new(ds, batch, rng) {
+        let logp = model.forward(&x);
+        let (l, _) = nll_loss(&logp, &y);
+        loss_sum += l as f64 * y.len() as f64;
+        acc_sum += accuracy(&logp, &y) * y.len() as f64;
+        n += y.len();
+    }
+    model.set_train(true);
+    (loss_sum / n as f64, acc_sum / n as f64)
+}
+
+/// Train a classifier with AnalogSGD + NLL loss. Works identically for
+/// analog and FP backends (paper Fig. 2's loop).
+pub fn train_classifier(
+    model: &mut Sequential,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainConfig,
+) -> TrainReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut opt = AnalogSGD::new(cfg.lr);
+    let mut report = TrainReport::default();
+    let sw = Stopwatch::start();
+    let mut csv = cfg.csv_path.as_ref().map(|p| {
+        CsvLogger::create(p, &["epoch", "loss", "train_acc", "test_acc", "wall_s"]).unwrap()
+    });
+    for epoch in 0..cfg.epochs {
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut n = 0usize;
+        for (x, y) in BatchIter::new(train, cfg.batch_size, &mut rng) {
+            let logp = model.forward(&x);
+            let (l, g) = nll_loss(&logp, &y);
+            loss_sum += l as f64 * y.len() as f64;
+            acc_sum += accuracy(&logp, &y) * y.len() as f64;
+            n += y.len();
+            model.backward(&g);
+            opt.step(model);
+            report.steps += 1;
+        }
+        let train_loss = loss_sum / n as f64;
+        let train_acc = acc_sum / n as f64;
+        let (_, test_acc) = evaluate(model, test, cfg.batch_size, &mut rng);
+        report.epoch_loss.push(train_loss);
+        report.epoch_train_acc.push(train_acc);
+        report.epoch_test_acc.push(test_acc);
+        if let Some(csv) = csv.as_mut() {
+            csv.row(&[epoch as f64, train_loss, train_acc, test_acc, sw.elapsed_s()]).unwrap();
+        }
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            crate::util::logging::info(&format!(
+                "epoch {epoch:3}  loss {train_loss:.4}  train_acc {train_acc:.3}  test_acc {test_acc:.3}"
+            ));
+        }
+    }
+    if let Some(csv) = csv.as_mut() {
+        csv.flush().unwrap();
+    }
+    report.wall_s = sw.elapsed_s();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::data::synthetic_images;
+    use crate::nn::sequential::{mlp, Backend};
+
+    #[test]
+    fn fp_training_on_synthetic_images_converges() {
+        let mut rng = Rng::new(1);
+        let (train, test) = synthetic_images(320, 4, 8, 1, &mut rng).split(80);
+        let cfg = RPUConfig::perfect();
+        let mut model = mlp(&[64, 32, 4], Backend::FloatingPoint, &cfg, &mut rng);
+        let tc = TrainConfig { epochs: 8, batch_size: 16, lr: 0.5, log_every: 0, ..Default::default() };
+        let report = train_classifier(&mut model, &train, &test, &tc);
+        assert!(
+            report.epoch_train_acc.last().unwrap() > &0.9,
+            "train acc {:?}",
+            report.epoch_train_acc
+        );
+        assert!(report.epoch_loss[0] > report.final_loss());
+    }
+
+    #[test]
+    fn analog_training_converges_with_idealized_device() {
+        let mut rng = Rng::new(2);
+        let train = synthetic_images(240, 4, 8, 1, &mut rng);
+        let mut cfg = RPUConfig::default();
+        cfg.device = crate::config::DeviceConfig::Single(crate::config::presets::idealized());
+        let mut model = mlp(&[64, 4], Backend::Analog, &cfg, &mut rng);
+        let tc = TrainConfig { epochs: 6, batch_size: 16, lr: 0.2, log_every: 0, ..Default::default() };
+        let report = train_classifier(&mut model, &train, &train, &tc);
+        assert!(
+            report.final_test_acc() > 0.7,
+            "analog acc {:?}",
+            report.epoch_test_acc
+        );
+    }
+}

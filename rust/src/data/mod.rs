@@ -1,0 +1,66 @@
+//! Datasets. The paper trains MNIST-class networks; in this offline
+//! reproduction we use *deterministic synthetic* datasets with the same
+//! shapes and class structure (see DESIGN.md §Substitutions): each class
+//! has a smooth random prototype image, samples are prototypes plus
+//! shifts and pixel noise — enough structure that a linear model is
+//! beatable and a small MLP/CNN shows realistic convergence dynamics.
+
+pub mod synthetic;
+
+pub use synthetic::{regression_toy, synthetic_images, Dataset};
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Mini-batch iterator with per-epoch shuffling.
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut Rng) -> Self {
+        BatchIter { data, batch, order: rng.permutation(data.len()), pos: 0 }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Matrix, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idx = &self.order[self.pos..end];
+        let dim = self.data.x.cols();
+        let mut xb = Matrix::zeros(idx.len(), dim);
+        let mut yb = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            xb.row_mut(r).copy_from_slice(self.data.x.row(i));
+            yb.push(self.data.y[i]);
+        }
+        self.pos = end;
+        Some((xb, yb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_dataset() {
+        let mut rng = Rng::new(1);
+        let ds = synthetic_images(100, 10, 8, 1, &mut rng);
+        let mut seen = 0;
+        let mut rng2 = Rng::new(2);
+        for (x, y) in BatchIter::new(&ds, 32, &mut rng2) {
+            assert_eq!(x.rows(), y.len());
+            seen += y.len();
+        }
+        assert_eq!(seen, 100);
+    }
+}

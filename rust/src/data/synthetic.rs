@@ -1,0 +1,250 @@
+//! Deterministic synthetic image / regression generators.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// An in-memory classification dataset.
+pub struct Dataset {
+    /// N × D inputs in [0, 1].
+    pub x: Matrix,
+    /// N labels.
+    pub y: Vec<usize>,
+    pub classes: usize,
+    /// Image geometry (channels, side) when applicable.
+    pub channels: usize,
+    pub side: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Split off the last `n_test` samples as a held-out set drawn from
+    /// the *same* class prototypes (samples are interleaved by class, so
+    /// both halves stay balanced).
+    pub fn split(self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.len());
+        let n_train = self.len() - n_test;
+        let dim = self.dim();
+        let mut xtr = Matrix::zeros(n_train, dim);
+        let mut xte = Matrix::zeros(n_test, dim);
+        for i in 0..n_train {
+            xtr.row_mut(i).copy_from_slice(self.x.row(i));
+        }
+        for i in 0..n_test {
+            xte.row_mut(i).copy_from_slice(self.x.row(n_train + i));
+        }
+        let train = Dataset {
+            x: xtr,
+            y: self.y[..n_train].to_vec(),
+            classes: self.classes,
+            channels: self.channels,
+            side: self.side,
+        };
+        let test = Dataset {
+            x: xte,
+            y: self.y[n_train..].to_vec(),
+            classes: self.classes,
+            channels: self.channels,
+            side: self.side,
+        };
+        (train, test)
+    }
+}
+
+/// Smooth class prototype: an oriented grating (class-specific angle)
+/// plus a mixture of `bumps` Gaussian bumps on a side×side grid. The
+/// grating guarantees inter-class separability even at small image sizes;
+/// the bumps add within-class texture.
+fn prototype_with_angle(side: usize, bumps: usize, angle: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; side * side];
+    let (ca, sa) = (angle.cos(), angle.sin());
+    let freq = 2.0 * std::f64::consts::PI * 2.0 / side as f64;
+    for y in 0..side {
+        for x in 0..side {
+            let u = ca * x as f64 + sa * y as f64;
+            img[y * side + x] = (0.5 + 0.5 * (freq * u).sin()) as f32;
+        }
+    }
+    for _ in 0..bumps {
+        let cx = rng.uniform_range(0.15, 0.85) * side as f64;
+        let cy = rng.uniform_range(0.15, 0.85) * side as f64;
+        let s = rng.uniform_range(0.08, 0.2) * side as f64;
+        let amp = rng.uniform_range(0.5, 1.0);
+        for y in 0..side {
+            for x in 0..side {
+                let d2 = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2)) / (2.0 * s * s);
+                img[y * side + x] += (amp * (-d2).exp()) as f32;
+            }
+        }
+    }
+    // normalize to [0, 1]
+    let mx = img.iter().fold(0.0f32, |m, &v| m.max(v)).max(1e-6);
+    img.iter_mut().for_each(|v| *v /= mx);
+    img
+}
+
+/// Synthetic image classification set: `classes` smooth prototypes,
+/// samples = shifted prototype + pixel noise. Deterministic given `rng`.
+///
+/// `side`: image side (e.g. 28 for the MNIST-like setting, 16/8 for quick
+/// tests); `channels` replicates the pattern with per-channel gain.
+pub fn synthetic_images(
+    n: usize,
+    classes: usize,
+    side: usize,
+    channels: usize,
+    rng: &mut Rng,
+) -> Dataset {
+    synthetic_images_noisy(n, classes, side, channels, 0.1, rng)
+}
+
+/// Like [`synthetic_images`] with adjustable pixel noise — higher values
+/// give a genuinely hard task (used by the drift experiments so accuracy
+/// has headroom to degrade).
+pub fn synthetic_images_noisy(
+    n: usize,
+    classes: usize,
+    side: usize,
+    channels: usize,
+    pixel_noise: f32,
+    rng: &mut Rng,
+) -> Dataset {
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|c| prototype_with_angle(side, 2, std::f64::consts::PI * c as f64 / classes as f64, rng))
+        .collect();
+    let dim = channels * side * side;
+    let mut x = Matrix::zeros(n, dim);
+    let mut y = Vec::with_capacity(n);
+    // shift jitter scales with image size (±2 px at side 28)
+    let max_shift = (side / 14).max(1) as isize;
+    for i in 0..n {
+        let lab = i % classes; // balanced
+        let proto = &protos[lab];
+        let dx = rng.below(2 * max_shift as usize + 1) as isize - max_shift;
+        let dy = rng.below(2 * max_shift as usize + 1) as isize - max_shift;
+        let row = x.row_mut(i);
+        for c in 0..channels {
+            let gain = 1.0 - 0.15 * c as f32;
+            for py in 0..side {
+                for px in 0..side {
+                    let sy = py as isize + dy;
+                    let sx = px as isize + dx;
+                    let v = if sy >= 0 && sy < side as isize && sx >= 0 && sx < side as isize {
+                        proto[sy as usize * side + sx as usize]
+                    } else {
+                        0.0
+                    };
+                    let noise = pixel_noise * rng.normal() as f32;
+                    row[c * side * side + py * side + px] = (gain * v + noise).clamp(0.0, 1.0);
+                }
+            }
+        }
+        y.push(lab);
+    }
+    Dataset { x, y, classes, channels, side }
+}
+
+/// The Fig. 2 toy: inputs x ∈ R⁴, targets y = W·x + b for a fixed random
+/// W (4→2). Returns (X, Y) matrices.
+pub fn regression_toy(n: usize, rng: &mut Rng) -> (Matrix, Matrix) {
+    let w = Matrix::rand_uniform(2, 4, -0.5, 0.5, rng);
+    let b = [0.1f32, -0.2f32];
+    let x = Matrix::rand_uniform(n, 4, -1.0, 1.0, rng);
+    let mut y = Matrix::zeros(n, 2);
+    for i in 0..n {
+        let t = w.matvec(x.row(i));
+        for j in 0..2 {
+            y.set(i, j, t[j] + b[j]);
+        }
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = synthetic_images(20, 4, 8, 1, &mut r1);
+        let b = synthetic_images(20, 4, 8, 1, &mut r2);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn labels_balanced_and_valid() {
+        let mut rng = Rng::new(8);
+        let ds = synthetic_images(40, 4, 8, 1, &mut rng);
+        for c in 0..4 {
+            assert_eq!(ds.y.iter().filter(|&&l| l == c).count(), 10);
+        }
+        assert!(ds.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-prototype classification on clean means must beat chance
+        let mut rng = Rng::new(9);
+        let ds = synthetic_images(200, 4, 8, 1, &mut rng);
+        // class means from first half
+        let dim = ds.dim();
+        let mut means = vec![vec![0.0f32; dim]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..100 {
+            let lab = ds.y[i];
+            counts[lab] += 1;
+            for (m, &v) in means[lab].iter_mut().zip(ds.x.row(i).iter()) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(counts.iter()) {
+            m.iter_mut().for_each(|v| *v /= c as f32);
+        }
+        // classify second half
+        let mut correct = 0;
+        for i in 100..200 {
+            let xi = ds.x.row(i);
+            let mut best = 0;
+            let mut bd = f32::MAX;
+            for (k, m) in means.iter().enumerate() {
+                let d: f32 = m.iter().zip(xi.iter()).map(|(a, b)| (a - b).powi(2)).sum();
+                if d < bd {
+                    bd = d;
+                    best = k;
+                }
+            }
+            if best == ds.y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 70, "separability: {correct}/100");
+    }
+
+    #[test]
+    fn multichannel_layout() {
+        let mut rng = Rng::new(10);
+        let ds = synthetic_images(4, 2, 6, 3, &mut rng);
+        assert_eq!(ds.dim(), 3 * 36);
+        assert_eq!(ds.channels, 3);
+    }
+
+    #[test]
+    fn regression_toy_shapes() {
+        let mut rng = Rng::new(11);
+        let (x, y) = regression_toy(50, &mut rng);
+        assert_eq!(x.rows(), 50);
+        assert_eq!(x.cols(), 4);
+        assert_eq!(y.cols(), 2);
+    }
+}

@@ -1,0 +1,562 @@
+//! Compound (unit-cell) device arrays (paper §4): multiple resistive
+//! elements per crosspoint, composed into one effective weight.
+//!
+//! * [`VectorArray`] — N devices per cell, effective w = Σ γ_k·w_k.
+//! * [`TransferArray`] — the Tiki-Taka construct (Gokmen & Haensch 2020):
+//!   SGD pulses accumulate on a fast tile A; periodically one column of A
+//!   is read (noisily) and transferred by pulsed update onto the slow tile
+//!   C that holds the actual weight.
+//! * [`OneSidedArray`] — two uni-directional devices (g⁺, g⁻), w = g⁺−g⁻,
+//!   with saturation-triggered refresh.
+
+use crate::config::{SingleDeviceConfig, UpdateParameters, VectorUpdatePolicy};
+use crate::device::single::SingleDeviceArray;
+use crate::device::DeviceArray;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------- Vector
+
+/// Unit cell with several devices updated together or alternately.
+pub struct VectorArray {
+    subs: Vec<SingleDeviceArray>,
+    gammas: Vec<f32>,
+    policy: VectorUpdatePolicy,
+    active: usize,
+    effective: Vec<f32>,
+    dirty: bool,
+}
+
+impl VectorArray {
+    pub fn new(
+        devices: &[SingleDeviceConfig],
+        gammas: &[f32],
+        policy: VectorUpdatePolicy,
+        rows: usize,
+        cols: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert_eq!(devices.len(), gammas.len());
+        assert!(!devices.is_empty());
+        let subs: Vec<SingleDeviceArray> =
+            devices.iter().map(|d| SingleDeviceArray::new(d, rows, cols, rng)).collect();
+        VectorArray {
+            subs,
+            gammas: gammas.to_vec(),
+            policy,
+            active: 0,
+            effective: vec![0.0; rows * cols],
+            dirty: true,
+        }
+    }
+
+    fn recompute(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.effective.iter_mut().for_each(|v| *v = 0.0);
+        for (sub, &g) in self.subs.iter_mut().zip(self.gammas.iter()) {
+            for (e, &w) in self.effective.iter_mut().zip(sub.weights().iter()) {
+                *e += g * w;
+            }
+        }
+        self.dirty = false;
+    }
+}
+
+impl DeviceArray for VectorArray {
+    fn rows(&self) -> usize {
+        self.subs[0].rows()
+    }
+    fn cols(&self) -> usize {
+        self.subs[0].cols()
+    }
+
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        match self.policy {
+            VectorUpdatePolicy::All => {
+                for (k, sub) in self.subs.iter_mut().enumerate() {
+                    // a negative γ means this device *subtracts*: flip pulses
+                    let dir = if self.gammas[k] >= 0.0 { up } else { !up };
+                    sub.pulse(idx, dir, rng);
+                }
+            }
+            VectorUpdatePolicy::SingleSequential | VectorUpdatePolicy::SingleRandom => {
+                let k = self.active;
+                let dir = if self.gammas[k] >= 0.0 { up } else { !up };
+                self.subs[k].pulse(idx, dir, rng);
+            }
+        }
+        self.dirty = true;
+    }
+
+    fn weights(&mut self) -> &[f32] {
+        self.recompute();
+        &self.effective
+    }
+
+    fn dw_min(&self) -> f32 {
+        self.subs
+            .iter()
+            .zip(self.gammas.iter())
+            .map(|(s, g)| s.dw_min() * g.abs().max(1e-9))
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    fn w_bound(&self) -> f32 {
+        self.subs.iter().zip(self.gammas.iter()).map(|(s, g)| s.w_bound() * g.abs()).sum()
+    }
+
+    fn set_weights(&mut self, w: &[f32]) {
+        // split evenly across devices, respecting the gammas
+        let gnorm: f32 = self.gammas.iter().map(|g| g * g).sum();
+        for (sub, &g) in self.subs.iter_mut().zip(self.gammas.iter()) {
+            let frac: Vec<f32> = w.iter().map(|&v| v * g / gnorm).collect();
+            sub.set_weights(&frac);
+        }
+        self.dirty = true;
+    }
+
+    fn post_batch(&mut self, rng: &mut Rng) {
+        for sub in self.subs.iter_mut() {
+            sub.post_batch(rng);
+        }
+        self.dirty = true;
+    }
+
+    fn pre_update(&mut self, _u: &UpdateParameters, rng: &mut Rng) {
+        match self.policy {
+            VectorUpdatePolicy::SingleSequential => {
+                self.active = (self.active + 1) % self.subs.len();
+            }
+            VectorUpdatePolicy::SingleRandom => {
+                self.active = rng.below(self.subs.len());
+            }
+            VectorUpdatePolicy::All => {}
+        }
+    }
+
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
+        for sub in self.subs.iter_mut() {
+            sub.reset_cols(cols, rng);
+        }
+        self.dirty = true;
+    }
+}
+
+// -------------------------------------------------------------- Transfer
+
+/// Tiki-Taka transfer compound (paper Fig. 4).
+pub struct TransferArray {
+    /// Fast gradient-accumulation tile (A).
+    fast: SingleDeviceArray,
+    /// Slow weight tile (C).
+    slow: SingleDeviceArray,
+    /// Contribution of A to the effective weight (often 0 in TTv1).
+    gamma: f32,
+    transfer_every: u32,
+    transfer_lr: f32,
+    n_reads_per_transfer: u32,
+    /// Read noise std (weight units) of the analog column read.
+    read_noise: f32,
+    update_counter: u32,
+    transfer_col: usize,
+    effective: Vec<f32>,
+    dirty: bool,
+}
+
+impl TransferArray {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        fast: &SingleDeviceConfig,
+        slow: &SingleDeviceConfig,
+        gamma: f32,
+        transfer_every: u32,
+        transfer_lr: f32,
+        n_reads_per_transfer: u32,
+        rows: usize,
+        cols: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        TransferArray {
+            fast: SingleDeviceArray::new(fast, rows, cols, rng),
+            slow: SingleDeviceArray::new(slow, rows, cols, rng),
+            gamma,
+            transfer_every: transfer_every.max(1),
+            transfer_lr,
+            n_reads_per_transfer: n_reads_per_transfer.max(1),
+            read_noise: 0.02,
+            update_counter: 0,
+            transfer_col: 0,
+            effective: vec![0.0; rows * cols],
+            dirty: true,
+        }
+    }
+
+    /// Transfer one column of A onto C by pulsed update (the "taka" step).
+    fn transfer_one_column(&mut self, rng: &mut Rng) {
+        let rows = self.fast.rows();
+        let cols = self.fast.cols();
+        let col = self.transfer_col;
+        self.transfer_col = (self.transfer_col + 1) % cols;
+        let dw_slow = self.slow.dw_min().max(1e-12);
+        // Analog read of A[:, col] with read noise (models the noisy
+        // forward pass with a one-hot input, aihwkit's transfer forward).
+        for r in 0..rows {
+            let idx = r * cols + col;
+            let v = self.fast.weights()[idx] + self.read_noise * rng.normal() as f32;
+            let amount = v * self.transfer_lr / dw_slow;
+            if amount.abs() < 1e-12 {
+                continue;
+            }
+            let up = amount > 0.0;
+            // stochastic rounding of the pulse count, capped like a BL-31
+            // pulse train
+            let a = amount.abs().min(31.0);
+            let mut n = a.floor() as u32;
+            if rng.bernoulli((a - n as f32) as f64) {
+                n += 1;
+            }
+            for _ in 0..n {
+                self.slow.pulse(idx, up, rng);
+            }
+        }
+        self.dirty = true;
+    }
+
+    fn recompute(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        let g = self.gamma;
+        // borrow dance: copy slow weights then add gamma * fast
+        self.effective.copy_from_slice(self.slow.weights());
+        if g != 0.0 {
+            for (e, &a) in self.effective.iter_mut().zip(self.fast.weights().iter()) {
+                *e += g * a;
+            }
+        }
+        self.dirty = false;
+    }
+}
+
+impl DeviceArray for TransferArray {
+    fn rows(&self) -> usize {
+        self.fast.rows()
+    }
+    fn cols(&self) -> usize {
+        self.fast.cols()
+    }
+
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        self.fast.pulse(idx, up, rng);
+        if self.gamma != 0.0 {
+            self.dirty = true;
+        }
+    }
+
+    fn weights(&mut self) -> &[f32] {
+        self.recompute();
+        &self.effective
+    }
+
+    fn dw_min(&self) -> f32 {
+        self.fast.dw_min()
+    }
+
+    fn w_bound(&self) -> f32 {
+        self.slow.w_bound() + self.gamma.abs() * self.fast.w_bound()
+    }
+
+    fn set_weights(&mut self, w: &[f32]) {
+        // program the weight tile; zero the gradient tile
+        self.slow.set_weights(w);
+        self.fast.set_weights(&vec![0.0; w.len()]);
+        self.dirty = true;
+    }
+
+    fn post_batch(&mut self, rng: &mut Rng) {
+        self.fast.post_batch(rng);
+        self.slow.post_batch(rng);
+        self.dirty = true;
+    }
+
+    fn post_update(&mut self, _u: &UpdateParameters, rng: &mut Rng) {
+        self.update_counter += 1;
+        if self.update_counter % self.transfer_every == 0 {
+            for _ in 0..self.n_reads_per_transfer {
+                self.transfer_one_column(rng);
+            }
+        }
+    }
+
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
+        self.fast.reset_cols(cols, rng);
+        self.slow.reset_cols(cols, rng);
+        self.dirty = true;
+    }
+}
+
+// -------------------------------------------------------------- OneSided
+
+/// Two uni-directional devices per cell: w = g⁺ − g⁻.
+pub struct OneSidedArray {
+    plus: SingleDeviceArray,
+    minus: SingleDeviceArray,
+    refresh_at: f32,
+    effective: Vec<f32>,
+    dirty: bool,
+    /// counts refresh events (observable for tests/experiments)
+    pub refresh_count: u64,
+}
+
+impl OneSidedArray {
+    pub fn new(
+        device: &SingleDeviceConfig,
+        refresh_at: f32,
+        rows: usize,
+        cols: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        OneSidedArray {
+            plus: SingleDeviceArray::new(device, rows, cols, rng),
+            minus: SingleDeviceArray::new(device, rows, cols, rng),
+            refresh_at: refresh_at.clamp(0.0, 1.0),
+            effective: vec![0.0; rows * cols],
+            dirty: true,
+            refresh_count: 0,
+        }
+    }
+
+    fn recompute(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.effective.copy_from_slice(self.plus.weights());
+        for (e, &m) in self.effective.iter_mut().zip(self.minus.weights().iter()) {
+            *e -= m;
+        }
+        self.dirty = false;
+    }
+
+    /// Refresh saturated cells: re-express w with minimal conductances.
+    fn refresh(&mut self, rng: &mut Rng) {
+        let bound = self.plus.w_bound();
+        let thresh = self.refresh_at * bound;
+        let n = self.effective.len();
+        self.recompute();
+        let mut plus_new: Vec<f32> = self.plus.weights().to_vec();
+        let mut minus_new: Vec<f32> = self.minus.weights().to_vec();
+        let mut refreshed = false;
+        for i in 0..n {
+            if plus_new[i] > thresh || minus_new[i] > thresh {
+                let w = plus_new[i] - minus_new[i];
+                // reprogram with reset noise (imperfect rewrite)
+                let eps = 0.01 * bound * rng.normal() as f32;
+                plus_new[i] = (w + eps).max(0.0);
+                minus_new[i] = (-(w + eps)).max(0.0);
+                refreshed = true;
+                self.refresh_count += 1;
+            }
+        }
+        if refreshed {
+            self.plus.set_weights(&plus_new);
+            self.minus.set_weights(&minus_new);
+            self.dirty = true;
+        }
+    }
+}
+
+impl DeviceArray for OneSidedArray {
+    fn rows(&self) -> usize {
+        self.plus.rows()
+    }
+    fn cols(&self) -> usize {
+        self.plus.cols()
+    }
+
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        // uni-directional: up-pulse potentiates g+, down-pulse potentiates g-
+        if up {
+            self.plus.pulse(idx, true, rng);
+        } else {
+            self.minus.pulse(idx, true, rng);
+        }
+        self.dirty = true;
+    }
+
+    fn weights(&mut self) -> &[f32] {
+        self.recompute();
+        &self.effective
+    }
+
+    fn dw_min(&self) -> f32 {
+        self.plus.dw_min()
+    }
+
+    fn w_bound(&self) -> f32 {
+        self.plus.w_bound()
+    }
+
+    fn set_weights(&mut self, w: &[f32]) {
+        let plus: Vec<f32> = w.iter().map(|&v| v.max(0.0)).collect();
+        let minus: Vec<f32> = w.iter().map(|&v| (-v).max(0.0)).collect();
+        self.plus.set_weights(&plus);
+        self.minus.set_weights(&minus);
+        self.dirty = true;
+    }
+
+    fn post_batch(&mut self, rng: &mut Rng) {
+        self.plus.post_batch(rng);
+        self.minus.post_batch(rng);
+        self.dirty = true;
+    }
+
+    fn post_update(&mut self, _u: &UpdateParameters, rng: &mut Rng) {
+        self.refresh(rng);
+    }
+
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
+        self.plus.reset_cols(cols, rng);
+        self.minus.reset_cols(cols, rng);
+        self.dirty = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn reram() -> SingleDeviceConfig {
+        presets::reram_sb()
+    }
+
+    #[test]
+    fn vector_all_policy_sums_devices() {
+        let mut rng = Rng::new(1);
+        let devs = vec![presets::idealized(), presets::idealized()];
+        let mut arr =
+            VectorArray::new(&devs, &[1.0, 1.0], VectorUpdatePolicy::All, 1, 2, &mut rng);
+        for _ in 0..100 {
+            arr.pulse(0, true, &mut rng);
+        }
+        // both devices got 100 pulses of 1e-4 → effective ≈ 2·0.01
+        let w = arr.weights()[0];
+        assert!((w - 0.02).abs() < 1e-4, "w = {w}");
+    }
+
+    #[test]
+    fn vector_sequential_alternates() {
+        let mut rng = Rng::new(2);
+        let devs = vec![presets::idealized(), presets::idealized()];
+        let mut arr = VectorArray::new(
+            &devs,
+            &[1.0, 1.0],
+            VectorUpdatePolicy::SingleSequential,
+            1,
+            1,
+            &mut rng,
+        );
+        let upd = UpdateParameters::default();
+        for _ in 0..4 {
+            arr.pre_update(&upd, &mut rng);
+            for _ in 0..10 {
+                arr.pulse(0, true, &mut rng);
+            }
+        }
+        // 40 pulses of 1e-4 spread across both devices
+        let w = arr.weights()[0];
+        assert!((w - 0.004).abs() < 1e-5, "w = {w}");
+        // each device should hold exactly half
+        assert!((arr.subs[0].weights()[0] - 0.002).abs() < 1e-6);
+        assert!((arr.subs[1].weights()[0] - 0.002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vector_set_weights_roundtrip() {
+        let mut rng = Rng::new(3);
+        let devs = vec![presets::idealized(), presets::idealized()];
+        let mut arr =
+            VectorArray::new(&devs, &[1.0, 1.0], VectorUpdatePolicy::All, 2, 2, &mut rng);
+        let target = vec![0.3, -0.2, 0.1, 0.0];
+        arr.set_weights(&target);
+        for (a, b) in arr.weights().iter().zip(target.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transfer_moves_gradient_into_slow_tile() {
+        let mut rng = Rng::new(4);
+        let mut arr = TransferArray::new(&reram(), &reram(), 0.0, 1, 1.0, 1, 2, 2, &mut rng);
+        let upd = UpdateParameters::default();
+        // pump up A at crosspoint (0,0) then trigger transfers over all cols
+        for _ in 0..40 {
+            for _ in 0..20 {
+                arr.pulse(0, true, &mut rng);
+            }
+            arr.post_update(&upd, &mut rng);
+        }
+        let w = arr.weights()[0];
+        assert!(w > 0.05, "slow tile must accumulate transferred weight, got {w}");
+        // crosspoint (1,1) never pulsed → only read-noise random walk
+        let w_noise = arr.weights()[3].abs();
+        assert!(w_noise < w * 0.5, "noise transfer {w_noise} must stay well below signal {w}");
+    }
+
+    #[test]
+    fn transfer_effective_includes_gamma() {
+        let mut rng = Rng::new(5);
+        let mut arr = TransferArray::new(&reram(), &reram(), 0.5, 1000, 1.0, 1, 1, 1, &mut rng);
+        for _ in 0..100 {
+            arr.pulse(0, true, &mut rng);
+        }
+        // no transfer happened (every 1000) → effective = γ·A
+        let a = arr.fast.weights()[0];
+        let w = arr.weights()[0];
+        assert!((w - 0.5 * a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_sided_signed_representation() {
+        let mut rng = Rng::new(6);
+        let mut arr = OneSidedArray::new(&presets::idealized(), 0.9, 1, 1, &mut rng);
+        for _ in 0..50 {
+            arr.pulse(0, true, &mut rng);
+        }
+        for _ in 0..20 {
+            arr.pulse(0, false, &mut rng);
+        }
+        let w = arr.weights()[0];
+        assert!((w - 0.003).abs() < 1e-5, "30 net up pulses → 0.003, got {w}");
+    }
+
+    #[test]
+    fn one_sided_refresh_fires_on_saturation() {
+        let mut rng = Rng::new(7);
+        let mut arr = OneSidedArray::new(&presets::idealized(), 0.05, 1, 1, &mut rng);
+        let upd = UpdateParameters::default();
+        // drive both devices up by alternating, inflating g+ and g- while
+        // keeping w small → refresh must fire
+        for _ in 0..2000 {
+            arr.pulse(0, true, &mut rng);
+            arr.pulse(0, false, &mut rng);
+        }
+        let w_before = arr.weights()[0];
+        arr.post_update(&upd, &mut rng);
+        assert!(arr.refresh_count > 0, "refresh must trigger");
+        let w_after = arr.weights()[0];
+        assert!((w_before - w_after).abs() < 0.05, "refresh preserves w: {w_before} vs {w_after}");
+        // conductances must now be small
+        assert!(arr.plus.weights()[0] < 0.06);
+    }
+
+    #[test]
+    fn one_sided_set_weights() {
+        let mut rng = Rng::new(8);
+        let mut arr = OneSidedArray::new(&presets::idealized(), 0.9, 1, 2, &mut rng);
+        arr.set_weights(&[0.4, -0.3]);
+        assert!((arr.weights()[0] - 0.4).abs() < 1e-6);
+        assert!((arr.weights()[1] + 0.3).abs() < 1e-6);
+    }
+}

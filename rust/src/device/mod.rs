@@ -1,0 +1,124 @@
+//! Resistive device *instances*: the per-crosspoint structural state
+//! sampled from a [`crate::config::DeviceConfig`] (device-to-device
+//! variations are frozen at construction, as on a physical chip) plus the
+//! pulse-response dynamics (cycle-to-cycle noise per pulse).
+//!
+//! The central abstraction is [`DeviceArray`]: a rows×cols array of
+//! devices holding its own weight state, receiving single pulses at flat
+//! crosspoint indices, and exposing the *effective* weight matrix the tile
+//! forward pass reads.
+
+pub mod compound;
+pub mod single;
+
+pub use compound::{OneSidedArray, TransferArray, VectorArray};
+pub use single::SingleDeviceArray;
+
+use crate::config::{DeviceConfig, UpdateParameters};
+use crate::util::rng::Rng;
+
+/// A rows×cols array of resistive devices with weight state.
+pub trait DeviceArray: Send {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+
+    /// Apply one update pulse at flat index `idx` in direction `up`
+    /// (`up == true` increments the effective weight).
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng);
+
+    /// Apply `n` same-direction pulses at `idx` (one coincidence burst).
+    /// Default: sequential pulses. Implementations may specialize when the
+    /// aggregate is distribution-equivalent (see `SingleDeviceArray`).
+    fn pulse_n(&mut self, idx: usize, up: bool, n: u32, rng: &mut Rng) {
+        for _ in 0..n {
+            self.pulse(idx, up, rng);
+        }
+    }
+
+    /// The effective weight matrix (flat row-major, rows×cols). Must be
+    /// cheap when nothing changed since the last call.
+    fn weights(&mut self) -> &[f32];
+
+    /// Smallest average |Δw| of a single pulse (for LR→BL conversion).
+    fn dw_min(&self) -> f32;
+
+    /// Nominal |w| bound of the effective weights.
+    fn w_bound(&self) -> f32;
+
+    /// Directly program the weight state (ideal write, used for
+    /// initialization / loading checkpoints). Implementations clip into
+    /// their physical bounds.
+    fn set_weights(&mut self, w: &[f32]);
+
+    /// Per-mini-batch temporal processes: decay, diffusion (paper §4).
+    fn post_batch(&mut self, rng: &mut Rng);
+
+    /// Called once per mini-batch *before* pulses, letting compounds
+    /// rotate update targets / run transfers (Tiki-Taka).
+    fn pre_update(&mut self, _update: &UpdateParameters, _rng: &mut Rng) {}
+
+    /// Called once per mini-batch *after* pulses (transfer events etc.).
+    fn post_update(&mut self, _update: &UpdateParameters, _rng: &mut Rng) {}
+
+    /// Reset device columns to ~0 (with reset noise); `cols` are column
+    /// indices. Models a hardware reset operation.
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng);
+}
+
+/// Instantiate a device array from a config (sampling all d2d variations
+/// from `rng`).
+pub fn build(
+    config: &DeviceConfig,
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Box<dyn DeviceArray> {
+    match config {
+        DeviceConfig::Single(cfg) => Box::new(SingleDeviceArray::new(cfg, rows, cols, rng)),
+        DeviceConfig::Vector { devices, gammas, policy } => {
+            Box::new(VectorArray::new(devices, gammas, *policy, rows, cols, rng))
+        }
+        DeviceConfig::Transfer {
+            fast,
+            slow,
+            gamma,
+            transfer_every,
+            transfer_lr,
+            n_reads_per_transfer,
+        } => Box::new(TransferArray::new(
+            fast,
+            slow,
+            *gamma,
+            *transfer_every,
+            *transfer_lr,
+            *n_reads_per_transfer,
+            rows,
+            cols,
+            rng,
+        )),
+        DeviceConfig::OneSided { device, refresh_at } => {
+            Box::new(OneSidedArray::new(device, *refresh_at, rows, cols, rng))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn build_all_kinds() {
+        let mut rng = Rng::new(1);
+        for name in presets::SINGLE_PRESET_NAMES {
+            let cfg = presets::by_name(name).unwrap();
+            let arr = build(&cfg, 4, 5, &mut rng);
+            assert_eq!(arr.rows(), 4);
+            assert_eq!(arr.cols(), 5);
+            assert!(arr.dw_min() > 0.0);
+        }
+        let tt = presets::by_name("tiki_taka").unwrap();
+        let arr = build(&tt, 3, 3, &mut rng);
+        assert_eq!(arr.rows(), 3);
+    }
+}

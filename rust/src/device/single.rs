@@ -1,0 +1,539 @@
+//! Single-device-per-crosspoint array: the workhorse implementation of all
+//! pulsed step nonlinearities (paper §3, Fig. 3B).
+//!
+//! Structural (device-to-device) variations are sampled once at
+//! construction into struct-of-arrays fields; the per-pulse cycle-to-cycle
+//! write noise is sampled inside [`SingleDeviceArray::pulse`]. The update
+//! is *in place and sequential*, exactly like the physical array — this is
+//! the semantics the paper contrasts with DNN+NeuroSim's digital
+//! accumulation (§3).
+
+use crate::config::{PulsedDeviceParams, SingleDeviceConfig, StepKind};
+use crate::device::DeviceArray;
+use crate::util::rng::Rng;
+
+/// Step-kind runtime data (per-crosspoint where the config says dtod).
+#[derive(Clone, Debug)]
+enum StepData {
+    Constant,
+    /// Per-crosspoint slopes (γ scaled by 1/w_max-ish units).
+    Linear { gamma_up: Vec<f32>, gamma_down: Vec<f32>, mult_noise: bool },
+    /// Slopes implied by per-crosspoint bounds.
+    SoftBounds { mult_noise: bool },
+    Exp { a_up: f32, a_down: f32, gamma_up: f32, gamma_down: f32, a: f32, b: f32 },
+    Pow { gamma: Vec<f32> },
+    Piecewise { nodes_up: Vec<f32>, nodes_down: Vec<f32> },
+}
+
+/// Array of single resistive devices.
+pub struct SingleDeviceArray {
+    rows: usize,
+    cols: usize,
+    /// Current weight state (row-major).
+    w: Vec<f32>,
+    /// Per-crosspoint up/down pulse magnitudes (include d2d + asymmetry).
+    scale_up: Vec<f32>,
+    scale_down: Vec<f32>,
+    /// Per-crosspoint hard bounds.
+    w_max: Vec<f32>,
+    w_min: Vec<f32>,
+    /// Per-crosspoint decay rate (0 = none): w *= (1 - rate) per batch.
+    decay_rate: Vec<f32>,
+    /// Per-crosspoint diffusion strength (0 = none).
+    diffusion: Vec<f32>,
+    /// C2c write-noise std (relative to dw_min).
+    dw_min_std: f32,
+    /// Mean dw_min (for additive write noise and dw_min()).
+    dw_min_mean: f32,
+    reset_std: f32,
+    step: StepData,
+    has_decay: bool,
+    has_diffusion: bool,
+}
+
+fn sample_pos(mean: f32, rel_std: f32, rng: &mut Rng) -> f32 {
+    if rel_std <= 0.0 {
+        return mean;
+    }
+    // clip at 1% of mean to keep devices functional (aihwkit does similar)
+    (mean * (1.0 + rel_std * rng.normal() as f32)).max(0.01 * mean.abs())
+}
+
+impl SingleDeviceArray {
+    pub fn new(cfg: &SingleDeviceConfig, rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let p: &PulsedDeviceParams = &cfg.params;
+        let n = rows * cols;
+        let mut scale_up = Vec::with_capacity(n);
+        let mut scale_down = Vec::with_capacity(n);
+        let mut w_max = Vec::with_capacity(n);
+        let mut w_min = Vec::with_capacity(n);
+        let mut decay_rate = Vec::with_capacity(n);
+        let mut diffusion = Vec::with_capacity(n);
+        for _ in 0..n {
+            let dw = sample_pos(p.dw_min, p.dw_min_dtod, rng);
+            let ud = p.up_down + p.up_down_dtod * rng.normal() as f32;
+            scale_up.push((dw * (1.0 + ud)).max(0.0));
+            scale_down.push((dw * (1.0 - ud)).max(0.0));
+            w_max.push(sample_pos(p.w_max, p.w_max_dtod, rng));
+            w_min.push(-sample_pos(-p.w_min, p.w_min_dtod, rng));
+            decay_rate.push(if p.lifetime > 1.0 {
+                1.0 / sample_pos(p.lifetime, p.lifetime_dtod, rng)
+            } else {
+                0.0
+            });
+            diffusion.push(if p.diffusion > 0.0 {
+                sample_pos(p.diffusion, p.diffusion_dtod, rng)
+            } else {
+                0.0
+            });
+        }
+        let step = match &cfg.kind {
+            StepKind::ConstantStep => StepData::Constant,
+            StepKind::LinearStep { gamma_up, gamma_down, gamma_dtod, mult_noise } => {
+                let gu = (0..n).map(|_| sample_pos(*gamma_up, *gamma_dtod, rng)).collect();
+                let gd = (0..n).map(|_| sample_pos(*gamma_down, *gamma_dtod, rng)).collect();
+                StepData::Linear { gamma_up: gu, gamma_down: gd, mult_noise: *mult_noise }
+            }
+            StepKind::SoftBounds { mult_noise } => {
+                StepData::SoftBounds { mult_noise: *mult_noise }
+            }
+            StepKind::ExpStep { a_up, a_down, gamma_up, gamma_down, a, b } => StepData::Exp {
+                a_up: *a_up,
+                a_down: *a_down,
+                gamma_up: *gamma_up,
+                gamma_down: *gamma_down,
+                a: *a,
+                b: *b,
+            },
+            StepKind::PowStep { pow_gamma, pow_gamma_dtod } => {
+                let g = (0..n).map(|_| sample_pos(*pow_gamma, *pow_gamma_dtod, rng)).collect();
+                StepData::Pow { gamma: g }
+            }
+            StepKind::PiecewiseStep { nodes_up, nodes_down } => {
+                assert!(nodes_up.len() >= 2 && nodes_down.len() >= 2, "need >= 2 nodes");
+                StepData::Piecewise { nodes_up: nodes_up.clone(), nodes_down: nodes_down.clone() }
+            }
+        };
+        let has_decay = decay_rate.iter().any(|&r| r > 0.0);
+        let has_diffusion = diffusion.iter().any(|&d| d > 0.0);
+        SingleDeviceArray {
+            rows,
+            cols,
+            w: vec![0.0; n],
+            scale_up,
+            scale_down,
+            w_max,
+            w_min,
+            decay_rate,
+            diffusion,
+            dw_min_std: p.dw_min_std,
+            dw_min_mean: p.dw_min,
+            reset_std: p.reset_std,
+            step,
+            has_decay,
+            has_diffusion,
+        }
+    }
+
+    /// The deterministic (no-c2c-noise) step size at the current weight —
+    /// exposed for the Fig. 3B "ideal response" overlay and tests.
+    pub fn ideal_step(&self, idx: usize, up: bool) -> f32 {
+        let w = self.w[idx];
+        let scale = if up { self.scale_up[idx] } else { self.scale_down[idx] };
+        scale * self.step_factor(idx, w, up)
+    }
+
+    #[inline]
+    fn step_factor(&self, idx: usize, w: f32, up: bool) -> f32 {
+        match &self.step {
+            StepData::Constant => 1.0,
+            StepData::Linear { gamma_up, gamma_down, .. } => {
+                if up {
+                    (1.0 - gamma_up[idx] * w).max(0.0)
+                } else {
+                    (1.0 + gamma_down[idx] * w).max(0.0)
+                }
+            }
+            StepData::SoftBounds { .. } => {
+                if up {
+                    (1.0 - w / self.w_max[idx]).max(0.0)
+                } else {
+                    (1.0 - w / self.w_min[idx]).max(0.0)
+                }
+            }
+            StepData::Exp { a_up, a_down, gamma_up, gamma_down, a, b } => {
+                let range = self.w_max[idx] - self.w_min[idx];
+                let z = 2.0 * a * w / range + b;
+                if up {
+                    (1.0 - a_up * (gamma_up * z).exp()).max(0.0)
+                } else {
+                    (1.0 - a_down * (-gamma_down * z).exp()).max(0.0)
+                }
+            }
+            StepData::Pow { gamma } => {
+                let range = self.w_max[idx] - self.w_min[idx];
+                let frac = if up {
+                    (self.w_max[idx] - w) / range
+                } else {
+                    (w - self.w_min[idx]) / range
+                };
+                frac.clamp(0.0, 1.0).powf(gamma[idx])
+            }
+            StepData::Piecewise { nodes_up, nodes_down } => {
+                let nodes = if up { nodes_up } else { nodes_down };
+                let range = self.w_max[idx] - self.w_min[idx];
+                let pos = ((w - self.w_min[idx]) / range).clamp(0.0, 1.0)
+                    * (nodes.len() - 1) as f32;
+                let lo = pos.floor() as usize;
+                let hi = (lo + 1).min(nodes.len() - 1);
+                let frac = pos - lo as f32;
+                nodes[lo] * (1.0 - frac) + nodes[hi] * frac
+            }
+        }
+    }
+
+    #[inline]
+    fn mult_noise(&self) -> bool {
+        match &self.step {
+            StepData::Linear { mult_noise, .. } | StepData::SoftBounds { mult_noise } => {
+                *mult_noise
+            }
+            _ => false,
+        }
+    }
+}
+
+impl DeviceArray for SingleDeviceArray {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        let w = self.w[idx];
+        let scale = if up { self.scale_up[idx] } else { self.scale_down[idx] };
+        let factor = self.step_factor(idx, w, up);
+        let mut dw = scale * factor;
+        if self.dw_min_std > 0.0 {
+            if self.mult_noise() {
+                dw *= 1.0 + self.dw_min_std * rng.normal() as f32;
+            } else {
+                dw += self.dw_min_mean * self.dw_min_std * rng.normal() as f32;
+            }
+        }
+        let new = if up { w + dw } else { w - dw };
+        self.w[idx] = new.clamp(self.w_min[idx], self.w_max[idx]);
+    }
+
+    /// Burst of `n` same-direction pulses. For `ConstantStep` the sum of n
+    /// pulses is exactly `n·scale + √n·σ_c2c·Δw·ξ` followed by one clamp
+    /// (the step is state-independent and all steps share a sign, so the
+    /// clamp commutes with the sum) — one RNG draw instead of n. Other
+    /// step kinds are state-dependent and stay sequential, but inline
+    /// (single virtual call per burst instead of per pulse).
+    fn pulse_n(&mut self, idx: usize, up: bool, n: u32, rng: &mut Rng) {
+        if n == 0 {
+            return;
+        }
+        if let StepData::Constant = self.step {
+            let scale = if up { self.scale_up[idx] } else { self.scale_down[idx] };
+            let mut dw = n as f32 * scale;
+            if self.dw_min_std > 0.0 {
+                dw += (n as f32).sqrt()
+                    * self.dw_min_mean
+                    * self.dw_min_std
+                    * rng.normal() as f32;
+            }
+            let w = self.w[idx];
+            let new = if up { w + dw } else { w - dw };
+            self.w[idx] = new.clamp(self.w_min[idx], self.w_max[idx]);
+            return;
+        }
+        for _ in 0..n {
+            self.pulse(idx, up, rng);
+        }
+    }
+
+    fn weights(&mut self) -> &[f32] {
+        &self.w
+    }
+
+    fn dw_min(&self) -> f32 {
+        self.dw_min_mean
+    }
+
+    fn w_bound(&self) -> f32 {
+        // mean of per-device |bounds| means; use configured mean bound
+        let n = self.w.len().max(1);
+        let s: f32 = (0..n).map(|i| self.w_max[i]).sum();
+        s / n as f32
+    }
+
+    fn set_weights(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.w.len());
+        for (i, (dst, &src)) in self.w.iter_mut().zip(w.iter()).enumerate() {
+            *dst = src.clamp(self.w_min[i], self.w_max[i]);
+        }
+    }
+
+    fn post_batch(&mut self, rng: &mut Rng) {
+        if self.has_decay {
+            for i in 0..self.w.len() {
+                if self.decay_rate[i] > 0.0 {
+                    self.w[i] *= 1.0 - self.decay_rate[i];
+                }
+            }
+        }
+        if self.has_diffusion {
+            for i in 0..self.w.len() {
+                if self.diffusion[i] > 0.0 {
+                    self.w[i] = (self.w[i] + self.diffusion[i] * rng.normal() as f32)
+                        .clamp(self.w_min[i], self.w_max[i]);
+                }
+            }
+        }
+    }
+
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
+        for r in 0..self.rows {
+            for &c in cols {
+                let idx = r * self.cols + c;
+                self.w[idx] = (self.reset_std * rng.normal() as f32)
+                    .clamp(self.w_min[idx], self.w_max[idx]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn mk(cfg: &SingleDeviceConfig, seed: u64) -> (SingleDeviceArray, Rng) {
+        let mut rng = Rng::new(seed);
+        let arr = SingleDeviceArray::new(cfg, 2, 3, &mut rng);
+        (arr, rng)
+    }
+
+    #[test]
+    fn pulse_n_matches_sequential_in_distribution() {
+        // ConstantStep fast path: mean and variance of n-pulse bursts must
+        // match n sequential pulses (validates the perf optimization).
+        let cfg = SingleDeviceConfig::constant_step(PulsedDeviceParams {
+            dw_min: 0.001,
+            dw_min_dtod: 0.0,
+            dw_min_std: 0.5,
+            w_max_dtod: 0.0,
+            w_min_dtod: 0.0,
+            up_down_dtod: 0.0,
+            ..Default::default()
+        });
+        let reps = 4000;
+        let n = 9u32;
+        let collect = |burst: bool| -> (f64, f64) {
+            let mut rng = Rng::new(77);
+            let mut arr = SingleDeviceArray::new(&cfg, 1, 1, &mut rng);
+            let mut vals = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                arr.set_weights(&[0.0]);
+                if burst {
+                    arr.pulse_n(0, true, n, &mut rng);
+                } else {
+                    for _ in 0..n {
+                        arr.pulse(0, true, &mut rng);
+                    }
+                }
+                vals.push(arr.weights()[0] as f64);
+            }
+            let m = vals.iter().sum::<f64>() / reps as f64;
+            let v = vals.iter().map(|x| (x - m).powi(2)).sum::<f64>() / reps as f64;
+            (m, v.sqrt())
+        };
+        let (m_seq, s_seq) = collect(false);
+        let (m_burst, s_burst) = collect(true);
+        assert!((m_seq - m_burst).abs() < 3e-5, "means {m_seq} vs {m_burst}");
+        assert!((s_seq - s_burst).abs() / s_seq < 0.1, "stds {s_seq} vs {s_burst}");
+    }
+
+    #[test]
+    fn pulse_n_sequential_path_for_state_dependent_kinds() {
+        // SoftBounds burst must equal n sequential pulses exactly (same RNG
+        // stream, same state updates).
+        let (mut a, mut rng_a) = mk(&presets::reram_sb(), 42);
+        let (mut b, mut rng_b) = mk(&presets::reram_sb(), 42);
+        a.pulse_n(0, true, 7, &mut rng_a);
+        for _ in 0..7 {
+            b.pulse(0, true, &mut rng_b);
+        }
+        assert_eq!(a.weights()[0], b.weights()[0]);
+    }
+
+    #[test]
+    fn up_pulses_increase_weight() {
+        let (mut arr, mut rng) = mk(&presets::gokmen_vlasov(), 1);
+        let before = arr.weights()[0];
+        for _ in 0..50 {
+            arr.pulse(0, true, &mut rng);
+        }
+        assert!(arr.weights()[0] > before);
+    }
+
+    #[test]
+    fn weights_stay_in_bounds_under_pulse_storm() {
+        for name in presets::SINGLE_PRESET_NAMES {
+            let cfg = match presets::by_name(name).unwrap() {
+                crate::config::DeviceConfig::Single(c) => c,
+                _ => unreachable!(),
+            };
+            let mut rng = Rng::new(7);
+            let mut arr = SingleDeviceArray::new(&cfg, 1, 4, &mut rng);
+            for i in 0..4 {
+                for k in 0..5000 {
+                    arr.pulse(i, (k / 97) % 2 == 0, &mut rng);
+                }
+            }
+            let wmax = arr.w_max.clone();
+            let wmin = arr.w_min.clone();
+            for (i, &w) in arr.weights().iter().enumerate() {
+                assert!(w <= wmax[i] + 1e-6 && w >= wmin[i] - 1e-6, "{name}: w={w} out of bounds");
+            }
+        }
+    }
+
+    #[test]
+    fn soft_bounds_steps_shrink_near_bound() {
+        let (mut arr, mut rng) = mk(&presets::reram_sb(), 3);
+        let early = arr.ideal_step(0, true);
+        for _ in 0..2000 {
+            arr.pulse(0, true, &mut rng);
+        }
+        let late = arr.ideal_step(0, true);
+        assert!(late < 0.5 * early, "soft-bounds step must shrink: {early} -> {late}");
+    }
+
+    #[test]
+    fn constant_step_is_constant() {
+        let cfg = SingleDeviceConfig::constant_step(PulsedDeviceParams {
+            dw_min_std: 0.0,
+            dw_min_dtod: 0.0,
+            up_down_dtod: 0.0,
+            ..Default::default()
+        });
+        let (mut arr, mut rng) = mk(&cfg, 4);
+        let s0 = arr.ideal_step(0, true);
+        for _ in 0..100 {
+            arr.pulse(0, true, &mut rng);
+        }
+        let s1 = arr.ideal_step(0, true);
+        assert!((s0 - s1).abs() < 1e-9);
+        assert!((s0 - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_weights_clips_into_bounds() {
+        let (mut arr, _) = mk(&presets::gokmen_vlasov(), 5);
+        arr.set_weights(&[10.0, -10.0, 0.1, 0.0, 0.0, 0.0]);
+        let wmax0 = arr.w_max[0];
+        let wmin1 = arr.w_min[1];
+        assert_eq!(arr.weights()[0], wmax0);
+        assert_eq!(arr.weights()[1], wmin1);
+        assert_eq!(arr.weights()[2], 0.1);
+    }
+
+    #[test]
+    fn decay_shrinks_weights() {
+        let cfg = SingleDeviceConfig::constant_step(PulsedDeviceParams {
+            lifetime: 10.0,
+            lifetime_dtod: 0.0,
+            w_max_dtod: 0.0, // keep bounds exact so 0.5 isn't clipped
+            w_min_dtod: 0.0,
+            ..Default::default()
+        });
+        let (mut arr, mut rng) = mk(&cfg, 6);
+        arr.set_weights(&[0.5; 6]);
+        arr.post_batch(&mut rng);
+        for &w in arr.weights() {
+            assert!((w - 0.45).abs() < 1e-6, "decay by 1/lifetime: {w}");
+        }
+    }
+
+    #[test]
+    fn diffusion_perturbs_weights() {
+        let cfg = SingleDeviceConfig::constant_step(PulsedDeviceParams {
+            diffusion: 0.01,
+            diffusion_dtod: 0.0,
+            ..Default::default()
+        });
+        let (mut arr, mut rng) = mk(&cfg, 7);
+        arr.set_weights(&[0.0; 6]);
+        arr.post_batch(&mut rng);
+        assert!(arr.weights().iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn reset_cols_zeroes_selected() {
+        let (mut arr, mut rng) = mk(&presets::gokmen_vlasov(), 8);
+        arr.set_weights(&[0.5; 6]);
+        arr.reset_cols(&[1], &mut rng);
+        // column 1 reset to ~N(0, reset_std), others untouched
+        assert!((arr.weights()[0] - 0.5).abs() < 1e-6);
+        assert!(arr.weights()[1].abs() < 0.1);
+        assert!((arr.weights()[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn up_down_asymmetry_biases_steps() {
+        let cfg = SingleDeviceConfig::constant_step(PulsedDeviceParams {
+            up_down: 0.5,
+            up_down_dtod: 0.0,
+            dw_min_dtod: 0.0,
+            dw_min_std: 0.0,
+            ..Default::default()
+        });
+        let (arr, _) = mk(&cfg, 9);
+        assert!(arr.ideal_step(0, true) > arr.ideal_step(0, false));
+    }
+
+    #[test]
+    fn exp_step_saturates_asymmetrically() {
+        let (mut arr, mut rng) = mk(&presets::reram_es(), 10);
+        // drive far up: step factor should collapse near the top
+        for _ in 0..4000 {
+            arr.pulse(0, true, &mut rng);
+        }
+        let near_top = arr.ideal_step(0, true);
+        let mut arr2 = {
+            let mut r = Rng::new(10);
+            SingleDeviceArray::new(&presets::reram_es(), 2, 3, &mut r)
+        };
+        arr2.set_weights(&[0.0; 6]);
+        let at_zero = arr2.ideal_step(0, true);
+        assert!(near_top < at_zero, "ExpStep must saturate: {near_top} !< {at_zero}");
+    }
+
+    #[test]
+    fn piecewise_interpolates() {
+        let cfg = SingleDeviceConfig {
+            params: PulsedDeviceParams {
+                dw_min_dtod: 0.0,
+                dw_min_std: 0.0,
+                up_down_dtod: 0.0,
+                w_max_dtod: 0.0,
+                w_min_dtod: 0.0,
+                ..Default::default()
+            },
+            kind: StepKind::PiecewiseStep {
+                nodes_up: vec![2.0, 1.0, 0.0],
+                nodes_down: vec![0.0, 1.0, 2.0],
+            },
+        };
+        let (mut arr, _) = mk(&cfg, 11);
+        arr.set_weights(&[0.0; 6]); // middle of [-0.6, 0.6] → node index 1
+        let s = arr.ideal_step(0, true);
+        assert!((s - 0.001).abs() < 1e-7, "middle node factor 1.0: {s}");
+    }
+}

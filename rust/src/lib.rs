@@ -1,0 +1,24 @@
+//! # aihwsim
+//!
+//! Analog crossbar-array training & inference simulator — a Rust + JAX +
+//! Pallas reproduction of the IBM Analog Hardware Acceleration Kit
+//! (Rasch et al., AICAS 2021). See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for the reproduced figures.
+//!
+//! Layer map:
+//! * `config`/`device`/`tile`/`noise` — the RPU core (analog tile model)
+//! * `nn`/`optim`/`data` — the DNN front-end (AnalogLinear & friends)
+//! * `runtime` — PJRT loader for the AOT-compiled JAX/Pallas artifacts
+//! * `coordinator` — training/evaluation orchestration + experiments
+//! * `util` — std-only substrate (RNG, matrix, JSON, threads, stats)
+
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod data;
+pub mod nn;
+pub mod noise;
+pub mod optim;
+pub mod runtime;
+pub mod tile;
+pub mod util;

@@ -1,0 +1,264 @@
+//! aihwsim CLI launcher.
+//!
+//! Subcommands:
+//!   train        — train an MLP/LeNet on synthetic data (analog or FP)
+//!   infer-drift  — hardware-aware accuracy-over-time evaluation
+//!   response     — device pulse-response traces (Fig. 3B)
+//!   drift        — PCM conductance drift traces (Fig. 3C)
+//!   e2e          — runtime-backed (AOT/PJRT) hardware-aware training
+//!   presets      — list device presets
+//!
+//! Common options: `--config <file.json>` loads an RPUConfig (see
+//! `config::loader` for the schema); `--csv <path>` writes metrics.
+
+use aihwsim::config::{loader, presets, RPUConfig};
+use aihwsim::coordinator::experiments;
+use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
+use aihwsim::coordinator::{evaluator, trainer, InferenceMlp};
+use aihwsim::data::synthetic_images;
+use aihwsim::nn::sequential::{lenet, mlp, Backend};
+use aihwsim::nn::AnalogLinear;
+use aihwsim::runtime::Runtime;
+use aihwsim::util::argparse::Args;
+use aihwsim::util::logging::{info, CsvLogger};
+use aihwsim::util::rng::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: aihwsim <command> [options]\n\
+         commands:\n\
+           train        --backend analog|fp --arch mlp|lenet --preset <name> \\\n\
+                        --epochs N --batch N --lr F --samples N --csv path --config file.json\n\
+           infer-drift  --epochs N --gdc true|false --csv path\n\
+           response     --preset <name> --pulses N --devices N --csv path\n\
+           drift        --csv path\n\
+           e2e          --steps N --lr F --artifact hwa_train_step|fp_train_step\n\
+           presets"
+    );
+    std::process::exit(2);
+}
+
+fn load_config(args: &Args) -> RPUConfig {
+    if let Some(path) = args.get("config") {
+        match loader::load_rpu_config(path) {
+            Ok(c) => return c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let mut cfg = RPUConfig::default();
+    if let Some(p) = args.get("preset") {
+        match presets::by_name(p) {
+            Some(d) => cfg.device = d,
+            None => {
+                eprintln!("unknown preset '{p}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    cfg
+}
+
+fn cmd_train(args: &Args) {
+    let backend = match args.str_or("backend", "analog").as_str() {
+        "fp" | "float" => Backend::FloatingPoint,
+        _ => Backend::Analog,
+    };
+    let cfg = load_config(args);
+    let samples = args.usize_or("samples", 480);
+    let side = args.usize_or("side", 16);
+    let classes = args.usize_or("classes", 10);
+    let seed = args.u64_or("seed", 42);
+    let mut rng = Rng::new(seed);
+    // one generator call → one prototype set; hold out 20% for testing
+    let (train_ds, test_ds) =
+        synthetic_images(samples + samples / 4, classes, side, 1, &mut rng).split(samples / 4);
+    let mut model = match args.str_or("arch", "mlp").as_str() {
+        "lenet" => lenet(1, side, classes, backend, &cfg, &mut rng),
+        _ => mlp(&[side * side, 128, 64, classes], backend, &cfg, &mut rng),
+    };
+    info(&model.summary());
+    let tc = trainer::TrainConfig {
+        epochs: args.usize_or("epochs", 10),
+        batch_size: args.usize_or("batch", 32),
+        lr: args.f32_or("lr", 0.1),
+        seed,
+        log_every: 1,
+        csv_path: args.get("csv").map(String::from),
+    };
+    let report = trainer::train_classifier(&mut model, &train_ds, &test_ds, &tc);
+    info(&format!(
+        "done: {} steps in {:.1}s — final loss {:.4}, test acc {:.3}",
+        report.steps,
+        report.wall_s,
+        report.final_loss(),
+        report.final_test_acc()
+    ));
+    if let Some(path) = args.get("save") {
+        // collect every AnalogLinear layer's weights into a checkpoint
+        let mut layers = Vec::new();
+        for i in 0..model.len() {
+            if let Some(lin) = model
+                .module_mut(i)
+                .as_any_mut()
+                .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            {
+                let w = lin.get_weights();
+                let b = lin.get_bias().map(|b| b.to_vec()).unwrap_or_default();
+                layers.push((w, b));
+            }
+        }
+        match aihwsim::coordinator::checkpoint::save(path, &layers) {
+            Ok(()) => info(&format!("saved checkpoint ({} linear layers) to {path}", layers.len())),
+            Err(e) => eprintln!("checkpoint save failed: {e}"),
+        }
+    }
+}
+
+fn cmd_infer_drift(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let mut rng = Rng::new(seed);
+    let side = 16;
+    let classes = 10;
+    let train_ds = synthetic_images(480, classes, side, 1, &mut rng);
+    // 1) hardware-aware training (noisy fwd, perfect bwd/update)
+    let hwa_cfg = RPUConfig::hwa_training(aihwsim::config::WeightModifier::AddNormal {
+        std: args.f32_or("w-noise", 0.06),
+    });
+    let mut model = mlp(&[side * side, 128, classes], Backend::Analog, &hwa_cfg, &mut rng);
+    let tc = trainer::TrainConfig {
+        epochs: args.usize_or("epochs", 12),
+        batch_size: 32,
+        lr: 0.1,
+        seed,
+        log_every: 0,
+        csv_path: None,
+    };
+    let rep = trainer::train_classifier(&mut model, &train_ds, &train_ds, &tc);
+    info(&format!("HWA-trained: acc {:.3}", rep.final_test_acc()));
+    // 2) program onto PCM inference tiles and sweep time
+    let mut layers = Vec::new();
+    for idx in [0usize, 2] {
+        let lin = model
+            .module_mut(idx)
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            .expect("linear layer");
+        layers.push((lin.get_weights(), lin.get_bias().unwrap().to_vec()));
+    }
+    let gdc = args.str_or("gdc", "true") == "true";
+    let mut icfg = aihwsim::config::InferenceRPUConfig::default();
+    icfg.drift_compensation = gdc;
+    let mut net = InferenceMlp::from_weights(&layers, &icfg, &mut rng);
+    net.program();
+    let times = [25.0f32, 3600.0, 86400.0, 2.6e6, 3.15e7];
+    let series = evaluator::accuracy_over_time(&mut net, &train_ds, &times, 32);
+    let mut csv = args
+        .get("csv")
+        .map(|p| CsvLogger::create(p, &["t_seconds", "accuracy", "gdc"]).unwrap());
+    for (t, acc) in &series {
+        info(&format!("t = {t:>12.0}s  acc {acc:.3}  (gdc={gdc})"));
+        if let Some(c) = csv.as_mut() {
+            c.row(&[*t as f64, *acc, gdc as u8 as f64]).unwrap();
+        }
+    }
+}
+
+fn cmd_response(args: &Args) {
+    let preset = args.str_or("preset", "reram_es");
+    let pulses = args.usize_or("pulses", 1000);
+    let devices = args.usize_or("devices", 64);
+    let tr = experiments::device_response(&preset, devices, pulses, args.u64_or("seed", 1));
+    info(&format!("preset {} over {} devices, {}↑/{}↓ pulses", preset, devices, pulses, pulses));
+    if let Some(p) = args.get("csv") {
+        let mut csv = CsvLogger::create(p, &["pulse", "mean", "std", "ideal"]).unwrap();
+        for i in 0..tr.pulse.len() {
+            csv.row(&[tr.pulse[i] as f64, tr.mean[i], tr.std[i], tr.ideal[i]]).unwrap();
+        }
+        info(&format!("wrote {p}"));
+    } else {
+        for i in (0..tr.pulse.len()).step_by((tr.pulse.len() / 20).max(1)) {
+            info(&format!(
+                "pulse {:4}  mean {:+.3} ± {:.3}  ideal {:+.3}",
+                tr.pulse[i], tr.mean[i], tr.std[i], tr.ideal[i]
+            ));
+        }
+    }
+}
+
+fn cmd_drift(args: &Args) {
+    let times: Vec<f32> = (0..25).map(|i| 25.0 * 10f32.powf(i as f32 * 0.25)).collect();
+    let tr = experiments::pcm_drift(&[22.5, 15.0, 7.5, 2.5], &times, 2000, args.u64_or("seed", 1));
+    if let Some(p) = args.get("csv") {
+        let mut csv =
+            CsvLogger::create(p, &["t_seconds", "target_us", "mean_us", "std_us"]).unwrap();
+        for (g, means, stds) in &tr.levels {
+            for (i, &t) in tr.times.iter().enumerate() {
+                csv.row(&[t as f64, *g as f64, means[i], stds[i]]).unwrap();
+            }
+        }
+        info(&format!("wrote {p}"));
+    } else {
+        for (g, means, stds) in &tr.levels {
+            info(&format!(
+                "target {g:>5.1} µS: t0 {:.2}±{:.2} → 1y {:.2}±{:.2} µS",
+                means[0],
+                stds[0],
+                means.last().unwrap(),
+                stds.last().unwrap()
+            ));
+        }
+    }
+}
+
+fn cmd_e2e(args: &Args) {
+    let dir = Runtime::default_dir();
+    let mut pipe = match HwaPipeline::new(&dir, args.u64_or("seed", 42)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("runtime error: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    };
+    info(&format!("PJRT platform: {}", pipe.platform()));
+    let mut rng = Rng::new(7);
+    let ds = synthetic_images(args.usize_or("samples", 1024), 10, 28, 1, &mut rng);
+    let artifact = args.str_or("artifact", "hwa_train_step");
+    let steps = args.usize_or("steps", 100);
+    let rep = pipe
+        .train(&artifact, &ds, steps, args.f32_or("lr", 0.1), args.usize_or("log-every", 10))
+        .expect("training failed");
+    let acc = pipe.evaluate(&ds).expect("eval failed");
+    info(&format!(
+        "{artifact}: {} steps in {:.1}s ({:.1} ms/step, {:.0}% in PJRT), loss {:.3}→{:.3}, acc {acc:.3}",
+        rep.steps,
+        rep.wall_s,
+        1e3 * rep.wall_s / rep.steps as f64,
+        100.0 * rep.exec_s / rep.wall_s,
+        rep.step_loss.first().unwrap_or(&f32::NAN),
+        rep.step_loss.last().unwrap_or(&f32::NAN),
+    ));
+}
+
+fn cmd_presets() {
+    for name in presets::SINGLE_PRESET_NAMES {
+        let cfg = presets::by_name(name).unwrap();
+        println!("{name:16} dw_min={:.5} bound={:.2}", cfg.dw_min(), cfg.w_bound());
+    }
+    println!("tiki_taka        (transfer compound of 2× reram_sb)");
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("infer-drift") => cmd_infer_drift(&args),
+        Some("response") => cmd_response(&args),
+        Some("drift") => cmd_drift(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("presets") => cmd_presets(),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,197 @@
+//! Digital activation modules. Per the paper (§3), activation functions
+//! are computed digitally after the analog MVM results are digitized, so
+//! these are exact FP ops with cached values for the backward pass.
+
+use crate::nn::Module;
+use crate::util::matrix::Matrix;
+
+macro_rules! act_module {
+    ($name:ident, $fwd:expr, $bwd:expr, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Default)]
+        pub struct $name {
+            cache: Option<Matrix>,
+        }
+
+        impl $name {
+            pub fn new() -> Self {
+                Self { cache: None }
+            }
+        }
+
+        impl Module for $name {
+            fn forward(&mut self, x: &Matrix) -> Matrix {
+                let mut y = x.clone();
+                y.map_inplace($fwd);
+                self.cache = Some(y.clone());
+                y
+            }
+
+            fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+                let y = self.cache.as_ref().expect("forward before backward");
+                assert_eq!(y.rows(), grad_out.rows());
+                let mut g = grad_out.clone();
+                let dydx: fn(f32) -> f32 = $bwd;
+                for (gv, &yv) in g.data_mut().iter_mut().zip(y.data().iter()) {
+                    *gv *= dydx(yv);
+                }
+                g
+            }
+
+            fn update(&mut self, _lr: f32) {}
+            fn post_batch(&mut self) {
+                self.cache = None;
+            }
+            fn num_params(&self) -> usize {
+                0
+            }
+            fn set_train(&mut self, _train: bool) {}
+            fn name(&self) -> String {
+                stringify!($name).to_string()
+            }
+        }
+    };
+}
+
+// derivative expressed in terms of the *output* y (cached)
+act_module!(
+    ReLU,
+    |v| if v > 0.0 { v } else { 0.0 },
+    |y| if y > 0.0 { 1.0 } else { 0.0 },
+    "Rectified linear unit."
+);
+act_module!(Tanh, |v| v.tanh(), |y| 1.0 - y * y, "Hyperbolic tangent.");
+act_module!(
+    Sigmoid,
+    |v| 1.0 / (1.0 + (-v).exp()),
+    |y| y * (1.0 - y),
+    "Logistic sigmoid."
+);
+
+/// Log-softmax over the last dimension (digital), typically followed by
+/// [`crate::nn::loss::nll_loss`].
+#[derive(Default)]
+pub struct LogSoftmax {
+    cache: Option<Matrix>,
+}
+
+impl LogSoftmax {
+    pub fn new() -> Self {
+        LogSoftmax { cache: None }
+    }
+}
+
+impl Module for LogSoftmax {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut y = x.clone();
+        for b in 0..y.rows() {
+            let row = y.row_mut(b);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            for v in row.iter_mut() {
+                *v -= lse;
+            }
+        }
+        self.cache = Some(y.clone());
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+        // d/dx_i = g_i - softmax_i * Σ_j g_j
+        let y = self.cache.as_ref().expect("forward before backward");
+        let mut g = grad_out.clone();
+        for b in 0..g.rows() {
+            let gsum: f32 = g.row(b).iter().sum();
+            let yrow: Vec<f32> = y.row(b).to_vec();
+            for (gv, &lv) in g.row_mut(b).iter_mut().zip(yrow.iter()) {
+                *gv -= lv.exp() * gsum;
+            }
+        }
+        g
+    }
+
+    fn update(&mut self, _lr: f32) {}
+    fn post_batch(&mut self) {
+        self.cache = None;
+    }
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn set_train(&mut self, _train: bool) {}
+    fn name(&self) -> String {
+        "LogSoftmax".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut r = ReLU::new();
+        let x = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -0.5]);
+        let y = r.forward(&x);
+        assert_eq!(y.data(), &[0.0, 0.0, 2.0, 0.0]);
+        let g = r.backward(&Matrix::from_vec(1, 4, vec![1.0; 4]));
+        assert_eq!(g.data(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn tanh_gradient_check() {
+        let mut t = Tanh::new();
+        let eps = 1e-3f32;
+        let x0 = 0.37f32;
+        let x = Matrix::from_vec(1, 1, vec![x0]);
+        t.forward(&x);
+        let g = t.backward(&Matrix::from_vec(1, 1, vec![1.0]));
+        let num = ((x0 + eps).tanh() - (x0 - eps).tanh()) / (2.0 * eps);
+        assert!((g.get(0, 0) - num).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sigmoid_range() {
+        let mut s = Sigmoid::new();
+        let x = Matrix::from_vec(1, 3, vec![-10.0, 0.0, 10.0]);
+        let y = s.forward(&x);
+        assert!(y.get(0, 0) < 0.001);
+        assert!((y.get(0, 1) - 0.5).abs() < 1e-6);
+        assert!(y.get(0, 2) > 0.999);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut ls = LogSoftmax::new();
+        let x = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let y = ls.forward(&x);
+        for b in 0..2 {
+            let p: f32 = y.row(b).iter().map(|&v| v.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_softmax_gradient_check() {
+        let mut ls = LogSoftmax::new();
+        let x0 = vec![0.5f32, -0.2, 0.1];
+        let gout = vec![0.3f32, -0.1, 0.7];
+        let eps = 1e-3;
+        ls.forward(&Matrix::from_vec(1, 3, x0.clone()));
+        let g = ls.backward(&Matrix::from_vec(1, 3, gout.clone()));
+        for k in 0..3 {
+            let mut xp = x0.clone();
+            xp[k] += eps;
+            let mut xm = x0.clone();
+            xm[k] -= eps;
+            let mut l1 = LogSoftmax::new();
+            let yp = l1.forward(&Matrix::from_vec(1, 3, xp));
+            let mut l2 = LogSoftmax::new();
+            let ym = l2.forward(&Matrix::from_vec(1, 3, xm));
+            let mut num = 0.0f32;
+            for j in 0..3 {
+                num += gout[j] * (yp.get(0, j) - ym.get(0, j)) / (2.0 * eps);
+            }
+            assert!((g.get(0, k) - num).abs() < 1e-3, "k={k}: {} vs {num}", g.get(0, k));
+        }
+    }
+}

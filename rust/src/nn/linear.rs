@@ -1,0 +1,292 @@
+//! `AnalogLinear` — a fully-connected layer whose weight matrix lives on
+//! one analog tile (paper Fig. 2). The bias is digital (computed in FP and
+//! added after the ADC), matching the paper's default separation of analog
+//! and digital compute.
+
+use crate::config::RPUConfig;
+use crate::nn::Module;
+use crate::tile::{AnalogTile, FloatingPointTile, Tile};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Fully-connected layer on an analog (or FP baseline) tile.
+pub struct AnalogLinear {
+    tile: Box<dyn Tile>,
+    /// Digital bias (None = no bias).
+    bias: Option<Vec<f32>>,
+    bias_grad: Vec<f32>,
+    in_features: usize,
+    out_features: usize,
+    /// Caches for backward/update.
+    x_cache: Option<Matrix>,
+    d_cache: Option<Matrix>,
+    train: bool,
+    /// Whether the tile is an AnalogTile (for the modifier hook).
+    is_analog: bool,
+}
+
+impl AnalogLinear {
+    /// Analog layer with the given `rpu_config`.
+    pub fn new(in_features: usize, out_features: usize, bias: bool, config: RPUConfig, rng: &mut Rng) -> Self {
+        let mut tile = AnalogTile::new(out_features, in_features, config, rng.split());
+        // Kaiming-ish uniform init scaled into the device range
+        tile.init_uniform(1.0 / (in_features as f32).sqrt());
+        AnalogLinear {
+            tile: Box::new(tile),
+            bias: if bias { Some(vec![0.0; out_features]) } else { None },
+            bias_grad: vec![0.0; out_features],
+            in_features,
+            out_features,
+            x_cache: None,
+            d_cache: None,
+            train: true,
+            is_analog: true,
+        }
+    }
+
+    /// FP baseline layer (same interface, exact math).
+    pub fn floating_point(in_features: usize, out_features: usize, bias: bool, rng: &mut Rng) -> Self {
+        let mut tile = FloatingPointTile::new(out_features, in_features);
+        let bound = 1.0 / (in_features as f32).sqrt();
+        let w = Matrix::rand_uniform(out_features, in_features, -bound, bound, rng);
+        tile.set_weights(&w);
+        AnalogLinear {
+            tile: Box::new(tile),
+            bias: if bias { Some(vec![0.0; out_features]) } else { None },
+            bias_grad: vec![0.0; out_features],
+            in_features,
+            out_features,
+            x_cache: None,
+            d_cache: None,
+            train: true,
+            is_analog: false,
+        }
+    }
+
+    pub fn tile_mut(&mut self) -> &mut dyn Tile {
+        self.tile.as_mut()
+    }
+
+    pub fn get_weights(&mut self) -> Matrix {
+        self.tile.get_weights()
+    }
+
+    pub fn set_weights(&mut self, w: &Matrix) {
+        self.tile.set_weights(w);
+    }
+
+    pub fn get_bias(&self) -> Option<&[f32]> {
+        self.bias.as_deref()
+    }
+
+    pub fn set_bias(&mut self, b: &[f32]) {
+        if let Some(bias) = &mut self.bias {
+            bias.copy_from_slice(b);
+        }
+    }
+}
+
+impl Module for AnalogLinear {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.in_features);
+        if self.train && self.is_analog {
+            // hardware-aware weight noise for this mini-batch (no-op if
+            // the config has no modifier)
+            self.tile.apply_weight_modifier();
+        }
+        let mut y = Matrix::zeros(x.rows(), self.out_features);
+        self.tile.forward_batch(x, &mut y);
+        if let Some(bias) = &self.bias {
+            for b in 0..y.rows() {
+                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
+                    *v += bb;
+                }
+            }
+        }
+        if self.train {
+            self.x_cache = Some(x.clone());
+        }
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+        assert_eq!(grad_out.cols(), self.out_features);
+        let mut g = Matrix::zeros(grad_out.rows(), self.in_features);
+        self.tile.backward_batch(grad_out, &mut g);
+        // bias gradient: column sums of grad_out
+        if self.bias.is_some() {
+            self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
+            for b in 0..grad_out.rows() {
+                for (gb, &d) in self.bias_grad.iter_mut().zip(grad_out.row(b).iter()) {
+                    *gb += d;
+                }
+            }
+        }
+        self.d_cache = Some(grad_out.clone());
+        g
+    }
+
+    fn update(&mut self, lr: f32) {
+        let (x, d) = match (&self.x_cache, &self.d_cache) {
+            (Some(x), Some(d)) => (x, d),
+            _ => return,
+        };
+        self.tile.update(x, d, lr);
+        if let Some(bias) = &mut self.bias {
+            for (b, &g) in bias.iter_mut().zip(self.bias_grad.iter()) {
+                *b -= lr * g;
+            }
+        }
+    }
+
+    fn post_batch(&mut self) {
+        self.tile.post_batch();
+        self.x_cache = None;
+        self.d_cache = None;
+    }
+
+    fn num_params(&self) -> usize {
+        self.in_features * self.out_features + self.bias.as_ref().map_or(0, |b| b.len())
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "{}Linear({}, {})",
+            if self.is_analog { "Analog" } else { "FP" },
+            self.in_features,
+            self.out_features
+        )
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::util::stats;
+
+    #[test]
+    fn fp_linear_learns_regression() {
+        // fit y = W*x with W known, MSE loss
+        let mut rng = Rng::new(1);
+        let mut layer = AnalogLinear::floating_point(3, 2, true, &mut rng);
+        let w_true = Matrix::from_vec(2, 3, vec![0.5, -0.3, 0.2, 0.1, 0.4, -0.2]);
+        let mut final_loss = f32::MAX;
+        for _ in 0..300 {
+            let x = Matrix::rand_uniform(8, 3, -1.0, 1.0, &mut rng);
+            let mut target = Matrix::zeros(8, 2);
+            for b in 0..8 {
+                let t = w_true.matvec(x.row(b));
+                target.row_mut(b).copy_from_slice(&t);
+            }
+            let y = layer.forward(&x);
+            // MSE grad: (y - t)/B
+            let mut d = Matrix::zeros(8, 2);
+            let mut loss = 0.0;
+            for b in 0..8 {
+                for j in 0..2 {
+                    let e = y.get(b, j) - target.get(b, j);
+                    loss += e * e;
+                    d.set(b, j, e / 8.0);
+                }
+            }
+            final_loss = loss / 16.0;
+            layer.backward(&d);
+            layer.update(0.2);
+            layer.post_batch();
+        }
+        assert!(final_loss < 1e-3, "final loss {final_loss}");
+    }
+
+    #[test]
+    fn analog_linear_learns_regression() {
+        // same task with a default analog config (noisy!) — must still fit
+        let mut rng = Rng::new(2);
+        let mut cfg = RPUConfig::default();
+        cfg.weight_scaling_omega = 0.0;
+        let mut layer = AnalogLinear::new(4, 2, true, cfg, &mut rng);
+        let w_true = Matrix::from_vec(2, 4, vec![0.3, -0.2, 0.1, 0.25, -0.15, 0.3, 0.05, -0.1]);
+        let mut losses = Vec::new();
+        for _ in 0..200 {
+            let x = Matrix::rand_uniform(10, 4, -1.0, 1.0, &mut rng);
+            let mut target = Matrix::zeros(10, 2);
+            for b in 0..10 {
+                target.row_mut(b).copy_from_slice(&w_true.matvec(x.row(b)));
+            }
+            let y = layer.forward(&x);
+            let mut d = Matrix::zeros(10, 2);
+            let mut loss = 0.0;
+            for b in 0..10 {
+                for j in 0..2 {
+                    let e = y.get(b, j) - target.get(b, j);
+                    loss += e * e;
+                    d.set(b, j, e / 10.0);
+                }
+            }
+            losses.push((loss / 20.0) as f32);
+            layer.backward(&d);
+            layer.update(0.1);
+            layer.post_batch();
+        }
+        let early: f32 = losses[..20].iter().sum::<f32>() / 20.0;
+        let late: f32 = losses[losses.len() - 20..].iter().sum::<f32>() / 20.0;
+        assert!(
+            late < early * 0.5,
+            "analog training must reduce loss: {early} -> {late}"
+        );
+    }
+
+    #[test]
+    fn backward_returns_input_grad() {
+        let mut rng = Rng::new(3);
+        let mut layer = AnalogLinear::floating_point(3, 2, false, &mut rng);
+        let w = Matrix::from_vec(2, 3, vec![1., 0., 0., 0., 1., 0.]);
+        layer.set_weights(&w);
+        let x = Matrix::from_vec(1, 3, vec![0.5, 0.5, 0.5]);
+        layer.forward(&x);
+        let g = layer.backward(&Matrix::from_vec(1, 2, vec![1.0, 2.0]));
+        assert_eq!(g.data(), &[1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn eval_mode_is_deterministic_for_perfect_config() {
+        let mut rng = Rng::new(4);
+        let mut layer = AnalogLinear::new(4, 2, false, RPUConfig::perfect(), &mut rng);
+        layer.set_train(false);
+        let x = Matrix::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
+        let y1 = layer.forward(&x);
+        let y2 = layer.forward(&x);
+        for (a, b) in y1.data().iter().zip(y2.data().iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn num_params_counts_bias() {
+        let mut rng = Rng::new(5);
+        let l = AnalogLinear::floating_point(10, 5, true, &mut rng);
+        assert_eq!(l.num_params(), 55);
+        let l2 = AnalogLinear::floating_point(10, 5, false, &mut rng);
+        assert_eq!(l2.num_params(), 50);
+    }
+
+    #[test]
+    fn analog_init_spread() {
+        let mut rng = Rng::new(6);
+        let mut cfg = RPUConfig::perfect();
+        cfg.weight_scaling_omega = 0.0;
+        let mut l = AnalogLinear::new(100, 10, false, cfg, &mut rng);
+        let w = l.get_weights();
+        let sd = stats::std(w.data());
+        assert!(sd > 0.01 && sd < 0.2, "init std {sd}");
+        assert!(w.mean().abs() < 0.02);
+    }
+}

@@ -1,0 +1,93 @@
+//! Loss functions (digital): each returns `(loss, grad_wrt_input)` with
+//! the 1/B batch normalization folded into the gradient.
+
+use crate::util::matrix::Matrix;
+
+/// Mean-squared error: L = mean((y - t)²)/2 per element.
+pub fn mse_loss(y: &Matrix, target: &Matrix) -> (f32, Matrix) {
+    assert_eq!(y.rows(), target.rows());
+    assert_eq!(y.cols(), target.cols());
+    let n = (y.rows() * y.cols()) as f32;
+    let mut grad = Matrix::zeros(y.rows(), y.cols());
+    let mut loss = 0.0f32;
+    for (i, (&yv, &tv)) in y.data().iter().zip(target.data().iter()).enumerate() {
+        let e = yv - tv;
+        loss += 0.5 * e * e;
+        grad.data_mut()[i] = e / n;
+    }
+    (loss / n, grad)
+}
+
+/// Negative log-likelihood over log-probabilities (pair with LogSoftmax):
+/// L = −mean(logp[b, label_b]).
+pub fn nll_loss(logp: &Matrix, labels: &[usize]) -> (f32, Matrix) {
+    assert_eq!(logp.rows(), labels.len());
+    let b = logp.rows() as f32;
+    let mut grad = Matrix::zeros(logp.rows(), logp.cols());
+    let mut loss = 0.0f32;
+    for (r, &lab) in labels.iter().enumerate() {
+        assert!(lab < logp.cols(), "label out of range");
+        loss -= logp.get(r, lab);
+        grad.set(r, lab, -1.0 / b);
+    }
+    (loss / b, grad)
+}
+
+/// Classification accuracy of log-probabilities (or logits) vs labels.
+pub fn accuracy(scores: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(scores.rows(), labels.len());
+    let mut correct = 0usize;
+    for (r, &lab) in labels.iter().enumerate() {
+        let row = scores.row(r);
+        let mut best = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == lab {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_at_target() {
+        let y = Matrix::from_vec(1, 2, vec![0.5, -0.5]);
+        let (l, g) = mse_loss(&y, &y);
+        assert_eq!(l, 0.0);
+        assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mse_gradient_direction() {
+        let y = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        let t = Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let (l, g) = mse_loss(&y, &t);
+        assert!((l - 0.25).abs() < 1e-6);
+        assert!(g.get(0, 0) > 0.0);
+        assert_eq!(g.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn nll_perfect_prediction() {
+        // logp ≈ 0 for the true class
+        let logp = Matrix::from_vec(1, 3, vec![-0.0001, -9.0, -9.0]);
+        let (l, g) = nll_loss(&logp, &[0]);
+        assert!(l < 0.001);
+        assert!(g.get(0, 0) < 0.0);
+        assert_eq!(g.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let s = Matrix::from_vec(3, 2, vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        assert!((accuracy(&s, &[0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((accuracy(&s, &[1, 1, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,214 @@
+//! Tile mapping: physical crossbars have a maximum size, so large layers
+//! must be split across several tiles (standard aihwkit `mapping`
+//! behaviour). [`TiledLinear`] splits the input dimension into column
+//! blocks and sums partial MVMs digitally.
+
+use crate::config::RPUConfig;
+use crate::nn::Module;
+use crate::tile::{AnalogTile, Tile};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A fully-connected layer split over multiple analog tiles along the
+/// input dimension (each tile at most `max_in` columns wide).
+pub struct TiledLinear {
+    tiles: Vec<AnalogTile>,
+    splits: Vec<(usize, usize)>, // (start, len) of each input block
+    in_features: usize,
+    out_features: usize,
+    bias: Vec<f32>,
+    bias_grad: Vec<f32>,
+    x_cache: Option<Matrix>,
+    d_cache: Option<Matrix>,
+    train: bool,
+}
+
+impl TiledLinear {
+    pub fn new(
+        in_features: usize,
+        out_features: usize,
+        max_in: usize,
+        config: RPUConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(max_in >= 1);
+        let mut tiles = Vec::new();
+        let mut splits = Vec::new();
+        let mut start = 0;
+        while start < in_features {
+            let len = max_in.min(in_features - start);
+            let mut t = AnalogTile::new(out_features, len, config.clone(), rng.split());
+            t.init_uniform(1.0 / (in_features as f32).sqrt());
+            tiles.push(t);
+            splits.push((start, len));
+            start += len;
+        }
+        TiledLinear {
+            tiles,
+            splits,
+            in_features,
+            out_features,
+            bias: vec![0.0; out_features],
+            bias_grad: vec![0.0; out_features],
+            x_cache: None,
+            d_cache: None,
+            train: true,
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    fn slice_cols(x: &Matrix, start: usize, len: usize) -> Matrix {
+        let mut out = Matrix::zeros(x.rows(), len);
+        for b in 0..x.rows() {
+            out.row_mut(b).copy_from_slice(&x.row(b)[start..start + len]);
+        }
+        out
+    }
+}
+
+impl Module for TiledLinear {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.in_features);
+        let mut y = Matrix::zeros(x.rows(), self.out_features);
+        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
+            if self.train {
+                tile.apply_weight_modifier_impl();
+            }
+            let xs = Self::slice_cols(x, start, len);
+            let mut part = Matrix::zeros(x.rows(), self.out_features);
+            tile.forward_batch(&xs, &mut part);
+            y.add_assign(&part);
+        }
+        for b in 0..y.rows() {
+            for (v, &bb) in y.row_mut(b).iter_mut().zip(self.bias.iter()) {
+                *v += bb;
+            }
+        }
+        if self.train {
+            self.x_cache = Some(x.clone());
+        }
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+        assert_eq!(grad_out.cols(), self.out_features);
+        let mut g = Matrix::zeros(grad_out.rows(), self.in_features);
+        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
+            let mut part = Matrix::zeros(grad_out.rows(), len);
+            tile.backward_batch(grad_out, &mut part);
+            for b in 0..g.rows() {
+                g.row_mut(b)[start..start + len].copy_from_slice(part.row(b));
+            }
+        }
+        self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
+        for b in 0..grad_out.rows() {
+            for (gb, &d) in self.bias_grad.iter_mut().zip(grad_out.row(b).iter()) {
+                *gb += d;
+            }
+        }
+        self.d_cache = Some(grad_out.clone());
+        g
+    }
+
+    fn update(&mut self, lr: f32) {
+        let (x, d) = match (&self.x_cache, &self.d_cache) {
+            (Some(x), Some(d)) => (x.clone(), d.clone()),
+            _ => return,
+        };
+        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
+            let xs = Self::slice_cols(&x, start, len);
+            tile.update(&xs, &d, lr);
+        }
+        for (b, &g) in self.bias.iter_mut().zip(self.bias_grad.iter()) {
+            *b -= lr * g;
+        }
+    }
+
+    fn post_batch(&mut self) {
+        for t in self.tiles.iter_mut() {
+            t.post_batch();
+        }
+        self.x_cache = None;
+        self.d_cache = None;
+    }
+
+    fn num_params(&self) -> usize {
+        self.in_features * self.out_features + self.out_features
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "TiledLinear({}, {}; {} tiles)",
+            self.in_features,
+            self.out_features,
+            self.tiles.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::nn::loss::mse_loss;
+
+    #[test]
+    fn splits_cover_input() {
+        let mut rng = Rng::new(1);
+        let layer = TiledLinear::new(100, 4, 32, RPUConfig::perfect(), &mut rng);
+        assert_eq!(layer.num_tiles(), 4); // 32+32+32+4
+        let total: usize = layer.splits.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn matches_single_tile_when_it_fits() {
+        let mut rng = Rng::new(2);
+        let mut tiled = TiledLinear::new(8, 3, 100, RPUConfig::perfect(), &mut rng);
+        assert_eq!(tiled.num_tiles(), 1);
+        let x = Matrix::rand_uniform(2, 8, -1.0, 1.0, &mut rng);
+        let y = tiled.forward(&x);
+        assert_eq!(y.cols(), 3);
+    }
+
+    #[test]
+    fn tiled_trains_regression() {
+        let mut rng = Rng::new(3);
+        let mut layer = TiledLinear::new(10, 2, 4, RPUConfig::perfect(), &mut rng);
+        assert_eq!(layer.num_tiles(), 3);
+        let w_true = Matrix::rand_uniform(2, 10, -0.3, 0.3, &mut rng);
+        let mut final_loss = f32::MAX;
+        for _ in 0..400 {
+            let x = Matrix::rand_uniform(6, 10, -1.0, 1.0, &mut rng);
+            let mut t = Matrix::zeros(6, 2);
+            for b in 0..6 {
+                t.row_mut(b).copy_from_slice(&w_true.matvec(x.row(b)));
+            }
+            let y = layer.forward(&x);
+            let (l, g) = mse_loss(&y, &t);
+            final_loss = l;
+            layer.backward(&g);
+            layer.update(0.3);
+            layer.post_batch();
+        }
+        assert!(final_loss < 5e-3, "tiled regression loss {final_loss}");
+    }
+
+    #[test]
+    fn backward_shape() {
+        let mut rng = Rng::new(4);
+        let mut layer = TiledLinear::new(9, 2, 4, RPUConfig::perfect(), &mut rng);
+        let x = Matrix::rand_uniform(3, 9, -1.0, 1.0, &mut rng);
+        let y = layer.forward(&x);
+        let g = layer.backward(&y);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.cols(), 9);
+    }
+}

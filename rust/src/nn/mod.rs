@@ -1,0 +1,44 @@
+//! DNN front-end: the analog counterpart of the paper's PyTorch layers
+//! (`AnalogLinear`, `AnalogConv2d`, …) on an explicit forward/backward
+//! `Module` trait (no autograd engine needed — §3's separation of digital
+//! and analog ops maps onto explicit module boundaries).
+
+pub mod activations;
+pub mod conv;
+pub mod linear;
+pub mod loss;
+pub mod mapping;
+pub mod sequential;
+
+pub use activations::{LogSoftmax, ReLU, Sigmoid, Tanh};
+pub use conv::AnalogConv2d;
+pub use linear::AnalogLinear;
+pub use loss::{mse_loss, nll_loss};
+pub use sequential::Sequential;
+
+use crate::util::matrix::Matrix;
+
+/// A network module with explicit backward and analog-aware update.
+///
+/// Calling convention per mini-batch:
+/// 1. `forward(x)` (caches whatever backward needs),
+/// 2. `backward(grad_out)` (caches whatever update needs, returns grad_in),
+/// 3. `update(lr)` (analog tiles: pulsed update; digital params: SGD),
+/// 4. `post_batch()` (decay/diffusion/modifier restore).
+pub trait Module: Send {
+    fn forward(&mut self, x: &Matrix) -> Matrix;
+    fn backward(&mut self, grad_out: &Matrix) -> Matrix;
+    fn update(&mut self, lr: f32);
+    fn post_batch(&mut self);
+    /// Total trainable parameters (analog + digital).
+    fn num_params(&self) -> usize;
+    /// Put the module in train (true) or eval (false) mode — controls
+    /// weight modifiers and noise injection policies.
+    fn set_train(&mut self, train: bool);
+    fn name(&self) -> String;
+    /// Downcast hook for typed access to concrete layers (weight
+    /// extraction for inference programming, etc.).
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}

@@ -1,0 +1,249 @@
+//! `Sequential` container + standard architecture builders (MLP, LeNet).
+
+use crate::config::RPUConfig;
+use crate::nn::{AnalogConv2d, AnalogLinear, LogSoftmax, Module, ReLU, Tanh};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A sequence of modules executed in order.
+pub struct Sequential {
+    modules: Vec<Box<dyn Module>>,
+}
+
+impl Sequential {
+    pub fn new() -> Self {
+        Sequential { modules: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: Box<dyn Module>) -> &mut Self {
+        self.modules.push(m);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modules.is_empty()
+    }
+
+    /// Access a module by index (for weight extraction etc.).
+    pub fn module_mut(&mut self, i: usize) -> &mut dyn Module {
+        self.modules[i].as_mut()
+    }
+
+    /// Architecture summary string.
+    pub fn summary(&self) -> String {
+        let names: Vec<String> = self.modules.iter().map(|m| m.name()).collect();
+        format!("Sequential[{}] ({} params)", names.join(" -> "), self.num_params())
+    }
+}
+
+impl Default for Sequential {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Module for Sequential {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut h = x.clone();
+        for m in self.modules.iter_mut() {
+            h = m.forward(&h);
+        }
+        h
+    }
+
+    fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+        let mut g = grad_out.clone();
+        for m in self.modules.iter_mut().rev() {
+            g = m.backward(&g);
+        }
+        g
+    }
+
+    fn update(&mut self, lr: f32) {
+        for m in self.modules.iter_mut() {
+            m.update(lr);
+        }
+    }
+
+    fn post_batch(&mut self) {
+        for m in self.modules.iter_mut() {
+            m.post_batch();
+        }
+    }
+
+    fn num_params(&self) -> usize {
+        self.modules.iter().map(|m| m.num_params()).sum()
+    }
+
+    fn set_train(&mut self, train: bool) {
+        for m in self.modules.iter_mut() {
+            m.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        "Sequential".into()
+    }
+}
+
+/// Whether networks are built with analog tiles or the FP baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Analog,
+    FloatingPoint,
+}
+
+fn linear(
+    backend: Backend,
+    inf: usize,
+    outf: usize,
+    cfg: &RPUConfig,
+    rng: &mut Rng,
+) -> Box<dyn Module> {
+    match backend {
+        Backend::Analog => Box::new(AnalogLinear::new(inf, outf, true, cfg.clone(), rng)),
+        Backend::FloatingPoint => Box::new(AnalogLinear::floating_point(inf, outf, true, rng)),
+    }
+}
+
+/// MLP classifier `dims[0] -> ... -> dims[n-1]` with Tanh hidden units and
+/// a LogSoftmax head (use with `nll_loss`).
+pub fn mlp(dims: &[usize], backend: Backend, cfg: &RPUConfig, rng: &mut Rng) -> Sequential {
+    assert!(dims.len() >= 2);
+    let mut net = Sequential::new();
+    for k in 0..dims.len() - 1 {
+        net.push(linear(backend, dims[k], dims[k + 1], cfg, rng));
+        if k + 2 < dims.len() {
+            net.push(Box::new(Tanh::new()));
+        }
+    }
+    net.push(Box::new(LogSoftmax::new()));
+    net
+}
+
+/// Small LeNet-style CNN for `ch×size×size` images:
+/// conv(ch→8, k5, s2) → ReLU → conv(8→16, k3, s2) → ReLU → FC → LogSoftmax.
+pub fn lenet(
+    ch: usize,
+    size: usize,
+    classes: usize,
+    backend: Backend,
+    cfg: &RPUConfig,
+    rng: &mut Rng,
+) -> Sequential {
+    let mut net = Sequential::new();
+    let c1 = 8;
+    let c2 = 16;
+    let s1 = (size - 5) / 2 + 1;
+    let s2 = (s1 - 3) / 2 + 1;
+    match backend {
+        Backend::Analog => {
+            net.push(Box::new(AnalogConv2d::new(ch, c1, 5, 2, 0, size, cfg.clone(), rng)));
+            net.push(Box::new(ReLU::new()));
+            net.push(Box::new(AnalogConv2d::new(c1, c2, 3, 2, 0, s1, cfg.clone(), rng)));
+            net.push(Box::new(ReLU::new()));
+        }
+        Backend::FloatingPoint => {
+            net.push(Box::new(AnalogConv2d::floating_point(ch, c1, 5, 2, 0, size, rng)));
+            net.push(Box::new(ReLU::new()));
+            net.push(Box::new(AnalogConv2d::floating_point(c1, c2, 3, 2, 0, s1, rng)));
+            net.push(Box::new(ReLU::new()));
+        }
+    }
+    net.push(linear(backend, c2 * s2 * s2, classes, cfg, rng));
+    net.push(Box::new(LogSoftmax::new()));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::{mse_loss, nll_loss};
+
+    #[test]
+    fn mlp_shapes() {
+        let mut rng = Rng::new(1);
+        let cfg = RPUConfig::perfect();
+        let mut net = mlp(&[8, 16, 4], Backend::FloatingPoint, &cfg, &mut rng);
+        let x = Matrix::rand_uniform(3, 8, -1.0, 1.0, &mut rng);
+        let y = net.forward(&x);
+        assert_eq!(y.rows(), 3);
+        assert_eq!(y.cols(), 4);
+        // log-probs normalize
+        for b in 0..3 {
+            let p: f32 = y.row(b).iter().map(|&v| v.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sequential_trains_xor() {
+        // classic non-linear sanity problem
+        let mut rng = Rng::new(2);
+        let mut net = Sequential::new();
+        net.push(Box::new(AnalogLinear::floating_point(2, 8, true, &mut rng)));
+        net.push(Box::new(Tanh::new()));
+        net.push(Box::new(AnalogLinear::floating_point(8, 1, true, &mut rng)));
+        let x = Matrix::from_vec(4, 2, vec![0., 0., 0., 1., 1., 0., 1., 1.]);
+        let t = Matrix::from_vec(4, 1, vec![0., 1., 1., 0.]);
+        let mut final_loss = f32::MAX;
+        for _ in 0..2000 {
+            let y = net.forward(&x);
+            let (l, g) = mse_loss(&y, &t);
+            final_loss = l;
+            net.backward(&g);
+            net.update(0.5);
+            net.post_batch();
+        }
+        assert!(final_loss < 0.01, "xor loss {final_loss}");
+    }
+
+    #[test]
+    fn mlp_classifies_blobs_analog() {
+        // 3 linearly separable blobs, analog training end to end
+        let mut rng = Rng::new(3);
+        let mut cfg = RPUConfig::default();
+        cfg.weight_scaling_omega = 0.6;
+        let mut net = mlp(&[4, 3], Backend::Analog, &cfg, &mut rng);
+        let centers = [[1.0f32, 0., 0., 0.5], [0., 1.0, 0.5, 0.], [0., 0., 1.0, 1.0]];
+        let mut accs = Vec::new();
+        for epoch in 0..30 {
+            let mut correct = 0;
+            for _ in 0..20 {
+                let lab = rng.below(3);
+                let mut xv = centers[lab].to_vec();
+                for v in xv.iter_mut() {
+                    *v += 0.2 * rng.normal() as f32;
+                }
+                let x = Matrix::from_vec(1, 4, xv);
+                let y = net.forward(&x);
+                let (_, g) = nll_loss(&y, &[lab]);
+                if crate::nn::loss::accuracy(&y, &[lab]) > 0.5 {
+                    correct += 1;
+                }
+                net.backward(&g);
+                net.update(0.1);
+                net.post_batch();
+            }
+            if epoch >= 25 {
+                accs.push(correct as f64 / 20.0);
+            }
+        }
+        let acc = accs.iter().sum::<f64>() / accs.len() as f64;
+        assert!(acc > 0.8, "analog blob accuracy {acc}");
+    }
+
+    #[test]
+    fn summary_mentions_layers() {
+        let mut rng = Rng::new(4);
+        let cfg = RPUConfig::perfect();
+        let net = mlp(&[4, 2], Backend::Analog, &cfg, &mut rng);
+        let s = net.summary();
+        assert!(s.contains("AnalogLinear(4, 2)"), "{s}");
+        assert!(s.contains("LogSoftmax"), "{s}");
+    }
+}

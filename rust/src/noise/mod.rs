@@ -1,0 +1,5 @@
+//! Inference-time statistical noise models (paper §5) and hardware-aware
+//! training weight modifiers.
+
+pub mod pcm;
+pub mod weight_mod;

@@ -1,0 +1,303 @@
+//! Statistical PCM noise model for inference (paper §5, Fig. 3C).
+//!
+//! Calibrated functional forms follow Joshi et al., "Accurate deep neural
+//! network inference using computational phase-change memory", Nat.
+//! Commun. 11, 2473 (2020), as packaged in aihwkit's `PCMLikeNoiseModel`:
+//!
+//! * **weight → conductance**: a signed pair (g⁺, g⁻) with
+//!   g = |w|·g_max on the matching side (the other side at 0).
+//! * **programming noise**: σ_prog(g_T) = max(c₀ + c₁·ĝ + c₂·ĝ², 0) in µS
+//!   with ĝ = g_T/g_max and c = (0.26348, 1.9650, −1.1731).
+//! * **drift**: g(t) = g_prog·(t/t₀)^(−ν), ν per-device log-dependent on
+//!   g with Gaussian device-to-device spread, clipped to [ν_min, ν_max];
+//!   typical ν ≈ 0.03–0.08 (the paper's Fig. 3C shows the resulting decay
+//!   of the mean and growth of the spread).
+//! * **read (1/f) noise**: σ_read(g, t) = Q_s(g)·g·√(ln((t+t_r)/(2 t_r)))
+//!   with Q_s(g) = min(0.0088/ĝ_rel^0.65, 0.2).
+//! * **global drift compensation**: the ratio of a calibration readout at
+//!   t vs t₀ rescales the digital output (Joshi et al. eq. 7).
+
+use crate::util::rng::Rng;
+
+/// Parameters of the PCM statistical model.
+#[derive(Clone, Debug)]
+pub struct PCMNoiseParams {
+    /// Maximum conductance in µS corresponding to |w| = 1.
+    pub g_max: f32,
+    /// Programming-noise polynomial coefficients (µS), c0 + c1·g + c2·g².
+    pub prog_coeff: [f32; 3],
+    /// Overall scales (1.0 = calibrated hardware).
+    pub prog_noise_scale: f32,
+    pub read_noise_scale: f32,
+    pub drift_scale: f32,
+    /// Drift exponent statistics.
+    pub drift_nu_dtod: f32,
+    pub drift_nu_min: f32,
+    pub drift_nu_max: f32,
+    /// Reference times (s).
+    pub t0: f32,
+    pub t_read: f32,
+}
+
+impl Default for PCMNoiseParams {
+    fn default() -> Self {
+        PCMNoiseParams {
+            g_max: 25.0,
+            prog_coeff: [0.26348, 1.9650, -1.1731],
+            prog_noise_scale: 1.0,
+            read_noise_scale: 1.0,
+            drift_scale: 1.0,
+            drift_nu_dtod: 0.2,
+            drift_nu_min: 0.015,
+            drift_nu_max: 0.12,
+            t0: 20.0,
+            t_read: 250e-9,
+        }
+    }
+}
+
+impl PCMNoiseParams {
+    /// Programming-noise std (µS) at target conductance `g` (µS). The
+    /// polynomial is over the *relative* conductance ĝ = g/g_max (Joshi et
+    /// al. 2020 fit): σ(ĝ) = c0 + c1·ĝ + c2·ĝ², ~1 µS at mid-range.
+    pub fn sigma_prog(&self, g: f32) -> f32 {
+        let ghat = g / self.g_max;
+        let sig = self.prog_coeff[0] + self.prog_coeff[1] * ghat + self.prog_coeff[2] * ghat * ghat;
+        (sig * self.prog_noise_scale).max(0.0)
+    }
+
+    /// Mean drift exponent ν for a device programmed at `g` (µS): smaller
+    /// conductances drift more (log dependence, Joshi et al. Fig. 3).
+    pub fn nu_mean(&self, g: f32) -> f32 {
+        let grel = (g / self.g_max).clamp(1e-3, 1.0);
+        // -0.0155·log10(g_rel·25µS) + 0.0645 → ν(25 µS) ≈ 0.043, rising to
+        // ~0.09 at 1 µS; clipped into [nu_min, nu_max].
+        let nu = -0.0155 * (grel * 25.0).log10() + 0.0645;
+        nu.clamp(self.drift_nu_min, self.drift_nu_max)
+    }
+
+    /// Sample a per-device drift exponent.
+    pub fn sample_nu(&self, g: f32, rng: &mut Rng) -> f32 {
+        let mean = self.nu_mean(g);
+        let nu = mean * (1.0 + self.drift_nu_dtod * rng.normal() as f32);
+        (nu * self.drift_scale).clamp(self.drift_nu_min, self.drift_nu_max)
+    }
+
+    /// Drift decay factor (t/t0)^(-ν) for one device.
+    pub fn drift_factor(&self, nu: f32, t: f32) -> f32 {
+        if t <= self.t0 {
+            return 1.0;
+        }
+        (t / self.t0).powf(-nu)
+    }
+
+    /// Read-noise std (µS) for conductance `g` (µS) at time `t` (s).
+    pub fn sigma_read(&self, g: f32, t: f32) -> f32 {
+        if g <= 0.0 {
+            return 0.0;
+        }
+        let grel = (g / self.g_max).max(1e-9);
+        let q_s = (0.0088 / grel.powf(0.65)).min(0.2);
+        let t_eff = t.max(self.t0);
+        let arg = ((t_eff + self.t_read) / (2.0 * self.t_read)).ln().max(0.0);
+        q_s * g * arg.sqrt() * self.read_noise_scale
+    }
+}
+
+/// One signed crosspoint: a (g⁺, g⁻) PCM pair plus its drift exponents.
+#[derive(Clone, Debug, Default)]
+pub struct PcmPair {
+    /// Programmed conductances at t0 (µS), after programming noise.
+    pub g_plus: f32,
+    pub g_minus: f32,
+    /// Per-device drift exponents.
+    pub nu_plus: f32,
+    pub nu_minus: f32,
+}
+
+/// The programmed state of a whole tile (struct-of-arrays).
+#[derive(Clone, Debug)]
+pub struct ProgrammedWeights {
+    pub pairs: Vec<PcmPair>,
+    /// Weight-unit → conductance scale used at programming (g_max ↔ w_bound).
+    pub w_bound: f32,
+    pub params: PCMNoiseParams,
+}
+
+impl ProgrammedWeights {
+    /// Program digital weights (in [-w_bound, w_bound]) onto PCM pairs,
+    /// applying conductance-dependent programming noise (paper Fig. 3C,
+    /// "all weights programmed at the same time").
+    pub fn program(weights: &[f32], w_bound: f32, params: &PCMNoiseParams, rng: &mut Rng) -> Self {
+        let mut pairs = Vec::with_capacity(weights.len());
+        for &w in weights {
+            let wn = (w / w_bound).clamp(-1.0, 1.0);
+            let g_target = wn.abs() * params.g_max;
+            let sig = params.sigma_prog(g_target);
+            let g_prog = (g_target + sig * rng.normal() as f32).max(0.0);
+            // The unused side sits at ~0 conductance with residual noise.
+            let g_res = (params.sigma_prog(0.0) * rng.normal() as f32).abs();
+            let (g_plus, g_minus) = if wn >= 0.0 { (g_prog, g_res) } else { (g_res, g_prog) };
+            let nu_plus = params.sample_nu(g_plus.max(0.1), rng);
+            let nu_minus = params.sample_nu(g_minus.max(0.1), rng);
+            pairs.push(PcmPair { g_plus, g_minus, nu_plus, nu_minus });
+        }
+        ProgrammedWeights { pairs, w_bound, params: params.clone() }
+    }
+
+    /// Effective weights at time `t` (s), *without* read noise (read noise
+    /// is per-MVM, applied by the inference tile) and without compensation.
+    pub fn weights_at(&self, t: f32) -> Vec<f32> {
+        let p = &self.params;
+        self.pairs
+            .iter()
+            .map(|pair| {
+                let gp = pair.g_plus * p.drift_factor(pair.nu_plus, t);
+                let gm = pair.g_minus * p.drift_factor(pair.nu_minus, t);
+                (gp - gm) / p.g_max * self.w_bound
+            })
+            .collect()
+    }
+
+    /// Effective weights at time `t` including fresh read noise.
+    pub fn read_weights_at(&self, t: f32, rng: &mut Rng) -> Vec<f32> {
+        let p = &self.params;
+        self.pairs
+            .iter()
+            .map(|pair| {
+                let gp0 = pair.g_plus * p.drift_factor(pair.nu_plus, t);
+                let gm0 = pair.g_minus * p.drift_factor(pair.nu_minus, t);
+                let gp = gp0 + p.sigma_read(gp0, t) * rng.normal() as f32;
+                let gm = gm0 + p.sigma_read(gm0, t) * rng.normal() as f32;
+                (gp - gm) / p.g_max * self.w_bound
+            })
+            .collect()
+    }
+
+    /// Global drift compensation factor (Joshi et al. 2020): ratio of the
+    /// summed |readout| at programming time vs now. Multiplying the MVM
+    /// output by this factor undoes the *mean* drift.
+    pub fn drift_compensation(&self, t: f32, rng: &mut Rng) -> f32 {
+        let p = &self.params;
+        let mut s0 = 0.0f64;
+        let mut st = 0.0f64;
+        for pair in &self.pairs {
+            // baseline readout at t0 (with read noise at t0)
+            let gp0 = pair.g_plus + p.sigma_read(pair.g_plus, p.t0) * rng.normal() as f32;
+            let gm0 = pair.g_minus + p.sigma_read(pair.g_minus, p.t0) * rng.normal() as f32;
+            s0 += (gp0 - gm0).abs() as f64;
+            let gpt0 = pair.g_plus * p.drift_factor(pair.nu_plus, t);
+            let gmt0 = pair.g_minus * p.drift_factor(pair.nu_minus, t);
+            let gpt = gpt0 + p.sigma_read(gpt0, t) * rng.normal() as f32;
+            let gmt = gmt0 + p.sigma_read(gmt0, t) * rng.normal() as f32;
+            st += (gpt - gmt).abs() as f64;
+        }
+        if st <= 1e-12 {
+            return 1.0;
+        }
+        (s0 / st) as f32
+    }
+
+    /// Mean conductance (µS) of the used devices at time t — the Fig. 3C
+    /// observable.
+    pub fn mean_conductance_at(&self, t: f32) -> (f64, f64) {
+        let p = &self.params;
+        let mut vals = Vec::with_capacity(self.pairs.len());
+        for pair in &self.pairs {
+            if pair.g_plus >= pair.g_minus {
+                vals.push((pair.g_plus * p.drift_factor(pair.nu_plus, t)) as f64);
+            } else {
+                vals.push((pair.g_minus * p.drift_factor(pair.nu_minus, t)) as f64);
+            }
+        }
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_prog_shape() {
+        let p = PCMNoiseParams::default();
+        // polynomial peaks mid-range, positive everywhere on [0, g_max]
+        assert!(p.sigma_prog(0.0) > 0.0);
+        assert!(p.sigma_prog(12.5) > p.sigma_prog(0.0));
+        assert!(p.sigma_prog(25.0) >= 0.0);
+    }
+
+    #[test]
+    fn nu_bigger_for_small_g() {
+        let p = PCMNoiseParams::default();
+        assert!(p.nu_mean(1.0) > p.nu_mean(25.0));
+        assert!(p.nu_mean(25.0) >= p.drift_nu_min);
+        assert!(p.nu_mean(0.1) <= p.drift_nu_max);
+    }
+
+    #[test]
+    fn drift_monotone_decay() {
+        let p = PCMNoiseParams::default();
+        let mut last = 1.01;
+        for &t in &[20.0, 100.0, 1e3, 1e5, 1e7] {
+            let f = p.drift_factor(0.06, t);
+            assert!(f <= last, "drift factor must decay");
+            assert!(f > 0.0);
+            last = f;
+        }
+        assert_eq!(p.drift_factor(0.06, 1.0), 1.0); // no drift before t0
+    }
+
+    #[test]
+    fn read_noise_grows_with_time() {
+        let p = PCMNoiseParams::default();
+        assert!(p.sigma_read(10.0, 1e6) > p.sigma_read(10.0, 100.0));
+        assert_eq!(p.sigma_read(0.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn program_read_roundtrip_near_targets() {
+        let p = PCMNoiseParams::default();
+        let mut rng = Rng::new(42);
+        let w: Vec<f32> = (0..2000).map(|i| (i as f32 / 1000.0) - 1.0).collect();
+        let prog = ProgrammedWeights::program(&w, 1.0, &p, &mut rng);
+        let back = prog.weights_at(p.t0);
+        // mean absolute error limited by programming noise (~σ/g_max ≲ 0.06)
+        let mae: f32 =
+            w.iter().zip(back.iter()).map(|(a, b)| (a - b).abs()).sum::<f32>() / w.len() as f32;
+        assert!(mae < 0.08, "mae {mae}");
+    }
+
+    #[test]
+    fn compensation_counteracts_drift() {
+        let p = PCMNoiseParams::default();
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..4000).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let prog = ProgrammedWeights::program(&w, 1.0, &p, &mut rng);
+        let t = 1e6;
+        let drifted = prog.weights_at(t);
+        let gamma = prog.drift_compensation(t, &mut rng);
+        assert!(gamma > 1.0, "drift shrinks conductances → γ > 1, got {gamma}");
+        // compensated mean |w| should be much closer to the original
+        let m0: f32 = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let md: f32 = drifted.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let mc = md * gamma;
+        assert!((mc - m0).abs() < 0.3 * (m0 - md).abs() + 0.01,
+            "m0 {m0} drifted {md} compensated {mc}");
+    }
+
+    #[test]
+    fn fig3c_spread_grows() {
+        let p = PCMNoiseParams::default();
+        let mut rng = Rng::new(3);
+        let w = vec![0.5f32; 5000];
+        let prog = ProgrammedWeights::program(&w, 1.0, &p, &mut rng);
+        let (m_early, s_early) = prog.mean_conductance_at(25.0);
+        let (m_late, s_late) = prog.mean_conductance_at(1e6);
+        assert!(m_late < m_early, "mean conductance decays");
+        assert!(s_late > s_early * 0.9, "spread must not shrink (ν d2d)");
+    }
+}

@@ -1,0 +1,102 @@
+//! Hardware-aware-training weight modifiers (paper §5): reversible noise
+//! applied to the tile weights for the duration of one mini-batch (forward
+//! and backward see the perturbed weights; the update applies to the clean
+//! ones).
+
+use crate::config::WeightModifier;
+use crate::util::rng::Rng;
+
+/// Apply a modifier to `weights` (in place), given the weight bound
+/// `w_bound` that "relative" stds refer to. Returns the clean copy needed
+/// to restore after the batch, or `None` when the modifier is `None`.
+pub fn apply(
+    modifier: &WeightModifier,
+    weights: &mut [f32],
+    w_bound: f32,
+    rng: &mut Rng,
+) -> Option<Vec<f32>> {
+    match modifier {
+        WeightModifier::None => None,
+        WeightModifier::AddNormal { std } => {
+            let clean = weights.to_vec();
+            let s = std * w_bound;
+            for w in weights.iter_mut() {
+                *w += s * rng.normal() as f32;
+            }
+            Some(clean)
+        }
+        WeightModifier::MultNormal { std } => {
+            let clean = weights.to_vec();
+            for w in weights.iter_mut() {
+                *w *= 1.0 + std * rng.normal() as f32;
+            }
+            Some(clean)
+        }
+        WeightModifier::Discretize { levels, std } => {
+            let clean = weights.to_vec();
+            let nlev = (*levels).max(2) as f32;
+            let step = 2.0 * w_bound / (nlev - 1.0);
+            for w in weights.iter_mut() {
+                let q = ((*w / step).round() * step).clamp(-w_bound, w_bound);
+                *w = q + std * w_bound * rng.normal() as f32;
+            }
+            Some(clean)
+        }
+    }
+}
+
+/// Restore the clean weights saved by [`apply`].
+pub fn restore(weights: &mut [f32], clean: Option<Vec<f32>>) {
+    if let Some(c) = clean {
+        weights.copy_from_slice(&c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let mut w = vec![0.1, -0.5, 0.3];
+        let orig = w.clone();
+        let mut rng = Rng::new(1);
+        let saved = apply(&WeightModifier::None, &mut w, 1.0, &mut rng);
+        assert!(saved.is_none());
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn add_normal_perturbs_and_restores() {
+        let mut w: Vec<f32> = (0..1000).map(|i| (i as f32) / 1000.0 - 0.5).collect();
+        let orig = w.clone();
+        let mut rng = Rng::new(2);
+        let saved = apply(&WeightModifier::AddNormal { std: 0.1 }, &mut w, 1.0, &mut rng);
+        assert_ne!(w, orig);
+        let d: f32 = w.iter().zip(orig.iter()).map(|(a, b)| (a - b).powi(2)).sum::<f32>()
+            / w.len() as f32;
+        assert!((d.sqrt() - 0.1).abs() < 0.02, "std off: {}", d.sqrt());
+        restore(&mut w, saved);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn discretize_quantizes() {
+        let mut w = vec![0.24f32, -0.26, 0.51, 0.0];
+        let mut rng = Rng::new(3);
+        let saved =
+            apply(&WeightModifier::Discretize { levels: 5, std: 0.0 }, &mut w, 1.0, &mut rng);
+        // 5 levels over [-1,1] → step 0.5
+        assert_eq!(w, vec![0.0, -0.5, 0.5, 0.0]);
+        restore(&mut w, saved);
+        assert_eq!(w, vec![0.24, -0.26, 0.51, 0.0]);
+    }
+
+    #[test]
+    fn mult_noise_scales_with_weight() {
+        let mut w = vec![0.0f32; 100];
+        let mut rng = Rng::new(4);
+        apply(&WeightModifier::MultNormal { std: 0.3 }, &mut w, 1.0, &mut rng);
+        assert!(w.iter().all(|&v| v == 0.0), "zero weights unchanged by mult noise");
+    }
+}

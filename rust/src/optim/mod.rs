@@ -1,0 +1,82 @@
+//! Analog-aware optimizer (`AnalogSGD`, paper Fig. 2) + LR schedules.
+//!
+//! Standard optimizers assume they can read gradients and write weights
+//! digitally; an analog tile instead performs its own pulsed update
+//! in-memory. `AnalogSGD` therefore just orchestrates the module-level
+//! `update(lr)` / `post_batch()` calls — each analog layer converts the
+//! cached (x, d) pair into pulse trains, and digital parameters (biases)
+//! do plain SGD inside their module.
+
+pub mod schedule;
+
+pub use schedule::LrSchedule;
+
+use crate::nn::Module;
+
+/// SGD for mixed analog/digital networks.
+pub struct AnalogSGD {
+    lr: f32,
+    schedule: LrSchedule,
+    step_count: u64,
+}
+
+impl AnalogSGD {
+    pub fn new(lr: f32) -> Self {
+        AnalogSGD { lr, schedule: LrSchedule::Constant, step_count: 0 }
+    }
+
+    pub fn with_schedule(lr: f32, schedule: LrSchedule) -> Self {
+        AnalogSGD { lr, schedule, step_count: 0 }
+    }
+
+    /// Current effective learning rate.
+    pub fn lr(&self) -> f32 {
+        self.schedule.at(self.lr, self.step_count)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.step_count
+    }
+
+    /// One optimization step: apply updates then run per-batch device
+    /// processes (decay/diffusion) — call after `forward` + `backward`.
+    pub fn step(&mut self, model: &mut dyn Module) {
+        let lr = self.lr();
+        model.update(lr);
+        model.post_batch();
+        self.step_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{AnalogLinear, Module};
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn step_applies_update_and_advances_schedule() {
+        let mut rng = Rng::new(1);
+        let mut layer = AnalogLinear::floating_point(2, 1, false, &mut rng);
+        layer.set_weights(&Matrix::zeros(1, 2));
+        let mut opt = AnalogSGD::new(0.5);
+        let x = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        layer.forward(&x);
+        layer.backward(&Matrix::from_vec(1, 1, vec![-1.0]));
+        opt.step(&mut layer);
+        assert_eq!(opt.steps(), 1);
+        let w = layer.get_weights();
+        assert!((w.get(0, 0) - 0.5).abs() < 1e-6, "w -= lr·d·x = +0.5");
+    }
+
+    #[test]
+    fn decay_schedule_reduces_lr() {
+        let mut opt = AnalogSGD::with_schedule(1.0, LrSchedule::StepDecay { every: 10, factor: 0.5 });
+        assert_eq!(opt.lr(), 1.0);
+        opt.step_count = 10;
+        assert_eq!(opt.lr(), 0.5);
+        opt.step_count = 25;
+        assert_eq!(opt.lr(), 0.25);
+    }
+}

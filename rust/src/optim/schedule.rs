@@ -1,0 +1,65 @@
+//! Learning-rate schedules.
+
+/// Schedule applied on top of a base learning rate.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant,
+    /// lr · factor^(step / every)
+    StepDecay { every: u64, factor: f32 },
+    /// lr / (1 + k·step)
+    InverseTime { k: f32 },
+    /// linear warmup over the first `steps` steps
+    Warmup { steps: u64 },
+}
+
+impl LrSchedule {
+    /// Effective LR at `step` given base `lr`.
+    pub fn at(&self, lr: f32, step: u64) -> f32 {
+        match self {
+            LrSchedule::Constant => lr,
+            LrSchedule::StepDecay { every, factor } => {
+                lr * factor.powi((step / every.max(&1).to_owned()) as i32)
+            }
+            LrSchedule::InverseTime { k } => lr / (1.0 + k * step as f32),
+            LrSchedule::Warmup { steps } => {
+                if step >= *steps {
+                    lr
+                } else {
+                    lr * (step as f32 + 1.0) / (*steps as f32)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        assert_eq!(LrSchedule::Constant.at(0.1, 1000), 0.1);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { every: 100, factor: 0.1 };
+        assert!((s.at(1.0, 0) - 1.0).abs() < 1e-9);
+        assert!((s.at(1.0, 100) - 0.1).abs() < 1e-9);
+        assert!((s.at(1.0, 250) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_time_monotone() {
+        let s = LrSchedule::InverseTime { k: 0.01 };
+        assert!(s.at(1.0, 10) > s.at(1.0, 100));
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup { steps: 10 };
+        assert!((s.at(1.0, 0) - 0.1).abs() < 1e-6);
+        assert!((s.at(1.0, 9) - 1.0).abs() < 1e-6);
+        assert_eq!(s.at(1.0, 50), 1.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Artifact loading and execution on the PJRT CPU client.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// The PJRT runtime: client + artifact registry (manifest.json).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: BTreeMap<String, LoadedExec>,
+}
+
+/// One compiled executable with its manifest metadata.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Argument names in call order (from the manifest).
+    pub arg_names: Vec<String>,
+    /// Number of tuple outputs.
+    pub num_outputs: usize,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`; run
+    /// `make artifacts` first).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("{} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// with `AIHWSIM_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AIHWSIM_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// MLP layer sizes the artifacts were built for.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        self.manifest
+            .get("layer_sizes")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default()
+    }
+
+    /// Batch size the artifacts were built for.
+    pub fn batch(&self) -> usize {
+        self.manifest.get("batch").and_then(Json::as_usize).unwrap_or(0)
+    }
+
+    /// Load (compile) an artifact by name; cached after the first call.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedExec> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get("artifacts")
+                .and_then(|a| a.get(name))
+                .with_context(|| format!("artifact '{name}' not in manifest"))?;
+            let file = meta.str_or("file", "");
+            anyhow::ensure!(!file.is_empty(), "artifact '{name}' missing file");
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let arg_names = meta
+                .get("args")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|j| j.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let num_outputs = meta.get("num_outputs").and_then(Json::as_usize).unwrap_or(1);
+            self.cache.insert(name.to_string(), LoadedExec { exe, arg_names, num_outputs });
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+}
+
+impl LoadedExec {
+    /// Execute with literal inputs; returns the un-tupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.arg_names.len(),
+            "expected {} args ({:?}), got {}",
+            self.arg_names.len(),
+            self.arg_names,
+            inputs.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        let items = out.to_tuple()?;
+        anyhow::ensure!(
+            items.len() == self.num_outputs,
+            "expected {} outputs, got {}",
+            self.num_outputs,
+            items.len()
+        );
+        Ok(items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{matrix_to_literal, scalar_i32};
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn artifacts_available() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn analog_mvm_artifact_runs() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let b = rt.batch();
+        let exec = rt.load("analog_mvm").unwrap();
+        let mut rng = Rng::new(1);
+        let x = Matrix::rand_uniform(b, 256, -1.0, 1.0, &mut rng);
+        let w = Matrix::rand_uniform(256, 128, -0.3, 0.3, &mut rng);
+        let nout = Matrix::rand_normal(b, 128, 0.0, 1.0, &mut rng);
+        let nw = Matrix::rand_normal(b, 128, 0.0, 1.0, &mut rng);
+        let out = exec
+            .run(&[
+                matrix_to_literal(&x).unwrap(),
+                matrix_to_literal(&w).unwrap(),
+                matrix_to_literal(&nout).unwrap(),
+                matrix_to_literal(&nw).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), b * 128);
+        // basic sanity: outputs finite, non-degenerate
+        assert!(y.iter().all(|v| v.is_finite()));
+        let amax = y.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(amax > 0.1 && amax < 100.0, "amax {amax}");
+    }
+
+    #[test]
+    fn infer_artifact_runs_and_normalizes() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let b = rt.batch();
+        let sizes = rt.layer_sizes();
+        assert_eq!(sizes, vec![784, 256, 128, 10]);
+        let exec = rt.load("analog_infer").unwrap();
+        let mut rng = Rng::new(2);
+        let mut inputs = Vec::new();
+        for i in 0..sizes.len() - 1 {
+            let w = Matrix::rand_uniform(sizes[i], sizes[i + 1], -0.05, 0.05, &mut rng);
+            inputs.push(matrix_to_literal(&w).unwrap());
+            inputs.push(crate::runtime::vec_to_literal(&vec![0.0f32; sizes[i + 1]]));
+        }
+        let x = Matrix::rand_uniform(b, 784, 0.0, 1.0, &mut rng);
+        inputs.push(matrix_to_literal(&x).unwrap());
+        inputs.push(scalar_i32(7));
+        let out = exec.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logp = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(logp.len(), b * 10);
+        // each row sums to 1 in prob space
+        for r in 0..b {
+            let p: f32 = logp[r * 10..(r + 1) * 10].iter().map(|v| v.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-3, "row {r}: {p}");
+        }
+    }
+}

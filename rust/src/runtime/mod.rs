@@ -1,0 +1,56 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path — the
+//! equivalent of aihwkit's bound RPUCUDA fast path. Python never runs
+//! here; `make artifacts` is the only Python invocation.
+
+pub mod executor;
+
+pub use executor::{LoadedExec, Runtime};
+
+use crate::util::matrix::Matrix;
+
+/// Convert a row-major Rust [`Matrix`] into an XLA literal of the same
+/// logical shape (XLA literals are row-major by default too).
+pub fn matrix_to_literal(m: &Matrix) -> anyhow::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Convert back: literal (2-D f32) → Matrix.
+pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Matrix> {
+    let v = l.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch: {} vs {rows}x{cols}", v.len());
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// 1-D f32 literal.
+pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let l = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&l, 2, 3).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(scalar_f32(2.5).to_vec::<f32>().unwrap(), vec![2.5]);
+        assert_eq!(scalar_i32(-7).to_vec::<i32>().unwrap(), vec![-7]);
+    }
+}

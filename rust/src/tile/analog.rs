@@ -1,0 +1,333 @@
+//! The pulsed analog training tile: device array + Eq. (1) forward/backward
+//! + Eq. (2) pulsed update + periphery (output scaling, weight modifier).
+
+use crate::config::{RPUConfig, WeightModifier};
+use crate::device::{build, DeviceArray};
+use crate::noise::weight_mod;
+use crate::tile::forward::{analog_mvm, MvmScratch};
+use crate::tile::pulsed_ops::{pulsed_update_batch, UpdateScratch, UpdateStats};
+use crate::tile::Tile;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Analog training tile (out_size × in_size crossbar).
+pub struct AnalogTile {
+    out_size: usize,
+    in_size: usize,
+    device: Box<dyn DeviceArray>,
+    config: RPUConfig,
+    rng: Rng,
+    /// Digital output scale α: W_digital = α · W_device.
+    out_scale: f32,
+    /// Modified (noise-injected) weights for the current mini-batch, if a
+    /// weight modifier is active (hardware-aware training).
+    modified: Option<Vec<f32>>,
+    mvm_scratch: MvmScratch,
+    upd_scratch: UpdateScratch,
+    /// Cumulative update statistics (observability).
+    pub last_update_stats: UpdateStats,
+}
+
+impl AnalogTile {
+    /// Create a tile with zeroed device weights.
+    pub fn new(out_size: usize, in_size: usize, config: RPUConfig, mut rng: Rng) -> Self {
+        config.validate().expect("invalid RPUConfig");
+        let device = build(&config.device, out_size, in_size, &mut rng);
+        AnalogTile {
+            out_size,
+            in_size,
+            device,
+            config,
+            rng,
+            out_scale: 1.0,
+            modified: None,
+            mvm_scratch: MvmScratch::default(),
+            upd_scratch: UpdateScratch::default(),
+            last_update_stats: UpdateStats::default(),
+        }
+    }
+
+    /// Initialize device weights uniformly in ±`scale·w_bound` (the usual
+    /// analog-friendly init).
+    pub fn init_uniform(&mut self, scale: f32) {
+        let bound = self.device.w_bound() * scale;
+        let n = self.out_size * self.in_size;
+        let mut w = vec![0.0f32; n];
+        self.rng.fill_uniform(&mut w, -bound, bound);
+        self.device.set_weights(&w);
+    }
+
+    /// Apply the configured weight modifier for this mini-batch (HWA
+    /// training). Restored automatically in [`Tile::post_batch`].
+    pub fn apply_weight_modifier_impl(&mut self) {
+        if matches!(self.config.modifier, WeightModifier::None) {
+            return;
+        }
+        let mut w = self.device.weights().to_vec();
+        let bound = self.device.w_bound();
+        let _clean = weight_mod::apply(&self.config.modifier, &mut w, bound, &mut self.rng);
+        self.modified = Some(w);
+    }
+
+    /// The weights the MVMs should read (modified if a modifier is active).
+    fn read_weights(&mut self) -> Vec<f32> {
+        match &self.modified {
+            Some(m) => m.clone(),
+            None => self.device.weights().to_vec(),
+        }
+    }
+
+    /// Access the device (tests/experiments).
+    pub fn device_mut(&mut self) -> &mut dyn DeviceArray {
+        self.device.as_mut()
+    }
+
+    pub fn config(&self) -> &RPUConfig {
+        &self.config
+    }
+
+    pub fn out_scale(&self) -> f32 {
+        self.out_scale
+    }
+}
+
+impl Tile for AnalogTile {
+    fn in_size(&self) -> usize {
+        self.in_size
+    }
+    fn out_size(&self) -> usize {
+        self.out_size
+    }
+
+    fn forward(&mut self, x: &[f32], y: &mut [f32]) {
+        let w = self.read_weights();
+        analog_mvm(
+            &w,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            None,
+            false,
+            &mut self.rng,
+            &mut self.mvm_scratch,
+        );
+        if self.out_scale != 1.0 {
+            for v in y.iter_mut() {
+                *v *= self.out_scale;
+            }
+        }
+    }
+
+    fn backward(&mut self, d: &[f32], g: &mut [f32]) {
+        let w = self.read_weights();
+        analog_mvm(
+            &w,
+            self.out_size,
+            self.in_size,
+            d,
+            g,
+            &self.config.backward,
+            None,
+            true,
+            &mut self.rng,
+            &mut self.mvm_scratch,
+        );
+        if self.out_scale != 1.0 {
+            for v in g.iter_mut() {
+                *v *= self.out_scale;
+            }
+        }
+    }
+
+    fn update(&mut self, x: &Matrix, d: &Matrix, lr: f32) {
+        assert_eq!(x.cols(), self.in_size);
+        assert_eq!(d.cols(), self.out_size);
+        assert_eq!(x.rows(), d.rows());
+        // SGD on digital weights W_dig = α·W_dev:
+        // ΔW_dev = ΔW_dig/α ⇒ device-level lr = lr/α.
+        let lr_dev = if self.out_scale != 0.0 { lr / self.out_scale } else { lr };
+        self.last_update_stats = pulsed_update_batch(
+            self.device.as_mut(),
+            x.data(),
+            d.data(),
+            x.rows(),
+            lr_dev,
+            &self.config.update,
+            &mut self.rng,
+            &mut self.upd_scratch,
+        );
+    }
+
+    fn get_weights(&mut self) -> Matrix {
+        let w = self.device.weights().to_vec();
+        let mut m = Matrix::from_vec(self.out_size, self.in_size, w);
+        if self.out_scale != 1.0 {
+            m.scale(self.out_scale);
+        }
+        m
+    }
+
+    fn set_weights(&mut self, w: &Matrix) {
+        assert_eq!(w.rows(), self.out_size);
+        assert_eq!(w.cols(), self.in_size);
+        let omega = self.config.weight_scaling_omega;
+        if omega > 0.0 {
+            // choose α so the device sees max |w| = omega of its bound
+            let amax = w.abs_max();
+            let target = self.device.w_bound() * omega.min(1.0);
+            self.out_scale = if amax > 0.0 { amax / target } else { 1.0 };
+        } else {
+            self.out_scale = 1.0;
+        }
+        let inv = 1.0 / self.out_scale;
+        let scaled: Vec<f32> = w.data().iter().map(|&v| v * inv).collect();
+        self.device.set_weights(&scaled);
+    }
+
+    fn post_batch(&mut self) {
+        self.modified = None;
+        self.device.post_batch(&mut self.rng);
+    }
+
+    fn apply_weight_modifier(&mut self) {
+        self.apply_weight_modifier_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::{IOParameters, RPUConfig, UpdateParameters};
+
+    fn quiet_config() -> RPUConfig {
+        RPUConfig {
+            forward: IOParameters::perfect(),
+            backward: IOParameters::perfect(),
+            update: UpdateParameters::perfect(),
+            device: crate::config::DeviceConfig::Single(presets::idealized()),
+            modifier: WeightModifier::None,
+            weight_scaling_omega: 0.0,
+        }
+    }
+
+    #[test]
+    fn set_get_weights_roundtrip_perfect() {
+        let mut tile = AnalogTile::new(2, 3, quiet_config(), Rng::new(1));
+        let w = Matrix::from_vec(2, 3, vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.2]);
+        tile.set_weights(&w);
+        let got = tile.get_weights();
+        for (a, b) in got.data().iter().zip(w.data().iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_scaling_omega_expands_range() {
+        // weights larger than the device bound must still round-trip via α
+        let mut cfg = quiet_config();
+        cfg.weight_scaling_omega = 0.8;
+        let mut tile = AnalogTile::new(1, 2, cfg, Rng::new(2));
+        let w = Matrix::from_vec(1, 2, vec![3.0, -1.5]); // way past w_bound=1.0
+        tile.set_weights(&w);
+        assert!(tile.out_scale() > 1.0);
+        let got = tile.get_weights();
+        assert!((got.get(0, 0) - 3.0).abs() < 0.01, "{}", got.get(0, 0));
+        assert!((got.get(0, 1) + 1.5).abs() < 0.01);
+        // forward also reflects the scale
+        let mut y = vec![0.0];
+        tile.forward(&[1.0, 0.0], &mut y);
+        assert!((y[0] - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn forward_backward_transpose_consistency() {
+        let mut tile = AnalogTile::new(3, 2, quiet_config(), Rng::new(3));
+        let w = Matrix::from_vec(3, 2, vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6]);
+        tile.set_weights(&w);
+        let mut y = vec![0.0; 3];
+        tile.forward(&[1.0, -1.0], &mut y);
+        assert!((y[0] - (0.1 - 0.2)).abs() < 1e-6);
+        let mut g = vec![0.0; 2];
+        tile.backward(&[1.0, 0.0, 0.0], &mut g);
+        assert!((g[0] - 0.1).abs() < 1e-6);
+        assert!((g[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn analog_forward_is_noisy_but_unbiased() {
+        let mut cfg = RPUConfig::default(); // default analog noise
+        cfg.weight_scaling_omega = 0.0;
+        let mut tile = AnalogTile::new(1, 8, cfg, Rng::new(4));
+        let w = Matrix::from_vec(1, 8, vec![0.3; 8]);
+        tile.set_weights(&w);
+        let x = vec![0.5; 8];
+        let expect = 0.3 * 0.5 * 8.0;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        let n = 2000;
+        for _ in 0..n {
+            let mut y = vec![0.0];
+            tile.forward(&x, &mut y);
+            sum += y[0] as f64;
+            sumsq += (y[0] as f64).powi(2);
+        }
+        let mean = sum / n as f64;
+        let std = (sumsq / n as f64 - mean * mean).sqrt();
+        assert!((mean - expect as f64).abs() < 0.02, "mean {mean} vs {expect}");
+        assert!(std > 0.005, "must be noisy, std {std}");
+        assert!(std < 0.2, "but not crazy, std {std}");
+    }
+
+    #[test]
+    fn pulsed_training_moves_weights_toward_target() {
+        // one tile, one weight: drive w to +0.3 with repeated updates
+        let mut cfg = RPUConfig::single(presets::gokmen_vlasov());
+        cfg.weight_scaling_omega = 0.0;
+        let mut tile = AnalogTile::new(1, 1, cfg, Rng::new(5));
+        let x = Matrix::from_vec(1, 1, vec![1.0]);
+        for _ in 0..400 {
+            let w = tile.get_weights().get(0, 0);
+            let err = w - 0.3; // dL/dy for L = (w·1 - 0.3)²/2 with x=1
+            let d = Matrix::from_vec(1, 1, vec![err]);
+            tile.update(&x, &d, 0.1);
+            tile.post_batch();
+        }
+        let w = tile.get_weights().get(0, 0);
+        assert!((w - 0.3).abs() < 0.05, "converged to {w}");
+    }
+
+    #[test]
+    fn modifier_applied_and_restored() {
+        let mut cfg = quiet_config();
+        cfg.modifier = WeightModifier::AddNormal { std: 0.2 };
+        let mut tile = AnalogTile::new(1, 4, cfg, Rng::new(6));
+        let w = Matrix::from_vec(1, 4, vec![0.2; 4]);
+        tile.set_weights(&w);
+        tile.apply_weight_modifier();
+        let mut y = vec![0.0];
+        tile.forward(&[1.0, 1.0, 1.0, 1.0], &mut y);
+        let noisy = (y[0] - 0.8).abs() > 1e-4; // modifier perturbs
+        tile.post_batch();
+        let mut y2 = vec![0.0];
+        tile.forward(&[1.0, 1.0, 1.0, 1.0], &mut y2);
+        assert!((y2[0] - 0.8).abs() < 1e-5, "restored after batch: {}", y2[0]);
+        assert!(noisy, "modifier must perturb within the batch");
+    }
+
+    #[test]
+    fn decay_applied_on_post_batch() {
+        let mut cfg = quiet_config();
+        cfg.device = crate::config::DeviceConfig::Single(presets::capacitor());
+        let mut tile = AnalogTile::new(1, 1, cfg, Rng::new(7));
+        tile.set_weights(&Matrix::from_vec(1, 1, vec![0.4]));
+        let w0 = tile.get_weights().get(0, 0);
+        for _ in 0..20 {
+            tile.post_batch();
+        }
+        let w1 = tile.get_weights().get(0, 0);
+        assert!(w1 < w0 * 0.95, "capacitor leaks: {w0} -> {w1}");
+    }
+}

@@ -1,0 +1,533 @@
+//! The analog matrix-vector multiply pipeline — Eq. (1) of the paper:
+//!
+//! ```text
+//! y_i = f_adc( Σ_j (w_ij + σ_w ξ_ij) (f_dac(x_j) + σ_inp ξ_j) + σ_out ξ_i )
+//! ```
+//!
+//! with dynamic input scaling (noise management), iterative output
+//! rescaling (bound management), DAC/ADC discretization and clipping.
+//!
+//! **Weight-noise implementation note.** Sampling an independent ξ_ij per
+//! crosspoint per MVM is O(rows·cols) RNG draws. Because the noise enters
+//! the output linearly, Σ_j σ_ij ξ_ij x_j is *exactly* N(0, Σ_j σ_ij²x_j²)
+//! and independent across outputs — so we add an output-referred Gaussian
+//! with that variance instead (one draw per output, one fused pass for the
+//! variance accumulation). This is distribution-exact, and is the same
+//! treatment RPUCUDA uses for its fused forward kernels.
+
+use crate::config::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use crate::util::rng::Rng;
+
+/// Reusable scratch buffers for the MVM pipeline (hot path: no allocation).
+#[derive(Default)]
+pub struct MvmScratch {
+    xq: Vec<f32>,
+    var: Vec<f32>,
+}
+
+/// Quantize `v` to steps of `step` (round-to-nearest or stochastic).
+#[inline]
+fn quantize(v: f32, step: f32, sto: bool, rng: &mut Rng) -> f32 {
+    if step <= 0.0 {
+        return v;
+    }
+    let q = v / step;
+    if sto {
+        let f = q.floor();
+        let r = q - f;
+        (if rng.bernoulli(r as f64) { f + 1.0 } else { f }) * step
+    } else {
+        q.round() * step
+    }
+}
+
+/// One analog MVM: `y = W·x` (or `Wᵀ·x` if `transposed`) through the
+/// non-ideality pipeline of `io`.
+///
+/// * `w` — row-major rows×cols weight matrix (normalized units).
+/// * `w_noise_var` — optional per-element weight-noise *variance*
+///   (σ_ij², same layout as `w`); used by the inference tile for
+///   time-dependent PCM read noise. When `None`, `io.w_noise` applies.
+#[allow(clippy::too_many_arguments)]
+pub fn analog_mvm(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    io: &IOParameters,
+    w_noise_var: Option<&[f32]>,
+    transposed: bool,
+    rng: &mut Rng,
+    scratch: &mut MvmScratch,
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.len(), in_size);
+    assert_eq!(y.len(), out_size);
+
+    if io.is_perfect {
+        mvm_plain(w, rows, cols, x, y, transposed);
+        return;
+    }
+
+    // --- noise management: dynamic input scaling ---
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let nm_scale = match io.noise_management {
+        NoiseManagement::None => 1.0,
+        NoiseManagement::AbsMax => {
+            if amax > 0.0 {
+                amax
+            } else {
+                1.0
+            }
+        }
+        NoiseManagement::Constant => io.nm_constant.max(1e-12),
+    };
+    if amax == 0.0 {
+        // all-zero input: output is pure output noise through the ADC
+        let out_step = io.out_res * 2.0 * io.out_bound;
+        for yi in y.iter_mut() {
+            let v = io.out_noise * rng.normal() as f32;
+            *yi = quantize(v.clamp(-io.out_bound, io.out_bound), out_step, io.out_sto_round, rng);
+        }
+        return;
+    }
+
+    let inp_step = io.inp_res * 2.0 * io.inp_bound;
+    let out_step = io.out_res * 2.0 * io.out_bound;
+    let max_attempts = match io.bound_management {
+        BoundManagement::None => 1,
+        BoundManagement::Iterative => io.max_bm_factor.max(1),
+    };
+
+    scratch.xq.resize(in_size, 0.0);
+    scratch.var.resize(out_size, 0.0);
+
+    let mut bm_factor = 1.0f32;
+    for attempt in 0..max_attempts {
+        let scale = nm_scale * bm_factor;
+        // --- DAC: scale, clip, quantize, input noise ---
+        for (q, &v) in scratch.xq.iter_mut().zip(x.iter()) {
+            let s = (v / scale).clamp(-io.inp_bound, io.inp_bound);
+            let mut qv = quantize(s, inp_step, io.inp_sto_round, rng);
+            if io.inp_noise > 0.0 {
+                qv += io.inp_noise * rng.normal() as f32;
+            }
+            *q = qv;
+        }
+
+        // --- analog MVM + weight-noise variance accumulation ---
+        let need_var = w_noise_var.is_some() || io.w_noise > 0.0;
+        if !need_var {
+            mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
+        } else {
+            match (w_noise_var, io.w_noise_type) {
+                (Some(var), _) => mvm_with_var(w, var, rows, cols, &scratch.xq, y, &mut scratch.var, transposed),
+                (None, WeightNoiseType::AdditiveConstant) => {
+                    mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
+                    let x2: f32 = scratch.xq.iter().map(|v| v * v).sum();
+                    let sig = io.w_noise * x2.sqrt();
+                    scratch.var.iter_mut().for_each(|v| *v = sig * sig);
+                }
+                (None, WeightNoiseType::RelativeToWeight) => {
+                    mvm_rel_var(w, io.w_noise, rows, cols, &scratch.xq, y, &mut scratch.var, transposed);
+                }
+            }
+            for (yi, &v) in y.iter_mut().zip(scratch.var.iter()) {
+                if v > 0.0 {
+                    *yi += v.sqrt() * rng.normal() as f32;
+                }
+            }
+        }
+
+        // --- output noise ---
+        if io.out_noise > 0.0 {
+            for yi in y.iter_mut() {
+                *yi += io.out_noise * rng.normal() as f32;
+            }
+        }
+
+        // --- bound management: retry at half input scale if clipping ---
+        let clipped = y.iter().any(|&v| v.abs() >= io.out_bound);
+        if clipped && attempt + 1 < max_attempts {
+            bm_factor *= 2.0;
+            continue;
+        }
+
+        // --- ADC: clip, quantize, undo input scaling ---
+        for yi in y.iter_mut() {
+            let c = yi.clamp(-io.out_bound, io.out_bound);
+            *yi = quantize(c, out_step, io.out_sto_round, rng) * scale;
+        }
+        return;
+    }
+    unreachable!("bound-management loop always returns");
+}
+
+/// Plain (noise-free) MVM used by the perfect path and inside the pipeline.
+pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], transposed: bool) {
+    debug_assert_eq!(w.len(), rows * cols);
+    if !transposed {
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = crate::util::matrix::dot(&w[r * cols..(r + 1) * cols], x);
+        }
+    } else {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (r, &xr) in x.iter().enumerate() {
+            if xr == 0.0 {
+                continue;
+            }
+            crate::util::matrix::axpy(xr, &w[r * cols..(r + 1) * cols], y);
+        }
+    }
+}
+
+/// MVM + per-output noise variance from a per-element variance matrix:
+/// var_i = Σ_j var_ij · x_j².
+fn mvm_with_var(
+    w: &[f32],
+    var: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    out_var: &mut [f32],
+    transposed: bool,
+) {
+    if !transposed {
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            let vr = &var[r * cols..(r + 1) * cols];
+            let mut s = 0.0f32;
+            let mut vs = 0.0f32;
+            for j in 0..cols {
+                s += wr[j] * x[j];
+                vs += vr[j] * x[j] * x[j];
+            }
+            y[r] = s;
+            out_var[r] = vs;
+        }
+    } else {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        out_var.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let wr = &w[r * cols..(r + 1) * cols];
+            let vr = &var[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                y[j] += xr * wr[j];
+                out_var[j] += vr[j] * xr * xr;
+            }
+        }
+    }
+}
+
+/// MVM + variance for relative weight noise: var_i = σ²·Σ_j w_ij²·x_j².
+fn mvm_rel_var(
+    w: &[f32],
+    sigma: f32,
+    #[allow(unused_variables)] rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    out_var: &mut [f32],
+    transposed: bool,
+) {
+    let s2 = sigma * sigma;
+    if !transposed {
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            let mut s = 0.0f32;
+            let mut vs = 0.0f32;
+            for j in 0..cols {
+                let wx = wr[j] * x[j];
+                s += wx;
+                vs += wx * wx;
+            }
+            y[r] = s;
+            out_var[r] = s2 * vs;
+        }
+    } else {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        out_var.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let wr = &w[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                let wx = xr * wr[j];
+                y[j] += wx;
+                out_var[j] += s2 * wx * wx;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn io_quiet() -> IOParameters {
+        IOParameters {
+            out_noise: 0.0,
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_bound: 1e9,
+            inp_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn perfect_path_matches_plain() {
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let x = vec![1.0, 0.5, -1.0];
+        let mut y = vec![0.0; 2];
+        let io = IOParameters::perfect();
+        let mut rng = Rng::new(1);
+        let mut s = MvmScratch::default();
+        analog_mvm(&w, 2, 3, &x, &mut y, &io, None, false, &mut rng, &mut s);
+        assert_eq!(y, vec![1.0 + 1.0 - 3.0, 4.0 + 2.5 - 6.0]);
+    }
+
+    #[test]
+    fn quiet_analog_matches_plain() {
+        // all noise sources off → identical to FP
+        let w = vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6];
+        let x = vec![0.3, -0.9, 0.5];
+        let mut y = vec![0.0; 2];
+        let mut y_ref = vec![0.0; 2];
+        mvm_plain(&w, 2, 3, &x, &mut y_ref, false);
+        let mut rng = Rng::new(2);
+        let mut s = MvmScratch::default();
+        analog_mvm(&w, 2, 3, &x, &mut y, &io_quiet(), None, false, &mut rng, &mut s);
+        for (a, b) in y.iter().zip(y_ref.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn transposed_matches_plain() {
+        let w = vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6];
+        let d = vec![1.0, -1.0];
+        let mut y = vec![0.0; 3];
+        let mut y_ref = vec![0.0; 3];
+        mvm_plain(&w, 2, 3, &d, &mut y_ref, true);
+        let mut rng = Rng::new(3);
+        let mut s = MvmScratch::default();
+        analog_mvm(&w, 2, 3, &d, &mut y, &io_quiet(), None, true, &mut rng, &mut s);
+        for (a, b) in y.iter().zip(y_ref.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // sanity: transposed = [0.1-0.4, -0.2+0.5, 0.3-0.6]
+        assert!((y_ref[0] + 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn output_noise_statistics() {
+        let w = vec![0.5; 64]; // 1x64
+        let x = vec![1.0; 64];
+        let io = IOParameters {
+            out_noise: 0.1,
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_bound: 1e9,
+            inp_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4);
+        let mut s = MvmScratch::default();
+        let mut outs = Vec::new();
+        for _ in 0..4000 {
+            let mut y = vec![0.0; 1];
+            analog_mvm(&w, 1, 64, &x, &mut y, &io, None, false, &mut rng, &mut s);
+            outs.push(y[0]);
+        }
+        let m = stats::mean(&outs);
+        let sd = stats::std(&outs);
+        assert!((m - 32.0).abs() < 0.02, "mean {m}");
+        assert!((sd - 0.1).abs() < 0.01, "std {sd}"); // nm off → σ_out unscaled
+    }
+
+    #[test]
+    fn weight_noise_scales_with_input_norm() {
+        let w = vec![0.0; 100]; // zero weights isolate the noise term
+        let io = IOParameters {
+            w_noise: 0.02,
+            out_noise: 0.0,
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_bound: 1e9,
+            inp_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let mut s = MvmScratch::default();
+        let x = vec![1.0; 100]; // ||x|| = 10
+        let mut outs = Vec::new();
+        for _ in 0..4000 {
+            let mut y = vec![0.0; 1];
+            analog_mvm(&w, 1, 100, &x, &mut y, &io, None, false, &mut rng, &mut s);
+            outs.push(y[0]);
+        }
+        let sd = stats::std(&outs);
+        assert!((sd - 0.2).abs() < 0.02, "σ_w·||x|| = 0.02·10 = 0.2, got {sd}");
+    }
+
+    #[test]
+    fn dac_quantization_levels() {
+        // 2-bit-ish DAC: res = 0.5 → levels at multiples of 0.5·2·1 = 1.0·? step = res*2*bound = 1.0
+        let w = vec![1.0]; // 1x1 identity-ish
+        let io = IOParameters {
+            inp_res: 0.25,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(6);
+        let mut s = MvmScratch::default();
+        // step = 0.25*2*1 = 0.5 → x=0.6 → 0.5
+        let mut y = vec![0.0; 1];
+        analog_mvm(&w, 1, 1, &[0.6], &mut y, &io, None, false, &mut rng, &mut s);
+        assert!((y[0] - 0.5).abs() < 1e-6, "got {}", y[0]);
+        // x = 0.80 → 1.0 (rounds up)
+        analog_mvm(&w, 1, 1, &[0.80], &mut y, &io, None, false, &mut rng, &mut s);
+        assert!((y[0] - 1.0).abs() < 1e-6, "got {}", y[0]);
+    }
+
+    #[test]
+    fn adc_clips_at_bound_without_bm() {
+        let w = vec![1.0; 8]; // 1x8, weights 1 → y = 8 with x=1
+        let io = IOParameters {
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 2.0,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        let mut s = MvmScratch::default();
+        let mut y = vec![0.0; 1];
+        analog_mvm(&w, 1, 8, &[1.0; 8].to_vec(), &mut y, &io, None, false, &mut rng, &mut s);
+        assert!((y[0] - 2.0).abs() < 1e-6, "clipped at out_bound, got {}", y[0]);
+    }
+
+    #[test]
+    fn bound_management_recovers_large_outputs() {
+        let w = vec![1.0; 8];
+        let io = IOParameters {
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 2.0,
+            noise_management: NoiseManagement::AbsMax,
+            bound_management: BoundManagement::Iterative,
+            max_bm_factor: 8,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(8);
+        let mut s = MvmScratch::default();
+        let mut y = vec![0.0; 1];
+        analog_mvm(&w, 1, 8, &[1.0; 8].to_vec(), &mut y, &io, None, false, &mut rng, &mut s);
+        assert!((y[0] - 8.0).abs() < 1e-5, "BM must recover y=8, got {}", y[0]);
+    }
+
+    #[test]
+    fn noise_management_keeps_small_inputs_accurate() {
+        // tiny inputs: without NM the DAC floor would destroy them
+        let w = vec![0.5];
+        let io = IOParameters {
+            inp_res: 1.0 / 126.0,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 1e9,
+            noise_management: NoiseManagement::AbsMax,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let mut s = MvmScratch::default();
+        let mut y = vec![0.0; 1];
+        analog_mvm(&w, 1, 1, &[1e-4], &mut y, &io, None, false, &mut rng, &mut s);
+        assert!((y[0] - 5e-5).abs() < 1e-8, "NM rescales: got {}", y[0]);
+    }
+
+    #[test]
+    fn zero_input_zero_output_when_quiet() {
+        let w = vec![0.3; 12];
+        let io = io_quiet();
+        let mut rng = Rng::new(10);
+        let mut s = MvmScratch::default();
+        let mut y = vec![9.0; 3];
+        analog_mvm(&w, 3, 4, &[0.0; 4], &mut y, &io, None, false, &mut rng, &mut s);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn per_element_variance_matrix_used() {
+        let w = vec![0.0; 4];
+        let var = vec![0.04, 0.0, 0.0, 0.0]; // only element (0,0) noisy
+        let io = io_quiet();
+        let mut rng = Rng::new(11);
+        let mut s = MvmScratch::default();
+        let mut outs0 = Vec::new();
+        let mut outs1 = Vec::new();
+        for _ in 0..3000 {
+            let mut y = vec![0.0; 2];
+            analog_mvm(&w, 2, 2, &[1.0, 1.0], &mut y, &io, Some(&var), false, &mut rng, &mut s);
+            outs0.push(y[0]);
+            outs1.push(y[1]);
+        }
+        assert!((stats::std(&outs0) - 0.2).abs() < 0.02);
+        assert!(stats::std(&outs1) < 1e-9);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        let w = vec![1.0];
+        let io = IOParameters {
+            inp_res: 0.25, // step 0.5
+            inp_sto_round: true,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(12);
+        let mut s = MvmScratch::default();
+        let mut sum = 0.0f64;
+        let n = 20000;
+        for _ in 0..n {
+            let mut y = vec![0.0; 1];
+            analog_mvm(&w, 1, 1, &[0.3], &mut y, &io, None, false, &mut rng, &mut s);
+            sum += y[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.3).abs() < 0.01, "sto-round unbiased: {mean}");
+    }
+}

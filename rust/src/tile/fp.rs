@@ -1,0 +1,83 @@
+//! Floating-point baseline tile: exact digital MVMs and rank updates
+//! through the same [`Tile`] interface, so any network can be switched
+//! between analog and FP execution (the paper's FP comparator, footnote 3).
+
+use crate::tile::Tile;
+use crate::util::matrix::Matrix;
+
+/// Exact digital tile.
+pub struct FloatingPointTile {
+    w: Matrix,
+}
+
+impl FloatingPointTile {
+    pub fn new(out_size: usize, in_size: usize) -> Self {
+        FloatingPointTile { w: Matrix::zeros(out_size, in_size) }
+    }
+}
+
+impl Tile for FloatingPointTile {
+    fn in_size(&self) -> usize {
+        self.w.cols()
+    }
+    fn out_size(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn forward(&mut self, x: &[f32], y: &mut [f32]) {
+        self.w.matvec_into(x, y);
+    }
+
+    fn backward(&mut self, d: &[f32], g: &mut [f32]) {
+        self.w.tmatvec_into(d, g);
+    }
+
+    fn update(&mut self, x: &Matrix, d: &Matrix, lr: f32) {
+        assert_eq!(x.rows(), d.rows());
+        for b in 0..x.rows() {
+            self.w.ger(-lr, d.row(b), x.row(b));
+        }
+    }
+
+    fn get_weights(&mut self) -> Matrix {
+        self.w.clone()
+    }
+
+    fn set_weights(&mut self, w: &Matrix) {
+        assert_eq!(w.rows(), self.w.rows());
+        assert_eq!(w.cols(), self.w.cols());
+        self.w = w.clone();
+    }
+
+    fn post_batch(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sgd_step() {
+        let mut tile = FloatingPointTile::new(2, 2);
+        let x = Matrix::from_vec(1, 2, vec![1.0, 0.5]);
+        let d = Matrix::from_vec(1, 2, vec![0.2, -0.4]);
+        tile.update(&x, &d, 0.1);
+        let w = tile.get_weights();
+        assert!((w.get(0, 0) + 0.02).abs() < 1e-7);
+        assert!((w.get(0, 1) + 0.01).abs() < 1e-7);
+        assert!((w.get(1, 0) - 0.04).abs() < 1e-7);
+        assert!((w.get(1, 1) - 0.02).abs() < 1e-7);
+    }
+
+    #[test]
+    fn forward_backward() {
+        let mut tile = FloatingPointTile::new(2, 3);
+        tile.set_weights(&Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]));
+        let mut y = vec![0.0; 2];
+        tile.forward(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![6.0, 15.0]);
+        let mut g = vec![0.0; 3];
+        tile.backward(&[1.0, 1.0], &mut g);
+        assert_eq!(g, vec![5.0, 7.0, 9.0]);
+    }
+}

@@ -1,0 +1,283 @@
+//! The inference tile (paper §5): a trained weight matrix *programmed*
+//! onto PCM devices, then evaluated at arbitrary times after programming —
+//! with programming noise, conductance drift, time-dependent read noise,
+//! and optional global drift compensation (GDC).
+//!
+//! Life cycle:
+//! 1. `set_weights(w)` — store the trained digital weights.
+//! 2. `program()` — apply the statistical programming noise (one shot).
+//! 3. `drift_to(t)` — advance device time; caches the drifted weight
+//!    matrix, the per-element read-noise variances at `t`, and the GDC
+//!    factor.
+//! 4. `forward()` — analog MVM over the drifted weights with read noise,
+//!    ADC/DAC non-idealities, and the GDC factor applied digitally.
+
+use crate::config::InferenceRPUConfig;
+use crate::noise::pcm::ProgrammedWeights;
+use crate::tile::forward::{analog_mvm, MvmScratch};
+use crate::tile::Tile;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// PCM inference tile.
+pub struct InferenceTile {
+    out_size: usize,
+    in_size: usize,
+    config: InferenceRPUConfig,
+    rng: Rng,
+    /// Trained digital weights (normalized to device range via out_scale).
+    target: Vec<f32>,
+    out_scale: f32,
+    /// Programmed devices (after `program`).
+    programmed: Option<ProgrammedWeights>,
+    /// Cached drifted state.
+    t_inference: f32,
+    drifted: Vec<f32>,
+    read_var: Vec<f32>,
+    gdc_factor: f32,
+    scratch: MvmScratch,
+}
+
+impl InferenceTile {
+    pub fn new(out_size: usize, in_size: usize, config: InferenceRPUConfig, rng: Rng) -> Self {
+        InferenceTile {
+            out_size,
+            in_size,
+            config,
+            rng,
+            target: vec![0.0; out_size * in_size],
+            out_scale: 1.0,
+            programmed: None,
+            t_inference: 0.0,
+            drifted: vec![0.0; out_size * in_size],
+            read_var: vec![0.0; out_size * in_size],
+            gdc_factor: 1.0,
+            scratch: MvmScratch::default(),
+        }
+    }
+
+    /// Program the stored weights onto PCM (applies programming noise) and
+    /// position the tile at `t = t0`.
+    pub fn program(&mut self) {
+        let prog =
+            ProgrammedWeights::program(&self.target, 1.0, &self.config.noise_model, &mut self.rng);
+        self.programmed = Some(prog);
+        let t0 = self.config.noise_model.t0;
+        self.drift_to(t0);
+    }
+
+    /// Advance to inference time `t` seconds after programming: caches
+    /// drifted weights, read-noise variances, and the GDC factor.
+    pub fn drift_to(&mut self, t: f32) {
+        let prog = self.programmed.as_ref().expect("program() before drift_to()");
+        self.t_inference = t.max(self.config.noise_model.t0);
+        self.drifted = prog.weights_at(self.t_inference);
+        // per-element read-noise variance in weight units
+        let p = &self.config.noise_model;
+        self.read_var.resize(self.drifted.len(), 0.0);
+        for (i, pair) in prog.pairs.iter().enumerate() {
+            let gp = pair.g_plus * p.drift_factor(pair.nu_plus, self.t_inference);
+            let gm = pair.g_minus * p.drift_factor(pair.nu_minus, self.t_inference);
+            let sp = p.sigma_read(gp, self.t_inference);
+            let sm = p.sigma_read(gm, self.t_inference);
+            // independent noise on both devices of the pair, in weight units
+            self.read_var[i] = (sp * sp + sm * sm) / (p.g_max * p.g_max);
+        }
+        self.gdc_factor = if self.config.drift_compensation {
+            prog.drift_compensation(self.t_inference, &mut self.rng)
+        } else {
+            1.0
+        };
+    }
+
+    /// Current inference time (s).
+    pub fn t_inference(&self) -> f32 {
+        self.t_inference
+    }
+
+    /// GDC factor currently applied (1.0 when compensation is off).
+    pub fn gdc_factor(&self) -> f32 {
+        self.gdc_factor
+    }
+
+    /// Observability for the Fig. 3C experiment: (mean, std) conductance
+    /// of the programmed devices at time t, in µS.
+    pub fn conductance_stats(&self, t: f32) -> (f64, f64) {
+        self.programmed
+            .as_ref()
+            .expect("program() first")
+            .mean_conductance_at(t.max(self.config.noise_model.t0))
+    }
+}
+
+impl Tile for InferenceTile {
+    fn in_size(&self) -> usize {
+        self.in_size
+    }
+    fn out_size(&self) -> usize {
+        self.out_size
+    }
+
+    fn forward(&mut self, x: &[f32], y: &mut [f32]) {
+        assert!(self.programmed.is_some(), "program() before forward()");
+        analog_mvm(
+            &self.drifted,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            Some(&self.read_var),
+            false,
+            &mut self.rng,
+            &mut self.scratch,
+        );
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            for v in y.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    fn backward(&mut self, d: &[f32], g: &mut [f32]) {
+        // inference chips have no analog backward; provide the exact
+        // transpose for evaluation-time gradient probes.
+        let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
+        crate::tile::forward::mvm_plain(w, self.out_size, self.in_size, d, g, true);
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            for v in g.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    fn update(&mut self, _x: &Matrix, _d: &Matrix, _lr: f32) {
+        panic!("inference tiles do not support updates (paper §5)");
+    }
+
+    fn get_weights(&mut self) -> Matrix {
+        let w = if self.programmed.is_some() { self.drifted.clone() } else { self.target.clone() };
+        let mut m = Matrix::from_vec(self.out_size, self.in_size, w);
+        m.scale(self.out_scale * self.gdc_factor);
+        m
+    }
+
+    fn set_weights(&mut self, w: &Matrix) {
+        assert_eq!(w.rows(), self.out_size);
+        assert_eq!(w.cols(), self.in_size);
+        let omega = self.config.weight_scaling_omega;
+        let amax = w.abs_max();
+        self.out_scale = if omega > 0.0 && amax > 0.0 { amax / omega.min(1.0) } else { 1.0 };
+        let inv = 1.0 / self.out_scale;
+        self.target = w.data().iter().map(|&v| (v * inv).clamp(-1.0, 1.0)).collect();
+        self.programmed = None;
+        self.gdc_factor = 1.0;
+    }
+
+    fn post_batch(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InferenceRPUConfig;
+
+    fn mk_tile(seed: u64) -> InferenceTile {
+        InferenceTile::new(4, 8, InferenceRPUConfig::default(), Rng::new(seed))
+    }
+
+    fn test_weights() -> Matrix {
+        let mut w = Matrix::zeros(4, 8);
+        for i in 0..4 {
+            for j in 0..8 {
+                w.set(i, j, ((i * 8 + j) as f32 / 32.0) - 0.5);
+            }
+        }
+        w
+    }
+
+    #[test]
+    #[should_panic(expected = "program() before forward()")]
+    fn forward_requires_programming() {
+        let mut t = mk_tile(1);
+        t.set_weights(&test_weights());
+        let mut y = vec![0.0; 4];
+        t.forward(&[0.1; 8], &mut y);
+    }
+
+    #[test]
+    fn programming_preserves_weights_roughly() {
+        let mut t = mk_tile(2);
+        let w = test_weights();
+        t.set_weights(&w);
+        t.program();
+        let got = t.get_weights();
+        let mut err = 0.0f32;
+        for (a, b) in got.data().iter().zip(w.data().iter()) {
+            err += (a - b).abs();
+        }
+        err /= w.len() as f32;
+        assert!(err < 0.1, "programming error {err}");
+    }
+
+    #[test]
+    fn drift_decays_weights_without_gdc() {
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.drift_compensation = false;
+        let mut t = InferenceTile::new(4, 8, cfg, Rng::new(3));
+        t.set_weights(&test_weights());
+        t.program();
+        let w0 = t.get_weights().fro_norm();
+        t.drift_to(1e6);
+        let w1 = t.get_weights().fro_norm();
+        assert!(w1 < w0 * 0.95, "drift must shrink weights: {w0} -> {w1}");
+    }
+
+    #[test]
+    fn gdc_restores_output_scale() {
+        let mut t = mk_tile(4);
+        t.set_weights(&test_weights());
+        t.program();
+        t.drift_to(1e7);
+        assert!(t.gdc_factor() > 1.0, "gdc {}", t.gdc_factor());
+        let wn = t.get_weights().fro_norm();
+        let orig = test_weights().fro_norm();
+        assert!(
+            (wn - orig).abs() / orig < 0.2,
+            "GDC-compensated norm close to original: {wn} vs {orig}"
+        );
+    }
+
+    #[test]
+    fn forward_noise_grows_with_time() {
+        let mut t = mk_tile(5);
+        t.set_weights(&test_weights());
+        t.program();
+        let x = vec![0.5; 8];
+        let spread = |tile: &mut InferenceTile, x: &[f32]| {
+            let mut vals = Vec::new();
+            for _ in 0..300 {
+                let mut y = vec![0.0; 4];
+                tile.forward(x, &mut y);
+                vals.push(y[0]);
+            }
+            crate::util::stats::std(&vals)
+        };
+        t.drift_to(25.0);
+        let s_early = spread(&mut t, &x);
+        t.drift_to(1e8);
+        let s_late = spread(&mut t, &x);
+        assert!(s_late > s_early, "read noise grows with t: {s_early} vs {s_late}");
+    }
+
+    #[test]
+    #[should_panic(expected = "inference tiles do not support updates")]
+    fn update_panics() {
+        let mut t = mk_tile(6);
+        let x = Matrix::zeros(1, 8);
+        let d = Matrix::zeros(1, 4);
+        t.update(&x, &d, 0.1);
+    }
+}

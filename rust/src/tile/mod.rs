@@ -1,0 +1,100 @@
+//! The "analog tile" abstraction (paper §3): a 2-D weight matrix stored on
+//! a crossbar array, with analog forward / backward MVMs, pulsed updates,
+//! and the digital periphery (output scaling).
+
+pub mod analog;
+pub mod forward;
+pub mod fp;
+pub mod inference;
+pub mod pulsed_ops;
+
+pub use analog::AnalogTile;
+pub use fp::FloatingPointTile;
+pub use inference::InferenceTile;
+
+use crate::util::matrix::Matrix;
+
+/// Common interface of all tiles. Shapes follow the convention
+/// `y[out] = W[out × in] · x[in]`.
+pub trait Tile: Send {
+    fn in_size(&self) -> usize;
+    fn out_size(&self) -> usize;
+
+    /// `y = W·x` through the tile's forward pipeline.
+    fn forward(&mut self, x: &[f32], y: &mut [f32]);
+
+    /// `g_in = Wᵀ·d` through the backward pipeline.
+    fn backward(&mut self, d: &[f32], g: &mut [f32]);
+
+    /// Apply the tile's update for one mini-batch:
+    /// `W ← W − lr·Σ_b d_b ⊗ x_b` (in expectation).
+    /// `x` is B×in, `d` is B×out (row-major).
+    fn update(&mut self, x: &Matrix, d: &Matrix, lr: f32);
+
+    /// Digital view of the effective weights (includes output scaling).
+    fn get_weights(&mut self) -> Matrix;
+
+    /// Program digital weights onto the tile.
+    fn set_weights(&mut self, w: &Matrix);
+
+    /// Per-mini-batch housekeeping (decay, diffusion, modifier restore).
+    fn post_batch(&mut self);
+
+    /// Hardware-aware training hook: inject the configured weight noise
+    /// for this mini-batch (no-op unless the tile supports modifiers).
+    fn apply_weight_modifier(&mut self) {}
+
+    /// Batched forward: default loops rows; `x` is B×in, `y` B×out.
+    fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols(), self.in_size());
+        assert_eq!(y.cols(), self.out_size());
+        assert_eq!(x.rows(), y.rows());
+        let out = self.out_size();
+        for b in 0..x.rows() {
+            // split borrow: copy row out after compute
+            let mut row = vec![0.0f32; out];
+            self.forward(x.row(b), &mut row);
+            y.row_mut(b).copy_from_slice(&row);
+        }
+    }
+
+    /// Batched backward: `d` is B×out, `g` B×in.
+    fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
+        assert_eq!(d.cols(), self.out_size());
+        assert_eq!(g.cols(), self.in_size());
+        assert_eq!(d.rows(), g.rows());
+        let in_sz = self.in_size();
+        for b in 0..d.rows() {
+            let mut row = vec![0.0f32; in_sz];
+            self.backward(d.row(b), &mut row);
+            g.row_mut(b).copy_from_slice(&row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_default_impls_match_loops() {
+        let mut tile = AnalogTile::new(3, 4, RPUConfig::perfect(), Rng::new(1));
+        let mut w = Matrix::zeros(3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                w.set(i, j, (i * 4 + j) as f32 * 0.01);
+            }
+        }
+        tile.set_weights(&w);
+        let x = Matrix::from_vec(2, 4, vec![1., 0., -1., 0.5, 0.2, 0.4, 0.6, 0.8]);
+        let mut y = Matrix::zeros(2, 3);
+        tile.forward_batch(&x, &mut y);
+        let mut y0 = vec![0.0; 3];
+        tile.forward(x.row(0), &mut y0);
+        for j in 0..3 {
+            assert!((y.get(0, j) - y0[j]).abs() < 1e-6);
+        }
+    }
+}

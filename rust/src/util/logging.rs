@@ -1,0 +1,103 @@
+//! Structured run logging: console lines plus CSV metric files that the
+//! experiment drivers and EXPERIMENTS.md tables are generated from.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// CSV metrics writer with a fixed header.
+pub struct CsvLogger {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvLogger {
+    /// Create (truncating) a CSV file with the given column names.
+    pub fn create<P: AsRef<Path>>(path: P, columns: &[&str]) -> std::io::Result<CsvLogger> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", columns.join(","))?;
+        Ok(CsvLogger { out, ncols: columns.len() })
+    }
+
+    /// Append a row of f64 values (must match the header length).
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.ncols, "column count mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.out, "{}", line.join(","))
+    }
+
+    /// Append a row of preformatted strings.
+    pub fn row_str(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.ncols, "column count mismatch");
+        writeln!(self.out, "{}", values.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Wall-clock stopwatch for bench/experiment timing.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Log an info line with a consistent prefix.
+pub fn info(msg: &str) {
+    println!("[aihwsim] {msg}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("aihwsim_test_logs");
+        let path = dir.join("m.csv");
+        {
+            let mut log = CsvLogger::create(&path, &["step", "loss"]).unwrap();
+            log.row(&[0.0, 1.5]).unwrap();
+            log.row(&[1.0, 1.25]).unwrap();
+            log.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,loss");
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("0,1.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

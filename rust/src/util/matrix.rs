@@ -1,0 +1,394 @@
+//! Row-major `f32` matrix with the linear-algebra kernels the simulator
+//! needs: GEMM, GEMV, transposed variants, outer-product updates.
+//!
+//! This is the digital compute substrate underneath the floating-point
+//! baseline tile and the digital parts of analog tiles (im2col, activations
+//! operate on flat buffers elsewhere). The GEMM is cache-blocked with an
+//! unrolled inner kernel — not BLAS-class, but enough that the *analog*
+//! pulsed update (the paper's hot path) dominates profiles for realistic
+//! tile sizes, matching the paper's RPUCUDA balance.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing buffer (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform random in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// I.i.d. normal entries.
+    pub fn rand_normal(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal_f32(mean, std);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// y = self * x  (matrix-vector). `x.len() == cols`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = self * x into a preallocated buffer (hot path: no allocation).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            *yr = dot(row, x);
+        }
+    }
+
+    /// y = selfᵀ * d (transposed matrix-vector). `d.len() == rows`.
+    pub fn tmatvec(&self, d: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.cols];
+        self.tmatvec_into(d, &mut y);
+        y
+    }
+
+    /// y = selfᵀ * d into a preallocated buffer.
+    pub fn tmatvec_into(&self, d: &[f32], y: &mut [f32]) {
+        assert_eq!(d.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..self.rows {
+            let dr = d[r];
+            if dr == 0.0 {
+                continue;
+            }
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            axpy(dr, row, y);
+        }
+    }
+
+    /// C = A @ B, where A = self (rows×cols), B (cols×n) → C (rows×n).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "inner dims must agree");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut c);
+        c
+    }
+
+    /// C = A @ B into a preallocated output. Cache-blocked i-k-j loop.
+    pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
+        assert_eq!(self.cols, b.rows);
+        assert_eq!(c.rows, self.rows);
+        assert_eq!(c.cols, b.cols);
+        c.data.iter_mut().for_each(|v| *v = 0.0);
+        const KB: usize = 64;
+        let n = b.cols;
+        for kb in (0..self.cols).step_by(KB) {
+            let kend = (kb + KB).min(self.cols);
+            for i in 0..self.rows {
+                let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for k in kb..kend {
+                    let a = arow[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    axpy(a, brow, crow);
+                }
+            }
+        }
+    }
+
+    /// self += alpha * d ⊗ x   (rank-1 / outer-product update).
+    /// `d.len() == rows`, `x.len() == cols`. This is the *digital* Eq. (2);
+    /// the analog tile replaces it with pulsed updates.
+    pub fn ger(&mut self, alpha: f32, d: &[f32], x: &[f32]) {
+        assert_eq!(d.len(), self.rows);
+        assert_eq!(x.len(), self.cols);
+        for r in 0..self.rows {
+            let a = alpha * d[r];
+            if a == 0.0 {
+                continue;
+            }
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            axpy(a, x, row);
+        }
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_inplace<F: FnMut(f32) -> f32>(&mut self, mut f: F) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// self += other (elementwise).
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// self *= s (scalar).
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Clip all entries into [lo, hi].
+    pub fn clip(&mut self, lo: f32, hi: f32) {
+        for v in self.data.iter_mut() {
+            *v = v.clamp(lo, hi);
+        }
+    }
+
+    /// Maximum |entry|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+}
+
+/// Unrolled dot product (the GEMV inner kernel).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 8;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+        s4 += a[j + 4] * b[j + 4];
+        s5 += a[j + 5] * b[j + 5];
+        s6 += a[j + 6] * b[j + 6];
+        s7 += a[j + 7] * b[j + 7];
+    }
+    let mut s = (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7));
+    for j in chunks * 8..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// y += a * x (the GER/GEMM inner kernel).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let mut eye = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(eye.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = m.matvec(&[1., 1., 1.]);
+        assert_eq!(y, vec![6., 15.]);
+    }
+
+    #[test]
+    fn tmatvec_known() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = m.tmatvec(&[1., 1.]);
+        assert_eq!(y, vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn tmatvec_matches_transpose_matvec() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::rand_uniform(17, 23, -1.0, 1.0, &mut rng);
+        let mut d = vec![0.0f32; 17];
+        rng.fill_uniform(&mut d, -1.0, 1.0);
+        let a = m.tmatvec(&d);
+        let b = m.transpose().matvec(&d);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(5);
+        for &(m, k, n) in &[(3usize, 4usize, 5usize), (16, 16, 16), (7, 130, 9), (65, 3, 65)] {
+            let a = Matrix::rand_uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Matrix::rand_uniform(k, n, -1.0, 1.0, &mut rng);
+            let fast = a.matmul(&b);
+            let slow = naive_matmul(&a, &b);
+            for (x, y) in fast.data().iter().zip(slow.data().iter()) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut m = Matrix::zeros(2, 3);
+        m.ger(2.0, &[1.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(m.data(), &[2., 4., 6., 6., 12., 18.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::rand_uniform(13, 37, -1.0, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn dot_matches_scalar_loop() {
+        let mut rng = Rng::new(17);
+        let mut a = vec![0.0f32; 103];
+        let mut b = vec![0.0f32; 103];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let s: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - s).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clip_and_absmax() {
+        let mut m = Matrix::from_vec(1, 4, vec![-3., -0.5, 0.5, 3.]);
+        assert_eq!(m.abs_max(), 3.0);
+        m.clip(-1.0, 1.0);
+        assert_eq!(m.data(), &[-1., -0.5, 0.5, 1.]);
+        assert_eq!(m.abs_max(), 1.0);
+    }
+
+    #[test]
+    fn mean_and_norm() {
+        let m = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(m.mean(), 1.0);
+        assert_eq!(m.fro_norm(), 2.0);
+    }
+}

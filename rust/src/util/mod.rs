@@ -1,0 +1,11 @@
+//! Foundation substrate: everything here is hand-rolled on `std` because
+//! the build environment is fully offline (no serde/clap/rayon/criterion).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod matrix;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

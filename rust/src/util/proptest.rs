@@ -1,0 +1,134 @@
+//! Hand-rolled property-based testing harness (no `proptest` crate in the
+//! offline vendor set).
+//!
+//! A property is a closure over a `Gen` (seeded value generator). `check`
+//! runs it for N random cases; on failure it reports the failing seed so
+//! the case can be replayed deterministically with `replay`.
+
+use crate::util::rng::Rng;
+
+/// Seeded value generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Seed of this case (for failure reporting).
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform_f32()
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Vector of f32 in [lo, hi).
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (with the failing seed) if
+/// the property returns an `Err` or panics.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    // Base seed is fixed for reproducibility across CI runs; set
+    // AIHWSIM_PROP_SEED to explore a different region.
+    let base: u64 = std::env::var("AIHWSIM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA1_84_57);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (case {i}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two floats are within atol + rtol*|b|.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (atol {atol}, rtol {rtol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_reports_failures() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f32_in(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+        }
+        let v = g.vec_f32(17, 0.0, 1.0);
+        assert_eq!(v.len(), 17);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0005, 0.0, 1e-3).is_ok());
+        assert!(close(1.0, 2.0, 0.5, 0.0).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Scoped data-parallel helpers built on `std::thread` (no tokio/rayon in
+//! the offline vendor set).
+//!
+//! The simulator parallelizes over *tiles* (a DNN layer maps to one or more
+//! independent crossbar tiles) and over output rows inside the heavy pulsed
+//! update. Both are fork-join patterns, so `std::thread::scope` chunking is
+//! all we need — no work stealing, no queues.
+
+/// Number of worker threads to use (respects `AIHWSIM_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("AIHWSIM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, item)` over mutable chunks of `data`, splitting into
+/// at most `num_threads()` contiguous chunks. `f` receives the chunk's
+/// starting element index and the chunk itself.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            let begin = start;
+            s.spawn(move || fref(begin, head));
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+/// Parallel-for over an index range: runs `f(i)` for i in 0..n with results
+/// collected in order. `f` must be cheap to call in any order.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    par_chunks_mut(&mut out, 1, |start, chunk| {
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(start + off));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut data = vec![0usize; 1000];
+        par_chunks_mut(&mut data, 10, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn empty_ok() {
+        let mut data: Vec<u8> = vec![];
+        par_chunks_mut(&mut data, 1, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn min_chunk_limits_threads() {
+        // With min_chunk == n, only a single chunk must be used.
+        let counter = AtomicUsize::new(0);
+        let mut data = vec![0u8; 64];
+        par_chunks_mut(&mut data, 64, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Cross-module integration tests: config files → networks → training →
+//! inference programming → runtime artifacts.
+
+use aihwsim::config::{loader, presets, DeviceConfig, InferenceRPUConfig, RPUConfig};
+use aihwsim::coordinator::evaluator::{accuracy_over_time, InferenceMlp};
+use aihwsim::coordinator::trainer::{evaluate, train_classifier, TrainConfig};
+use aihwsim::data::synthetic_images;
+use aihwsim::nn::sequential::{lenet, mlp, Backend};
+use aihwsim::nn::AnalogLinear;
+use aihwsim::runtime::Runtime;
+use aihwsim::util::json::Json;
+use aihwsim::util::matrix::Matrix;
+use aihwsim::util::rng::Rng;
+
+#[test]
+fn config_file_to_training_run() {
+    // write a config file, load it, train with it — the CLI's main flow
+    let dir = std::env::temp_dir().join("aihwsim_int_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rpu.json");
+    std::fs::write(
+        &path,
+        r#"{
+            "device": {"preset": "ecram"},
+            "forward": {"out_noise": 0.04},
+            "update": {"desired_bl": 15},
+            "weight_scaling_omega": 0.6
+        }"#,
+    )
+    .unwrap();
+    let cfg = loader::load_rpu_config(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.update.desired_bl, 15);
+    let mut rng = Rng::new(1);
+    let train = synthetic_images(200, 4, 8, 1, &mut rng);
+    let mut model = mlp(&[64, 4], Backend::Analog, &cfg, &mut rng);
+    let tc = TrainConfig { epochs: 5, batch_size: 20, lr: 0.1, seed: 3, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &train, &train, &tc);
+    assert!(
+        rep.final_test_acc() > 0.5,
+        "config-file-driven training works: {:?}",
+        rep.epoch_test_acc
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lenet_analog_smoke() {
+    // conv + fc analog network end to end (small for test speed)
+    let mut rng = Rng::new(2);
+    let ds = synthetic_images(60, 3, 12, 1, &mut rng);
+    let mut cfg = RPUConfig::default();
+    cfg.device = DeviceConfig::Single(presets::idealized());
+    let mut model = lenet(1, 12, 3, Backend::Analog, &cfg, &mut rng);
+    let tc = TrainConfig { epochs: 8, batch_size: 10, lr: 0.2, seed: 5, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &ds, &ds, &tc);
+    // smoke: must improve over chance (1/3); analog conv training is slow
+    // at this scale, so require a modest margin only
+    let best = rep.epoch_test_acc.iter().cloned().fold(0.0f64, f64::max);
+    assert!(best > 0.45, "{:?}", rep.epoch_test_acc);
+    assert!(rep.epoch_loss.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn full_inference_lifecycle() {
+    // train FP → program onto PCM → drift sweep → accuracy ordering
+    let mut rng = Rng::new(3);
+    let ds = synthetic_images(240, 4, 8, 1, &mut rng);
+    let mut model = mlp(&[64, 24, 4], Backend::FloatingPoint, &RPUConfig::perfect(), &mut rng);
+    let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, seed: 7, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &ds, &ds, &tc);
+    assert!(rep.final_test_acc() > 0.9);
+    let mut layers = Vec::new();
+    for idx in [0usize, 2] {
+        let lin = model
+            .module_mut(idx)
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            .unwrap();
+        layers.push((lin.get_weights(), lin.get_bias().unwrap().to_vec()));
+    }
+    let cfg = InferenceRPUConfig::default();
+    let mut net = InferenceMlp::from_weights(&layers, &cfg, &mut rng);
+    net.program();
+    let series = accuracy_over_time(&mut net, &ds, &[25.0, 1e5, 3e7], 32);
+    assert_eq!(series.len(), 3);
+    // accuracy at t0 close to digital accuracy
+    assert!(series[0].1 > rep.final_test_acc() - 0.15, "{series:?}");
+}
+
+#[test]
+fn eval_mode_does_not_mutate_weights() {
+    let mut rng = Rng::new(4);
+    let ds = synthetic_images(40, 4, 8, 1, &mut rng);
+    let mut cfg = RPUConfig::default();
+    cfg.device = DeviceConfig::Single(presets::idealized());
+    let mut model = mlp(&[64, 4], Backend::Analog, &cfg, &mut rng);
+    let w_before = model
+        .module_mut(0)
+        .as_any_mut()
+        .and_then(|a| a.downcast_mut::<AnalogLinear>())
+        .unwrap()
+        .get_weights();
+    let mut r2 = Rng::new(9);
+    let _ = evaluate(&mut model, &ds, 16, &mut r2);
+    let w_after = model
+        .module_mut(0)
+        .as_any_mut()
+        .and_then(|a| a.downcast_mut::<AnalogLinear>())
+        .unwrap()
+        .get_weights();
+    assert_eq!(w_before.data(), w_after.data(), "evaluation must not write weights");
+}
+
+#[test]
+fn checkpoint_roundtrip_via_json() {
+    // serialize weights to JSON (the checkpoint format) and restore
+    let mut rng = Rng::new(5);
+    let mut layer = AnalogLinear::new(6, 3, true, RPUConfig::perfect(), &mut rng);
+    let w = layer.get_weights();
+    let ckpt = Json::obj(vec![
+        ("rows", Json::num(w.rows() as f64)),
+        ("cols", Json::num(w.cols() as f64)),
+        ("data", Json::arr_f32(w.data())),
+    ]);
+    let text = ckpt.to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let rows = parsed.get("rows").unwrap().as_usize().unwrap();
+    let cols = parsed.get("cols").unwrap().as_usize().unwrap();
+    let data = parsed.get("data").unwrap().to_f32_vec().unwrap();
+    let restored = Matrix::from_vec(rows, cols, data);
+    let mut layer2 = AnalogLinear::new(6, 3, true, RPUConfig::perfect(), &mut Rng::new(99));
+    layer2.set_weights(&restored);
+    let w2 = layer2.get_weights();
+    for (a, b) in w.data().iter().zip(w2.data().iter()) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn runtime_artifacts_or_graceful_skip() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts absent; skipping runtime integration");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).unwrap();
+    assert_eq!(rt.layer_sizes(), vec![784, 256, 128, 10]);
+    assert!(rt.batch() > 0);
+    // loading twice hits the cache (same pointer-compiled exec is fine)
+    rt.load("analog_mvm").unwrap();
+    rt.load("analog_mvm").unwrap();
+}
+
+#[test]
+fn deterministic_replay_same_seed() {
+    // identical seeds → identical training trajectories (reproducibility)
+    let run = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic_images(80, 4, 8, 1, &mut rng);
+        let mut cfg = RPUConfig::default();
+        cfg.device = DeviceConfig::Single(presets::gokmen_vlasov());
+        let mut model = mlp(&[64, 4], Backend::Analog, &cfg, &mut rng);
+        let tc =
+            TrainConfig { epochs: 2, batch_size: 16, lr: 0.1, seed: 11, log_every: 0, csv_path: None };
+        train_classifier(&mut model, &ds, &ds, &tc).epoch_loss
+    };
+    assert_eq!(run(42), run(42));
+    assert_ne!(run(42), run(43));
+}

@@ -1,0 +1,264 @@
+//! Property-based tests over the simulator invariants, driven by the
+//! hand-rolled `util::proptest` harness (seeded, replayable).
+
+use aihwsim::config::{
+    presets, BoundManagement, DeviceConfig, IOParameters, NoiseManagement, PulsedDeviceParams,
+    RPUConfig, SingleDeviceConfig, StepKind, UpdateParameters,
+};
+use aihwsim::device::build;
+use aihwsim::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
+use aihwsim::tile::forward::{analog_mvm, mvm_plain, MvmScratch};
+use aihwsim::tile::pulsed_ops::{pulsed_update_sample, UpdateScratch};
+use aihwsim::tile::{AnalogTile, Tile};
+use aihwsim::util::matrix::Matrix;
+use aihwsim::util::proptest::{check, Gen};
+use aihwsim::util::rng::Rng;
+
+fn random_single_device(g: &mut Gen) -> SingleDeviceConfig {
+    let kinds = ["constant", "linear", "soft", "exp", "pow"];
+    let kind = match *g.choose(&kinds) {
+        "linear" => StepKind::LinearStep {
+            gamma_up: g.f32_in(0.0, 0.5),
+            gamma_down: g.f32_in(0.0, 0.5),
+            gamma_dtod: g.f32_in(0.0, 0.2),
+            mult_noise: g.bool(),
+        },
+        "soft" => StepKind::SoftBounds { mult_noise: g.bool() },
+        "exp" => StepKind::ExpStep {
+            a_up: g.f32_in(0.0, 0.5),
+            a_down: g.f32_in(0.0, 0.5),
+            gamma_up: g.f32_in(1.0, 15.0),
+            gamma_down: g.f32_in(1.0, 15.0),
+            a: g.f32_in(0.1, 0.5),
+            b: g.f32_in(0.0, 0.5),
+        },
+        "pow" => StepKind::PowStep {
+            pow_gamma: g.f32_in(0.5, 3.0),
+            pow_gamma_dtod: g.f32_in(0.0, 0.2),
+        },
+        _ => StepKind::ConstantStep,
+    };
+    SingleDeviceConfig {
+        params: PulsedDeviceParams {
+            dw_min: g.f32_in(0.0005, 0.01),
+            dw_min_dtod: g.f32_in(0.0, 0.4),
+            dw_min_std: g.f32_in(0.0, 2.0),
+            w_max: g.f32_in(0.3, 1.2),
+            w_min: -g.f32_in(0.3, 1.2),
+            w_max_dtod: g.f32_in(0.0, 0.3),
+            w_min_dtod: g.f32_in(0.0, 0.3),
+            up_down: g.f32_in(-0.2, 0.2),
+            up_down_dtod: g.f32_in(0.0, 0.05),
+            ..Default::default()
+        },
+        kind,
+    }
+}
+
+#[test]
+fn prop_weights_never_leave_physical_bounds() {
+    check("weights-in-bounds", 40, |g| {
+        let cfg = random_single_device(g);
+        let hard_max = cfg.params.w_max.max(-cfg.params.w_min) * 3.0; // dtod can widen bounds, 3x is safe
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 6);
+        let mut rng = Rng::new(g.seed ^ 0xF00D);
+        let mut dev = build(&DeviceConfig::Single(cfg), rows, cols, &mut rng);
+        for k in 0..3000 {
+            let idx = g.usize_in(0, rows * cols - 1);
+            dev.pulse(idx, k % 3 != 0, &mut rng);
+        }
+        for &w in dev.weights() {
+            if !w.is_finite() || w.abs() > hard_max {
+                return Err(format!("weight {w} escaped bounds"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_update_moves_in_gradient_direction_on_average() {
+    check("update-direction", 25, |g| {
+        let mut rng = Rng::new(g.seed);
+        let mut dev = build(&DeviceConfig::Single(presets::idealized()), 2, 2, &mut rng);
+        let up = UpdateParameters::default();
+        let mut scratch = UpdateScratch::default();
+        let x = vec![g.f32_in(0.2, 1.0), -g.f32_in(0.2, 1.0)];
+        let d = vec![g.f32_in(0.2, 1.0), -g.f32_in(0.2, 1.0)];
+        for _ in 0..300 {
+            pulsed_update_sample(dev.as_mut(), &x, &d, 0.002, &up, &mut rng, &mut scratch);
+        }
+        for i in 0..2 {
+            for j in 0..2 {
+                let expect_sign = -(d[i] * x[j]).signum();
+                let got = dev.weights()[i * 2 + j];
+                if got.signum() != expect_sign && got.abs() > 0.01 {
+                    return Err(format!(
+                        "w[{i}{j}] = {got}, expected sign {expect_sign} (x={x:?}, d={d:?})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quiet_analog_mvm_equals_plain() {
+    // with all noise and discretization off, the Eq. 1 pipeline must be
+    // exactly linear algebra regardless of management settings
+    check("quiet-mvm-exact", 40, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 20);
+        let w = g.vec_f32(rows * cols, -1.0, 1.0);
+        let x = g.vec_f32(cols, -2.0, 2.0);
+        let io = IOParameters {
+            out_noise: 0.0,
+            inp_res: 0.0,
+            out_res: 0.0,
+            inp_bound: 1e9,
+            out_bound: 1e9,
+            noise_management: *g.choose(&[NoiseManagement::None, NoiseManagement::AbsMax]),
+            bound_management: *g.choose(&[BoundManagement::None, BoundManagement::Iterative]),
+            ..Default::default()
+        };
+        let mut y = vec![0.0; rows];
+        let mut y_ref = vec![0.0; rows];
+        let mut rng = Rng::new(g.seed);
+        let mut scratch = MvmScratch::default();
+        analog_mvm(&w, rows, cols, &x, &mut y, &io, None, false, &mut rng, &mut scratch);
+        mvm_plain(&w, rows, cols, &x, &mut y_ref, false);
+        for (a, b) in y.iter().zip(y_ref.iter()) {
+            if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                return Err(format!("{a} != {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_noise_is_unbiased() {
+    // mean over many noisy forwards ≈ noise-free value
+    check("forward-unbiased", 10, |g| {
+        let cols = g.usize_in(4, 32);
+        let w = g.vec_f32(cols, -0.5, 0.5);
+        let x = g.vec_f32(cols, -1.0, 1.0);
+        let io = IOParameters::default();
+        let mut rng = Rng::new(g.seed);
+        let mut scratch = MvmScratch::default();
+        let mut sum = 0.0f64;
+        let reps = 2000;
+        for _ in 0..reps {
+            let mut y = vec![0.0f32; 1];
+            analog_mvm(&w, 1, cols, &x, &mut y, &io, None, false, &mut rng, &mut scratch);
+            sum += y[0] as f64;
+        }
+        let mean = sum / reps as f64;
+        let mut y_ref = vec![0.0f32; 1];
+        mvm_plain(&w, 1, cols, &x, &mut y_ref, false);
+        let expect = y_ref[0] as f64;
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+        // tolerance: noise σ scaled by input scale / sqrt(reps), DAC/ADC bias
+        let tol = 0.1 * amax.max(0.1);
+        if (mean - expect).abs() > tol {
+            return Err(format!("biased: mean {mean} vs {expect} (tol {tol})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drift_monotone_and_compensation_positive() {
+    check("drift-monotone", 20, |g| {
+        let params = PCMNoiseParams::default();
+        let n = g.usize_in(50, 300);
+        let w = g.vec_f32(n, -1.0, 1.0);
+        let mut rng = Rng::new(g.seed);
+        let prog = ProgrammedWeights::program(&w, 1.0, &params, &mut rng);
+        let mut last_norm = f64::INFINITY;
+        for &t in &[25.0f32, 1e3, 1e5, 1e7] {
+            let wt = prog.weights_at(t);
+            let norm: f64 = wt.iter().map(|&v| (v as f64).abs()).sum();
+            if norm > last_norm * 1.02 {
+                return Err(format!("|w| grew under drift at t={t}: {norm} > {last_norm}"));
+            }
+            last_norm = norm;
+        }
+        let gamma = prog.drift_compensation(1e6, &mut rng);
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(format!("bad GDC factor {gamma}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tile_set_get_weights_within_scaling_tolerance() {
+    check("tile-set-get", 25, |g| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(1, 8);
+        let mut cfg = RPUConfig::perfect();
+        cfg.weight_scaling_omega = *g.choose(&[0.0f32, 0.6, 0.8, 1.0]);
+        let mut tile = AnalogTile::new(rows, cols, cfg.clone(), Rng::new(g.seed));
+        let scale = if cfg.weight_scaling_omega > 0.0 { 3.0 } else { 0.9 };
+        let w = Matrix::from_vec(rows, cols, g.vec_f32(rows * cols, -scale, scale));
+        tile.set_weights(&w);
+        let got = tile.get_weights();
+        for (a, b) in got.data().iter().zip(w.data().iter()) {
+            if (a - b).abs() > 0.02 * (1.0 + b.abs()) {
+                return Err(format!("{a} vs {b} (omega {})", cfg.weight_scaling_omega));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backward_is_transpose_of_forward_when_quiet() {
+    check("bwd-transpose", 25, |g| {
+        let rows = g.usize_in(1, 10);
+        let cols = g.usize_in(1, 10);
+        let mut cfg = RPUConfig::perfect();
+        cfg.weight_scaling_omega = 0.0;
+        let mut tile = AnalogTile::new(rows, cols, cfg, Rng::new(g.seed));
+        let w = Matrix::from_vec(rows, cols, g.vec_f32(rows * cols, -0.5, 0.5));
+        tile.set_weights(&w);
+        // <d, W x> == <Wᵀ d, x> (adjoint identity)
+        let x = g.vec_f32(cols, -1.0, 1.0);
+        let d = g.vec_f32(rows, -1.0, 1.0);
+        let mut wx = vec![0.0; rows];
+        tile.forward(&x, &mut wx);
+        let mut wtd = vec![0.0; cols];
+        tile.backward(&d, &mut wtd);
+        let lhs: f64 = d.iter().zip(wx.iter()).map(|(a, b)| (a * b) as f64).sum();
+        let rhs: f64 = wtd.iter().zip(x.iter()).map(|(a, b)| (a * b) as f64).sum();
+        if (lhs - rhs).abs() > 1e-3 * (1.0 + lhs.abs()) {
+            return Err(format!("adjoint broken: {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ublm_bl_monotone_in_gradient() {
+    // stronger gradients must never use a shorter train
+    check("ublm-monotone", 20, |g| {
+        let mut rng = Rng::new(g.seed);
+        let mut dev = build(&DeviceConfig::Single(presets::gokmen_vlasov()), 1, 1, &mut rng);
+        let up = UpdateParameters::default();
+        let mut scratch = UpdateScratch::default();
+        let d_small = g.f32_in(0.001, 0.01);
+        let d_big = d_small * g.f32_in(2.0, 50.0);
+        let s1 = pulsed_update_sample(dev.as_mut(), &[1.0], &[d_small], 0.1, &up, &mut rng, &mut scratch);
+        let s2 = pulsed_update_sample(dev.as_mut(), &[1.0], &[d_big], 0.1, &up, &mut rng, &mut scratch);
+        if s2.bl_used < s1.bl_used {
+            return Err(format!(
+                "BL decreased for larger gradient: {} -> {}",
+                s1.bl_used, s2.bl_used
+            ));
+        }
+        Ok(())
+    });
+}
