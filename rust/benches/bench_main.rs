@@ -17,15 +17,19 @@ use std::time::Instant;
 
 use aihwsim::config::{presets, DeviceConfig, IOParameters, RPUConfig, UpdateParameters};
 use aihwsim::coordinator::experiments::{device_response, pcm_drift};
+#[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
 use aihwsim::coordinator::trainer::{train_classifier, TrainConfig};
 use aihwsim::data::synthetic_images;
 use aihwsim::device::build;
 use aihwsim::nn::sequential::{mlp, Backend};
+#[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
-use aihwsim::tile::forward::{analog_mvm, mvm_plain, MvmScratch};
+use aihwsim::tile::forward::{analog_mvm, analog_mvm_batch, mvm_plain, MvmBatchScratch, MvmScratch};
 use aihwsim::tile::pulsed_ops::{pulsed_update_batch, UpdateScratch};
+use aihwsim::util::json::Json;
 use aihwsim::util::logging::CsvLogger;
+use aihwsim::util::matrix::Matrix;
 use aihwsim::util::rng::Rng;
 
 /// Median wall time (seconds) of `reps` runs of `f` after one warmup.
@@ -142,6 +146,97 @@ fn bench_mvm(csv: &mut CsvLogger) {
     }
 }
 
+// ------------------------------------------------------- Eq. 1 batched
+
+/// Per-sample vs fused-batched analog MVM (the batch-first pipeline's
+/// headline numbers). Emits BENCH_mvm.json to seed the perf trajectory.
+fn bench_mvm_batched(csv: &mut CsvLogger) {
+    let io = IOParameters::default();
+    let mut rng = Rng::new(7);
+    let mut scratch = MvmScratch::default();
+    let mut bscratch = MvmBatchScratch::default();
+    let mut entries: Vec<Json> = Vec::new();
+    println!(
+        "  {:>10} {:>6} {:>14} {:>12} {:>9}",
+        "tile", "batch", "per-sample µs", "batched µs", "speedup"
+    );
+    for &n in &[256usize, 512] {
+        let w: Vec<f32> = (0..n * n).map(|_| rng.uniform_f32() - 0.5).collect();
+        for &batch in &[1usize, 8, 64] {
+            let x = Matrix::rand_uniform(batch, n, -1.0, 1.0, &mut rng);
+            let mut y = Matrix::zeros(batch, n);
+            let reps = (4096 / (batch * n / 256)).clamp(1, 64);
+            // per-sample: the scalar pipeline row by row
+            let t_scalar = time_median(5, || {
+                for _ in 0..reps {
+                    for b in 0..batch {
+                        analog_mvm(
+                            &w,
+                            n,
+                            n,
+                            x.row(b),
+                            y.row_mut(b),
+                            &io,
+                            None,
+                            false,
+                            &mut rng,
+                            &mut scratch,
+                        );
+                    }
+                }
+            }) / reps as f64;
+            // batched: one fused kernel call for the whole mini-batch
+            let t_batch = time_median(5, || {
+                for _ in 0..reps {
+                    analog_mvm_batch(
+                        &w,
+                        n,
+                        n,
+                        &x,
+                        &mut y,
+                        &io,
+                        None,
+                        false,
+                        &mut rng,
+                        &mut bscratch,
+                    );
+                }
+            }) / reps as f64;
+            let speedup = t_scalar / t_batch;
+            println!(
+                "  {:>10} {:>6} {:>14.1} {:>12.1} {:>8.2}x",
+                format!("{n}x{n}"),
+                batch,
+                t_scalar * 1e6,
+                t_batch * 1e6,
+                speedup
+            );
+            csv.row_str(&[
+                format!("mvm_batch_{n}_{batch}"),
+                format!("{:.3}", t_scalar * 1e6),
+                format!("{:.3}", t_batch * 1e6),
+                format!("{:.2}", speedup),
+            ])
+            .unwrap();
+            entries.push(Json::obj(vec![
+                ("tile", Json::num(n as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("per_sample_us", Json::num(t_scalar * 1e6)),
+                ("batched_us", Json::num(t_batch * 1e6)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("analog_mvm_batch_vs_per_sample")),
+        ("io", Json::str("default IOParameters (7-bit DAC, 9-bit ADC, nm+bm)")),
+        ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_mvm.json", doc.to_string_pretty()).unwrap();
+    println!("  wrote BENCH_mvm.json");
+}
+
 // --------------------------------------------------------------- Eq. 2
 
 fn bench_pulsed_update(csv: &mut CsvLogger) {
@@ -177,6 +272,7 @@ fn bench_pulsed_update(csv: &mut CsvLogger) {
 
 // --------------------------------------------------------------- E7
 
+#[cfg(feature = "pjrt")]
 fn bench_pjrt(csv: &mut CsvLogger) {
     let dir = Runtime::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -219,9 +315,13 @@ fn main() {
     if section("Eq1_analog_mvm", &filter) {
         bench_mvm(&mut csv);
     }
+    if section("Eq1b_batched_mvm (per-sample vs fused batch)", &filter) {
+        bench_mvm_batched(&mut csv);
+    }
     if section("Eq2_pulsed_update", &filter) {
         bench_pulsed_update(&mut csv);
     }
+    #[cfg(feature = "pjrt")]
     if section("E7_pjrt_step", &filter) {
         bench_pjrt(&mut csv);
     }

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::hwa_pipeline::MlpParams;
+use crate::coordinator::params::MlpParams;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 

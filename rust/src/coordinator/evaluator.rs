@@ -1,5 +1,9 @@
 //! Inference-over-time evaluation (paper §5): program a trained network
 //! onto PCM inference tiles and track accuracy as the devices drift.
+//!
+//! All tile reads go through `Tile::forward_batch` — the inference tile's
+//! fused batched kernel carries the drifted weights *and* the cached
+//! per-element read-noise variances in one pass per mini-batch.
 
 use crate::config::InferenceRPUConfig;
 use crate::data::Dataset;

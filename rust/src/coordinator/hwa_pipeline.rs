@@ -12,27 +12,17 @@ use crate::util::logging::Stopwatch;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
-/// Parameter set of the fixed AOT MLP (alternating weight/bias).
-pub struct MlpParams {
-    /// `w[k]` is (in_k, out_k) — the JAX convention of the artifacts.
-    pub weights: Vec<Matrix>,
-    pub biases: Vec<Vec<f32>>,
-    pub layer_sizes: Vec<usize>,
+pub use crate::coordinator::params::MlpParams;
+
+/// PJRT literal conversions for [`MlpParams`] (only needed by this
+/// feature-gated pipeline; the container itself lives in
+/// `coordinator::params`).
+trait MlpParamsLiterals {
+    fn to_literals(&self) -> Result<Vec<xla::Literal>>;
+    fn update_from_literals(&mut self, lits: &[xla::Literal]) -> Result<()>;
 }
 
-impl MlpParams {
-    /// Kaiming-uniform init matching `model.init_params`.
-    pub fn init(layer_sizes: &[usize], rng: &mut Rng) -> Self {
-        let mut weights = Vec::new();
-        let mut biases = Vec::new();
-        for k in 0..layer_sizes.len() - 1 {
-            let bound = 1.0 / (layer_sizes[k] as f32).sqrt();
-            weights.push(Matrix::rand_uniform(layer_sizes[k], layer_sizes[k + 1], -bound, bound, rng));
-            biases.push(vec![0.0; layer_sizes[k + 1]]);
-        }
-        MlpParams { weights, biases, layer_sizes: layer_sizes.to_vec() }
-    }
-
+impl MlpParamsLiterals for MlpParams {
     fn to_literals(&self) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::new();
         for (w, b) in self.weights.iter().zip(self.biases.iter()) {

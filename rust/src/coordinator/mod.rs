@@ -5,7 +5,9 @@
 pub mod checkpoint;
 pub mod evaluator;
 pub mod experiments;
+#[cfg(feature = "pjrt")]
 pub mod hwa_pipeline;
+pub mod params;
 pub mod trainer;
 
 pub use evaluator::InferenceMlp;

@@ -1,0 +1,34 @@
+//! MLP parameter container shared by the checkpoint system and the
+//! (feature-gated) PJRT pipeline. Lives outside `hwa_pipeline` so that
+//! checkpoints build without the `pjrt` feature.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Parameter set of the fixed AOT MLP (alternating weight/bias).
+pub struct MlpParams {
+    /// `w[k]` is (in_k, out_k) — the JAX convention of the artifacts.
+    pub weights: Vec<Matrix>,
+    pub biases: Vec<Vec<f32>>,
+    pub layer_sizes: Vec<usize>,
+}
+
+impl MlpParams {
+    /// Kaiming-uniform init matching `model.init_params`.
+    pub fn init(layer_sizes: &[usize], rng: &mut Rng) -> Self {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for k in 0..layer_sizes.len() - 1 {
+            let bound = 1.0 / (layer_sizes[k] as f32).sqrt();
+            weights.push(Matrix::rand_uniform(
+                layer_sizes[k],
+                layer_sizes[k + 1],
+                -bound,
+                bound,
+                rng,
+            ));
+            biases.push(vec![0.0; layer_sizes[k + 1]]);
+        }
+        MlpParams { weights, biases, layer_sizes: layer_sizes.to_vec() }
+    }
+}

@@ -41,6 +41,10 @@ pub struct TrainReport {
     pub epoch_test_acc: Vec<f64>,
     pub wall_s: f64,
     pub steps: u64,
+    /// Training samples per second of *training-loop* time (per-epoch
+    /// test evaluation excluded) — the batched-tile-path throughput
+    /// headline for the perf trajectory.
+    pub samples_per_s: f64,
 }
 
 impl TrainReport {
@@ -85,10 +89,13 @@ pub fn train_classifier(
     let mut csv = cfg.csv_path.as_ref().map(|p| {
         CsvLogger::create(p, &["epoch", "loss", "train_acc", "test_acc", "wall_s"]).unwrap()
     });
+    let mut samples_total = 0u64;
+    let mut train_s = 0.0f64; // training-loop time only (excludes eval)
     for epoch in 0..cfg.epochs {
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut n = 0usize;
+        let epoch_sw = Stopwatch::start();
         for (x, y) in BatchIter::new(train, cfg.batch_size, &mut rng) {
             let logp = model.forward(&x);
             let (l, g) = nll_loss(&logp, &y);
@@ -98,7 +105,9 @@ pub fn train_classifier(
             model.backward(&g);
             opt.step(model);
             report.steps += 1;
+            samples_total += y.len() as u64;
         }
+        train_s += epoch_sw.elapsed_s();
         let train_loss = loss_sum / n as f64;
         let train_acc = acc_sum / n as f64;
         let (_, test_acc) = evaluate(model, test, cfg.batch_size, &mut rng);
@@ -118,6 +127,7 @@ pub fn train_classifier(
         csv.flush().unwrap();
     }
     report.wall_s = sw.elapsed_s();
+    report.samples_per_s = if train_s > 0.0 { samples_total as f64 / train_s } else { 0.0 };
     report
 }
 

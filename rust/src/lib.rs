@@ -19,6 +19,17 @@ pub mod data;
 pub mod nn;
 pub mod noise;
 pub mod optim;
+// The `pjrt` modules need the vendored `xla` + `anyhow` crates. Fail with
+// an actionable message instead of a wall of unresolved imports: vendor
+// the crates, update [features] in Cargo.toml (see its comments), and
+// delete this guard.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the vendored `xla` and `anyhow` crates: \
+     uncomment the dependency lines in rust/Cargo.toml, change the feature to \
+     `pjrt = [\"dep:anyhow\", \"dep:xla\"]`, and remove this compile_error."
+);
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tile;
 pub mod util;

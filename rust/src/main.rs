@@ -13,11 +13,13 @@
 
 use aihwsim::config::{loader, presets, RPUConfig};
 use aihwsim::coordinator::experiments;
+#[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
 use aihwsim::coordinator::{evaluator, trainer, InferenceMlp};
 use aihwsim::data::synthetic_images;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
 use aihwsim::nn::AnalogLinear;
+#[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::util::argparse::Args;
 use aihwsim::util::logging::{info, CsvLogger};
@@ -90,9 +92,10 @@ fn cmd_train(args: &Args) {
     };
     let report = trainer::train_classifier(&mut model, &train_ds, &test_ds, &tc);
     info(&format!(
-        "done: {} steps in {:.1}s — final loss {:.4}, test acc {:.3}",
+        "done: {} steps in {:.1}s ({:.0} samples/s train) — final loss {:.4}, test acc {:.3}",
         report.steps,
         report.wall_s,
+        report.samples_per_s,
         report.final_loss(),
         report.final_test_acc()
     ));
@@ -213,6 +216,13 @@ fn cmd_drift(args: &Args) {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_e2e(_args: &Args) {
+    eprintln!("e2e requires the `pjrt` feature (cargo build --features pjrt, with the xla/anyhow crates vendored)");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_e2e(args: &Args) {
     let dir = Runtime::default_dir();
     let mut pipe = match HwaPipeline::new(&dir, args.u64_or("seed", 42)) {

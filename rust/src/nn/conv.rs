@@ -8,6 +8,12 @@
 //! im2col patch is one rank-1 pulsed update on the tile.
 //!
 //! Tensors are flattened row-major as `B × (C·H·W)`.
+//!
+//! Batch-first data path: im2col lowers the whole mini-batch to one
+//! (B·P)×(C·k·k) patch matrix, which rides a *single* fused batched MVM
+//! (`analog_mvm_batch` via `Tile::forward_batch`) — every patch is still
+//! one analog read, but the weights are streamed once per block of
+//! patches instead of once per patch.
 
 use crate::config::RPUConfig;
 use crate::nn::Module;

@@ -2,6 +2,11 @@
 //! one analog tile (paper Fig. 2). The bias is digital (computed in FP and
 //! added after the ADC), matching the paper's default separation of analog
 //! and digital compute.
+//!
+//! The layer is batch-first end to end: forward/backward hand the whole
+//! B×features mini-batch to the tile's fused batched kernel
+//! (`tile::forward::analog_mvm_batch`), and `update` drives the tile's
+//! batched pulsed update — no per-sample loop exists at this level.
 
 use crate::config::RPUConfig;
 use crate::nn::Module;

@@ -1,7 +1,9 @@
 //! Tile mapping: physical crossbars have a maximum size, so large layers
 //! must be split across several tiles (standard aihwkit `mapping`
 //! behaviour). [`TiledLinear`] splits the input dimension into column
-//! blocks and sums partial MVMs digitally.
+//! blocks and sums partial MVMs digitally. Each tile processes the whole
+//! mini-batch through the fused batched kernel before the digital
+//! reduction — the per-sample loop lives nowhere in this layer.
 
 use crate::config::RPUConfig;
 use crate::nn::Module;
@@ -114,10 +116,12 @@ impl Module for TiledLinear {
     }
 
     fn update(&mut self, lr: f32) {
-        let (x, d) = match (&self.x_cache, &self.d_cache) {
-            (Some(x), Some(d)) => (x.clone(), d.clone()),
-            _ => return,
-        };
+        if self.x_cache.is_none() || self.d_cache.is_none() {
+            return;
+        }
+        // take the caches to release the borrow on self (no deep clone),
+        // then restore them for any further update calls this batch
+        let (x, d) = (self.x_cache.take().unwrap(), self.d_cache.take().unwrap());
         for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
             let xs = Self::slice_cols(&x, start, len);
             tile.update(&xs, &d, lr);
@@ -125,6 +129,8 @@ impl Module for TiledLinear {
         for (b, &g) in self.bias.iter_mut().zip(self.bias_grad.iter()) {
             *b -= lr * g;
         }
+        self.x_cache = Some(x);
+        self.d_cache = Some(d);
     }
 
     fn post_batch(&mut self) {

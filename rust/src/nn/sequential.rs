@@ -204,33 +204,39 @@ mod tests {
 
     #[test]
     fn mlp_classifies_blobs_analog() {
-        // 3 linearly separable blobs, analog training end to end
+        // 3 linearly separable blobs, analog training end to end through
+        // the batched tile path (mini-batches of 4)
         let mut rng = Rng::new(3);
         let mut cfg = RPUConfig::default();
         cfg.weight_scaling_omega = 0.6;
         let mut net = mlp(&[4, 3], Backend::Analog, &cfg, &mut rng);
         let centers = [[1.0f32, 0., 0., 0.5], [0., 1.0, 0.5, 0.], [0., 0., 1.0, 1.0]];
+        let batch = 4;
         let mut accs = Vec::new();
         for epoch in 0..30 {
-            let mut correct = 0;
-            for _ in 0..20 {
-                let lab = rng.below(3);
-                let mut xv = centers[lab].to_vec();
-                for v in xv.iter_mut() {
-                    *v += 0.2 * rng.normal() as f32;
+            let mut correct = 0.0;
+            for _ in 0..5 {
+                let mut xv = Vec::with_capacity(batch * 4);
+                let mut labs = Vec::with_capacity(batch);
+                for _ in 0..batch {
+                    let lab = rng.below(3);
+                    labs.push(lab);
+                    for &c in &centers[lab] {
+                        xv.push(c + 0.2 * rng.normal() as f32);
+                    }
                 }
-                let x = Matrix::from_vec(1, 4, xv);
+                let x = Matrix::from_vec(batch, 4, xv);
                 let y = net.forward(&x);
-                let (_, g) = nll_loss(&y, &[lab]);
-                if crate::nn::loss::accuracy(&y, &[lab]) > 0.5 {
-                    correct += 1;
-                }
+                let (_, g) = nll_loss(&y, &labs);
+                correct += crate::nn::loss::accuracy(&y, &labs) * batch as f64;
                 net.backward(&g);
-                net.update(0.1);
+                // nll_loss folds 1/B into the gradient → lr scales with B
+                // to keep the per-sample step of the B=1 original
+                net.update(0.4);
                 net.post_batch();
             }
             if epoch >= 25 {
-                accs.push(correct as f64 / 20.0);
+                accs.push(correct / 20.0);
             }
         }
         let acc = accs.iter().sum::<f64>() / accs.len() as f64;

@@ -4,7 +4,7 @@
 use crate::config::{RPUConfig, WeightModifier};
 use crate::device::{build, DeviceArray};
 use crate::noise::weight_mod;
-use crate::tile::forward::{analog_mvm, MvmScratch};
+use crate::tile::forward::{analog_mvm, analog_mvm_batch, MvmBatchScratch, MvmScratch};
 use crate::tile::pulsed_ops::{pulsed_update_batch, UpdateScratch, UpdateStats};
 use crate::tile::Tile;
 use crate::util::matrix::Matrix;
@@ -23,6 +23,7 @@ pub struct AnalogTile {
     /// weight modifier is active (hardware-aware training).
     modified: Option<Vec<f32>>,
     mvm_scratch: MvmScratch,
+    batch_scratch: MvmBatchScratch,
     upd_scratch: UpdateScratch,
     /// Cumulative update statistics (observability).
     pub last_update_stats: UpdateStats,
@@ -42,6 +43,7 @@ impl AnalogTile {
             out_scale: 1.0,
             modified: None,
             mvm_scratch: MvmScratch::default(),
+            batch_scratch: MvmBatchScratch::default(),
             upd_scratch: UpdateScratch::default(),
             last_update_stats: UpdateStats::default(),
         }
@@ -193,6 +195,54 @@ impl Tile for AnalogTile {
 
     fn apply_weight_modifier(&mut self) {
         self.apply_weight_modifier_impl();
+    }
+
+    /// Fused batched forward: the weights are read once per mini-batch and
+    /// the whole B×in block goes through one [`analog_mvm_batch`] call.
+    fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols(), self.in_size);
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        let w = self.read_weights();
+        analog_mvm_batch(
+            &w,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            None,
+            false,
+            &mut self.rng,
+            &mut self.batch_scratch,
+        );
+        if self.out_scale != 1.0 {
+            y.scale(self.out_scale);
+        }
+    }
+
+    /// Fused batched backward (transposed read with the backward IO
+    /// non-idealities).
+    fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
+        assert_eq!(d.cols(), self.out_size);
+        assert_eq!(g.cols(), self.in_size);
+        assert_eq!(d.rows(), g.rows());
+        let w = self.read_weights();
+        analog_mvm_batch(
+            &w,
+            self.out_size,
+            self.in_size,
+            d,
+            g,
+            &self.config.backward,
+            None,
+            true,
+            &mut self.rng,
+            &mut self.batch_scratch,
+        );
+        if self.out_scale != 1.0 {
+            g.scale(self.out_scale);
+        }
     }
 }
 

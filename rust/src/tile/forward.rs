@@ -14,16 +14,45 @@
 //! with that variance instead (one draw per output, one fused pass for the
 //! variance accumulation). This is distribution-exact, and is the same
 //! treatment RPUCUDA uses for its fused forward kernels.
+//!
+//! **Batch-first kernel.** [`analog_mvm_batch`] is the hot path used by
+//! every tile: it runs the whole Eq. (1) pipeline over a B×in mini-batch
+//! in one fused pass, blocked so each weight row is streamed once per
+//! block of samples (instead of once per sample), and parallelized over
+//! the batch via [`crate::util::threadpool::par_chunks_mut`]. Each batch
+//! row draws from its own decorrelated RNG stream ([`Rng::split`]), so
+//! results are bit-deterministic for a given tile seed regardless of the
+//! worker-thread count. The scalar [`analog_mvm`] remains the reference
+//! implementation (and handles the rare bound-management retries).
 
 use crate::config::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use crate::util::matrix::{axpy, dot, Matrix};
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_chunks_mut;
 
-/// Reusable scratch buffers for the MVM pipeline (hot path: no allocation).
+/// Reusable scratch buffers for the scalar MVM pipeline (hot path: no
+/// allocation).
 #[derive(Default)]
 pub struct MvmScratch {
     xq: Vec<f32>,
     var: Vec<f32>,
 }
+
+/// Reusable state for the batched kernel: one decorrelated RNG stream per
+/// batch row, split off the tile RNG at every call.
+#[derive(Default)]
+pub struct MvmBatchScratch {
+    rngs: Vec<Rng>,
+}
+
+/// Rows per block of the fused batch kernel: big enough to amortize one
+/// streaming pass over the weight matrix, small enough that the block of
+/// quantized inputs stays cache-resident.
+const BATCH_BLOCK: usize = 8;
+
+/// Minimum per-chunk work (in MACs) before the batch kernel forks to
+/// another worker thread.
+const PAR_MIN_MACS: usize = 1 << 18;
 
 /// Quantize `v` to steps of `step` (round-to-nearest or stochastic).
 #[inline]
@@ -38,6 +67,74 @@ fn quantize(v: f32, step: f32, sto: bool, rng: &mut Rng) -> f32 {
         (if rng.bernoulli(r as f64) { f + 1.0 } else { f }) * step
     } else {
         q.round() * step
+    }
+}
+
+/// Noise-management scale for an input row with absolute maximum `amax`.
+#[inline]
+fn nm_scale_for(io: &IOParameters, amax: f32) -> f32 {
+    match io.noise_management {
+        NoiseManagement::None => 1.0,
+        NoiseManagement::AbsMax => {
+            if amax > 0.0 {
+                amax
+            } else {
+                1.0
+            }
+        }
+        NoiseManagement::Constant => io.nm_constant.max(1e-12),
+    }
+}
+
+/// DAC stage for one input row: scale, clip, quantize, input noise.
+#[inline]
+fn dac_row(x: &[f32], scale: f32, io: &IOParameters, rng: &mut Rng, xq: &mut [f32]) {
+    let inp_step = io.inp_res * 2.0 * io.inp_bound;
+    for (q, &v) in xq.iter_mut().zip(x.iter()) {
+        let s = (v / scale).clamp(-io.inp_bound, io.inp_bound);
+        let mut qv = quantize(s, inp_step, io.inp_sto_round, rng);
+        if io.inp_noise > 0.0 {
+            qv += io.inp_noise * rng.normal() as f32;
+        }
+        *q = qv;
+    }
+}
+
+/// Add the output-referred weight noise (if `var` is given) and the
+/// additive output noise to one output row.
+#[inline]
+fn noise_epilogue(y: &mut [f32], var: Option<&[f32]>, io: &IOParameters, rng: &mut Rng) {
+    if let Some(var) = var {
+        for (yi, &v) in y.iter_mut().zip(var.iter()) {
+            if v > 0.0 {
+                *yi += v.sqrt() * rng.normal() as f32;
+            }
+        }
+    }
+    if io.out_noise > 0.0 {
+        for yi in y.iter_mut() {
+            *yi += io.out_noise * rng.normal() as f32;
+        }
+    }
+}
+
+/// ADC stage for one output row: clip, quantize, undo the input scaling.
+#[inline]
+fn adc_row(y: &mut [f32], scale: f32, io: &IOParameters, rng: &mut Rng) {
+    let out_step = io.out_res * 2.0 * io.out_bound;
+    for yi in y.iter_mut() {
+        let c = yi.clamp(-io.out_bound, io.out_bound);
+        *yi = quantize(c, out_step, io.out_sto_round, rng) * scale;
+    }
+}
+
+/// Pure output-noise row for an all-zero input (nothing reaches the DAC).
+#[inline]
+fn zero_input_row(y: &mut [f32], io: &IOParameters, rng: &mut Rng) {
+    let out_step = io.out_res * 2.0 * io.out_bound;
+    for yi in y.iter_mut() {
+        let v = io.out_noise * rng.normal() as f32;
+        *yi = quantize(v.clamp(-io.out_bound, io.out_bound), out_step, io.out_sto_round, rng);
     }
 }
 
@@ -61,6 +158,27 @@ pub fn analog_mvm(
     rng: &mut Rng,
     scratch: &mut MvmScratch,
 ) {
+    analog_mvm_from(w, rows, cols, x, y, io, w_noise_var, transposed, rng, scratch, 0);
+}
+
+/// The scalar pipeline starting at bound-management attempt
+/// `first_attempt` (input scale already halved `first_attempt` times).
+/// `analog_mvm` is attempt 0; the batched kernel resumes clipped rows at
+/// attempt 1 so the retry distribution matches the scalar reference.
+#[allow(clippy::too_many_arguments)]
+fn analog_mvm_from(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    io: &IOParameters,
+    w_noise_var: Option<&[f32]>,
+    transposed: bool,
+    rng: &mut Rng,
+    scratch: &mut MvmScratch,
+    first_attempt: u32,
+) {
     let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
     assert_eq!(w.len(), rows * cols);
     assert_eq!(x.len(), in_size);
@@ -73,57 +191,38 @@ pub fn analog_mvm(
 
     // --- noise management: dynamic input scaling ---
     let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let nm_scale = match io.noise_management {
-        NoiseManagement::None => 1.0,
-        NoiseManagement::AbsMax => {
-            if amax > 0.0 {
-                amax
-            } else {
-                1.0
-            }
-        }
-        NoiseManagement::Constant => io.nm_constant.max(1e-12),
-    };
     if amax == 0.0 {
         // all-zero input: output is pure output noise through the ADC
-        let out_step = io.out_res * 2.0 * io.out_bound;
-        for yi in y.iter_mut() {
-            let v = io.out_noise * rng.normal() as f32;
-            *yi = quantize(v.clamp(-io.out_bound, io.out_bound), out_step, io.out_sto_round, rng);
-        }
+        zero_input_row(y, io, rng);
         return;
     }
+    let nm_scale = nm_scale_for(io, amax);
 
-    let inp_step = io.inp_res * 2.0 * io.inp_bound;
-    let out_step = io.out_res * 2.0 * io.out_bound;
     let max_attempts = match io.bound_management {
         BoundManagement::None => 1,
         BoundManagement::Iterative => io.max_bm_factor.max(1),
     };
+    let first_attempt = first_attempt.min(max_attempts - 1);
 
     scratch.xq.resize(in_size, 0.0);
     scratch.var.resize(out_size, 0.0);
 
-    let mut bm_factor = 1.0f32;
-    for attempt in 0..max_attempts {
+    let mut bm_factor = 2.0f32.powi(first_attempt as i32);
+    for attempt in first_attempt..max_attempts {
         let scale = nm_scale * bm_factor;
         // --- DAC: scale, clip, quantize, input noise ---
-        for (q, &v) in scratch.xq.iter_mut().zip(x.iter()) {
-            let s = (v / scale).clamp(-io.inp_bound, io.inp_bound);
-            let mut qv = quantize(s, inp_step, io.inp_sto_round, rng);
-            if io.inp_noise > 0.0 {
-                qv += io.inp_noise * rng.normal() as f32;
-            }
-            *q = qv;
-        }
+        dac_row(x, scale, io, rng, &mut scratch.xq);
 
         // --- analog MVM + weight-noise variance accumulation ---
         let need_var = w_noise_var.is_some() || io.w_noise > 0.0;
         if !need_var {
             mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
+            noise_epilogue(y, None, io, rng);
         } else {
             match (w_noise_var, io.w_noise_type) {
-                (Some(var), _) => mvm_with_var(w, var, rows, cols, &scratch.xq, y, &mut scratch.var, transposed),
+                (Some(var), _) => {
+                    mvm_with_var(w, var, rows, cols, &scratch.xq, y, &mut scratch.var, transposed)
+                }
                 (None, WeightNoiseType::AdditiveConstant) => {
                     mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
                     let x2: f32 = scratch.xq.iter().map(|v| v * v).sum();
@@ -131,21 +230,11 @@ pub fn analog_mvm(
                     scratch.var.iter_mut().for_each(|v| *v = sig * sig);
                 }
                 (None, WeightNoiseType::RelativeToWeight) => {
-                    mvm_rel_var(w, io.w_noise, rows, cols, &scratch.xq, y, &mut scratch.var, transposed);
+                    let sv = &mut scratch.var;
+                    mvm_rel_var(w, io.w_noise, rows, cols, &scratch.xq, y, sv, transposed);
                 }
             }
-            for (yi, &v) in y.iter_mut().zip(scratch.var.iter()) {
-                if v > 0.0 {
-                    *yi += v.sqrt() * rng.normal() as f32;
-                }
-            }
-        }
-
-        // --- output noise ---
-        if io.out_noise > 0.0 {
-            for yi in y.iter_mut() {
-                *yi += io.out_noise * rng.normal() as f32;
-            }
+            noise_epilogue(y, Some(&scratch.var), io, rng);
         }
 
         // --- bound management: retry at half input scale if clipping ---
@@ -156,13 +245,351 @@ pub fn analog_mvm(
         }
 
         // --- ADC: clip, quantize, undo input scaling ---
-        for yi in y.iter_mut() {
-            let c = yi.clamp(-io.out_bound, io.out_bound);
-            *yi = quantize(c, out_step, io.out_sto_round, rng) * scale;
-        }
+        adc_row(y, scale, io, rng);
         return;
     }
     unreachable!("bound-management loop always returns");
+}
+
+/// One mutable batch row flowing through the fused kernel. The row owns
+/// its RNG stream, so any worker thread can process it independently.
+struct RowTask<'a> {
+    x: &'a [f32],
+    y: &'a mut [f32],
+    rng: &'a mut Rng,
+}
+
+/// Fused batched analog MVM: `Y = X·Wᵀ` (or `X·W` when `transposed`)
+/// through the full Eq. (1) pipeline, `x` is B×in and `y` B×out.
+///
+/// Semantics match B independent calls to [`analog_mvm`] — exactly for
+/// noise-free configurations, in distribution otherwise (each row draws
+/// from its own [`Rng::split`] stream instead of one shared sequence).
+/// The kernel blocks the MVM so each weight row is streamed once per
+/// [`BATCH_BLOCK`] samples and fans the batch out across worker threads.
+#[allow(clippy::too_many_arguments)]
+pub fn analog_mvm_batch(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Matrix,
+    y: &mut Matrix,
+    io: &IOParameters,
+    w_noise_var: Option<&[f32]>,
+    transposed: bool,
+    rng: &mut Rng,
+    scratch: &mut MvmBatchScratch,
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.cols(), in_size);
+    assert_eq!(y.cols(), out_size);
+    assert_eq!(x.rows(), y.rows());
+    let batch = x.rows();
+    if batch == 0 || in_size == 0 || out_size == 0 {
+        return;
+    }
+
+    if io.is_perfect {
+        mvm_plain_batch(w, rows, cols, x, y, transposed);
+        return;
+    }
+
+    // One decorrelated stream per batch row: the result for a given tile
+    // seed is independent of thread count and chunking.
+    scratch.rngs.clear();
+    scratch.rngs.extend((0..batch).map(|_| rng.split()));
+
+    let mut tasks: Vec<RowTask> = x
+        .data()
+        .chunks(in_size)
+        .zip(y.data_mut().chunks_mut(out_size))
+        .zip(scratch.rngs.iter_mut())
+        .map(|((x, y), rng)| RowTask { x, y, rng })
+        .collect();
+
+    let min_rows = 1 + PAR_MIN_MACS / (rows * cols).max(1);
+    par_chunks_mut(&mut tasks, min_rows, |_, chunk| {
+        batch_worker(w, rows, cols, io, w_noise_var, transposed, chunk);
+    });
+}
+
+/// Process a contiguous chunk of batch rows in blocks of [`BATCH_BLOCK`].
+fn batch_worker(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    io: &IOParameters,
+    w_noise_var: Option<&[f32]>,
+    transposed: bool,
+    chunk: &mut [RowTask],
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    // Which variance path feeds the output-referred weight noise:
+    let add_const = w_noise_var.is_none()
+        && io.w_noise > 0.0
+        && io.w_noise_type == WeightNoiseType::AdditiveConstant;
+    let fused_var = w_noise_var.is_some()
+        || (io.w_noise > 0.0 && io.w_noise_type == WeightNoiseType::RelativeToWeight);
+    let need_var = add_const || fused_var;
+
+    let mut xq = vec![0.0f32; BATCH_BLOCK * in_size];
+    let mut var = vec![0.0f32; if need_var { BATCH_BLOCK * out_size } else { 0 }];
+    let mut scales = [1.0f32; BATCH_BLOCK];
+    let mut x2 = [0.0f32; BATCH_BLOCK];
+    let mut zero = [false; BATCH_BLOCK];
+    let mut retry_scratch = MvmScratch::default();
+
+    for block in chunk.chunks_mut(BATCH_BLOCK) {
+        // --- DAC: per-row noise management, clip, quantize, input noise ---
+        for (s, task) in block.iter_mut().enumerate() {
+            let row_q = &mut xq[s * in_size..(s + 1) * in_size];
+            let amax = task.x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            zero[s] = amax == 0.0;
+            if zero[s] {
+                row_q.iter_mut().for_each(|v| *v = 0.0);
+                scales[s] = 1.0;
+                continue;
+            }
+            scales[s] = nm_scale_for(io, amax);
+            dac_row(task.x, scales[s], io, task.rng, row_q);
+            if add_const {
+                x2[s] = row_q.iter().map(|v| v * v).sum();
+            }
+        }
+
+        // --- fused block MVM: one streaming pass over W per block ---
+        // (same blocked dot/axpy loops as `mvm_plain_batch` — keep the two
+        // in sync; they differ only in the row-task shape)
+        if !fused_var {
+            if !transposed {
+                for r in 0..rows {
+                    let wr = &w[r * cols..(r + 1) * cols];
+                    for (s, task) in block.iter_mut().enumerate() {
+                        task.y[r] = dot(wr, &xq[s * in_size..(s + 1) * in_size]);
+                    }
+                }
+            } else {
+                for task in block.iter_mut() {
+                    task.y.iter_mut().for_each(|v| *v = 0.0);
+                }
+                for r in 0..rows {
+                    let wr = &w[r * cols..(r + 1) * cols];
+                    for (s, task) in block.iter_mut().enumerate() {
+                        let xr = xq[s * in_size + r];
+                        if xr != 0.0 {
+                            axpy(xr, wr, task.y);
+                        }
+                    }
+                }
+            }
+        } else {
+            mvm_var_block(
+                w,
+                w_noise_var,
+                io.w_noise,
+                io.w_noise_type,
+                rows,
+                cols,
+                &xq,
+                block,
+                &mut var,
+                transposed,
+            );
+        }
+
+        // --- per-row epilogue: noises, bound management, ADC ---
+        for (s, task) in block.iter_mut().enumerate() {
+            if zero[s] {
+                zero_input_row(task.y, io, task.rng);
+                continue;
+            }
+            if add_const {
+                let sig2 = io.w_noise * io.w_noise * x2[s];
+                var[s * out_size..(s + 1) * out_size].iter_mut().for_each(|v| *v = sig2);
+            }
+            let vrow = if need_var { Some(&var[s * out_size..(s + 1) * out_size]) } else { None };
+            noise_epilogue(task.y, vrow, io, task.rng);
+
+            let clipped = task.y.iter().any(|&v| v.abs() >= io.out_bound);
+            if clipped
+                && io.bound_management == BoundManagement::Iterative
+                && io.max_bm_factor > 1
+            {
+                // rare path: the fused pass was this row's attempt 0, so
+                // resume the scalar bound-management loop at attempt 1
+                // (input scale halved), matching the scalar distribution
+                analog_mvm_from(
+                    w,
+                    rows,
+                    cols,
+                    task.x,
+                    task.y,
+                    io,
+                    w_noise_var,
+                    transposed,
+                    task.rng,
+                    &mut retry_scratch,
+                    1,
+                );
+                continue;
+            }
+            adc_row(task.y, scales[s], io, task.rng);
+        }
+    }
+}
+
+/// Fused block MVM + per-output weight-noise variance, for the
+/// per-element and relative-to-weight noise models.
+#[allow(clippy::too_many_arguments)]
+fn mvm_var_block(
+    w: &[f32],
+    w_noise_var: Option<&[f32]>,
+    sigma: f32,
+    noise_type: WeightNoiseType,
+    rows: usize,
+    cols: usize,
+    xq: &[f32],
+    block: &mut [RowTask],
+    var: &mut [f32],
+    transposed: bool,
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    let s2 = sigma * sigma;
+    if !transposed {
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            match w_noise_var {
+                Some(vm) => {
+                    let vr = &vm[r * cols..(r + 1) * cols];
+                    for (s, task) in block.iter_mut().enumerate() {
+                        let xrow = &xq[s * in_size..(s + 1) * in_size];
+                        let mut acc = 0.0f32;
+                        let mut vacc = 0.0f32;
+                        for j in 0..cols {
+                            acc += wr[j] * xrow[j];
+                            vacc += vr[j] * xrow[j] * xrow[j];
+                        }
+                        task.y[r] = acc;
+                        var[s * out_size + r] = vacc;
+                    }
+                }
+                None => {
+                    debug_assert_eq!(noise_type, WeightNoiseType::RelativeToWeight);
+                    for (s, task) in block.iter_mut().enumerate() {
+                        let xrow = &xq[s * in_size..(s + 1) * in_size];
+                        let mut acc = 0.0f32;
+                        let mut vacc = 0.0f32;
+                        for j in 0..cols {
+                            let wx = wr[j] * xrow[j];
+                            acc += wx;
+                            vacc += wx * wx;
+                        }
+                        task.y[r] = acc;
+                        var[s * out_size + r] = s2 * vacc;
+                    }
+                }
+            }
+        }
+    } else {
+        for (s, task) in block.iter_mut().enumerate() {
+            task.y.iter_mut().for_each(|v| *v = 0.0);
+            var[s * out_size..(s + 1) * out_size].iter_mut().for_each(|v| *v = 0.0);
+        }
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            match w_noise_var {
+                Some(vm) => {
+                    let vr = &vm[r * cols..(r + 1) * cols];
+                    for (s, task) in block.iter_mut().enumerate() {
+                        let xr = xq[s * in_size + r];
+                        if xr == 0.0 {
+                            continue;
+                        }
+                        let vrow = &mut var[s * out_size..(s + 1) * out_size];
+                        for j in 0..cols {
+                            task.y[j] += xr * wr[j];
+                            vrow[j] += vr[j] * xr * xr;
+                        }
+                    }
+                }
+                None => {
+                    for (s, task) in block.iter_mut().enumerate() {
+                        let xr = xq[s * in_size + r];
+                        if xr == 0.0 {
+                            continue;
+                        }
+                        let vrow = &mut var[s * out_size..(s + 1) * out_size];
+                        for j in 0..cols {
+                            let wx = xr * wr[j];
+                            task.y[j] += wx;
+                            vrow[j] += s2 * wx * wx;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Noise-free batched MVM `Y = X·Wᵀ` (or `X·W` when `transposed`):
+/// blocked over the batch and parallelized with the same chunking as the
+/// analog kernel. This is the perfect-path / FP-tile GEMM. (Same blocked
+/// dot/axpy loops as `batch_worker`'s no-variance branch — keep in sync.)
+pub fn mvm_plain_batch(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Matrix,
+    y: &mut Matrix,
+    transposed: bool,
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.cols(), in_size);
+    assert_eq!(y.cols(), out_size);
+    assert_eq!(x.rows(), y.rows());
+    if x.rows() == 0 || in_size == 0 || out_size == 0 {
+        return;
+    }
+
+    struct PlainTask<'a> {
+        x: &'a [f32],
+        y: &'a mut [f32],
+    }
+    let mut tasks: Vec<PlainTask> = x
+        .data()
+        .chunks(in_size)
+        .zip(y.data_mut().chunks_mut(out_size))
+        .map(|(x, y)| PlainTask { x, y })
+        .collect();
+
+    let min_rows = 1 + PAR_MIN_MACS / (rows * cols).max(1);
+    par_chunks_mut(&mut tasks, min_rows, |_, chunk| {
+        for block in chunk.chunks_mut(BATCH_BLOCK) {
+            if !transposed {
+                for r in 0..rows {
+                    let wr = &w[r * cols..(r + 1) * cols];
+                    for task in block.iter_mut() {
+                        task.y[r] = dot(wr, task.x);
+                    }
+                }
+            } else {
+                for task in block.iter_mut() {
+                    task.y.iter_mut().for_each(|v| *v = 0.0);
+                }
+                for r in 0..rows {
+                    let wr = &w[r * cols..(r + 1) * cols];
+                    for task in block.iter_mut() {
+                        let xr = task.x[r];
+                        if xr != 0.0 {
+                            axpy(xr, wr, task.y);
+                        }
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// Plain (noise-free) MVM used by the perfect path and inside the pipeline.
@@ -170,7 +597,7 @@ pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], 
     debug_assert_eq!(w.len(), rows * cols);
     if !transposed {
         for (r, yr) in y.iter_mut().enumerate() {
-            *yr = crate::util::matrix::dot(&w[r * cols..(r + 1) * cols], x);
+            *yr = dot(&w[r * cols..(r + 1) * cols], x);
         }
     } else {
         y.iter_mut().for_each(|v| *v = 0.0);
@@ -178,7 +605,7 @@ pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], 
             if xr == 0.0 {
                 continue;
             }
-            crate::util::matrix::axpy(xr, &w[r * cols..(r + 1) * cols], y);
+            axpy(xr, &w[r * cols..(r + 1) * cols], y);
         }
     }
 }
@@ -529,5 +956,217 @@ mod tests {
         }
         let mean = sum / n as f64;
         assert!((mean - 0.3).abs() < 0.01, "sto-round unbiased: {mean}");
+    }
+
+    // ---------------- batched-kernel tests ----------------
+
+    fn rand_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        Matrix::rand_uniform(rows, cols, -1.0, 1.0, rng)
+    }
+
+    #[test]
+    fn batch_perfect_matches_plain_rows() {
+        let mut rng = Rng::new(21);
+        let w: Vec<f32> = (0..6 * 5).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x = rand_matrix(7, 5, &mut rng);
+        let mut y = Matrix::zeros(7, 6);
+        let io = IOParameters::perfect();
+        let mut bs = MvmBatchScratch::default();
+        analog_mvm_batch(&w, 6, 5, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+        for b in 0..7 {
+            let mut yr = vec![0.0; 6];
+            mvm_plain(&w, 6, 5, x.row(b), &mut yr, false);
+            for (a, e) in y.row(b).iter().zip(yr.iter()) {
+                assert!((a - e).abs() < 1e-6, "row {b}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_quiet_matches_scalar_exactly() {
+        // no noise, no quantization → both paths are deterministic GEMMs
+        let mut rng = Rng::new(22);
+        let w: Vec<f32> = (0..4 * 9).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x = rand_matrix(13, 9, &mut rng);
+        let mut y = Matrix::zeros(13, 4);
+        let io = io_quiet();
+        let mut bs = MvmBatchScratch::default();
+        analog_mvm_batch(&w, 4, 9, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+        let mut s = MvmScratch::default();
+        for b in 0..13 {
+            let mut yr = vec![0.0; 4];
+            analog_mvm(&w, 4, 9, x.row(b), &mut yr, &io, None, false, &mut Rng::new(99), &mut s);
+            for (a, e) in y.row(b).iter().zip(yr.iter()) {
+                assert!((a - e).abs() < 1e-5, "row {b}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_transposed_matches_plain_rows() {
+        let mut rng = Rng::new(23);
+        let w: Vec<f32> = (0..4 * 9).map(|_| rng.uniform_f32() - 0.5).collect();
+        let d = rand_matrix(11, 4, &mut rng);
+        let mut g = Matrix::zeros(11, 9);
+        let io = io_quiet();
+        let mut bs = MvmBatchScratch::default();
+        analog_mvm_batch(&w, 4, 9, &d, &mut g, &io, None, true, &mut rng, &mut bs);
+        for b in 0..11 {
+            let mut gr = vec![0.0; 9];
+            mvm_plain(&w, 4, 9, d.row(b), &mut gr, true);
+            for (a, e) in g.row(b).iter().zip(gr.iter()) {
+                assert!((a - e).abs() < 1e-5, "row {b}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_output_noise_statistics_match_scalar() {
+        let w = vec![0.5; 64]; // 1x64
+        let io = IOParameters {
+            out_noise: 0.1,
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_bound: 1e9,
+            inp_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(24);
+        let mut bs = MvmBatchScratch::default();
+        let batch = 200;
+        let x = Matrix::full(batch, 64, 1.0);
+        let mut outs = Vec::new();
+        for _ in 0..20 {
+            let mut y = Matrix::zeros(batch, 1);
+            analog_mvm_batch(&w, 1, 64, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+            outs.extend_from_slice(y.data());
+        }
+        let m = stats::mean(&outs);
+        let sd = stats::std(&outs);
+        assert!((m - 32.0).abs() < 0.02, "mean {m}");
+        assert!((sd - 0.1).abs() < 0.01, "std {sd}");
+    }
+
+    #[test]
+    fn batch_weight_noise_statistics() {
+        // output-referred weight noise: σ_w·||x|| per output, per row
+        let w = vec![0.0; 100];
+        let io = IOParameters {
+            w_noise: 0.02,
+            out_noise: 0.0,
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_bound: 1e9,
+            inp_bound: 1e9,
+            noise_management: NoiseManagement::None,
+            bound_management: BoundManagement::None,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(25);
+        let mut bs = MvmBatchScratch::default();
+        let batch = 250;
+        let x = Matrix::full(batch, 100, 1.0); // ||x|| = 10 per row
+        let mut outs = Vec::new();
+        for _ in 0..16 {
+            let mut y = Matrix::zeros(batch, 1);
+            analog_mvm_batch(&w, 1, 100, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+            outs.extend_from_slice(y.data());
+        }
+        let sd = stats::std(&outs);
+        assert!((sd - 0.2).abs() < 0.02, "σ_w·||x|| = 0.2, got {sd}");
+    }
+
+    #[test]
+    fn batch_bound_management_recovers() {
+        let w = vec![1.0; 8];
+        let io = IOParameters {
+            inp_res: 0.0,
+            out_res: 0.0,
+            out_noise: 0.0,
+            inp_bound: 1.0,
+            out_bound: 2.0,
+            noise_management: NoiseManagement::AbsMax,
+            bound_management: BoundManagement::Iterative,
+            max_bm_factor: 8,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(26);
+        let mut bs = MvmBatchScratch::default();
+        let x = Matrix::full(5, 8, 1.0);
+        let mut y = Matrix::zeros(5, 1);
+        analog_mvm_batch(&w, 1, 8, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+        for b in 0..5 {
+            assert!((y.get(b, 0) - 8.0).abs() < 1e-5, "BM recovers y=8, got {}", y.get(b, 0));
+        }
+    }
+
+    #[test]
+    fn batch_zero_rows_stay_zero_when_quiet() {
+        let w = vec![0.3; 12];
+        let io = io_quiet();
+        let mut rng = Rng::new(27);
+        let mut bs = MvmBatchScratch::default();
+        let mut x = Matrix::zeros(3, 4);
+        x.row_mut(1).copy_from_slice(&[1.0, -1.0, 0.5, 0.0]); // only row 1 active
+        let mut y = Matrix::full(3, 3, 9.0);
+        analog_mvm_batch(&w, 3, 4, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+        assert_eq!(y.row(0), &[0.0; 3]);
+        assert_eq!(y.row(2), &[0.0; 3]);
+        let mut expect = vec![0.0; 3];
+        mvm_plain(&w, 3, 4, x.row(1), &mut expect, false);
+        for (a, e) in y.row(1).iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_per_element_variance_statistics() {
+        let w = vec![0.0; 4];
+        let var = vec![0.04, 0.0, 0.0, 0.0]; // only element (0,0) noisy
+        let io = io_quiet();
+        let mut rng = Rng::new(28);
+        let mut bs = MvmBatchScratch::default();
+        let batch = 300;
+        let x = Matrix::full(batch, 2, 1.0);
+        let mut outs0 = Vec::new();
+        let mut outs1 = Vec::new();
+        for _ in 0..10 {
+            let mut y = Matrix::zeros(batch, 2);
+            analog_mvm_batch(&w, 2, 2, &x, &mut y, &io, Some(&var), false, &mut rng, &mut bs);
+            for b in 0..batch {
+                outs0.push(y.get(b, 0));
+                outs1.push(y.get(b, 1));
+            }
+        }
+        assert!((stats::std(&outs0) - 0.2).abs() < 0.02);
+        assert!(stats::std(&outs1) < 1e-9);
+    }
+
+    #[test]
+    fn mvm_plain_batch_matches_matmul() {
+        let mut rng = Rng::new(29);
+        let w: Vec<f32> = (0..17 * 23).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x = rand_matrix(19, 23, &mut rng);
+        let mut y = Matrix::zeros(19, 17);
+        mvm_plain_batch(&w, 17, 23, &x, &mut y, false);
+        let wm = Matrix::from_vec(17, 23, w.clone());
+        for b in 0..19 {
+            let expect = wm.matvec(x.row(b));
+            for (a, e) in y.row(b).iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-4);
+            }
+        }
+        // transposed
+        let d = rand_matrix(19, 17, &mut rng);
+        let mut g = Matrix::zeros(19, 23);
+        mvm_plain_batch(&w, 17, 23, &d, &mut g, true);
+        for b in 0..19 {
+            let expect = wm.tmatvec(d.row(b));
+            for (a, e) in g.row(b).iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-4);
+            }
+        }
     }
 }

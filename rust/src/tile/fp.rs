@@ -2,6 +2,7 @@
 //! through the same [`Tile`] interface, so any network can be switched
 //! between analog and FP execution (the paper's FP comparator, footnote 3).
 
+use crate::tile::forward::mvm_plain_batch;
 use crate::tile::Tile;
 use crate::util::matrix::Matrix;
 
@@ -50,6 +51,16 @@ impl Tile for FloatingPointTile {
     }
 
     fn post_batch(&mut self) {}
+
+    /// Exact batched GEMM `Y = X·Wᵀ` (blocked + parallel over the batch).
+    fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
+        mvm_plain_batch(self.w.data(), self.w.rows(), self.w.cols(), x, y, false);
+    }
+
+    /// Exact batched GEMM `G = D·W`.
+    fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
+        mvm_plain_batch(self.w.data(), self.w.rows(), self.w.cols(), d, g, true);
+    }
 }
 
 #[cfg(test)]

@@ -14,7 +14,9 @@
 
 use crate::config::InferenceRPUConfig;
 use crate::noise::pcm::ProgrammedWeights;
-use crate::tile::forward::{analog_mvm, MvmScratch};
+use crate::tile::forward::{
+    analog_mvm, analog_mvm_batch, mvm_plain_batch, MvmBatchScratch, MvmScratch,
+};
 use crate::tile::Tile;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -36,6 +38,7 @@ pub struct InferenceTile {
     read_var: Vec<f32>,
     gdc_factor: f32,
     scratch: MvmScratch,
+    batch_scratch: MvmBatchScratch,
 }
 
 impl InferenceTile {
@@ -53,6 +56,7 @@ impl InferenceTile {
             read_var: vec![0.0; out_size * in_size],
             gdc_factor: 1.0,
             scratch: MvmScratch::default(),
+            batch_scratch: MvmBatchScratch::default(),
         }
     }
 
@@ -162,6 +166,45 @@ impl Tile for InferenceTile {
         let mut m = Matrix::from_vec(self.out_size, self.in_size, w);
         m.scale(self.out_scale * self.gdc_factor);
         m
+    }
+
+    /// Fused batched forward over the drifted weights: the cached
+    /// per-element read-noise variances ride through the same
+    /// [`analog_mvm_batch`] call as the weights (one pass per block).
+    fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
+        assert!(self.programmed.is_some(), "program() before forward()");
+        assert_eq!(x.cols(), self.in_size);
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        analog_mvm_batch(
+            &self.drifted,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            Some(&self.read_var),
+            false,
+            &mut self.rng,
+            &mut self.batch_scratch,
+        );
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            y.scale(s);
+        }
+    }
+
+    /// Exact transposed GEMM (inference chips have no analog backward).
+    fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
+        assert_eq!(d.cols(), self.out_size);
+        assert_eq!(g.cols(), self.in_size);
+        assert_eq!(d.rows(), g.rows());
+        let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
+        mvm_plain_batch(w, self.out_size, self.in_size, d, g, true);
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            g.scale(s);
+        }
     }
 
     fn set_weights(&mut self, w: &Matrix) {

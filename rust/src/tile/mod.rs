@@ -44,30 +44,31 @@ pub trait Tile: Send {
     /// for this mini-batch (no-op unless the tile supports modifiers).
     fn apply_weight_modifier(&mut self) {}
 
-    /// Batched forward: default loops rows; `x` is B×in, `y` B×out.
+    /// Batched forward: `x` is B×in, `y` B×out.
+    ///
+    /// The default is an allocation-free per-row fallback for custom
+    /// tiles; every built-in tile overrides it with the fused batched
+    /// kernel ([`forward::analog_mvm_batch`] /
+    /// [`forward::mvm_plain_batch`]), which is the only MVM path the
+    /// `nn`/`coordinator` layers go through.
     fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
         assert_eq!(x.cols(), self.in_size());
         assert_eq!(y.cols(), self.out_size());
         assert_eq!(x.rows(), y.rows());
-        let out = self.out_size();
         for b in 0..x.rows() {
-            // split borrow: copy row out after compute
-            let mut row = vec![0.0f32; out];
-            self.forward(x.row(b), &mut row);
-            y.row_mut(b).copy_from_slice(&row);
+            // x and y are distinct matrices, so the row borrows are disjoint
+            self.forward(x.row(b), y.row_mut(b));
         }
     }
 
-    /// Batched backward: `d` is B×out, `g` B×in.
+    /// Batched backward: `d` is B×out, `g` B×in (see [`Self::forward_batch`]
+    /// for the override convention).
     fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
         assert_eq!(d.cols(), self.out_size());
         assert_eq!(g.cols(), self.in_size());
         assert_eq!(d.rows(), g.rows());
-        let in_sz = self.in_size();
         for b in 0..d.rows() {
-            let mut row = vec![0.0f32; in_sz];
-            self.backward(d.row(b), &mut row);
-            g.row_mut(b).copy_from_slice(&row);
+            self.backward(d.row(b), g.row_mut(b));
         }
     }
 }

@@ -23,14 +23,30 @@
 use crate::config::{PulseType, UpdateParameters};
 use crate::device::DeviceArray;
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_chunks_mut;
 
-/// Scratch state for the update kernel (reused across calls).
+/// Scratch state for the update kernel (reused across calls). The mask
+/// buffers are batch-sized when driven by [`pulsed_update_batch`] and
+/// single-sample-sized under [`pulsed_update_sample`].
 #[derive(Default)]
 pub struct UpdateScratch {
     x_masks: Vec<u64>,
     d_masks: Vec<u64>,
     x_sign: Vec<bool>,
     d_sign: Vec<bool>,
+    metas: Vec<TrainMeta>,
+    rngs: Vec<Rng>,
+}
+
+/// Per-sample pulse-train scaling derived by the batched driver.
+#[derive(Clone, Copy, Debug, Default)]
+struct TrainMeta {
+    /// Train length for this sample (0 = nothing to do).
+    bl: u32,
+    kx: f32,
+    kd: f32,
+    x_amax: f32,
+    d_amax: f32,
 }
 
 /// Statistics of one update call (observability + tests).
@@ -209,8 +225,16 @@ fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32) {
     device.set_weights(&w);
 }
 
-/// Batch update: sequential per-sample pulsed updates (matching hardware
-/// semantics), plus the compound pre/post hooks.
+/// Batch update with the compound pre/post hooks.
+///
+/// For the stochastic pulse trains this is a *batched outer-product
+/// driver*: phase 1 draws every sample's x/d bit-trains in one pass
+/// (parallelized across the batch with decorrelated [`Rng::split`]
+/// streams, so the result is deterministic for a given seed regardless
+/// of thread count); phase 2 applies the coincidences to the device
+/// **sequentially, sample by sample** — gradient accumulation happens in
+/// analog memory, the paper's §3 semantic that distinguishes Eq. (2)
+/// from a digitally accumulated outer product.
 pub fn pulsed_update_batch(
     device: &mut dyn DeviceArray,
     x_batch: &[f32], // B × cols, row-major
@@ -226,23 +250,173 @@ pub fn pulsed_update_batch(
     assert_eq!(x_batch.len(), batch * cols);
     assert_eq!(d_batch.len(), batch * rows);
     device.pre_update(up, rng);
-    let mut total = UpdateStats::default();
-    for b in 0..batch {
-        let s = pulsed_update_sample(
-            device,
-            &x_batch[b * cols..(b + 1) * cols],
-            &d_batch[b * rows..(b + 1) * rows],
-            lr,
-            up,
-            rng,
-            scratch,
-        );
-        total.pulses += s.pulses;
-        total.bl_used = total.bl_used.max(s.bl_used);
-        total.prob_clipped |= s.prob_clipped;
-    }
+    let total = match up.pulse_type {
+        PulseType::StochasticCompressed => {
+            batched_stochastic_update(device, x_batch, d_batch, batch, lr, up, rng, scratch)
+        }
+        // dense and deterministic-implicit updates draw no trains; keep
+        // the straightforward per-sample loop
+        PulseType::None | PulseType::DeterministicImplicit => {
+            let mut total = UpdateStats::default();
+            for b in 0..batch {
+                let s = pulsed_update_sample(
+                    device,
+                    &x_batch[b * cols..(b + 1) * cols],
+                    &d_batch[b * rows..(b + 1) * rows],
+                    lr,
+                    up,
+                    rng,
+                    scratch,
+                );
+                total.pulses += s.pulses;
+                total.bl_used = total.bl_used.max(s.bl_used);
+                total.prob_clipped |= s.prob_clipped;
+            }
+            total
+        }
+    };
     device.post_update(up, rng);
     total
+}
+
+/// One sample's slice of the batched train-generation pass.
+struct TrainTask<'a> {
+    x: &'a [f32],
+    d: &'a [f32],
+    x_masks: &'a mut [u64],
+    d_masks: &'a mut [u64],
+    x_sign: &'a mut [bool],
+    d_sign: &'a mut [bool],
+    meta: TrainMeta,
+    rng: &'a mut Rng,
+}
+
+/// The stochastic-compressed batch driver (see [`pulsed_update_batch`]).
+#[allow(clippy::too_many_arguments)]
+fn batched_stochastic_update(
+    device: &mut dyn DeviceArray,
+    x_batch: &[f32],
+    d_batch: &[f32],
+    batch: usize,
+    lr: f32,
+    up: &UpdateParameters,
+    rng: &mut Rng,
+    scratch: &mut UpdateScratch,
+) -> UpdateStats {
+    let rows = device.rows();
+    let cols = device.cols();
+    let mut stats = UpdateStats::default();
+    if batch == 0 {
+        return stats;
+    }
+    let dw_min = device.dw_min().max(1e-12);
+
+    // ---- per-sample BL and probability scales (cheap, serial) ----
+    scratch.metas.clear();
+    scratch.rngs.clear();
+    for b in 0..batch {
+        let x = &x_batch[b * cols..(b + 1) * cols];
+        let d = &d_batch[b * rows..(b + 1) * rows];
+        let x_amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d_amax = d.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut meta = TrainMeta::default();
+        if x_amax > 0.0 && d_amax > 0.0 && lr != 0.0 {
+            let strength = lr * x_amax * d_amax / dw_min;
+            let bl = if up.update_bl_management {
+                (strength.ceil() as u32).clamp(1, up.desired_bl)
+            } else {
+                up.desired_bl
+            };
+            let k = strength / bl as f32;
+            let um = if up.update_management { (d_amax / x_amax).sqrt() } else { 1.0 };
+            meta = TrainMeta {
+                bl,
+                kx: (k.sqrt() * um).min(1.0),
+                kd: (k.sqrt() / um).min(1.0),
+                x_amax,
+                d_amax,
+            };
+            stats.bl_used = stats.bl_used.max(bl);
+            if k.sqrt() * um > 1.0 || k.sqrt() / um > 1.0 {
+                stats.prob_clipped = true;
+            }
+        }
+        scratch.metas.push(meta);
+        scratch.rngs.push(rng.split());
+    }
+
+    // ---- phase 1: draw all trains for the whole batch in one pass ----
+    scratch.x_masks.resize(batch * cols, 0);
+    scratch.d_masks.resize(batch * rows, 0);
+    scratch.x_sign.resize(batch * cols, false);
+    scratch.d_sign.resize(batch * rows, false);
+    let mut tasks: Vec<TrainTask> = x_batch
+        .chunks(cols)
+        .zip(d_batch.chunks(rows))
+        .zip(scratch.x_masks.chunks_mut(cols))
+        .zip(scratch.d_masks.chunks_mut(rows))
+        .zip(scratch.x_sign.chunks_mut(cols))
+        .zip(scratch.d_sign.chunks_mut(rows))
+        .zip(scratch.metas.iter())
+        .zip(scratch.rngs.iter_mut())
+        .map(|(((((((x, d), x_masks), d_masks), x_sign), d_sign), meta), rng)| TrainTask {
+            x,
+            d,
+            x_masks,
+            d_masks,
+            x_sign,
+            d_sign,
+            meta: *meta,
+            rng,
+        })
+        .collect();
+    let min_samples = 1 + 4096 / (rows + cols + 1);
+    par_chunks_mut(&mut tasks, min_samples, |_, chunk| {
+        for t in chunk.iter_mut() {
+            let m = t.meta;
+            if m.bl == 0 {
+                continue;
+            }
+            for j in 0..t.x.len() {
+                t.x_masks[j] = draw_train(m.kx * t.x[j].abs() / m.x_amax, m.bl, t.rng);
+                t.x_sign[j] = t.x[j] < 0.0;
+            }
+            for i in 0..t.d.len() {
+                t.d_masks[i] = draw_train(m.kd * t.d[i].abs() / m.d_amax, m.bl, t.rng);
+                t.d_sign[i] = t.d[i] < 0.0;
+            }
+        }
+    });
+
+    // ---- phase 2: coincidence detection + sequential device pulses ----
+    for b in 0..batch {
+        if scratch.metas[b].bl == 0 {
+            continue;
+        }
+        let xm = &scratch.x_masks[b * cols..(b + 1) * cols];
+        let xs = &scratch.x_sign[b * cols..(b + 1) * cols];
+        let dm = &scratch.d_masks[b * rows..(b + 1) * rows];
+        let ds = &scratch.d_sign[b * rows..(b + 1) * rows];
+        for i in 0..rows {
+            let dmask = dm[i];
+            if dmask == 0 {
+                continue;
+            }
+            let row_base = i * cols;
+            let d_neg = ds[i];
+            for j in 0..cols {
+                let c = (dmask & xm[j]).count_ones();
+                if c == 0 {
+                    continue;
+                }
+                // SGD: ΔW = −lr·d⊗x ⇒ pulse up iff d_i·x_j < 0
+                let up_dir = d_neg != xs[j];
+                device.pulse_n(row_base + j, up_dir, c, rng);
+                stats.pulses += c as u64;
+            }
+        }
+    }
+    stats
 }
 
 #[cfg(test)]

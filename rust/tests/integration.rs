@@ -7,6 +7,7 @@ use aihwsim::coordinator::trainer::{evaluate, train_classifier, TrainConfig};
 use aihwsim::data::synthetic_images;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
 use aihwsim::nn::AnalogLinear;
+#[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::util::json::Json;
 use aihwsim::util::matrix::Matrix;
@@ -136,6 +137,7 @@ fn checkpoint_roundtrip_via_json() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_artifacts_or_graceful_skip() {
     let dir = Runtime::default_dir();
