@@ -15,7 +15,10 @@
 
 use std::time::Instant;
 
-use aihwsim::config::{presets, DeviceConfig, IOParameters, RPUConfig, UpdateParameters};
+use aihwsim::config::{
+    presets, DeviceConfig, IOParameters, MappingParameter, RPUConfig, UpdateParameters,
+};
+use aihwsim::tile::TileGrid;
 use aihwsim::coordinator::experiments::{device_response, pcm_drift};
 #[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
@@ -237,6 +240,86 @@ fn bench_mvm_batched(csv: &mut CsvLogger) {
     println!("  wrote BENCH_mvm.json");
 }
 
+// ------------------------------------------------------- Eq. 1 tile grid
+
+/// Inter-tile scaling of the TileGrid engine: one logical 256×256 layer
+/// split into 1/4/16 shards, forward over batch 8/64, with the shard
+/// fan-out on 1 worker thread vs all. Emits BENCH_mapping.json.
+fn bench_tile_grid(csv: &mut CsvLogger) {
+    let saved_threads = std::env::var("AIHWSIM_THREADS").ok();
+    // the "N threads" runs clear AIHWSIM_THREADS, so record the thread
+    // count those timings actually used (not the caller's ambient cap)
+    std::env::remove_var("AIHWSIM_THREADS");
+    let threads_all = aihwsim::util::threadpool::num_threads();
+    let n = 256usize;
+    let mut entries: Vec<Json> = Vec::new();
+    println!(
+        "  {:>6} {:>6} {:>6} {:>12} {:>12} {:>9}",
+        "grid", "tiles", "batch", "1-thr µs", "N-thr µs", "speedup"
+    );
+    for &split in &[1usize, 2, 4] {
+        let tiles = split * split;
+        let mut cfg = RPUConfig::default();
+        cfg.weight_scaling_omega = 0.0;
+        cfg.mapping = MappingParameter::max_size(n / split);
+        let time_at = |threads: Option<usize>, batch: usize| -> f64 {
+            match threads {
+                Some(t) => std::env::set_var("AIHWSIM_THREADS", t.to_string()),
+                None => std::env::remove_var("AIHWSIM_THREADS"),
+            }
+            // rebuild per setting so scratch/rng state is identical
+            let mut rng = Rng::new(11);
+            let mut grid = TileGrid::analog(n, n, true, cfg.clone(), &mut rng);
+            grid.set_train(false); // pure MVM path: no modifier, no caches
+            let x = Matrix::rand_uniform(batch, n, -1.0, 1.0, &mut rng);
+            time_median(5, || {
+                let _y = grid.forward(&x);
+            })
+        };
+        for &batch in &[8usize, 64] {
+            let t1 = time_at(Some(1), batch);
+            let tn = time_at(None, batch);
+            let speedup = t1 / tn;
+            println!(
+                "  {:>6} {:>6} {:>6} {:>12.1} {:>12.1} {:>8.2}x",
+                format!("{split}x{split}"),
+                tiles,
+                batch,
+                t1 * 1e6,
+                tn * 1e6,
+                speedup
+            );
+            csv.row_str(&[
+                format!("tile_grid_{tiles}t_b{batch}"),
+                format!("{:.3}", t1 * 1e6),
+                format!("{:.3}", tn * 1e6),
+                format!("{:.2}", speedup),
+            ])
+            .unwrap();
+            entries.push(Json::obj(vec![
+                ("grid", Json::str(&format!("{split}x{split}"))),
+                ("tiles", Json::num(tiles as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("one_thread_us", Json::num(t1 * 1e6)),
+                ("all_threads_us", Json::num(tn * 1e6)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    match saved_threads {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("tile_grid_inter_tile_scaling")),
+        ("layer", Json::str("256x256 analog, default IOParameters")),
+        ("threads_all", Json::num(threads_all as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_mapping.json", doc.to_string_pretty()).unwrap();
+    println!("  wrote BENCH_mapping.json");
+}
+
 // --------------------------------------------------------------- Eq. 2
 
 fn bench_pulsed_update(csv: &mut CsvLogger) {
@@ -317,6 +400,9 @@ fn main() {
     }
     if section("Eq1b_batched_mvm (per-sample vs fused batch)", &filter) {
         bench_mvm_batched(&mut csv);
+    }
+    if section("Eq1c_tile_grid (inter-tile scaling, threads 1 vs N)", &filter) {
+        bench_tile_grid(&mut csv);
     }
     if section("Eq2_pulsed_update", &filter) {
         bench_pulsed_update(&mut csv);

@@ -15,6 +15,7 @@
 //!   "backward": { ... },
 //!   "update":   {"desired_bl": 31, "update_management": true, ...},
 //!   "modifier": {"kind": "add_normal", "std": 0.1},
+//!   "mapping": {"max_input_size": 512, "max_output_size": 512},
 //!   "weight_scaling_omega": 0.6
 //! }
 //! ```
@@ -50,10 +51,27 @@ pub fn rpu_config_from_json(j: &Json) -> Result<RPUConfig, String> {
     if let Some(m) = j.get("modifier") {
         cfg.modifier = modifier_from_json(m)?;
     }
+    if let Some(m) = j.get("mapping") {
+        cfg.mapping.max_input_size =
+            mapping_size(m, "max_input_size", cfg.mapping.max_input_size)?;
+        cfg.mapping.max_output_size =
+            mapping_size(m, "max_output_size", cfg.mapping.max_output_size)?;
+    }
     cfg.weight_scaling_omega =
         j.f64_or("weight_scaling_omega", cfg.weight_scaling_omega as f64) as f32;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Tile-mapping size: a non-negative integer (0 = unlimited). Negative or
+/// fractional values are configuration errors, not something to coerce.
+fn mapping_size(j: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| format!("mapping.{key}: must be a non-negative integer (0 = unlimited)")),
+    }
 }
 
 fn device_from_json(j: &Json) -> Result<DeviceConfig, String> {
@@ -311,6 +329,25 @@ mod tests {
             &Json::parse(r#"{"update": {"desired_bl": 99}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn mapping_parsing() {
+        let j = Json::parse(r#"{"mapping": {"max_input_size": 128, "max_output_size": 64}}"#)
+            .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.mapping.max_input_size, 128);
+        assert_eq!(cfg.mapping.max_output_size, 64);
+        // absent → defaults
+        let cfg = rpu_config_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.mapping.max_input_size, 512);
+        // negative / fractional sizes are rejected, not coerced
+        for bad in [
+            r#"{"mapping": {"max_input_size": -1}}"#,
+            r#"{"mapping": {"max_output_size": 128.9}}"#,
+        ] {
+            assert!(rpu_config_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -38,6 +38,37 @@ impl Default for WeightModifier {
     }
 }
 
+/// Tile-mapping parameters (aihwkit `MappingParameter`): physical
+/// crossbars have a maximum size, so a logical `out×in` weight matrix
+/// larger than these limits is split over an R×C grid of tiles
+/// ([`crate::tile::TileGrid`]) with digital partial-sum reduction.
+/// `0` disables the limit for that dimension.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MappingParameter {
+    /// Maximum tile input size (columns of the crossbar).
+    pub max_input_size: usize,
+    /// Maximum tile output size (rows of the crossbar).
+    pub max_output_size: usize,
+}
+
+impl Default for MappingParameter {
+    fn default() -> Self {
+        MappingParameter { max_input_size: 512, max_output_size: 512 }
+    }
+}
+
+impl MappingParameter {
+    /// No size limits: everything maps onto a single tile.
+    pub fn unlimited() -> Self {
+        MappingParameter { max_input_size: 0, max_output_size: 0 }
+    }
+
+    /// Square tiles of at most `n×n`.
+    pub fn max_size(n: usize) -> Self {
+        MappingParameter { max_input_size: n, max_output_size: n }
+    }
+}
+
 /// Full configuration of a *training* analog tile.
 #[derive(Clone, Debug)]
 pub struct RPUConfig {
@@ -50,6 +81,8 @@ pub struct RPUConfig {
     /// Output scaling α mapping device range to DNN weight range
     /// (`weight_scaling_omega` in aihwkit): target max |w| after mapping.
     pub weight_scaling_omega: f32,
+    /// Layer-to-tile mapping limits (splits large layers over a grid).
+    pub mapping: MappingParameter,
 }
 
 impl Default for RPUConfig {
@@ -61,6 +94,7 @@ impl Default for RPUConfig {
             device: DeviceConfig::default(),
             modifier: WeightModifier::None,
             weight_scaling_omega: 0.6,
+            mapping: MappingParameter::default(),
         }
     }
 }
@@ -81,6 +115,7 @@ impl RPUConfig {
             device: DeviceConfig::Single(presets::idealized()),
             modifier: WeightModifier::None,
             weight_scaling_omega: 0.0,
+            mapping: MappingParameter::default(),
         }
     }
 
@@ -94,6 +129,7 @@ impl RPUConfig {
             device: DeviceConfig::Single(presets::idealized()),
             modifier,
             weight_scaling_omega: 1.0,
+            mapping: MappingParameter::default(),
         }
     }
 
@@ -142,6 +178,15 @@ mod tests {
         assert!(c.forward.is_perfect);
         assert!(c.backward.is_perfect);
         assert_eq!(c.update.pulse_type, PulseType::None);
+    }
+
+    #[test]
+    fn mapping_defaults_and_helpers() {
+        let m = MappingParameter::default();
+        assert_eq!(m.max_input_size, 512);
+        assert_eq!(m.max_output_size, 512);
+        assert_eq!(MappingParameter::unlimited().max_input_size, 0);
+        assert_eq!(MappingParameter::max_size(64).max_output_size, 64);
     }
 
     #[test]

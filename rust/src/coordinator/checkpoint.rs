@@ -1,10 +1,18 @@
 //! Checkpointing: JSON serialization of trained layer weights, used to
 //! hand networks between the trainer, the inference evaluator, and the
 //! runtime pipeline (and to persist runs across CLI invocations).
+//!
+//! Two formats:
+//! * `aihwsim-checkpoint-v1` — one dense `(out×in, bias)` pair per layer;
+//! * `aihwsim-checkpoint-v2-grid` — multi-tile grids: per-shard weights
+//!   plus the `(start, len)` split metadata for both dimensions, so a
+//!   [`TileGrid`]-mapped layer restores shard-for-shard (and can still be
+//!   assembled into the dense view for drift/HWA evaluation).
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::params::MlpParams;
+use crate::tile::TileGrid;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 
@@ -63,6 +71,204 @@ pub fn load(path: &str) -> Result<Layers, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
     let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
     layers_from_json(&j)
+}
+
+// ---------------------------------------------------------- grid format
+
+/// Checkpoint of one grid-mapped layer: per-shard weights + split
+/// metadata + digital bias.
+#[derive(Clone, Debug)]
+pub struct GridLayer {
+    pub out_features: usize,
+    pub in_features: usize,
+    /// `(start, len)` output-dimension blocks (grid rows).
+    pub row_splits: Vec<(usize, usize)>,
+    /// `(start, len)` input-dimension blocks (grid columns).
+    pub col_splits: Vec<(usize, usize)>,
+    /// Row-major shard weights: `shards[r*C + c]` is
+    /// `row_splits[r].1 × col_splits[c].1`.
+    pub shards: Vec<Matrix>,
+    pub bias: Vec<f32>,
+}
+
+/// A multi-layer grid checkpoint.
+pub type GridLayers = Vec<GridLayer>;
+
+impl GridLayer {
+    /// Snapshot a [`TileGrid`]'s shards, splits, and bias.
+    pub fn from_grid(grid: &mut TileGrid) -> Self {
+        GridLayer {
+            out_features: grid.out_size(),
+            in_features: grid.in_size(),
+            row_splits: grid.row_splits().to_vec(),
+            col_splits: grid.col_splits().to_vec(),
+            shards: grid.shard_weights(),
+            bias: grid.bias().map(|b| b.to_vec()).unwrap_or_default(),
+        }
+    }
+
+    /// Restore into a grid with the *same* layout (shapes and splits must
+    /// match — a checkpoint is tied to its physical mapping).
+    pub fn restore_into(&self, grid: &mut TileGrid) -> Result<(), String> {
+        if grid.out_size() != self.out_features || grid.in_size() != self.in_features {
+            return Err(format!(
+                "layer shape mismatch: checkpoint {}x{} vs grid {}x{}",
+                self.out_features,
+                self.in_features,
+                grid.out_size(),
+                grid.in_size()
+            ));
+        }
+        if grid.row_splits() != &self.row_splits[..] || grid.col_splits() != &self.col_splits[..] {
+            return Err("split layout mismatch (was the mapping config changed?)".into());
+        }
+        if !self.bias.is_empty() && !grid.has_bias() {
+            return Err("checkpoint carries a bias but the grid has none".into());
+        }
+        grid.set_shard_weights(&self.shards)?;
+        if !self.bias.is_empty() {
+            grid.set_bias(&self.bias);
+        } else if grid.has_bias() {
+            // bias-less checkpoint: a leftover trained bias would make the
+            // restored network neither the checkpoint nor the original
+            grid.set_bias(&vec![0.0; grid.out_size()]);
+        }
+        Ok(())
+    }
+
+    /// Assemble the dense `(out×in, bias)` view — the input the drift
+    /// evaluator / HWA programming path consumes.
+    pub fn assemble(&self) -> (Matrix, Vec<f32>) {
+        let mut w = Matrix::zeros(self.out_features, self.in_features);
+        let ncols = self.col_splits.len();
+        for (t, shard) in self.shards.iter().enumerate() {
+            let (rstart, _) = self.row_splits[t / ncols];
+            let (cstart, _) = self.col_splits[t % ncols];
+            for i in 0..shard.rows() {
+                w.row_mut(rstart + i)[cstart..cstart + shard.cols()]
+                    .copy_from_slice(shard.row(i));
+            }
+        }
+        (w, self.bias.clone())
+    }
+}
+
+fn splits_to_json(splits: &[(usize, usize)]) -> Json {
+    Json::Arr(splits.iter().map(|&(_, len)| Json::num(len as f64)).collect())
+}
+
+fn splits_from_json(j: &Json, what: &str) -> Result<Vec<(usize, usize)>, String> {
+    let lens = j.as_arr().ok_or(format!("{what}: not an array"))?;
+    let mut out = Vec::with_capacity(lens.len());
+    let mut start = 0usize;
+    for (i, l) in lens.iter().enumerate() {
+        let len = l.as_usize().ok_or(format!("{what}[{i}]: not a size"))?;
+        if len == 0 {
+            return Err(format!("{what}[{i}]: zero-length split"));
+        }
+        out.push((start, len));
+        start += len;
+    }
+    if out.is_empty() {
+        return Err(format!("{what}: empty split list"));
+    }
+    Ok(out)
+}
+
+/// Serialize grid layers to a JSON document (`aihwsim-checkpoint-v2-grid`).
+pub fn grids_to_json(layers: &GridLayers) -> Json {
+    let items: Vec<Json> = layers
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("out_features", Json::num(l.out_features as f64)),
+                ("in_features", Json::num(l.in_features as f64)),
+                ("row_splits", splits_to_json(&l.row_splits)),
+                ("col_splits", splits_to_json(&l.col_splits)),
+                (
+                    "shards",
+                    Json::Arr(l.shards.iter().map(|s| Json::arr_f32(s.data())).collect()),
+                ),
+                ("bias", Json::arr_f32(&l.bias)),
+            ])
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("format".to_string(), Json::str("aihwsim-checkpoint-v2-grid"));
+    top.insert("layers".to_string(), Json::Arr(items));
+    Json::Obj(top)
+}
+
+/// Parse grid layers back from JSON.
+pub fn grids_from_json(j: &Json) -> Result<GridLayers, String> {
+    if j.str_or("format", "") != "aihwsim-checkpoint-v2-grid" {
+        return Err("not an aihwsim grid checkpoint".into());
+    }
+    let items = j.get("layers").and_then(Json::as_arr).ok_or("missing layers")?;
+    let mut out = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let out_features = item
+            .get("out_features")
+            .and_then(Json::as_usize)
+            .ok_or(format!("layer {i}: out_features"))?;
+        let in_features = item
+            .get("in_features")
+            .and_then(Json::as_usize)
+            .ok_or(format!("layer {i}: in_features"))?;
+        let row_splits =
+            splits_from_json(item.get("row_splits").ok_or(format!("layer {i}: row_splits"))?,
+                "row_splits")?;
+        let col_splits =
+            splits_from_json(item.get("col_splits").ok_or(format!("layer {i}: col_splits"))?,
+                "col_splits")?;
+        let covered_out: usize = row_splits.iter().map(|&(_, l)| l).sum();
+        let covered_in: usize = col_splits.iter().map(|&(_, l)| l).sum();
+        if covered_out != out_features || covered_in != in_features {
+            return Err(format!(
+                "layer {i}: splits cover {covered_out}x{covered_in}, expected {out_features}x{in_features}"
+            ));
+        }
+        let shard_data =
+            item.get("shards").and_then(Json::as_arr).ok_or(format!("layer {i}: shards"))?;
+        if shard_data.len() != row_splits.len() * col_splits.len() {
+            return Err(format!(
+                "layer {i}: {} shards for a {}x{} grid",
+                shard_data.len(),
+                row_splits.len(),
+                col_splits.len()
+            ));
+        }
+        let ncols = col_splits.len();
+        let mut shards = Vec::with_capacity(shard_data.len());
+        for (t, s) in shard_data.iter().enumerate() {
+            let rows = row_splits[t / ncols].1;
+            let cols = col_splits[t % ncols].1;
+            let data = s.to_f32_vec().ok_or(format!("layer {i} shard {t}: weights"))?;
+            if data.len() != rows * cols {
+                return Err(format!(
+                    "layer {i} shard {t}: {} values for {rows}x{cols}",
+                    data.len()
+                ));
+            }
+            shards.push(Matrix::from_vec(rows, cols, data));
+        }
+        let bias =
+            item.get("bias").and_then(Json::to_f32_vec).ok_or(format!("layer {i}: bias"))?;
+        out.push(GridLayer { out_features, in_features, row_splits, col_splits, shards, bias });
+    }
+    Ok(out)
+}
+
+/// Write a grid checkpoint file.
+pub fn save_grids(path: &str, layers: &GridLayers) -> std::io::Result<()> {
+    std::fs::write(path, grids_to_json(layers).to_string())
+}
+
+/// Read a grid checkpoint file.
+pub fn load_grids(path: &str) -> Result<GridLayers, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    grids_from_json(&j)
 }
 
 /// Convert pipeline parameters ((in,out) convention) into checkpoint
@@ -141,6 +347,81 @@ mod tests {
                 .unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn grid_checkpoint_roundtrip() {
+        use crate::config::{MappingParameter, RPUConfig};
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(4);
+        let mut rng = Rng::new(3);
+        let mut grid = TileGrid::analog(6, 10, true, cfg.clone(), &mut rng);
+        grid.set_weights(&Matrix::rand_uniform(6, 10, -0.6, 0.6, &mut rng));
+        grid.set_bias(&[0.1, -0.2, 0.3, 0.0, 0.05, -0.15]);
+        let ckpt = GridLayer::from_grid(&mut grid);
+        assert_eq!(ckpt.shards.len(), 6); // 2×3 grid
+        // JSON roundtrip preserves shards, splits, bias
+        let layers: GridLayers = vec![ckpt.clone()];
+        let json = grids_to_json(&layers);
+        let back = grids_from_json(&Json::parse(&json.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].row_splits, ckpt.row_splits);
+        assert_eq!(back[0].col_splits, ckpt.col_splits);
+        assert_eq!(back[0].bias, ckpt.bias);
+        for (a, b) in back[0].shards.iter().zip(ckpt.shards.iter()) {
+            assert_eq!(a, b);
+        }
+        // restore into a fresh grid with the same mapping
+        let mut other = TileGrid::analog(6, 10, true, cfg, &mut Rng::new(77));
+        back[0].restore_into(&mut other).unwrap();
+        assert_eq!(other.get_weights().data(), grid.get_weights().data());
+        assert_eq!(other.bias().unwrap(), grid.bias().unwrap());
+        // assembled dense view matches the grid's logical weights
+        let (dense, bias) = back[0].assemble();
+        assert_eq!(dense.data(), grid.get_weights().data());
+        assert_eq!(&bias[..], grid.bias().unwrap());
+    }
+
+    #[test]
+    fn grid_checkpoint_rejects_layout_mismatch() {
+        use crate::config::{MappingParameter, RPUConfig};
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(4);
+        let mut grid = TileGrid::analog(6, 10, true, cfg, &mut Rng::new(1));
+        let ckpt = GridLayer::from_grid(&mut grid);
+        // different mapping → split mismatch
+        let mut cfg2 = RPUConfig::perfect();
+        cfg2.mapping = MappingParameter::max_size(5);
+        let mut other = TileGrid::analog(6, 10, true, cfg2, &mut Rng::new(2));
+        assert!(ckpt.restore_into(&mut other).is_err());
+        // different shape
+        let mut small = TileGrid::analog(4, 10, true, RPUConfig::perfect(), &mut Rng::new(3));
+        assert!(ckpt.restore_into(&mut small).is_err());
+        // biasful checkpoint into a bias-less grid must not silently drop it
+        let mut cfg3 = RPUConfig::perfect();
+        cfg3.mapping = MappingParameter::max_size(4);
+        let mut no_bias = TileGrid::analog(6, 10, false, cfg3, &mut Rng::new(4));
+        assert!(ckpt.restore_into(&mut no_bias).is_err());
+        // malformed JSON: wrong format tag
+        assert!(grids_from_json(&Json::parse(r#"{"format":"other"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn grid_checkpoint_file_roundtrip() {
+        use crate::config::{MappingParameter, RPUConfig};
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(3);
+        let mut grid = TileGrid::analog(5, 7, true, cfg, &mut Rng::new(9));
+        grid.set_weights(&Matrix::rand_uniform(5, 7, -0.5, 0.5, &mut Rng::new(10)));
+        let layers = vec![GridLayer::from_grid(&mut grid)];
+        let dir = std::env::temp_dir().join("aihwsim_grid_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.json");
+        save_grids(path.to_str().unwrap(), &layers).unwrap();
+        let back = load_grids(path.to_str().unwrap()).unwrap();
+        assert_eq!(back[0].shards.len(), layers[0].shards.len());
+        assert_eq!(back[0].assemble().0, layers[0].assemble().0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

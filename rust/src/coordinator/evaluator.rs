@@ -39,6 +39,20 @@ impl InferenceMlp {
         InferenceMlp { tiles, biases }
     }
 
+    /// Build from a grid checkpoint: each grid-mapped layer's shards are
+    /// assembled into the dense weight view and programmed onto one PCM
+    /// inference tile per layer (drift/HWA evaluation consumes the
+    /// logical weights; the training-time shard layout is a training
+    /// concern).
+    pub fn from_grid_checkpoint(
+        layers: &crate::coordinator::checkpoint::GridLayers,
+        config: &InferenceRPUConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let dense: Vec<(Matrix, Vec<f32>)> = layers.iter().map(|l| l.assemble()).collect();
+        Self::from_weights(&dense, config, rng)
+    }
+
     /// Program all tiles (applies programming noise) at t = t0.
     pub fn program(&mut self) {
         for t in self.tiles.iter_mut() {
@@ -167,6 +181,43 @@ mod tests {
         net.program();
         let acc = net.accuracy(&ds, 32);
         assert!(acc > 0.8, "acc after programming {acc}");
+    }
+
+    #[test]
+    fn grid_checkpoint_programs_equivalently() {
+        // the dense assembly of a grid checkpoint must program exactly the
+        // same network as handing the dense weights directly
+        use crate::config::MappingParameter;
+        use crate::coordinator::checkpoint::GridLayer;
+        use crate::tile::TileGrid;
+        let mut rng = Rng::new(12);
+        let (layers, ds) = trained_layers(&mut rng);
+        // re-shard the trained dense weights onto exact FP 2D grids (bit-
+        // preserving), checkpoint them shard by shard
+        let grid_ckpt: Vec<GridLayer> = layers
+            .iter()
+            .map(|(w, b)| {
+                let mut g = TileGrid::floating_point(
+                    w.rows(),
+                    w.cols(),
+                    true,
+                    MappingParameter::max_size(24),
+                    &mut Rng::new(5),
+                );
+                g.set_weights(w);
+                g.set_bias(b);
+                GridLayer::from_grid(&mut g)
+            })
+            .collect();
+        let icfg = InferenceRPUConfig::default();
+        let mut from_grid = InferenceMlp::from_grid_checkpoint(&grid_ckpt, &icfg, &mut Rng::new(42));
+        let mut from_dense = InferenceMlp::from_weights(&layers, &icfg, &mut Rng::new(42));
+        from_grid.program();
+        from_dense.program();
+        let a = from_grid.accuracy(&ds, 32);
+        let b = from_dense.accuracy(&ds, 32);
+        assert!((a - b).abs() < 1e-9, "same seed, same programming: {a} vs {b}");
+        assert!(a > 0.8, "grid-checkpointed accuracy {a}");
     }
 
     #[test]

@@ -155,6 +155,26 @@ mod tests {
     }
 
     #[test]
+    fn grid_mapped_analog_training_converges() {
+        // tile limit below the input width → the layer trains as a
+        // multi-tile grid through the unchanged trainer loop
+        let mut rng = Rng::new(5);
+        let train = synthetic_images(240, 4, 8, 1, &mut rng);
+        let mut cfg = RPUConfig::default();
+        cfg.device = crate::config::DeviceConfig::Single(crate::config::presets::idealized());
+        cfg.mapping = crate::config::MappingParameter { max_input_size: 24, max_output_size: 3 };
+        let mut model = mlp(&[64, 4], Backend::Analog, &cfg, &mut rng);
+        assert!(model.summary().contains("tiles"), "{}", model.summary());
+        let tc = TrainConfig { epochs: 6, batch_size: 16, lr: 0.2, log_every: 0, ..Default::default() };
+        let report = train_classifier(&mut model, &train, &train, &tc);
+        assert!(
+            report.final_test_acc() > 0.65,
+            "grid-mapped analog acc {:?}",
+            report.epoch_test_acc
+        );
+    }
+
+    #[test]
     fn analog_training_converges_with_idealized_device() {
         let mut rng = Rng::new(2);
         let train = synthetic_images(240, 4, 8, 1, &mut rng);

@@ -30,7 +30,9 @@ fn usage() -> ! {
         "usage: aihwsim <command> [options]\n\
          commands:\n\
            train        --backend analog|fp --arch mlp|lenet --preset <name> \\\n\
-                        --epochs N --batch N --lr F --samples N --csv path --config file.json\n\
+                        --epochs N --batch N --lr F --samples N --csv path --config file.json \\\n\
+                        --max-in N --max-out N (tile-grid mapping limits, 0 = unlimited) \\\n\
+                        --save path (dense ckpt) --save-grid path (per-shard ckpt)\n\
            infer-drift  --epochs N --gdc true|false --csv path\n\
            response     --preset <name> --pulses N --devices N --csv path\n\
            drift        --csv path\n\
@@ -41,25 +43,31 @@ fn usage() -> ! {
 }
 
 fn load_config(args: &Args) -> RPUConfig {
-    if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         match loader::load_rpu_config(path) {
-            Ok(c) => return c,
+            Ok(c) => c,
             Err(e) => {
                 eprintln!("config error: {e}");
                 std::process::exit(2);
             }
         }
-    }
-    let mut cfg = RPUConfig::default();
-    if let Some(p) = args.get("preset") {
-        match presets::by_name(p) {
-            Some(d) => cfg.device = d,
-            None => {
-                eprintln!("unknown preset '{p}'");
-                std::process::exit(2);
+    } else {
+        let mut cfg = RPUConfig::default();
+        if let Some(p) = args.get("preset") {
+            match presets::by_name(p) {
+                Some(d) => cfg.device = d,
+                None => {
+                    eprintln!("unknown preset '{p}'");
+                    std::process::exit(2);
+                }
             }
         }
-    }
+        cfg
+    };
+    // CLI tile-grid mapping overrides (layers larger than these limits are
+    // split over a TileGrid of shards; 0 = unlimited)
+    cfg.mapping.max_input_size = args.usize_or("max-in", cfg.mapping.max_input_size);
+    cfg.mapping.max_output_size = args.usize_or("max-out", cfg.mapping.max_output_size);
     cfg
 }
 
@@ -116,6 +124,33 @@ fn cmd_train(args: &Args) {
         match aihwsim::coordinator::checkpoint::save(path, &layers) {
             Ok(()) => info(&format!("saved checkpoint ({} linear layers) to {path}", layers.len())),
             Err(e) => eprintln!("checkpoint save failed: {e}"),
+        }
+    }
+    if let Some(path) = args.get("save-grid") {
+        // per-shard grid checkpoint of the *linear* layers (same contract
+        // as --save): preserves the physical tile mapping
+        let mut layers = Vec::new();
+        for i in 0..model.len() {
+            if let Some(lin) = model
+                .module_mut(i)
+                .as_any_mut()
+                .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            {
+                layers.push(aihwsim::coordinator::checkpoint::GridLayer::from_grid(
+                    lin.grid_mut(),
+                ));
+            }
+        }
+        let shards: usize = layers.iter().map(|l| l.shards.len()).sum();
+        match aihwsim::coordinator::checkpoint::save_grids(path, &layers) {
+            Ok(()) => info(&format!(
+                "saved grid checkpoint ({} linear layers, {shards} shards) to {path}",
+                layers.len()
+            )),
+            Err(e) => eprintln!("grid checkpoint save failed: {e}"),
+        }
+        if layers.is_empty() {
+            eprintln!("warning: --save-grid found no linear layers (conv-only models are not grid-checkpointable yet)");
         }
     }
 }

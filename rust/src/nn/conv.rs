@@ -1,32 +1,32 @@
-//! `AnalogConv2d` — convolution on an analog tile via im2col.
+//! `AnalogConv2d` — convolution on analog tiles via im2col.
 //!
 //! The paper stresses (§3) that aihwkit *re-implements* the convolution
 //! operator in the C++ core so that gradient accumulation happens as
 //! parallel pulsed updates in analog memory for every image patch — not as
 //! a digitally accumulated outer product (the DNN+NeuroSim shortcut that
 //! under-estimates update noise). We follow the same semantics: each
-//! im2col patch is one rank-1 pulsed update on the tile.
+//! im2col patch is one rank-1 pulsed update on the tiles.
 //!
 //! Tensors are flattened row-major as `B × (C·H·W)`.
 //!
 //! Batch-first data path: im2col lowers the whole mini-batch to one
-//! (B·P)×(C·k·k) patch matrix, which rides a *single* fused batched MVM
-//! (`analog_mvm_batch` via `Tile::forward_batch`) — every patch is still
-//! one analog read, but the weights are streamed once per block of
-//! patches instead of once per patch.
+//! (B·P)×(C·k·k) patch matrix that is handed (by move — the engine caches
+//! the buffer, no clone) to a [`TileGrid`] over the `out_ch × (C·k·k)`
+//! kernel matrix. The grid owns the shard mapping (a conv whose patch
+//! width exceeds `config.mapping` splits across tiles with digital
+//! partial-sum reduction), the per-channel bias, the train-mode weight
+//! modifier, and the consume-once update caches.
 
-use crate::config::RPUConfig;
+use crate::config::{MappingParameter, RPUConfig};
 use crate::nn::Module;
-use crate::tile::{AnalogTile, FloatingPointTile, Tile};
+use crate::tile::TileGrid;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
-/// 2-D convolution layer backed by one analog tile of shape
+/// 2-D convolution layer backed by a tile grid of shape
 /// `out_ch × (in_ch·k·k)`.
 pub struct AnalogConv2d {
-    tile: Box<dyn Tile>,
-    bias: Vec<f32>,
-    bias_grad: Vec<f32>,
+    grid: TileGrid,
     in_ch: usize,
     out_ch: usize,
     k: usize,
@@ -34,12 +34,6 @@ pub struct AnalogConv2d {
     pad: usize,
     in_size: usize,
     out_size: usize,
-    /// Cached im2col patches (rows = B·P, cols = in_ch·k·k).
-    patch_cache: Option<Matrix>,
-    /// Cached output grads per patch (rows = B·P, cols = out_ch).
-    d_cache: Option<Matrix>,
-    train: bool,
-    is_analog: bool,
 }
 
 impl AnalogConv2d {
@@ -54,9 +48,8 @@ impl AnalogConv2d {
         config: RPUConfig,
         rng: &mut Rng,
     ) -> Self {
-        let mut tile = AnalogTile::new(out_ch, in_ch * k * k, config, rng.split());
-        tile.init_uniform(1.0 / ((in_ch * k * k) as f32).sqrt());
-        Self::build(Box::new(tile), true, in_ch, out_ch, k, stride, pad, in_size)
+        let grid = TileGrid::analog(out_ch, in_ch * k * k, true, config, rng);
+        Self::build(grid, in_ch, out_ch, k, stride, pad, in_size)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -69,17 +62,18 @@ impl AnalogConv2d {
         in_size: usize,
         rng: &mut Rng,
     ) -> Self {
-        let mut tile = FloatingPointTile::new(out_ch, in_ch * k * k);
-        let bound = 1.0 / ((in_ch * k * k) as f32).sqrt();
-        let w = Matrix::rand_uniform(out_ch, in_ch * k * k, -bound, bound, rng);
-        tile.set_weights(&w);
-        Self::build(Box::new(tile), false, in_ch, out_ch, k, stride, pad, in_size)
+        let grid = TileGrid::floating_point(
+            out_ch,
+            in_ch * k * k,
+            true,
+            MappingParameter::default(),
+            rng,
+        );
+        Self::build(grid, in_ch, out_ch, k, stride, pad, in_size)
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn build(
-        tile: Box<dyn Tile>,
-        is_analog: bool,
+        grid: TileGrid,
         in_ch: usize,
         out_ch: usize,
         k: usize,
@@ -90,30 +84,30 @@ impl AnalogConv2d {
         assert!(k <= in_size + 2 * pad, "kernel larger than padded input");
         assert!(stride >= 1);
         let out_size = (in_size + 2 * pad - k) / stride + 1;
-        AnalogConv2d {
-            tile,
-            bias: vec![0.0; out_ch],
-            bias_grad: vec![0.0; out_ch],
-            in_ch,
-            out_ch,
-            k,
-            stride,
-            pad,
-            in_size,
-            out_size,
-            patch_cache: None,
-            d_cache: None,
-            train: true,
-            is_analog,
-        }
+        AnalogConv2d { grid, in_ch, out_ch, k, stride, pad, in_size, out_size }
     }
 
     pub fn out_spatial(&self) -> usize {
         self.out_size
     }
 
-    pub fn tile_mut(&mut self) -> &mut dyn Tile {
-        self.tile.as_mut()
+    /// The underlying mapping engine.
+    pub fn grid(&self) -> &TileGrid {
+        &self.grid
+    }
+
+    pub fn grid_mut(&mut self) -> &mut TileGrid {
+        &mut self.grid
+    }
+
+    /// Full `out_ch × (in_ch·k·k)` kernel matrix assembled from the shards.
+    pub fn get_weights(&mut self) -> Matrix {
+        self.grid.get_weights()
+    }
+
+    /// Per-output-channel bias.
+    pub fn bias(&self) -> &[f32] {
+        self.grid.bias().expect("conv always has a bias")
     }
 
     /// im2col for one flattened image: returns P×(C·k·k) with
@@ -179,29 +173,24 @@ impl Module for AnalogConv2d {
     fn forward(&mut self, x: &Matrix) -> Matrix {
         let b = x.rows();
         assert_eq!(x.cols(), self.in_ch * self.in_size * self.in_size, "input shape");
-        if self.train && self.is_analog {
-            self.tile.apply_weight_modifier();
-        }
         let p = self.out_size * self.out_size;
         let mut patches = Matrix::zeros(b * p, self.in_ch * self.k * self.k);
         for bi in 0..b {
             self.im2col(x.row(bi), &mut patches, bi * p);
         }
-        // tile MVM over all patches (each patch = one analog read)
-        let mut ytile = Matrix::zeros(b * p, self.out_ch);
-        self.tile.forward_batch(&patches, &mut ytile);
-        // reshape (B·P)×out_ch → B×(out_ch·P), adding bias
+        // grid MVM over all patches (each patch = one analog read per
+        // shard); the engine applies the weight modifier, adds the
+        // per-channel bias, and keeps the patch matrix as update cache
+        let ytile = self.grid.forward_owned(patches);
+        // reshape (B·P)×out_ch → B×(out_ch·P)
         let mut y = Matrix::zeros(b, self.out_ch * p);
         for bi in 0..b {
             for pi in 0..p {
                 let src = ytile.row(bi * p + pi);
                 for (c, &v) in src.iter().enumerate() {
-                    y.row_mut(bi)[c * p + pi] = v + self.bias[c];
+                    y.row_mut(bi)[c * p + pi] = v;
                 }
             }
-        }
-        if self.train {
-            self.patch_cache = Some(patches);
         }
         y
     }
@@ -212,58 +201,46 @@ impl Module for AnalogConv2d {
         assert_eq!(grad_out.cols(), self.out_ch * p);
         // reshape grads to patch-major (B·P)×out_ch
         let mut d = Matrix::zeros(b * p, self.out_ch);
-        self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
         for bi in 0..b {
             let grow = grad_out.row(bi);
             for pi in 0..p {
                 for c in 0..self.out_ch {
-                    let g = grow[c * p + pi];
-                    d.row_mut(bi * p + pi)[c] = g;
-                    self.bias_grad[c] += g;
+                    d.row_mut(bi * p + pi)[c] = grow[c * p + pi];
                 }
             }
         }
-        // input grads: tile backward per patch, then col2im scatter
-        let mut gpatches = Matrix::zeros(b * p, self.in_ch * self.k * self.k);
-        self.tile.backward_batch(&d, &mut gpatches);
+        // input grads: grid backward per patch (bias grad = column sums,
+        // accumulated by the engine), then col2im scatter
+        let gpatches = self.grid.backward_owned(d);
         let mut gx = Matrix::zeros(b, self.in_ch * self.in_size * self.in_size);
         for bi in 0..b {
             self.col2im(&gpatches, bi * p, gx.row_mut(bi));
         }
-        self.d_cache = Some(d);
         gx
     }
 
     fn update(&mut self, lr: f32) {
-        let (x, d) = match (&self.patch_cache, &self.d_cache) {
-            (Some(x), Some(d)) => (x, d),
-            _ => return,
-        };
-        // every patch is one rank-1 pulsed update — analog accumulation
-        self.tile.update(x, d, lr);
-        for (bv, &g) in self.bias.iter_mut().zip(self.bias_grad.iter()) {
-            *bv -= lr * g;
-        }
+        // every patch is one rank-1 pulsed update per shard — analog
+        // accumulation, consumed once per backward
+        self.grid.update(lr);
     }
 
     fn post_batch(&mut self) {
-        self.tile.post_batch();
-        self.patch_cache = None;
-        self.d_cache = None;
+        self.grid.post_batch();
     }
 
     fn num_params(&self) -> usize {
-        self.out_ch * self.in_ch * self.k * self.k + self.out_ch
+        self.grid.num_params()
     }
 
     fn set_train(&mut self, train: bool) {
-        self.train = train;
+        self.grid.set_train(train);
     }
 
     fn name(&self) -> String {
         format!(
             "{}Conv2d({}, {}, k{}, s{})",
-            if self.is_analog { "Analog" } else { "FP" },
+            if self.grid.is_analog() { "Analog" } else { "FP" },
             self.in_ch,
             self.out_ch,
             self.k,
@@ -277,6 +254,7 @@ mod tests {
     use super::*;
 
     /// Direct convolution reference.
+    #[allow(clippy::too_many_arguments)]
     fn conv_ref(
         img: &[f32],
         w: &Matrix, // out_ch × (in_ch·k·k)
@@ -329,8 +307,8 @@ mod tests {
             let img: Vec<f32> = (0..2 * 36).map(|i| (i as f32 * 0.07).sin()).collect();
             let x = Matrix::from_vec(1, 72, img.clone());
             let y = conv.forward(&x);
-            let w = conv.tile.get_weights();
-            let expect = conv_ref(&img, &w, &conv.bias, 2, 6, 3, stride, pad);
+            let w = conv.get_weights();
+            let expect = conv_ref(&img, &w, conv.bias(), 2, 6, 3, stride, pad);
             assert_eq!(y.cols(), expect.len(), "pad {pad} stride {stride}");
             for (a, b) in y.row(0).iter().zip(expect.iter()) {
                 assert!((a - b).abs() < 1e-4, "pad {pad} stride {stride}: {a} vs {b}");
@@ -419,5 +397,27 @@ mod tests {
         assert_eq!(g.cols(), 64);
         conv.update(0.01);
         conv.post_batch();
+    }
+
+    #[test]
+    fn mapped_conv_matches_unsplit_fp() {
+        // patch width 2·3·3 = 18 split over ≤8-wide shards (3 cols) and
+        // out_ch 4 over ≤2-tall shards (2 rows) must equal the unsplit conv
+        let mut rng = Rng::new(6);
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter { max_input_size: 8, max_output_size: 2 };
+        let mut split = AnalogConv2d::new(2, 4, 3, 1, 1, 5, cfg, &mut rng);
+        assert_eq!(split.grid().num_tiles(), 6);
+        let mut plain = AnalogConv2d::floating_point(2, 4, 3, 1, 1, 5, &mut rng);
+        let w = plain.get_weights();
+        split.grid_mut().set_weights(&w);
+        split.set_train(false);
+        plain.set_train(false);
+        let x = Matrix::rand_uniform(2, 50, -1.0, 1.0, &mut rng);
+        let ys = split.forward(&x);
+        let yp = plain.forward(&x);
+        for (a, b) in ys.data().iter().zip(yp.data().iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 }

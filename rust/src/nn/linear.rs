@@ -1,170 +1,132 @@
 //! `AnalogLinear` — a fully-connected layer whose weight matrix lives on
-//! one analog tile (paper Fig. 2). The bias is digital (computed in FP and
-//! added after the ADC), matching the paper's default separation of analog
-//! and digital compute.
+//! a grid of analog tiles (paper Fig. 2). The bias is digital (computed in
+//! FP and added after the ADC), matching the paper's default separation of
+//! analog and digital compute.
 //!
-//! The layer is batch-first end to end: forward/backward hand the whole
-//! B×features mini-batch to the tile's fused batched kernel
-//! (`tile::forward::analog_mvm_batch`), and `update` drives the tile's
-//! batched pulsed update — no per-sample loop exists at this level.
+//! All tile plumbing — shard mapping, batch-first forward/backward through
+//! the fused batched kernels, x/d caches, weight-modifier hook, consume-
+//! once update, `post_batch` — is delegated to [`TileGrid`]. A layer whose
+//! `in_features`/`out_features` fit inside `config.mapping` runs on a
+//! single shard exactly as before; a larger layer is split along both
+//! dimensions and its shards execute in parallel.
 
-use crate::config::RPUConfig;
+use crate::config::{MappingParameter, RPUConfig};
 use crate::nn::Module;
-use crate::tile::{AnalogTile, FloatingPointTile, Tile};
+use crate::tile::{Tile, TileGrid};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
-/// Fully-connected layer on an analog (or FP baseline) tile.
+/// Fully-connected layer on a grid of analog (or FP baseline) tiles.
 pub struct AnalogLinear {
-    tile: Box<dyn Tile>,
-    /// Digital bias (None = no bias).
-    bias: Option<Vec<f32>>,
-    bias_grad: Vec<f32>,
-    in_features: usize,
-    out_features: usize,
-    /// Caches for backward/update.
-    x_cache: Option<Matrix>,
-    d_cache: Option<Matrix>,
-    train: bool,
-    /// Whether the tile is an AnalogTile (for the modifier hook).
-    is_analog: bool,
+    grid: TileGrid,
 }
 
 impl AnalogLinear {
-    /// Analog layer with the given `rpu_config`.
-    pub fn new(in_features: usize, out_features: usize, bias: bool, config: RPUConfig, rng: &mut Rng) -> Self {
-        let mut tile = AnalogTile::new(out_features, in_features, config, rng.split());
-        // Kaiming-ish uniform init scaled into the device range
-        tile.init_uniform(1.0 / (in_features as f32).sqrt());
-        AnalogLinear {
-            tile: Box::new(tile),
-            bias: if bias { Some(vec![0.0; out_features]) } else { None },
-            bias_grad: vec![0.0; out_features],
-            in_features,
-            out_features,
-            x_cache: None,
-            d_cache: None,
-            train: true,
-            is_analog: true,
-        }
+    /// Analog layer with the given `rpu_config` (`config.mapping` decides
+    /// the shard layout).
+    pub fn new(
+        in_features: usize,
+        out_features: usize,
+        bias: bool,
+        config: RPUConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        AnalogLinear { grid: TileGrid::analog(out_features, in_features, bias, config, rng) }
     }
 
-    /// FP baseline layer (same interface, exact math).
+    /// FP baseline layer (same interface, exact math, single shard).
     pub fn floating_point(in_features: usize, out_features: usize, bias: bool, rng: &mut Rng) -> Self {
-        let mut tile = FloatingPointTile::new(out_features, in_features);
-        let bound = 1.0 / (in_features as f32).sqrt();
-        let w = Matrix::rand_uniform(out_features, in_features, -bound, bound, rng);
-        tile.set_weights(&w);
+        Self::floating_point_mapped(in_features, out_features, bias, MappingParameter::default(), rng)
+    }
+
+    /// FP baseline layer with an explicit shard mapping (exact digital
+    /// shards — the bit-exact reference for grid-mapping tests).
+    pub fn floating_point_mapped(
+        in_features: usize,
+        out_features: usize,
+        bias: bool,
+        mapping: MappingParameter,
+        rng: &mut Rng,
+    ) -> Self {
         AnalogLinear {
-            tile: Box::new(tile),
-            bias: if bias { Some(vec![0.0; out_features]) } else { None },
-            bias_grad: vec![0.0; out_features],
-            in_features,
-            out_features,
-            x_cache: None,
-            d_cache: None,
-            train: true,
-            is_analog: false,
+            grid: TileGrid::floating_point(out_features, in_features, bias, mapping, rng),
         }
     }
 
+    /// First shard of the grid (single-tile layers: *the* tile).
     pub fn tile_mut(&mut self) -> &mut dyn Tile {
-        self.tile.as_mut()
+        self.grid.tile_mut(0)
     }
 
+    /// The underlying mapping engine.
+    pub fn grid(&self) -> &TileGrid {
+        &self.grid
+    }
+
+    pub fn grid_mut(&mut self) -> &mut TileGrid {
+        &mut self.grid
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.grid.num_tiles()
+    }
+
+    /// Full logical weight matrix assembled from the shards.
     pub fn get_weights(&mut self) -> Matrix {
-        self.tile.get_weights()
+        self.grid.get_weights()
     }
 
     pub fn set_weights(&mut self, w: &Matrix) {
-        self.tile.set_weights(w);
+        self.grid.set_weights(w);
     }
 
     pub fn get_bias(&self) -> Option<&[f32]> {
-        self.bias.as_deref()
+        self.grid.bias()
     }
 
     pub fn set_bias(&mut self, b: &[f32]) {
-        if let Some(bias) = &mut self.bias {
-            bias.copy_from_slice(b);
-        }
+        self.grid.set_bias(b);
     }
 }
 
 impl Module for AnalogLinear {
     fn forward(&mut self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.in_features);
-        if self.train && self.is_analog {
-            // hardware-aware weight noise for this mini-batch (no-op if
-            // the config has no modifier)
-            self.tile.apply_weight_modifier();
-        }
-        let mut y = Matrix::zeros(x.rows(), self.out_features);
-        self.tile.forward_batch(x, &mut y);
-        if let Some(bias) = &self.bias {
-            for b in 0..y.rows() {
-                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
-                    *v += bb;
-                }
-            }
-        }
-        if self.train {
-            self.x_cache = Some(x.clone());
-        }
-        y
+        self.grid.forward(x)
     }
 
     fn backward(&mut self, grad_out: &Matrix) -> Matrix {
-        assert_eq!(grad_out.cols(), self.out_features);
-        let mut g = Matrix::zeros(grad_out.rows(), self.in_features);
-        self.tile.backward_batch(grad_out, &mut g);
-        // bias gradient: column sums of grad_out
-        if self.bias.is_some() {
-            self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
-            for b in 0..grad_out.rows() {
-                for (gb, &d) in self.bias_grad.iter_mut().zip(grad_out.row(b).iter()) {
-                    *gb += d;
-                }
-            }
-        }
-        self.d_cache = Some(grad_out.clone());
-        g
+        self.grid.backward(grad_out)
     }
 
     fn update(&mut self, lr: f32) {
-        let (x, d) = match (&self.x_cache, &self.d_cache) {
-            (Some(x), Some(d)) => (x, d),
-            _ => return,
-        };
-        self.tile.update(x, d, lr);
-        if let Some(bias) = &mut self.bias {
-            for (b, &g) in bias.iter_mut().zip(self.bias_grad.iter()) {
-                *b -= lr * g;
-            }
-        }
+        self.grid.update(lr);
     }
 
     fn post_batch(&mut self) {
-        self.tile.post_batch();
-        self.x_cache = None;
-        self.d_cache = None;
+        self.grid.post_batch();
     }
 
     fn num_params(&self) -> usize {
-        self.in_features * self.out_features + self.bias.as_ref().map_or(0, |b| b.len())
+        self.grid.num_params()
     }
 
     fn set_train(&mut self, train: bool) {
-        self.train = train;
+        self.grid.set_train(train);
     }
 
     fn name(&self) -> String {
-        format!(
-            "{}Linear({}, {})",
-            if self.is_analog { "Analog" } else { "FP" },
-            self.in_features,
-            self.out_features
-        )
+        let kind = if self.grid.is_analog() { "Analog" } else { "FP" };
+        if self.grid.num_tiles() == 1 {
+            format!("{}Linear({}, {})", kind, self.grid.in_size(), self.grid.out_size())
+        } else {
+            format!(
+                "{}Linear({}, {}; {} tiles)",
+                kind,
+                self.grid.in_size(),
+                self.grid.out_size(),
+                self.grid.shape_string()
+            )
+        }
     }
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
@@ -293,5 +255,41 @@ mod tests {
         let sd = stats::std(w.data());
         assert!(sd > 0.01 && sd < 0.2, "init std {sd}");
         assert!(w.mean().abs() < 0.02);
+    }
+
+    #[test]
+    fn mapped_layer_reports_tiles_in_name() {
+        let mut rng = Rng::new(7);
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(8);
+        let layer = AnalogLinear::new(20, 12, true, cfg, &mut rng);
+        assert_eq!(layer.num_tiles(), 6); // 2 out-blocks × 3 in-blocks
+        assert!(layer.name().contains("2x3 tiles"), "{}", layer.name());
+    }
+
+    #[test]
+    fn mapped_layer_trains_end_to_end() {
+        // in AND out both exceed the tile limit → genuine 2D grid
+        let mut rng = Rng::new(8);
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(4);
+        let mut layer = AnalogLinear::new(10, 6, true, cfg, &mut rng);
+        assert!(layer.num_tiles() > 1);
+        let w_true = Matrix::rand_uniform(6, 10, -0.3, 0.3, &mut rng);
+        let mut final_loss = f32::MAX;
+        for _ in 0..400 {
+            let x = Matrix::rand_uniform(6, 10, -1.0, 1.0, &mut rng);
+            let mut t = Matrix::zeros(6, 6);
+            for b in 0..6 {
+                t.row_mut(b).copy_from_slice(&w_true.matvec(x.row(b)));
+            }
+            let y = layer.forward(&x);
+            let (l, g) = crate::nn::loss::mse_loss(&y, &t);
+            final_loss = l;
+            layer.backward(&g);
+            layer.update(0.3);
+            layer.post_batch();
+        }
+        assert!(final_loss < 5e-3, "mapped-layer regression loss {final_loss}");
     }
 }

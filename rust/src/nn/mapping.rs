@@ -1,28 +1,22 @@
 //! Tile mapping: physical crossbars have a maximum size, so large layers
 //! must be split across several tiles (standard aihwkit `mapping`
-//! behaviour). [`TiledLinear`] splits the input dimension into column
-//! blocks and sums partial MVMs digitally. Each tile processes the whole
-//! mini-batch through the fused batched kernel before the digital
-//! reduction — the per-sample loop lives nowhere in this layer.
+//! behaviour). Since the [`TileGrid`] engine took over scatter/gather,
+//! digital reduction, caches, and the parallel shard fan-out,
+//! [`TiledLinear`] is a thin compatibility wrapper: it pins the input
+//! split to an explicit `max_in` (output unsplit), which was this layer's
+//! historical contract. New code should use [`crate::nn::AnalogLinear`]
+//! with `RPUConfig::mapping`, which splits both dimensions.
 
-use crate::config::RPUConfig;
+use crate::config::{MappingParameter, RPUConfig};
 use crate::nn::Module;
-use crate::tile::{AnalogTile, Tile};
+use crate::tile::TileGrid;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// A fully-connected layer split over multiple analog tiles along the
 /// input dimension (each tile at most `max_in` columns wide).
 pub struct TiledLinear {
-    tiles: Vec<AnalogTile>,
-    splits: Vec<(usize, usize)>, // (start, len) of each input block
-    in_features: usize,
-    out_features: usize,
-    bias: Vec<f32>,
-    bias_grad: Vec<f32>,
-    x_cache: Option<Matrix>,
-    d_cache: Option<Matrix>,
-    train: bool,
+    grid: TileGrid,
 }
 
 impl TiledLinear {
@@ -34,128 +28,61 @@ impl TiledLinear {
         rng: &mut Rng,
     ) -> Self {
         assert!(max_in >= 1);
-        let mut tiles = Vec::new();
-        let mut splits = Vec::new();
-        let mut start = 0;
-        while start < in_features {
-            let len = max_in.min(in_features - start);
-            let mut t = AnalogTile::new(out_features, len, config.clone(), rng.split());
-            t.init_uniform(1.0 / (in_features as f32).sqrt());
-            tiles.push(t);
-            splits.push((start, len));
-            start += len;
-        }
-        TiledLinear {
-            tiles,
-            splits,
-            in_features,
-            out_features,
-            bias: vec![0.0; out_features],
-            bias_grad: vec![0.0; out_features],
-            x_cache: None,
-            d_cache: None,
-            train: true,
-        }
+        let mut cfg = config;
+        cfg.mapping = MappingParameter { max_input_size: max_in, max_output_size: 0 };
+        TiledLinear { grid: TileGrid::analog(out_features, in_features, true, cfg, rng) }
     }
 
     pub fn num_tiles(&self) -> usize {
-        self.tiles.len()
+        self.grid.num_tiles()
     }
 
-    fn slice_cols(x: &Matrix, start: usize, len: usize) -> Matrix {
-        let mut out = Matrix::zeros(x.rows(), len);
-        for b in 0..x.rows() {
-            out.row_mut(b).copy_from_slice(&x.row(b)[start..start + len]);
-        }
-        out
+    /// The underlying mapping engine.
+    pub fn grid(&self) -> &TileGrid {
+        &self.grid
+    }
+
+    pub fn grid_mut(&mut self) -> &mut TileGrid {
+        &mut self.grid
     }
 }
 
 impl Module for TiledLinear {
     fn forward(&mut self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.in_features);
-        let mut y = Matrix::zeros(x.rows(), self.out_features);
-        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
-            if self.train {
-                tile.apply_weight_modifier_impl();
-            }
-            let xs = Self::slice_cols(x, start, len);
-            let mut part = Matrix::zeros(x.rows(), self.out_features);
-            tile.forward_batch(&xs, &mut part);
-            y.add_assign(&part);
-        }
-        for b in 0..y.rows() {
-            for (v, &bb) in y.row_mut(b).iter_mut().zip(self.bias.iter()) {
-                *v += bb;
-            }
-        }
-        if self.train {
-            self.x_cache = Some(x.clone());
-        }
-        y
+        self.grid.forward(x)
     }
 
     fn backward(&mut self, grad_out: &Matrix) -> Matrix {
-        assert_eq!(grad_out.cols(), self.out_features);
-        let mut g = Matrix::zeros(grad_out.rows(), self.in_features);
-        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
-            let mut part = Matrix::zeros(grad_out.rows(), len);
-            tile.backward_batch(grad_out, &mut part);
-            for b in 0..g.rows() {
-                g.row_mut(b)[start..start + len].copy_from_slice(part.row(b));
-            }
-        }
-        self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
-        for b in 0..grad_out.rows() {
-            for (gb, &d) in self.bias_grad.iter_mut().zip(grad_out.row(b).iter()) {
-                *gb += d;
-            }
-        }
-        self.d_cache = Some(grad_out.clone());
-        g
+        self.grid.backward(grad_out)
     }
 
     fn update(&mut self, lr: f32) {
-        if self.x_cache.is_none() || self.d_cache.is_none() {
-            return;
-        }
-        // take the caches to release the borrow on self (no deep clone),
-        // then restore them for any further update calls this batch
-        let (x, d) = (self.x_cache.take().unwrap(), self.d_cache.take().unwrap());
-        for (tile, &(start, len)) in self.tiles.iter_mut().zip(self.splits.iter()) {
-            let xs = Self::slice_cols(&x, start, len);
-            tile.update(&xs, &d, lr);
-        }
-        for (b, &g) in self.bias.iter_mut().zip(self.bias_grad.iter()) {
-            *b -= lr * g;
-        }
-        self.x_cache = Some(x);
-        self.d_cache = Some(d);
+        self.grid.update(lr);
     }
 
     fn post_batch(&mut self) {
-        for t in self.tiles.iter_mut() {
-            t.post_batch();
-        }
-        self.x_cache = None;
-        self.d_cache = None;
+        self.grid.post_batch();
     }
 
     fn num_params(&self) -> usize {
-        self.in_features * self.out_features + self.out_features
+        self.grid.num_params()
     }
 
     fn set_train(&mut self, train: bool) {
-        self.train = train;
+        self.grid.set_train(train);
     }
 
     fn name(&self) -> String {
         format!(
             "TiledLinear({}, {}; {} tiles)",
-            self.in_features,
-            self.out_features,
-            self.tiles.len()
+            self.grid.in_size(),
+            self.grid.out_size(),
+            self.grid.num_tiles()
         )
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 }
 
@@ -170,8 +97,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let layer = TiledLinear::new(100, 4, 32, RPUConfig::perfect(), &mut rng);
         assert_eq!(layer.num_tiles(), 4); // 32+32+32+4
-        let total: usize = layer.splits.iter().map(|&(_, l)| l).sum();
+        let total: usize = layer.grid().col_splits().iter().map(|&(_, l)| l).sum();
         assert_eq!(total, 100);
+        assert_eq!(layer.grid().grid_rows(), 1); // output never split here
     }
 
     #[test]
@@ -216,5 +144,33 @@ mod tests {
         let g = layer.backward(&y);
         assert_eq!(g.rows(), 3);
         assert_eq!(g.cols(), 9);
+    }
+
+    #[test]
+    fn update_twice_applies_once() {
+        // regression for the historical double-application hazard: a second
+        // update() in the same batch must not re-pulse tiles or re-apply
+        // the bias gradient
+        let build = || {
+            let mut rng = Rng::new(5);
+            TiledLinear::new(10, 3, 4, RPUConfig::perfect(), &mut rng)
+        };
+        let (mut once, mut twice) = (build(), build());
+        let mut rng = Rng::new(6);
+        let x = Matrix::rand_uniform(4, 10, -1.0, 1.0, &mut rng);
+        let d = Matrix::rand_uniform(4, 3, -1.0, 1.0, &mut rng);
+        for layer in [&mut once, &mut twice] {
+            layer.forward(&x);
+            layer.backward(&d);
+        }
+        once.update(0.2);
+        twice.update(0.2);
+        twice.update(0.2);
+        assert_eq!(
+            once.grid_mut().get_weights().data(),
+            twice.grid_mut().get_weights().data(),
+            "second update must be a no-op"
+        );
+        assert_eq!(once.grid().bias().unwrap(), twice.grid().bias().unwrap());
     }
 }

@@ -104,9 +104,17 @@ fn linear(
     cfg: &RPUConfig,
     rng: &mut Rng,
 ) -> Box<dyn Module> {
+    // both backends honour cfg.mapping: layers larger than the tile
+    // limits land on a TileGrid of shards (FP shards stay exact)
     match backend {
         Backend::Analog => Box::new(AnalogLinear::new(inf, outf, true, cfg.clone(), rng)),
-        Backend::FloatingPoint => Box::new(AnalogLinear::floating_point(inf, outf, true, rng)),
+        Backend::FloatingPoint => Box::new(AnalogLinear::floating_point_mapped(
+            inf,
+            outf,
+            true,
+            cfg.mapping.clone(),
+            rng,
+        )),
     }
 }
 
@@ -241,6 +249,45 @@ mod tests {
         }
         let acc = accs.iter().sum::<f64>() / accs.len() as f64;
         assert!(acc > 0.8, "analog blob accuracy {acc}");
+    }
+
+    #[test]
+    fn mapped_mlp_trains_on_grid_shards() {
+        // tile limit smaller than both layer dimensions → every linear
+        // layer becomes a multi-tile grid, trained end to end
+        let mut rng = Rng::new(5);
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = crate::config::MappingParameter::max_size(8);
+        let mut net = mlp(&[12, 10, 3], Backend::Analog, &cfg, &mut rng);
+        assert!(net.summary().contains("tiles"), "{}", net.summary());
+        let centers = [[1.0f32, 0.0, 0.5], [0.0, 1.0, 0.0], [0.5, 0.0, 1.0]];
+        let mut accs = Vec::new();
+        for epoch in 0..40 {
+            let mut correct = 0.0;
+            for _ in 0..5 {
+                let mut xv = Vec::with_capacity(4 * 12);
+                let mut labs = Vec::with_capacity(4);
+                for _ in 0..4 {
+                    let lab = rng.below(3);
+                    labs.push(lab);
+                    for j in 0..12 {
+                        xv.push(centers[lab][j % 3] + 0.1 * rng.normal() as f32);
+                    }
+                }
+                let x = Matrix::from_vec(4, 12, xv);
+                let y = net.forward(&x);
+                let (_, g) = nll_loss(&y, &labs);
+                correct += crate::nn::loss::accuracy(&y, &labs) * 4.0;
+                net.backward(&g);
+                net.update(0.4);
+                net.post_batch();
+            }
+            if epoch >= 35 {
+                accs.push(correct / 20.0);
+            }
+        }
+        let acc = accs.iter().sum::<f64>() / accs.len() as f64;
+        assert!(acc > 0.8, "grid-mapped blob accuracy {acc}");
     }
 
     #[test]

@@ -1,0 +1,677 @@
+//! `TileGrid` — the tile-mapping engine (paper §3 / aihwkit "mapping").
+//!
+//! Physical crossbars have a maximum size, so a logical `out×in` weight
+//! matrix larger than the [`MappingParameter`] limits is split along
+//! **both** dimensions onto an R×C grid of [`Tile`] shards. The grid owns
+//! everything the `nn` layers used to triplicate around their tiles:
+//!
+//! * input scatter / output gather with the digital partial-sum reduction
+//!   (`y[:, rows_r] = Σ_c tile_{r,c}(x[:, cols_c])`), through reusable
+//!   scratch buffers — the hot path performs no per-tile allocations;
+//! * the digital bias and its gradient;
+//! * the x/d caches for the update step, **consume-once**: `update`
+//!   takes the cached gradient so a second call cannot re-pulse the
+//!   tiles or re-apply the bias gradient (the activation cache is
+//!   restored — a fresh `backward` may legitimately reuse it);
+//! * the train-mode weight-modifier hook and `post_batch` fan-out.
+//!
+//! Independent shard MVMs/updates fan out over
+//! [`crate::util::threadpool::par_for_each_mut`]. Every tile owns a
+//! decorrelated [`Rng::split`] stream (and the batched kernels split
+//! per-row streams off it), so parallel execution is bit-deterministic
+//! for a fixed seed at any `AIHWSIM_THREADS`.
+//!
+//! Known limitation: shard-level and batch-level parallelism compose —
+//! each shard's fused kernel may spawn its own `par_chunks_mut` workers
+//! inside a shard task, briefly oversubscribing cores for large grids of
+//! large shards. The batched kernels' `PAR_MIN_MACS` floor keeps small
+//! shards serial inside a task; a shared thread budget across the two
+//! levels is future work.
+
+use crate::config::{MappingParameter, RPUConfig};
+use crate::tile::{AnalogTile, FloatingPointTile, Tile};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_for_each_mut;
+
+/// Split a dimension of `total` elements into contiguous `(start, len)`
+/// blocks of at most `max` (0 = unlimited → a single block).
+pub fn split_dim(total: usize, max: usize) -> Vec<(usize, usize)> {
+    assert!(total > 0, "cannot split an empty dimension");
+    if max == 0 || max >= total {
+        return vec![(0, total)];
+    }
+    let mut blocks = Vec::with_capacity(total.div_ceil(max));
+    let mut start = 0;
+    while start < total {
+        let len = max.min(total - start);
+        blocks.push((start, len));
+        start += len;
+    }
+    blocks
+}
+
+/// Reusable per-batch buffers: one input block per grid column, one
+/// gradient block per grid row, one partial-result matrix per tile.
+/// Rebuilt only when the batch size changes.
+#[derive(Default)]
+struct GridScratch {
+    batch: usize,
+    /// Per grid column: `B × col_len` input slices.
+    x_blocks: Vec<Matrix>,
+    /// Per grid row: `B × row_len` output-gradient slices.
+    d_blocks: Vec<Matrix>,
+    /// Per tile (row-major): `B × row_len` forward partials.
+    fwd_parts: Vec<Matrix>,
+    /// Per tile (row-major): `B × col_len` backward partials.
+    bwd_parts: Vec<Matrix>,
+}
+
+impl GridScratch {
+    fn ensure(&mut self, batch: usize, rows: &[(usize, usize)], cols: &[(usize, usize)]) {
+        if self.batch == batch && !self.fwd_parts.is_empty() {
+            return;
+        }
+        self.batch = batch;
+        self.x_blocks = cols.iter().map(|&(_, len)| Matrix::zeros(batch, len)).collect();
+        self.d_blocks = rows.iter().map(|&(_, len)| Matrix::zeros(batch, len)).collect();
+        self.fwd_parts = rows
+            .iter()
+            .flat_map(|&(_, rlen)| cols.iter().map(move |_| Matrix::zeros(batch, rlen)))
+            .collect();
+        self.bwd_parts = rows
+            .iter()
+            .flat_map(|_| cols.iter().map(|&(_, clen)| Matrix::zeros(batch, clen)))
+            .collect();
+    }
+}
+
+/// An R×C grid of tile shards acting as one logical `out×in` layer engine.
+pub struct TileGrid {
+    /// Row-major: `tiles[r * cols + c]` holds the
+    /// `row_splits[r] × col_splits[c]` shard.
+    tiles: Vec<Box<dyn Tile>>,
+    row_splits: Vec<(usize, usize)>,
+    col_splits: Vec<(usize, usize)>,
+    out_size: usize,
+    in_size: usize,
+    bias: Option<Vec<f32>>,
+    bias_grad: Vec<f32>,
+    x_cache: Option<Matrix>,
+    d_cache: Option<Matrix>,
+    train: bool,
+    is_analog: bool,
+    scratch: GridScratch,
+}
+
+impl TileGrid {
+    /// Analog grid: one [`AnalogTile`] per shard, each with its own split
+    /// RNG stream and device array, initialized uniformly in
+    /// `±w_bound/√in`. Split sizes come from `config.mapping`.
+    pub fn analog(
+        out_features: usize,
+        in_features: usize,
+        bias: bool,
+        config: RPUConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let row_splits = split_dim(out_features, config.mapping.max_output_size);
+        let col_splits = split_dim(in_features, config.mapping.max_input_size);
+        let init_scale = 1.0 / (in_features as f32).sqrt();
+        let mut tiles: Vec<Box<dyn Tile>> =
+            Vec::with_capacity(row_splits.len() * col_splits.len());
+        for &(_, rlen) in &row_splits {
+            for &(_, clen) in &col_splits {
+                let mut t = AnalogTile::new(rlen, clen, config.clone(), rng.split());
+                t.init_uniform(init_scale);
+                tiles.push(Box::new(t));
+            }
+        }
+        Self::build(tiles, row_splits, col_splits, out_features, in_features, bias, true)
+    }
+
+    /// Floating-point grid: exact digital shards, Kaiming-ish uniform
+    /// init drawn as one logical `out×in` matrix (bit-identical to the
+    /// unsplit FP layer for a given RNG state).
+    pub fn floating_point(
+        out_features: usize,
+        in_features: usize,
+        bias: bool,
+        mapping: MappingParameter,
+        rng: &mut Rng,
+    ) -> Self {
+        let row_splits = split_dim(out_features, mapping.max_output_size);
+        let col_splits = split_dim(in_features, mapping.max_input_size);
+        let mut tiles: Vec<Box<dyn Tile>> =
+            Vec::with_capacity(row_splits.len() * col_splits.len());
+        for &(_, rlen) in &row_splits {
+            for &(_, clen) in &col_splits {
+                tiles.push(Box::new(FloatingPointTile::new(rlen, clen)));
+            }
+        }
+        let mut grid =
+            Self::build(tiles, row_splits, col_splits, out_features, in_features, bias, false);
+        let bound = 1.0 / (in_features as f32).sqrt();
+        let w = Matrix::rand_uniform(out_features, in_features, -bound, bound, rng);
+        grid.set_weights(&w);
+        grid
+    }
+
+    fn build(
+        tiles: Vec<Box<dyn Tile>>,
+        row_splits: Vec<(usize, usize)>,
+        col_splits: Vec<(usize, usize)>,
+        out_size: usize,
+        in_size: usize,
+        bias: bool,
+        is_analog: bool,
+    ) -> Self {
+        TileGrid {
+            tiles,
+            row_splits,
+            col_splits,
+            out_size,
+            in_size,
+            bias: if bias { Some(vec![0.0; out_size]) } else { None },
+            bias_grad: vec![0.0; out_size],
+            x_cache: None,
+            d_cache: None,
+            train: true,
+            is_analog,
+            scratch: GridScratch::default(),
+        }
+    }
+
+    // ------------------------------------------------------------ shape
+
+    pub fn in_size(&self) -> usize {
+        self.in_size
+    }
+    pub fn out_size(&self) -> usize {
+        self.out_size
+    }
+    pub fn grid_rows(&self) -> usize {
+        self.row_splits.len()
+    }
+    pub fn grid_cols(&self) -> usize {
+        self.col_splits.len()
+    }
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+    pub fn row_splits(&self) -> &[(usize, usize)] {
+        &self.row_splits
+    }
+    pub fn col_splits(&self) -> &[(usize, usize)] {
+        &self.col_splits
+    }
+    pub fn is_analog(&self) -> bool {
+        self.is_analog
+    }
+    pub fn is_train(&self) -> bool {
+        self.train
+    }
+
+    /// `"RxC"` shard-layout label for layer names.
+    pub fn shape_string(&self) -> String {
+        format!("{}x{}", self.grid_rows(), self.grid_cols())
+    }
+
+    /// Access one shard (row-major index) — tests/experiments.
+    pub fn tile_mut(&mut self, idx: usize) -> &mut dyn Tile {
+        self.tiles[idx].as_mut()
+    }
+
+    // ------------------------------------------------------- bias access
+
+    pub fn has_bias(&self) -> bool {
+        self.bias.is_some()
+    }
+    pub fn bias(&self) -> Option<&[f32]> {
+        self.bias.as_deref()
+    }
+    pub fn set_bias(&mut self, b: &[f32]) {
+        if let Some(bias) = &mut self.bias {
+            bias.copy_from_slice(b);
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.in_size * self.out_size + self.bias.as_ref().map_or(0, |b| b.len())
+    }
+
+    pub fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    // ---------------------------------------------------------- forward
+
+    /// Batch-first forward `y = x·Wᵀ + b` through the grid. Caches a
+    /// clone of `x` for the update step when in train mode (use
+    /// [`Self::forward_owned`] to hand over the buffer instead).
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows(), self.out_size);
+        self.forward_into(x, &mut y);
+        if self.train {
+            self.x_cache = Some(x.clone());
+        }
+        y
+    }
+
+    /// Forward that takes ownership of `x` — the activation cache reuses
+    /// the buffer, so callers that build their input (conv im2col) avoid
+    /// the clone.
+    pub fn forward_owned(&mut self, x: Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows(), self.out_size);
+        self.forward_into(&x, &mut y);
+        if self.train {
+            self.x_cache = Some(x);
+        }
+        y
+    }
+
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols(), self.in_size, "input features");
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        let (nr, nc) = (self.row_splits.len(), self.col_splits.len());
+        let apply_mod = self.train && self.is_analog;
+
+        if nr == 1 && nc == 1 {
+            // single-shard fast path: no gather, no partials
+            let tile = self.tiles[0].as_mut();
+            if apply_mod {
+                tile.apply_weight_modifier();
+            }
+            tile.forward_batch(x, y);
+        } else {
+            self.scratch.ensure(x.rows(), &self.row_splits, &self.col_splits);
+            let scratch = &mut self.scratch;
+            if nc > 1 {
+                for (c, &(start, _)) in self.col_splits.iter().enumerate() {
+                    x.copy_col_block(start, &mut scratch.x_blocks[c]);
+                }
+            }
+            let x_blocks = &scratch.x_blocks;
+            let mut tasks: Vec<(&mut Box<dyn Tile>, &mut Matrix)> =
+                self.tiles.iter_mut().zip(scratch.fwd_parts.iter_mut()).collect();
+            par_for_each_mut(&mut tasks, |t, task| {
+                let (tile, part) = (&mut *task.0, &mut *task.1);
+                if apply_mod {
+                    tile.apply_weight_modifier();
+                }
+                let xin = if nc == 1 { x } else { &x_blocks[t % nc] };
+                tile.forward_batch(xin, part);
+            });
+            // digital partial-sum reduction: y[:, rows_r] = Σ_c part[r, c]
+            for (r, &(rstart, _)) in self.row_splits.iter().enumerate() {
+                for c in 0..nc {
+                    let part = &scratch.fwd_parts[r * nc + c];
+                    if c == 0 {
+                        y.scatter_col_block(rstart, part);
+                    } else {
+                        y.add_col_block(rstart, part);
+                    }
+                }
+            }
+        }
+
+        if let Some(bias) = &self.bias {
+            for b in 0..y.rows() {
+                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
+                    *v += bb;
+                }
+            }
+        }
+    }
+
+    // --------------------------------------------------------- backward
+
+    /// Batch-first backward `g = d·W` through the grid; accumulates the
+    /// bias gradient and caches a clone of `d` for the update step (use
+    /// [`Self::backward_owned`] to hand over the buffer).
+    pub fn backward(&mut self, grad_out: &Matrix) -> Matrix {
+        let mut g = Matrix::zeros(grad_out.rows(), self.in_size);
+        self.backward_into(grad_out, &mut g);
+        self.d_cache = Some(grad_out.clone());
+        g
+    }
+
+    /// Backward that takes ownership of the output gradient.
+    pub fn backward_owned(&mut self, grad_out: Matrix) -> Matrix {
+        let mut g = Matrix::zeros(grad_out.rows(), self.in_size);
+        self.backward_into(&grad_out, &mut g);
+        self.d_cache = Some(grad_out);
+        g
+    }
+
+    fn backward_into(&mut self, d: &Matrix, g: &mut Matrix) {
+        assert_eq!(d.cols(), self.out_size, "output features");
+        assert_eq!(g.cols(), self.in_size);
+        assert_eq!(d.rows(), g.rows());
+        if self.bias.is_some() {
+            self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
+            for b in 0..d.rows() {
+                for (gb, &dv) in self.bias_grad.iter_mut().zip(d.row(b).iter()) {
+                    *gb += dv;
+                }
+            }
+        }
+        let (nr, nc) = (self.row_splits.len(), self.col_splits.len());
+        if nr == 1 && nc == 1 {
+            self.tiles[0].backward_batch(d, g);
+            return;
+        }
+        self.scratch.ensure(d.rows(), &self.row_splits, &self.col_splits);
+        let scratch = &mut self.scratch;
+        if nr > 1 {
+            for (r, &(start, _)) in self.row_splits.iter().enumerate() {
+                d.copy_col_block(start, &mut scratch.d_blocks[r]);
+            }
+        }
+        let d_blocks = &scratch.d_blocks;
+        let mut tasks: Vec<(&mut Box<dyn Tile>, &mut Matrix)> =
+            self.tiles.iter_mut().zip(scratch.bwd_parts.iter_mut()).collect();
+        par_for_each_mut(&mut tasks, |t, task| {
+            let (tile, part) = (&mut *task.0, &mut *task.1);
+            let din = if nr == 1 { d } else { &d_blocks[t / nc] };
+            tile.backward_batch(din, part);
+        });
+        // reduction over grid rows: g[:, cols_c] = Σ_r part[r, c]
+        for (c, &(cstart, _)) in self.col_splits.iter().enumerate() {
+            for r in 0..nr {
+                let part = &scratch.bwd_parts[r * nc + c];
+                if r == 0 {
+                    g.scatter_col_block(cstart, part);
+                } else {
+                    g.add_col_block(cstart, part);
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- update
+
+    /// Apply the cached (x, d) mini-batch as one pulsed update per shard
+    /// plus the digital bias step. **Consume-once**: the gradient cache
+    /// is taken, so a repeated call is a no-op until the next `backward`
+    /// — re-pulsing the tiles or re-applying the bias gradient for the
+    /// same mini-batch is impossible. The activation cache is restored
+    /// (safe: it feeds no update by itself).
+    pub fn update(&mut self, lr: f32) {
+        let (x, d) = match (self.x_cache.take(), self.d_cache.take()) {
+            (Some(x), Some(d)) => (x, d),
+            (x, _) => {
+                self.x_cache = x;
+                return;
+            }
+        };
+        let (nr, nc) = (self.row_splits.len(), self.col_splits.len());
+        if nr == 1 && nc == 1 {
+            self.tiles[0].update(&x, &d, lr);
+        } else {
+            self.scratch.ensure(x.rows(), &self.row_splits, &self.col_splits);
+            let scratch = &mut self.scratch;
+            if nc > 1 {
+                for (c, &(start, _)) in self.col_splits.iter().enumerate() {
+                    x.copy_col_block(start, &mut scratch.x_blocks[c]);
+                }
+            }
+            if nr > 1 {
+                for (r, &(start, _)) in self.row_splits.iter().enumerate() {
+                    d.copy_col_block(start, &mut scratch.d_blocks[r]);
+                }
+            }
+            let x_blocks = &scratch.x_blocks;
+            let d_blocks = &scratch.d_blocks;
+            let (x_ref, d_ref) = (&x, &d);
+            par_for_each_mut(&mut self.tiles, |t, tile| {
+                let xs = if nc == 1 { x_ref } else { &x_blocks[t % nc] };
+                let ds = if nr == 1 { d_ref } else { &d_blocks[t / nc] };
+                tile.update(xs, ds, lr);
+            });
+        }
+        if let Some(bias) = &mut self.bias {
+            for (b, &g) in bias.iter_mut().zip(self.bias_grad.iter()) {
+                *b -= lr * g;
+            }
+            self.bias_grad.iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.x_cache = Some(x);
+    }
+
+    /// Per-mini-batch housekeeping on every shard (decay, diffusion,
+    /// modifier restore) + cache invalidation.
+    pub fn post_batch(&mut self) {
+        par_for_each_mut(&mut self.tiles, |_, tile| tile.post_batch());
+        self.x_cache = None;
+        self.d_cache = None;
+    }
+
+    // ------------------------------------------------- weight import/export
+
+    /// Assemble the full logical `out×in` weight matrix from the shards
+    /// (the digital view used for checkpointing and drift/HWA
+    /// evaluation).
+    pub fn get_weights(&mut self) -> Matrix {
+        let mut w = Matrix::zeros(self.out_size, self.in_size);
+        let nc = self.col_splits.len();
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let (rstart, rlen) = self.row_splits[t / nc];
+            let (cstart, _clen) = self.col_splits[t % nc];
+            let wt = tile.get_weights();
+            for i in 0..rlen {
+                let dst = &mut w.row_mut(rstart + i)[cstart..cstart + wt.cols()];
+                dst.copy_from_slice(wt.row(i));
+            }
+        }
+        w
+    }
+
+    /// Program a full logical weight matrix, scattered shard by shard.
+    pub fn set_weights(&mut self, w: &Matrix) {
+        assert_eq!(w.rows(), self.out_size);
+        assert_eq!(w.cols(), self.in_size);
+        let nc = self.col_splits.len();
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let (rstart, rlen) = self.row_splits[t / nc];
+            let (cstart, clen) = self.col_splits[t % nc];
+            let mut sub = Matrix::zeros(rlen, clen);
+            for i in 0..rlen {
+                sub.row_mut(i).copy_from_slice(&w.row(rstart + i)[cstart..cstart + clen]);
+            }
+            tile.set_weights(&sub);
+        }
+    }
+
+    /// Per-shard weight export (row-major tile order) — the checkpoint
+    /// representation that preserves the physical mapping.
+    pub fn shard_weights(&mut self) -> Vec<Matrix> {
+        self.tiles.iter_mut().map(|t| t.get_weights()).collect()
+    }
+
+    /// Restore per-shard weights (shapes must match this grid's layout).
+    pub fn set_shard_weights(&mut self, shards: &[Matrix]) -> Result<(), String> {
+        if shards.len() != self.tiles.len() {
+            return Err(format!(
+                "shard count mismatch: {} vs grid {}",
+                shards.len(),
+                self.tiles.len()
+            ));
+        }
+        let nc = self.col_splits.len();
+        for (t, (tile, shard)) in self.tiles.iter_mut().zip(shards.iter()).enumerate() {
+            let expect = (self.row_splits[t / nc].1, self.col_splits[t % nc].1);
+            if (shard.rows(), shard.cols()) != expect {
+                return Err(format!(
+                    "shard {t}: shape {:?} != {:?}",
+                    (shard.rows(), shard.cols()),
+                    expect
+                ));
+            }
+            tile.set_weights(shard);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::nn::loss::mse_loss;
+
+    fn mapped(max_in: usize, max_out: usize, base: RPUConfig) -> RPUConfig {
+        let mut cfg = base;
+        cfg.mapping = MappingParameter { max_input_size: max_in, max_output_size: max_out };
+        cfg
+    }
+
+    #[test]
+    fn split_dim_covers_dimension() {
+        assert_eq!(split_dim(100, 32), vec![(0, 32), (32, 32), (64, 32), (96, 4)]);
+        assert_eq!(split_dim(8, 0), vec![(0, 8)]);
+        assert_eq!(split_dim(8, 100), vec![(0, 8)]);
+        assert_eq!(split_dim(9, 3), vec![(0, 3), (3, 3), (6, 3)]);
+    }
+
+    #[test]
+    fn grid_shape_follows_mapping() {
+        let mut rng = Rng::new(1);
+        let grid = TileGrid::analog(24, 40, true, mapped(16, 16, RPUConfig::perfect()), &mut rng);
+        assert_eq!(grid.grid_rows(), 2); // 16 + 8
+        assert_eq!(grid.grid_cols(), 3); // 16 + 16 + 8
+        assert_eq!(grid.num_tiles(), 6);
+        assert_eq!(grid.shape_string(), "2x3");
+        let covered: usize = grid.row_splits().iter().map(|&(_, l)| l).sum();
+        assert_eq!(covered, 24);
+    }
+
+    #[test]
+    fn fp_grid_2d_matches_unsplit_reference() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::rand_uniform(7, 10, -0.5, 0.5, &mut rng);
+        let mut grid =
+            TileGrid::floating_point(7, 10, false, MappingParameter::max_size(4), &mut rng);
+        assert_eq!(grid.num_tiles(), 6); // 2 row blocks × 3 col blocks
+        grid.set_weights(&w);
+        grid.set_train(false);
+        let x = Matrix::rand_uniform(5, 10, -1.0, 1.0, &mut rng);
+        let y = grid.forward(&x);
+        for b in 0..5 {
+            let expect = w.matvec(x.row(b));
+            for (a, e) in y.row(b).iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-5, "row {b}: {a} vs {e}");
+            }
+        }
+        let d = Matrix::rand_uniform(5, 7, -1.0, 1.0, &mut rng);
+        let g = grid.backward(&d);
+        for b in 0..5 {
+            let expect = w.tmatvec(d.row(b));
+            for (a, e) in g.row(b).iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-5, "grad row {b}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_roundtrip_across_shards() {
+        let mut rng = Rng::new(3);
+        let mut grid = TileGrid::analog(6, 9, false, mapped(4, 4, RPUConfig::perfect()), &mut rng);
+        let w = Matrix::rand_uniform(6, 9, -0.7, 0.7, &mut rng);
+        grid.set_weights(&w);
+        let got = grid.get_weights();
+        for (a, b) in got.data().iter().zip(w.data().iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shard_export_import_roundtrip() {
+        let mut rng = Rng::new(4);
+        let cfg = mapped(4, 3, RPUConfig::perfect());
+        let mut grid = TileGrid::analog(5, 10, true, cfg.clone(), &mut rng);
+        let w = Matrix::rand_uniform(5, 10, -0.6, 0.6, &mut rng);
+        grid.set_weights(&w);
+        let shards = grid.shard_weights();
+        assert_eq!(shards.len(), grid.num_tiles());
+        let mut other = TileGrid::analog(5, 10, true, cfg, &mut Rng::new(99));
+        other.set_shard_weights(&shards).unwrap();
+        assert_eq!(other.get_weights().data(), grid.get_weights().data());
+        // wrong shard count rejected
+        assert!(other.set_shard_weights(&shards[1..]).is_err());
+    }
+
+    #[test]
+    fn grid_2d_trains_regression() {
+        // both dimensions split: 6×10 over 4×4 shards (2×3 grid)
+        let mut rng = Rng::new(5);
+        let mut grid = TileGrid::analog(6, 10, true, mapped(4, 4, RPUConfig::perfect()), &mut rng);
+        assert_eq!(grid.num_tiles(), 6);
+        let w_true = Matrix::rand_uniform(6, 10, -0.3, 0.3, &mut rng);
+        let mut final_loss = f32::MAX;
+        for _ in 0..400 {
+            let x = Matrix::rand_uniform(6, 10, -1.0, 1.0, &mut rng);
+            let mut t = Matrix::zeros(6, 6);
+            for b in 0..6 {
+                t.row_mut(b).copy_from_slice(&w_true.matvec(x.row(b)));
+            }
+            let y = grid.forward(&x);
+            let (l, g) = mse_loss(&y, &t);
+            final_loss = l;
+            grid.backward(&g);
+            grid.update(0.3);
+            grid.post_batch();
+        }
+        assert!(final_loss < 5e-3, "2D-grid regression loss {final_loss}");
+    }
+
+    #[test]
+    fn update_is_consume_once() {
+        // identical grids; one calls update twice — states must match
+        let build = || {
+            let mut rng = Rng::new(6);
+            TileGrid::analog(6, 10, true, mapped(4, 4, RPUConfig::perfect()), &mut rng)
+        };
+        let (mut a, mut b) = (build(), build());
+        let mut rng = Rng::new(7);
+        let x = Matrix::rand_uniform(4, 10, -1.0, 1.0, &mut rng);
+        let d = Matrix::rand_uniform(4, 6, -1.0, 1.0, &mut rng);
+        for grid in [&mut a, &mut b] {
+            grid.forward(&x);
+            grid.backward(&d);
+        }
+        a.update(0.1);
+        b.update(0.1);
+        b.update(0.1); // second call must be a no-op
+        assert_eq!(a.get_weights().data(), b.get_weights().data());
+        assert_eq!(a.bias().unwrap(), b.bias().unwrap());
+        // a fresh backward re-arms the update
+        b.backward(&d);
+        b.update(0.1);
+        assert_ne!(a.get_weights().data(), b.get_weights().data());
+    }
+
+    #[test]
+    fn eval_mode_caches_nothing_and_update_noops() {
+        let mut rng = Rng::new(8);
+        let mut grid = TileGrid::analog(4, 6, true, mapped(3, 2, RPUConfig::perfect()), &mut rng);
+        grid.set_train(false);
+        let x = Matrix::rand_uniform(2, 6, -1.0, 1.0, &mut rng);
+        let w0 = grid.get_weights();
+        grid.forward(&x);
+        grid.update(0.5); // no caches → no-op
+        assert_eq!(grid.get_weights().data(), w0.data());
+    }
+
+    #[test]
+    fn bias_optional_in_param_count() {
+        let mut rng = Rng::new(9);
+        let with = TileGrid::analog(4, 6, true, RPUConfig::perfect(), &mut rng);
+        let without = TileGrid::analog(4, 6, false, RPUConfig::perfect(), &mut rng);
+        assert_eq!(with.num_params(), 28);
+        assert_eq!(without.num_params(), 24);
+        assert!(with.has_bias());
+        assert!(!without.has_bias());
+    }
+}

@@ -5,11 +5,13 @@
 pub mod analog;
 pub mod forward;
 pub mod fp;
+pub mod grid;
 pub mod inference;
 pub mod pulsed_ops;
 
 pub use analog::AnalogTile;
 pub use fp::FloatingPointTile;
+pub use grid::TileGrid;
 pub use inference::InferenceTile;
 
 use crate::util::matrix::Matrix;

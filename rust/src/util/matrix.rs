@@ -198,6 +198,47 @@ impl Matrix {
         }
     }
 
+    /// Gather a column block: `dst[b, :] = self[b, col0 .. col0+dst.cols()]`
+    /// for every row. `dst` is a preallocated `rows × len` matrix — the
+    /// tile-grid engine reuses one buffer per input shard, so the hot path
+    /// never allocates.
+    pub fn copy_col_block(&self, col0: usize, dst: &mut Matrix) {
+        assert_eq!(dst.rows, self.rows);
+        let len = dst.cols;
+        assert!(col0 + len <= self.cols, "column block out of range");
+        for b in 0..self.rows {
+            let src = &self.data[b * self.cols + col0..b * self.cols + col0 + len];
+            dst.row_mut(b).copy_from_slice(src);
+        }
+    }
+
+    /// Scatter a column block: `self[b, col0 .. col0+src.cols()] = src[b, :]`
+    /// (the inverse of [`Self::copy_col_block`]).
+    pub fn scatter_col_block(&mut self, col0: usize, src: &Matrix) {
+        assert_eq!(src.rows, self.rows);
+        let len = src.cols;
+        assert!(col0 + len <= self.cols, "column block out of range");
+        for b in 0..self.rows {
+            self.data[b * self.cols + col0..b * self.cols + col0 + len]
+                .copy_from_slice(src.row(b));
+        }
+    }
+
+    /// Accumulate a column block:
+    /// `self[b, col0 .. col0+src.cols()] += src[b, :]` — the digital
+    /// partial-sum reduction of the tile-grid engine.
+    pub fn add_col_block(&mut self, col0: usize, src: &Matrix) {
+        assert_eq!(src.rows, self.rows);
+        let len = src.cols;
+        assert!(col0 + len <= self.cols, "column block out of range");
+        for b in 0..self.rows {
+            let dst = &mut self.data[b * self.cols + col0..b * self.cols + col0 + len];
+            for (d, &s) in dst.iter_mut().zip(src.row(b).iter()) {
+                *d += s;
+            }
+        }
+    }
+
     /// Elementwise in-place map.
     pub fn map_inplace<F: FnMut(f32) -> f32>(&mut self, mut f: F) {
         for v in self.data.iter_mut() {
@@ -383,6 +424,33 @@ mod tests {
         m.clip(-1.0, 1.0);
         assert_eq!(m.data(), &[-1., -0.5, 0.5, 1.]);
         assert_eq!(m.abs_max(), 1.0);
+    }
+
+    #[test]
+    fn col_block_roundtrip() {
+        let mut rng = Rng::new(31);
+        let m = Matrix::rand_uniform(5, 11, -1.0, 1.0, &mut rng);
+        let mut block = Matrix::zeros(5, 4);
+        m.copy_col_block(3, &mut block);
+        for b in 0..5 {
+            assert_eq!(block.row(b), &m.row(b)[3..7]);
+        }
+        let mut back = Matrix::zeros(5, 11);
+        back.scatter_col_block(3, &block);
+        for b in 0..5 {
+            assert_eq!(&back.row(b)[3..7], block.row(b));
+            assert!(back.row(b)[..3].iter().all(|&v| v == 0.0));
+            assert!(back.row(b)[7..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn add_col_block_accumulates() {
+        let mut y = Matrix::full(2, 4, 1.0);
+        let part = Matrix::from_vec(2, 2, vec![10., 20., 30., 40.]);
+        y.add_col_block(1, &part);
+        y.add_col_block(1, &part);
+        assert_eq!(y.data(), &[1., 21., 41., 1., 1., 61., 81., 1.]);
     }
 
     #[test]

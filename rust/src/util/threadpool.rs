@@ -48,6 +48,44 @@ where
     });
 }
 
+/// Heterogeneous fork-join: run `f(i, &mut items[i])` for every item,
+/// dealing indices to worker threads as they free up (a shared
+/// mutex-guarded iterator, not static chunking). Built for tile-grid
+/// execution, where shard sizes — and therefore task costs — differ: a
+/// worker that finishes a small edge tile immediately picks up the next
+/// one instead of idling behind a pre-assigned chunk.
+///
+/// Each item is handed to exactly one worker, so `f` gets exclusive
+/// `&mut` access; results are deterministic whenever each task only
+/// touches its own item (tiles own their split RNG streams).
+pub fn par_for_each_mut<T: Send, F>(items: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let queue = std::sync::Mutex::new(items.iter_mut().enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                // IterMut items don't borrow from the guard, so the &mut T
+                // outlives the brief lock that dealt it out
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((i, item)) => f(i, item),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
 /// Parallel-for over an index range: runs `f(i)` for i in 0..n with results
 /// collected in order. `f` must be cheap to call in any order.
 pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
@@ -96,6 +134,52 @@ mod tests {
             counter.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_item_once() {
+        let mut data = vec![0u32; 513];
+        par_for_each_mut(&mut data, |i, v| *v += i as u32 + 1);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn for_each_mut_empty_and_single() {
+        let mut empty: Vec<u8> = vec![];
+        par_for_each_mut(&mut empty, |_, _| panic!("should not run"));
+        let mut one = vec![7u8];
+        par_for_each_mut(&mut one, |i, v| {
+            assert_eq!(i, 0);
+            *v = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn for_each_mut_heterogeneous_tasks() {
+        // wildly uneven task costs must still all complete exactly once
+        let mut data: Vec<u64> = (0..64).collect();
+        par_for_each_mut(&mut data, |i, v| {
+            let reps = if i % 16 == 0 { 20_000 } else { 1 };
+            let mut acc = *v;
+            for _ in 0..reps {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            *v = acc;
+        });
+        // spot-check determinism against a sequential replay
+        let mut expect: Vec<u64> = (0..64).collect();
+        for (i, v) in expect.iter_mut().enumerate() {
+            let reps = if i % 16 == 0 { 20_000 } else { 1 };
+            let mut acc = *v;
+            for _ in 0..reps {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            *v = acc;
+        }
+        assert_eq!(data, expect);
     }
 
     #[test]

@@ -9,10 +9,10 @@
 //!   bit-equality.
 
 use aihwsim::config::{
-    BoundManagement, IOParameters, InferenceRPUConfig, NoiseManagement, PulseType, RPUConfig,
-    UpdateParameters, WeightNoiseType,
+    BoundManagement, IOParameters, InferenceRPUConfig, MappingParameter, NoiseManagement,
+    PulseType, RPUConfig, UpdateParameters, WeightNoiseType,
 };
-use aihwsim::tile::{AnalogTile, FloatingPointTile, InferenceTile, Tile};
+use aihwsim::tile::{AnalogTile, FloatingPointTile, InferenceTile, Tile, TileGrid};
 use aihwsim::util::matrix::Matrix;
 use aihwsim::util::rng::Rng;
 use aihwsim::util::stats;
@@ -270,6 +270,123 @@ fn inference_tile_batched_statistics_match() {
     assert!((mb - ms).abs() < 0.05, "means {mb} vs {ms}");
     assert!((sb - ss).abs() < 0.03, "stds {sb} vs {ss}");
     assert!(sb > 0.0, "read noise must be present");
+}
+
+// ----------------------------------------------------------- tile grid
+
+/// Weights/inputs on a coarse dyadic lattice (multiples of 1/64 resp.
+/// 1/32, small magnitudes): every product and partial sum is exactly
+/// representable in f32, so summation order cannot change the result and
+/// split-vs-unsplit comparisons are **bitwise**.
+fn dyadic_weights(out: usize, inp: usize) -> Matrix {
+    let mut w = Matrix::zeros(out, inp);
+    for i in 0..out {
+        for j in 0..inp {
+            w.set(i, j, ((i * inp + j) % 17) as f32 / 64.0 - 0.125);
+        }
+    }
+    w
+}
+
+fn dyadic_inputs(batch: usize, inp: usize) -> Matrix {
+    let mut x = Matrix::zeros(batch, inp);
+    for b in 0..batch {
+        for j in 0..inp {
+            x.set(b, j, ((b * inp + j) % 23) as f32 / 32.0 - 0.34375);
+        }
+    }
+    x
+}
+
+#[test]
+fn grid_2d_perfect_matches_single_fp_tile_exactly() {
+    // a layer with BOTH dims beyond the tile limit, under a perfect
+    // config, must reproduce the un-split FP reference bit for bit
+    let (out, inp) = (24, 40);
+    let mut cfg = RPUConfig::perfect();
+    cfg.mapping = MappingParameter::max_size(16); // 2×3 grid
+    let mut grid = TileGrid::analog(out, inp, false, cfg, &mut Rng::new(1));
+    assert_eq!(grid.num_tiles(), 6);
+    let w = dyadic_weights(out, inp);
+    grid.set_weights(&w);
+    grid.set_train(false);
+    let mut fp = FloatingPointTile::new(out, inp);
+    fp.set_weights(&w);
+
+    let x = dyadic_inputs(9, inp);
+    let y = grid.forward(&x);
+    let mut y_ref = Matrix::zeros(9, out);
+    fp.forward_batch(&x, &mut y_ref);
+    assert_eq!(y.data(), y_ref.data(), "forward must match the FP reference exactly");
+
+    let d = dyadic_inputs(9, out);
+    let g = grid.backward(&d);
+    let mut g_ref = Matrix::zeros(9, inp);
+    fp.backward_batch(&d, &mut g_ref);
+    assert_eq!(g.data(), g_ref.data(), "backward must match the FP reference exactly");
+}
+
+#[test]
+fn grid_2d_perfect_matches_fp_reference_random_values() {
+    // same comparison with arbitrary floats: equal to float tolerance
+    // (summation order differs across the split boundary)
+    let (out, inp) = (13, 29);
+    let mut cfg = RPUConfig::perfect();
+    cfg.mapping = MappingParameter { max_input_size: 8, max_output_size: 5 };
+    let mut rng = Rng::new(2);
+    let mut grid = TileGrid::analog(out, inp, false, cfg, &mut rng);
+    assert_eq!(grid.num_tiles(), 3 * 4);
+    let w = Matrix::rand_uniform(out, inp, -0.5, 0.5, &mut rng);
+    grid.set_weights(&w);
+    grid.set_train(false);
+    let x = Matrix::rand_uniform(7, inp, -1.0, 1.0, &mut rng);
+    let y = grid.forward(&x);
+    for b in 0..7 {
+        let expect = w.matvec(x.row(b));
+        for (a, e) in y.row(b).iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-5, "row {b}: {a} vs {e}");
+        }
+    }
+}
+
+/// One fixed-seed train step on a 3×3 grid with the full default noise
+/// pipeline; returns (forward, input grads, post-update weights).
+fn noisy_grid_trajectory(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut cfg = RPUConfig::default();
+    cfg.weight_scaling_omega = 0.0;
+    cfg.mapping = MappingParameter::max_size(8);
+    let mut rng = Rng::new(seed);
+    let mut grid = TileGrid::analog(20, 24, true, cfg, &mut rng);
+    assert_eq!(grid.num_tiles(), 9);
+    let x = dyadic_inputs(6, 24);
+    let d = dyadic_inputs(6, 20);
+    let y = grid.forward(&x);
+    let g = grid.backward(&d);
+    grid.update(0.05);
+    grid.post_batch();
+    let w = grid.get_weights();
+    (y.data().to_vec(), g.data().to_vec(), w.data().to_vec())
+}
+
+#[test]
+fn grid_bit_identical_across_thread_counts() {
+    // tiles own decorrelated Rng::split streams, so the parallel shard
+    // fan-out must be bit-deterministic at any AIHWSIM_THREADS
+    let saved = std::env::var("AIHWSIM_THREADS").ok();
+    std::env::set_var("AIHWSIM_THREADS", "1");
+    let serial = noisy_grid_trajectory(42);
+    std::env::set_var("AIHWSIM_THREADS", "4");
+    let parallel = noisy_grid_trajectory(42);
+    match saved {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+    assert_eq!(serial.0, parallel.0, "forward bits differ across thread counts");
+    assert_eq!(serial.1, parallel.1, "backward bits differ across thread counts");
+    assert_eq!(serial.2, parallel.2, "updated weights differ across thread counts");
+    // sanity: a different seed produces a different trajectory
+    let other = noisy_grid_trajectory(43);
+    assert_ne!(serial.0, other.0);
 }
 
 // ------------------------------------------------------------- updates

@@ -154,6 +154,56 @@ fn runtime_artifacts_or_graceful_skip() {
 }
 
 #[test]
+fn grid_mapped_training_to_inference_lifecycle() {
+    // a layer whose in AND out features exceed the tile limit trains on a
+    // 2D multi-tile grid, checkpoints per shard, and programs onto PCM
+    // inference tiles from the grid checkpoint
+    use aihwsim::config::MappingParameter;
+    use aihwsim::coordinator::checkpoint::{grids_from_json, grids_to_json, GridLayer};
+    let mut rng = Rng::new(6);
+    let ds = synthetic_images(240, 4, 8, 1, &mut rng);
+    let mut cfg = RPUConfig::default();
+    cfg.device = DeviceConfig::Single(presets::idealized());
+    cfg.mapping = MappingParameter { max_input_size: 32, max_output_size: 16 };
+    let mut model = mlp(&[64, 24, 4], Backend::Analog, &cfg, &mut rng);
+    assert!(model.summary().contains("2x2 tiles"), "{}", model.summary());
+    let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.2, seed: 13, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &ds, &ds, &tc);
+    let best = rep.epoch_test_acc.iter().cloned().fold(0.0f64, f64::max);
+    assert!(best > 0.5, "grid-mapped training works: {:?}", rep.epoch_test_acc);
+
+    // per-shard checkpoint of both linear layers, through JSON
+    let mut layers = Vec::new();
+    for idx in [0usize, 2] {
+        let lin = model
+            .module_mut(idx)
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            .unwrap();
+        layers.push(GridLayer::from_grid(lin.grid_mut()));
+    }
+    assert_eq!(layers[0].shards.len(), 4); // 24×64 over 16/32 limits → 2×2
+    let json = grids_to_json(&layers);
+    let restored = grids_from_json(&Json::parse(&json.to_string()).unwrap()).unwrap();
+
+    // dense assembly must match the grids' logical weight export
+    let lin0 = model
+        .module_mut(0)
+        .as_any_mut()
+        .and_then(|a| a.downcast_mut::<AnalogLinear>())
+        .unwrap();
+    let (dense0, _) = restored[0].assemble();
+    assert_eq!(dense0.data(), lin0.get_weights().data());
+
+    // program the grid checkpoint onto PCM inference tiles and evaluate
+    let icfg = InferenceRPUConfig::default();
+    let mut net = InferenceMlp::from_grid_checkpoint(&restored, &icfg, &mut rng);
+    net.program();
+    let series = accuracy_over_time(&mut net, &ds, &[25.0, 1e5], 32);
+    assert!(series[0].1 > best - 0.15, "programmed accuracy {series:?} vs trained {best}");
+}
+
+#[test]
 fn deterministic_replay_same_seed() {
     // identical seeds → identical training trajectories (reproducibility)
     let run = |seed: u64| {
