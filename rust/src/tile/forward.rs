@@ -24,18 +24,30 @@
 //! results are bit-deterministic for a given tile seed regardless of the
 //! worker-thread count. The scalar [`analog_mvm`] remains the reference
 //! implementation (and handles the rare bound-management retries).
+//!
+//! **Micro-kernels.** All inner loops route through
+//! [`crate::tile::kernels`]: lane-blocked multi-accumulator dots,
+//! register-tiled 4-samples-per-weight-row batched passes, and fused
+//! MVM+variance reductions — see that module's determinism contract.
+//! Gaussian noise is drawn through batched
+//! [`Rng::fill_normal_f32`] fills into a scratch buffer, one pass per
+//! pipeline stage, never one scalar Box–Muller call per element.
 
 use crate::config::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
-use crate::util::matrix::{axpy, dot, Matrix};
+use crate::tile::kernels;
+use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_chunks_mut;
 
 /// Reusable scratch buffers for the scalar MVM pipeline (hot path: no
-/// allocation).
+/// allocation). `noise` is the shared Gaussian buffer filled in one
+/// batched [`Rng::fill_normal_f32`] pass per pipeline stage — the
+/// per-element noise loops never call the scalar sampler.
 #[derive(Default)]
 pub struct MvmScratch {
     xq: Vec<f32>,
     var: Vec<f32>,
+    noise: Vec<f32>,
 }
 
 /// Reusable state for the batched kernel: one decorrelated RNG stream per
@@ -86,34 +98,63 @@ fn nm_scale_for(io: &IOParameters, amax: f32) -> f32 {
     }
 }
 
-/// DAC stage for one input row: scale, clip, quantize, input noise.
+/// Fill the scratch noise buffer with `n` standard normals in one
+/// batched pass and return it as a slice.
 #[inline]
-fn dac_row(x: &[f32], scale: f32, io: &IOParameters, rng: &mut Rng, xq: &mut [f32]) {
+fn draw_noise<'a>(noise: &'a mut Vec<f32>, n: usize, rng: &mut Rng) -> &'a [f32] {
+    noise.resize(n, 0.0);
+    rng.fill_normal_f32(&mut noise[..n]);
+    &noise[..n]
+}
+
+/// DAC stage for one input row: scale, clip, quantize, input noise. The
+/// input noise comes from the shared scratch buffer, filled in one
+/// batched pass instead of one scalar Box–Muller call per element.
+#[inline]
+fn dac_row(
+    x: &[f32],
+    scale: f32,
+    io: &IOParameters,
+    rng: &mut Rng,
+    xq: &mut [f32],
+    noise: &mut Vec<f32>,
+) {
     let inp_step = io.inp_res * 2.0 * io.inp_bound;
     for (q, &v) in xq.iter_mut().zip(x.iter()) {
         let s = (v / scale).clamp(-io.inp_bound, io.inp_bound);
-        let mut qv = quantize(s, inp_step, io.inp_sto_round, rng);
-        if io.inp_noise > 0.0 {
-            qv += io.inp_noise * rng.normal() as f32;
+        *q = quantize(s, inp_step, io.inp_sto_round, rng);
+    }
+    if io.inp_noise > 0.0 {
+        let z = draw_noise(noise, xq.len(), rng);
+        for (q, &zi) in xq.iter_mut().zip(z.iter()) {
+            *q += io.inp_noise * zi;
         }
-        *q = qv;
     }
 }
 
 /// Add the output-referred weight noise (if `var` is given) and the
-/// additive output noise to one output row.
+/// additive output noise to one output row. Both stages draw from the
+/// shared scratch noise buffer (one batched fill per stage).
 #[inline]
-fn noise_epilogue(y: &mut [f32], var: Option<&[f32]>, io: &IOParameters, rng: &mut Rng) {
+fn noise_epilogue(
+    y: &mut [f32],
+    var: Option<&[f32]>,
+    io: &IOParameters,
+    rng: &mut Rng,
+    noise: &mut Vec<f32>,
+) {
     if let Some(var) = var {
-        for (yi, &v) in y.iter_mut().zip(var.iter()) {
+        let z = draw_noise(noise, y.len(), rng);
+        for ((yi, &v), &zi) in y.iter_mut().zip(var.iter()).zip(z.iter()) {
             if v > 0.0 {
-                *yi += v.sqrt() * rng.normal() as f32;
+                *yi += v.sqrt() * zi;
             }
         }
     }
     if io.out_noise > 0.0 {
-        for yi in y.iter_mut() {
-            *yi += io.out_noise * rng.normal() as f32;
+        let z = draw_noise(noise, y.len(), rng);
+        for (yi, &zi) in y.iter_mut().zip(z.iter()) {
+            *yi += io.out_noise * zi;
         }
     }
 }
@@ -130,10 +171,16 @@ fn adc_row(y: &mut [f32], scale: f32, io: &IOParameters, rng: &mut Rng) {
 
 /// Pure output-noise row for an all-zero input (nothing reaches the DAC).
 #[inline]
-fn zero_input_row(y: &mut [f32], io: &IOParameters, rng: &mut Rng) {
+fn zero_input_row(y: &mut [f32], io: &IOParameters, rng: &mut Rng, noise: &mut Vec<f32>) {
     let out_step = io.out_res * 2.0 * io.out_bound;
+    if io.out_noise > 0.0 {
+        let z = draw_noise(noise, y.len(), rng);
+        y.copy_from_slice(z);
+    } else {
+        y.iter_mut().for_each(|v| *v = 0.0);
+    }
     for yi in y.iter_mut() {
-        let v = io.out_noise * rng.normal() as f32;
+        let v = io.out_noise * *yi;
         *yi = quantize(v.clamp(-io.out_bound, io.out_bound), out_step, io.out_sto_round, rng);
     }
 }
@@ -193,7 +240,7 @@ fn analog_mvm_from(
     let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
     if amax == 0.0 {
         // all-zero input: output is pure output noise through the ADC
-        zero_input_row(y, io, rng);
+        zero_input_row(y, io, rng, &mut scratch.noise);
         return;
     }
     let nm_scale = nm_scale_for(io, amax);
@@ -211,13 +258,13 @@ fn analog_mvm_from(
     for attempt in first_attempt..max_attempts {
         let scale = nm_scale * bm_factor;
         // --- DAC: scale, clip, quantize, input noise ---
-        dac_row(x, scale, io, rng, &mut scratch.xq);
+        dac_row(x, scale, io, rng, &mut scratch.xq, &mut scratch.noise);
 
         // --- analog MVM + weight-noise variance accumulation ---
         let need_var = w_noise_var.is_some() || io.w_noise > 0.0;
         if !need_var {
             mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
-            noise_epilogue(y, None, io, rng);
+            noise_epilogue(y, None, io, rng, &mut scratch.noise);
         } else {
             match (w_noise_var, io.w_noise_type) {
                 (Some(var), _) => {
@@ -234,7 +281,7 @@ fn analog_mvm_from(
                     mvm_rel_var(w, io.w_noise, rows, cols, &scratch.xq, y, sv, transposed);
                 }
             }
-            noise_epilogue(y, Some(&scratch.var), io, rng);
+            noise_epilogue(y, Some(&scratch.var), io, rng, &mut scratch.noise);
         }
 
         // --- bound management: retry at half input scale if clipping ---
@@ -338,7 +385,11 @@ fn batch_worker(
     let mut scales = [1.0f32; BATCH_BLOCK];
     let mut x2 = [0.0f32; BATCH_BLOCK];
     let mut zero = [false; BATCH_BLOCK];
-    let mut retry_scratch = MvmScratch::default();
+    // One shared scalar scratch per worker: its `noise` buffer serves the
+    // DAC/epilogue one-pass fills AND the rare bound-management resume —
+    // the retry re-enters the scalar pipeline with the same buffers
+    // instead of redrawing per element.
+    let mut scalar = MvmScratch::default();
 
     for block in chunk.chunks_mut(BATCH_BLOCK) {
         // --- DAC: per-row noise management, clip, quantize, input noise ---
@@ -352,36 +403,43 @@ fn batch_worker(
                 continue;
             }
             scales[s] = nm_scale_for(io, amax);
-            dac_row(task.x, scales[s], io, task.rng, row_q);
+            dac_row(task.x, scales[s], io, task.rng, row_q, &mut scalar.noise);
             if add_const {
                 x2[s] = row_q.iter().map(|v| v * v).sum();
             }
         }
 
-        // --- fused block MVM: one streaming pass over W per block ---
-        // (same blocked dot/axpy loops as `mvm_plain_batch` — keep the two
-        // in sync; they differ only in the row-task shape)
+        // --- fused block MVM: one streaming pass over W per block, the
+        // inner loops register-tiled over SAMPLE_BLOCK samples. The
+        // no-variance branch reuses the exact `mvm_plain_batch` block
+        // kernel through per-row views onto the DAC'd scratch; full
+        // blocks stage the views on the stack (chunks_mut makes every
+        // block full except possibly the last, which may take one tiny
+        // Vec per chunk) ---
         if !fused_var {
-            if !transposed {
-                for r in 0..rows {
-                    let wr = &w[r * cols..(r + 1) * cols];
-                    for (s, task) in block.iter_mut().enumerate() {
-                        task.y[r] = dot(wr, &xq[s * in_size..(s + 1) * in_size]);
-                    }
-                }
+            if let [t0, t1, t2, t3, t4, t5, t6, t7] = block {
+                let view = |s: usize| &xq[s * in_size..(s + 1) * in_size];
+                let mut views = [
+                    PlainTask { x: view(0), y: &mut *t0.y },
+                    PlainTask { x: view(1), y: &mut *t1.y },
+                    PlainTask { x: view(2), y: &mut *t2.y },
+                    PlainTask { x: view(3), y: &mut *t3.y },
+                    PlainTask { x: view(4), y: &mut *t4.y },
+                    PlainTask { x: view(5), y: &mut *t5.y },
+                    PlainTask { x: view(6), y: &mut *t6.y },
+                    PlainTask { x: view(7), y: &mut *t7.y },
+                ];
+                plain_task_block(w, rows, cols, &mut views, transposed);
             } else {
-                for task in block.iter_mut() {
-                    task.y.iter_mut().for_each(|v| *v = 0.0);
-                }
-                for r in 0..rows {
-                    let wr = &w[r * cols..(r + 1) * cols];
-                    for (s, task) in block.iter_mut().enumerate() {
-                        let xr = xq[s * in_size + r];
-                        if xr != 0.0 {
-                            axpy(xr, wr, task.y);
-                        }
-                    }
-                }
+                let mut views: Vec<PlainTask> = block
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(s, task)| PlainTask {
+                        x: &xq[s * in_size..(s + 1) * in_size],
+                        y: &mut *task.y,
+                    })
+                    .collect();
+                plain_task_block(w, rows, cols, &mut views, transposed);
             }
         } else {
             mvm_var_block(
@@ -401,7 +459,7 @@ fn batch_worker(
         // --- per-row epilogue: noises, bound management, ADC ---
         for (s, task) in block.iter_mut().enumerate() {
             if zero[s] {
-                zero_input_row(task.y, io, task.rng);
+                zero_input_row(task.y, io, task.rng, &mut scalar.noise);
                 continue;
             }
             if add_const {
@@ -409,7 +467,7 @@ fn batch_worker(
                 var[s * out_size..(s + 1) * out_size].iter_mut().for_each(|v| *v = sig2);
             }
             let vrow = if need_var { Some(&var[s * out_size..(s + 1) * out_size]) } else { None };
-            noise_epilogue(task.y, vrow, io, task.rng);
+            noise_epilogue(task.y, vrow, io, task.rng, &mut scalar.noise);
 
             let clipped = task.y.iter().any(|&v| v.abs() >= io.out_bound);
             if clipped
@@ -418,7 +476,9 @@ fn batch_worker(
             {
                 // rare path: the fused pass was this row's attempt 0, so
                 // resume the scalar bound-management loop at attempt 1
-                // (input scale halved), matching the scalar distribution
+                // (input scale halved), matching the scalar distribution;
+                // the shared `scalar` scratch hands the resume the same
+                // one-pass noise buffer the fused path used
                 analog_mvm_from(
                     w,
                     rows,
@@ -429,7 +489,7 @@ fn batch_worker(
                     w_noise_var,
                     transposed,
                     task.rng,
-                    &mut retry_scratch,
+                    &mut scalar,
                     1,
                 );
                 continue;
@@ -464,12 +524,7 @@ fn mvm_var_block(
                     let vr = &vm[r * cols..(r + 1) * cols];
                     for (s, task) in block.iter_mut().enumerate() {
                         let xrow = &xq[s * in_size..(s + 1) * in_size];
-                        let mut acc = 0.0f32;
-                        let mut vacc = 0.0f32;
-                        for j in 0..cols {
-                            acc += wr[j] * xrow[j];
-                            vacc += vr[j] * xrow[j] * xrow[j];
-                        }
+                        let (acc, vacc) = kernels::dot_with_var(wr, vr, xrow);
                         task.y[r] = acc;
                         var[s * out_size + r] = vacc;
                     }
@@ -478,13 +533,7 @@ fn mvm_var_block(
                     debug_assert_eq!(noise_type, WeightNoiseType::RelativeToWeight);
                     for (s, task) in block.iter_mut().enumerate() {
                         let xrow = &xq[s * in_size..(s + 1) * in_size];
-                        let mut acc = 0.0f32;
-                        let mut vacc = 0.0f32;
-                        for j in 0..cols {
-                            let wx = wr[j] * xrow[j];
-                            acc += wx;
-                            vacc += wx * wx;
-                        }
+                        let (acc, vacc) = kernels::dot_sq(wr, xrow);
                         task.y[r] = acc;
                         var[s * out_size + r] = s2 * vacc;
                     }
@@ -507,10 +556,7 @@ fn mvm_var_block(
                             continue;
                         }
                         let vrow = &mut var[s * out_size..(s + 1) * out_size];
-                        for j in 0..cols {
-                            task.y[j] += xr * wr[j];
-                            vrow[j] += vr[j] * xr * xr;
-                        }
+                        kernels::axpy_with_var(xr, wr, vr, task.y, vrow);
                     }
                 }
                 None => {
@@ -520,11 +566,7 @@ fn mvm_var_block(
                             continue;
                         }
                         let vrow = &mut var[s * out_size..(s + 1) * out_size];
-                        for j in 0..cols {
-                            let wx = xr * wr[j];
-                            task.y[j] += wx;
-                            vrow[j] += s2 * wx * wx;
-                        }
+                        kernels::axpy_sq(xr, s2, wr, task.y, vrow);
                     }
                 }
             }
@@ -533,9 +575,11 @@ fn mvm_var_block(
 }
 
 /// Noise-free batched MVM `Y = X·Wᵀ` (or `X·W` when `transposed`):
-/// blocked over the batch and parallelized with the same chunking as the
-/// analog kernel. This is the perfect-path / FP-tile GEMM. (Same blocked
-/// dot/axpy loops as `batch_worker`'s no-variance branch — keep in sync.)
+/// register-tiled over the batch ([`kernels::SAMPLE_BLOCK`] samples per
+/// weight-row pass) and parallelized with the same chunking as the
+/// analog kernel. This is the perfect-path / FP-tile GEMM.
+/// `batch_worker`'s no-variance branch reuses the same
+/// [`plain_task_block`] kernel through per-row views.
 pub fn mvm_plain_batch(
     w: &[f32],
     rows: usize,
@@ -553,10 +597,6 @@ pub fn mvm_plain_batch(
         return;
     }
 
-    struct PlainTask<'a> {
-        x: &'a [f32],
-        y: &'a mut [f32],
-    }
     let mut tasks: Vec<PlainTask> = x
         .data()
         .chunks(in_size)
@@ -567,37 +607,79 @@ pub fn mvm_plain_batch(
     let min_rows = 1 + PAR_MIN_MACS / (rows * cols).max(1);
     par_chunks_mut(&mut tasks, min_rows, |_, chunk| {
         for block in chunk.chunks_mut(BATCH_BLOCK) {
-            if !transposed {
-                for r in 0..rows {
-                    let wr = &w[r * cols..(r + 1) * cols];
-                    for task in block.iter_mut() {
-                        task.y[r] = dot(wr, task.x);
-                    }
-                }
-            } else {
-                for task in block.iter_mut() {
-                    task.y.iter_mut().for_each(|v| *v = 0.0);
-                }
-                for r in 0..rows {
-                    let wr = &w[r * cols..(r + 1) * cols];
-                    for task in block.iter_mut() {
-                        let xr = task.x[r];
-                        if xr != 0.0 {
-                            axpy(xr, wr, task.y);
-                        }
-                    }
-                }
-            }
+            plain_task_block(w, rows, cols, block, transposed);
         }
     });
 }
 
-/// Plain (noise-free) MVM used by the perfect path and inside the pipeline.
+struct PlainTask<'a> {
+    x: &'a [f32],
+    y: &'a mut [f32],
+}
+
+/// Register-tiled noise-free MVM over one block of plain tasks — THE
+/// fused block kernel: [`kernels::SAMPLE_BLOCK`]-sample passes over each
+/// weight row, lane-blocked dots for the remainder samples. Used
+/// directly by [`mvm_plain_batch`] and, through per-row views onto the
+/// DAC'd scratch, by `batch_worker`'s no-variance branch.
+fn plain_task_block(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    block: &mut [PlainTask],
+    transposed: bool,
+) {
+    const SB: usize = kernels::SAMPLE_BLOCK;
+    let quads = block.len() / SB * SB;
+    if !transposed {
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            for quad in block[..quads].chunks_exact_mut(SB) {
+                let ys = kernels::dot_x4(wr, [quad[0].x, quad[1].x, quad[2].x, quad[3].x]);
+                for (t, task) in quad.iter_mut().enumerate() {
+                    task.y[r] = ys[t];
+                }
+            }
+            for task in block[quads..].iter_mut() {
+                task.y[r] = kernels::dot(wr, task.x);
+            }
+        }
+    } else {
+        for task in block.iter_mut() {
+            task.y.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for r in 0..rows {
+            let wr = &w[r * cols..(r + 1) * cols];
+            for quad in block[..quads].chunks_exact_mut(SB) {
+                let a = [quad[0].x[r], quad[1].x[r], quad[2].x[r], quad[3].x[r]];
+                if a == [0.0; SB] {
+                    continue;
+                }
+                let [t0, t1, t2, t3] = quad else { unreachable!() };
+                kernels::axpy_x4(a, wr, [&mut *t0.y, &mut *t1.y, &mut *t2.y, &mut *t3.y]);
+            }
+            for task in block[quads..].iter_mut() {
+                if task.x[r] != 0.0 {
+                    kernels::axpy(task.x[r], wr, task.y);
+                }
+            }
+        }
+    }
+}
+
+/// Plain (noise-free) MVM used by the perfect path and inside the
+/// pipeline. Lane-blocked dots; the transposed path accumulates weight
+/// rows **sequentially in row order** — the same summation order as the
+/// batched transposed kernel ([`kernels::axpy_x4`] adds one row per
+/// pass) — so scalar and batched results stay bit-identical on
+/// noise-free configs. (The digital-side `Matrix::{tmatvec, matmul}`
+/// use the quad-grouped [`kernels::axpy4_acc`] instead; they carry no
+/// exact-equivalence contract with this pipeline.)
 pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], transposed: bool) {
-    debug_assert_eq!(w.len(), rows * cols);
+    assert_eq!(w.len(), rows * cols);
     if !transposed {
         for (r, yr) in y.iter_mut().enumerate() {
-            *yr = dot(&w[r * cols..(r + 1) * cols], x);
+            *yr = kernels::dot(&w[r * cols..(r + 1) * cols], x);
         }
     } else {
         y.iter_mut().for_each(|v| *v = 0.0);
@@ -605,7 +687,7 @@ pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], 
             if xr == 0.0 {
                 continue;
             }
-            axpy(xr, &w[r * cols..(r + 1) * cols], y);
+            kernels::axpy(xr, &w[r * cols..(r + 1) * cols], y);
         }
     }
 }
@@ -626,12 +708,7 @@ fn mvm_with_var(
         for r in 0..rows {
             let wr = &w[r * cols..(r + 1) * cols];
             let vr = &var[r * cols..(r + 1) * cols];
-            let mut s = 0.0f32;
-            let mut vs = 0.0f32;
-            for j in 0..cols {
-                s += wr[j] * x[j];
-                vs += vr[j] * x[j] * x[j];
-            }
+            let (s, vs) = kernels::dot_with_var(wr, vr, x);
             y[r] = s;
             out_var[r] = vs;
         }
@@ -645,10 +722,7 @@ fn mvm_with_var(
             }
             let wr = &w[r * cols..(r + 1) * cols];
             let vr = &var[r * cols..(r + 1) * cols];
-            for j in 0..cols {
-                y[j] += xr * wr[j];
-                out_var[j] += vr[j] * xr * xr;
-            }
+            kernels::axpy_with_var(xr, wr, vr, y, out_var);
         }
     }
 }
@@ -668,13 +742,7 @@ fn mvm_rel_var(
     if !transposed {
         for r in 0..rows {
             let wr = &w[r * cols..(r + 1) * cols];
-            let mut s = 0.0f32;
-            let mut vs = 0.0f32;
-            for j in 0..cols {
-                let wx = wr[j] * x[j];
-                s += wx;
-                vs += wx * wx;
-            }
+            let (s, vs) = kernels::dot_sq(wr, x);
             y[r] = s;
             out_var[r] = s2 * vs;
         }
@@ -687,11 +755,7 @@ fn mvm_rel_var(
                 continue;
             }
             let wr = &w[r * cols..(r + 1) * cols];
-            for j in 0..cols {
-                let wx = xr * wr[j];
-                y[j] += wx;
-                out_var[j] += s2 * wx * wx;
-            }
+            kernels::axpy_sq(xr, s2, wr, y, out_var);
         }
     }
 }

@@ -1,6 +1,10 @@
 //! Floating-point baseline tile: exact digital MVMs and rank updates
 //! through the same [`Tile`] interface, so any network can be switched
 //! between analog and FP execution (the paper's FP comparator, footnote 3).
+//! All compute rides the register-tiled micro-kernels — the scalar paths
+//! via `Matrix::{matvec_into, tmatvec_into}` and the batched paths via
+//! [`mvm_plain_batch`] — so the FP baseline is as fast as the digital
+//! substrate allows (see `crate::tile::kernels`).
 
 use crate::tile::forward::mvm_plain_batch;
 use crate::tile::Tile;

@@ -7,7 +7,10 @@
 //!
 //! * input scatter / output gather with the digital partial-sum reduction
 //!   (`y[:, rows_r] = Σ_c tile_{r,c}(x[:, cols_c])`), through reusable
-//!   scratch buffers — the hot path performs no per-tile allocations;
+//!   scratch buffers — the hot path performs no per-tile allocations and
+//!   the reduction rides the bounds-check-free
+//!   [`crate::tile::kernels::vadd`] micro-kernel
+//!   (via [`Matrix::add_col_block`]);
 //! * the digital bias and its gradient;
 //! * the x/d caches for the update step, **consume-once**: `update`
 //!   takes the cached gradient so a second call cannot re-pulse the

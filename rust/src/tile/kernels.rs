@@ -1,0 +1,463 @@
+//! Register-tiled, SIMD-width micro-kernels — the innermost compute layer.
+//!
+//! Every hot loop in the simulator bottoms out here. The design targets
+//! what `rustc`/LLVM can and cannot do with strict IEEE semantics:
+//!
+//! * **Multi-accumulator lane blocking.** A single-accumulator
+//!   `for j { acc += w[j] * x[j] }` is a loop-carried floating-point
+//!   dependency that LLVM will *not* reassociate (it would change the
+//!   result), so it runs at one FMA per add-latency instead of one per
+//!   issue slot. We split the reduction into [`LANES`] independent
+//!   accumulators over `chunks_exact(LANES)` blocks; LLVM keeps IEEE
+//!   semantics per accumulator and vectorizes the 8 lanes into SIMD
+//!   registers.
+//! * **Sample blocking (register tiling).** The batched kernels process
+//!   [`SAMPLE_BLOCK`] input rows per pass over a weight row, GEMM-style:
+//!   each `w[j]` is loaded once and multiplied into 4 samples' lane
+//!   accumulators while it sits in a register, quartering the streaming
+//!   traffic over `W` for large tiles.
+//! * **Hoisted bounds checks.** Every kernel asserts slice lengths once,
+//!   ahead of the inner loop, so LLVM proves the indexing in-bounds and
+//!   elides per-element checks.
+//!
+//! **Determinism contract.** Each output element is a reduction with a
+//! *fixed summation order* that depends only on the slice length: lane
+//! `l` accumulates elements `l, l+LANES, l+2·LANES, …`, the lanes are
+//! combined pairwise as `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`, and the
+//! tail (`len % LANES`) is added last, in index order. Sample blocking
+//! never changes a sample's own reduction order — [`dot_x4`] is
+//! bit-identical to four [`dot`] calls — so results are independent of
+//! batch position, chunk boundaries, and therefore of `AIHWSIM_THREADS`.
+//! The [`reference`] module keeps the plain single-accumulator kernels;
+//! tests and benches compare against it (equal within 1e-5 relative
+//! tolerance in general, bit-equal on dyadic values where every
+//! summation order is exact).
+
+/// SIMD-width lane count of the blocked reductions (8 × f32 = one AVX2
+/// register). Fixed — results must not depend on the host ISA.
+pub const LANES: usize = 8;
+
+/// Samples processed per weight-row pass by the register-tiled batched
+/// kernels.
+pub const SAMPLE_BLOCK: usize = 4;
+
+/// Lane-blocked dot product `Σ_j a[j]·b[j]` with [`LANES`] independent
+/// accumulators and the fixed reduction order of the module contract.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    let mut lanes = [0.0f32; LANES];
+    let (a8, a_tail) = a.split_at(n - n % LANES);
+    let (b8, b_tail) = b.split_at(n - n % LANES);
+    for (av, bv) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lanes[l] += av[l] * bv[l];
+        }
+    }
+    let mut s = reduce_lanes(&lanes);
+    for (av, bv) in a_tail.iter().zip(b_tail.iter()) {
+        s += av * bv;
+    }
+    s
+}
+
+/// The fixed pairwise lane reduction: `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`.
+#[inline]
+fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Register-tiled dot of one weight row against [`SAMPLE_BLOCK`] input
+/// rows: `w` is streamed once, each `w[j]` multiplied into all four
+/// samples from a register. Bit-identical to four [`dot`] calls.
+#[inline]
+pub fn dot_x4(w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+    let n = w.len();
+    for x in &xs {
+        assert_eq!(n, x.len());
+    }
+    let mut lanes = [[0.0f32; LANES]; SAMPLE_BLOCK];
+    let blocks = n - n % LANES;
+    for jb in (0..blocks).step_by(LANES) {
+        let wv = &w[jb..jb + LANES];
+        for (s, x) in xs.iter().enumerate() {
+            let xv = &x[jb..jb + LANES];
+            for l in 0..LANES {
+                lanes[s][l] += wv[l] * xv[l];
+            }
+        }
+    }
+    let mut out = [0.0f32; SAMPLE_BLOCK];
+    for (s, x) in xs.iter().enumerate() {
+        let mut acc = reduce_lanes(&lanes[s]);
+        for j in blocks..n {
+            acc += w[j] * x[j];
+        }
+        out[s] = acc;
+    }
+    out
+}
+
+/// Fused dot + per-element-variance reduction (the `w_noise_var` path):
+/// returns `(Σ_j w[j]·x[j], Σ_j v[j]·x[j]²)` with both reductions lane
+/// blocked in the contract order.
+#[inline]
+pub fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+    let n = w.len();
+    assert_eq!(n, v.len());
+    assert_eq!(n, x.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut vlanes = [0.0f32; LANES];
+    let blocks = n - n % LANES;
+    for jb in (0..blocks).step_by(LANES) {
+        let (wv, vv, xv) = (&w[jb..jb + LANES], &v[jb..jb + LANES], &x[jb..jb + LANES]);
+        for l in 0..LANES {
+            lanes[l] += wv[l] * xv[l];
+            vlanes[l] += vv[l] * (xv[l] * xv[l]);
+        }
+    }
+    let (mut s, mut vs) = (reduce_lanes(&lanes), reduce_lanes(&vlanes));
+    for j in blocks..n {
+        s += w[j] * x[j];
+        vs += v[j] * (x[j] * x[j]);
+    }
+    (s, vs)
+}
+
+/// Fused dot + squared-term reduction (the relative-weight-noise path):
+/// returns `(Σ_j w[j]·x[j], Σ_j (w[j]·x[j])²)` — the caller scales the
+/// second term by σ².
+#[inline]
+pub fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
+    let n = w.len();
+    assert_eq!(n, x.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut vlanes = [0.0f32; LANES];
+    let blocks = n - n % LANES;
+    for jb in (0..blocks).step_by(LANES) {
+        let (wv, xv) = (&w[jb..jb + LANES], &x[jb..jb + LANES]);
+        for l in 0..LANES {
+            let wx = wv[l] * xv[l];
+            lanes[l] += wx;
+            vlanes[l] += wx * wx;
+        }
+    }
+    let (mut s, mut vs) = (reduce_lanes(&lanes), reduce_lanes(&vlanes));
+    for j in blocks..n {
+        let wx = w[j] * x[j];
+        s += wx;
+        vs += wx * wx;
+    }
+    (s, vs)
+}
+
+/// Rank-1 axpy `y[j] += a·x[j]` with the length assert hoisted so the
+/// loop vectorizes without bounds checks. (No reduction — element-wise,
+/// so plain iteration is already the right shape for LLVM.)
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// Register-tiled transposed update: `ys[s][j] += a[s]·x[j]` for four
+/// output rows per pass — `x` (a weight row) is streamed once per
+/// [`SAMPLE_BLOCK`] samples on the backward/transposed path.
+#[inline]
+pub fn axpy_x4(a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+    let n = x.len();
+    for y in &ys {
+        assert_eq!(n, y.len());
+    }
+    let [y0, y1, y2, y3] = ys;
+    for j in 0..n {
+        let xj = x[j];
+        y0[j] += a[0] * xj;
+        y1[j] += a[1] * xj;
+        y2[j] += a[2] * xj;
+        y3[j] += a[3] * xj;
+    }
+}
+
+/// Blocked 4-row rank-1 accumulation into ONE output row:
+/// `y[j] += a0·x0[j] + a1·x1[j] + a2·x2[j] + a3·x3[j]`. Used by the
+/// transposed GEMV and the GEMM k-loop — `y` is loaded/stored once per
+/// four rank-1 updates instead of four times.
+#[inline]
+pub fn axpy4_acc(a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+    let n = y.len();
+    for x in &xs {
+        assert_eq!(n, x.len());
+    }
+    let [x0, x1, x2, x3] = xs;
+    for j in 0..n {
+        y[j] += (a[0] * x0[j] + a[1] * x1[j]) + (a[2] * x2[j] + a[3] * x3[j]);
+    }
+}
+
+/// Fused transposed-MVM + per-element-variance row update:
+/// `y[j] += xr·w[j]` and `out_var[j] += v[j]·xr²`.
+#[inline]
+pub fn axpy_with_var(xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+    let n = w.len();
+    assert_eq!(n, v.len());
+    assert_eq!(n, y.len());
+    assert_eq!(n, out_var.len());
+    let x2 = xr * xr;
+    for j in 0..n {
+        y[j] += xr * w[j];
+        out_var[j] += v[j] * x2;
+    }
+}
+
+/// Fused transposed-MVM + squared-term row update (relative weight
+/// noise): `y[j] += xr·w[j]` and `out_var[j] += s2·(xr·w[j])²`.
+#[inline]
+pub fn axpy_sq(xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+    let n = w.len();
+    assert_eq!(n, y.len());
+    assert_eq!(n, out_var.len());
+    for j in 0..n {
+        let wx = xr * w[j];
+        y[j] += wx;
+        out_var[j] += s2 * (wx * wx);
+    }
+}
+
+/// Element-wise accumulation `y[j] += x[j]` (the digital partial-sum
+/// reduction of the tile grid), bounds-check hoisted.
+#[inline]
+pub fn vadd(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += xi;
+    }
+}
+
+/// Plain scalar single-accumulator kernels — the semantic reference the
+/// tiled kernels are tested and benchmarked against. Never used on a hot
+/// path.
+pub mod reference {
+    /// Single-accumulator dot product (one loop-carried FP dependency —
+    /// exactly what the tiled kernels exist to avoid).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let mut s = 0.0f32;
+        for (av, bv) in a.iter().zip(b.iter()) {
+            s += av * bv;
+        }
+        s
+    }
+
+    /// Scalar rank-1 axpy.
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x.iter()) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Scalar fused dot + per-element variance.
+    pub fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+        assert_eq!(w.len(), v.len());
+        assert_eq!(w.len(), x.len());
+        let (mut s, mut vs) = (0.0f32, 0.0f32);
+        for j in 0..w.len() {
+            s += w[j] * x[j];
+            vs += v[j] * (x[j] * x[j]);
+        }
+        (s, vs)
+    }
+
+    /// Scalar fused dot + squared-term reduction.
+    pub fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
+        assert_eq!(w.len(), x.len());
+        let (mut s, mut vs) = (0.0f32, 0.0f32);
+        for j in 0..w.len() {
+            let wx = w[j] * x[j];
+            s += wx;
+            vs += wx * wx;
+        }
+        (s, vs)
+    }
+
+    /// Naive batched noise-free MVM: per sample, per row, scalar dot —
+    /// the baseline of the `BENCH_kernels.json` speedup column.
+    pub fn mvm_plain_batch_naive(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        y: &mut [f32],
+        batch: usize,
+        transposed: bool,
+    ) {
+        assert_eq!(w.len(), rows * cols);
+        let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+        assert_eq!(x.len(), batch * in_size);
+        assert_eq!(y.len(), batch * out_size);
+        for b in 0..batch {
+            let xr = &x[b * in_size..(b + 1) * in_size];
+            let yr = &mut y[b * out_size..(b + 1) * out_size];
+            if !transposed {
+                for r in 0..rows {
+                    yr[r] = dot(&w[r * cols..(r + 1) * cols], xr);
+                }
+            } else {
+                yr.iter_mut().for_each(|v| *v = 0.0);
+                for r in 0..rows {
+                    axpy(xr[r], &w[r * cols..(r + 1) * cols], yr);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        v
+    }
+
+    /// Dyadic values (multiples of 1/8 in [-1, 1]): every summation
+    /// order is exact in f32, so tiled == reference bitwise.
+    fn dyadic_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| (rng.below(17) as f32 - 8.0) / 8.0).collect()
+    }
+
+    #[test]
+    fn dot_matches_reference_all_lengths() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 129] {
+            let a = rand_vec(n, &mut rng);
+            let b = rand_vec(n, &mut rng);
+            let tiled = dot(&a, &b);
+            let scalar = reference::dot(&a, &b);
+            let mag: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (tiled - scalar).abs() <= 1e-5 * (1.0 + mag),
+                "n={n}: {tiled} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_exact_on_dyadic_values() {
+        let mut rng = Rng::new(2);
+        for n in [5usize, 8, 13, 40, 200, 256] {
+            let a = dyadic_vec(n, &mut rng);
+            let b = dyadic_vec(n, &mut rng);
+            assert_eq!(dot(&a, &b), reference::dot(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_x4_bitwise_equals_dot() {
+        // the determinism contract: sample blocking never changes a
+        // sample's own reduction
+        let mut rng = Rng::new(3);
+        for n in [1usize, 7, 8, 9, 31, 64, 127] {
+            let w = rand_vec(n, &mut rng);
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(n, &mut rng)).collect();
+            let tiled = dot_x4(&w, [&xs[0], &xs[1], &xs[2], &xs[3]]);
+            for s in 0..4 {
+                assert_eq!(tiled[s], dot(&w, &xs[s]), "n={n} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn var_kernels_match_reference() {
+        let mut rng = Rng::new(4);
+        for n in [1usize, 6, 8, 20, 65] {
+            let w = rand_vec(n, &mut rng);
+            let v: Vec<f32> = rand_vec(n, &mut rng).iter().map(|x| x.abs()).collect();
+            let x = rand_vec(n, &mut rng);
+            let (s, vs) = dot_with_var(&w, &v, &x);
+            let (rs, rvs) = reference::dot_with_var(&w, &v, &x);
+            assert!((s - rs).abs() < 1e-5 * (1.0 + rs.abs()), "n={n}");
+            assert!((vs - rvs).abs() < 1e-5 * (1.0 + rvs.abs()), "n={n}");
+            let (s2, vs2) = dot_sq(&w, &x);
+            let (rs2, rvs2) = reference::dot_sq(&w, &x);
+            assert!((s2 - rs2).abs() < 1e-5 * (1.0 + rs2.abs()), "n={n}");
+            assert!((vs2 - rvs2).abs() < 1e-5 * (1.0 + rvs2.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_x4_matches_four_axpys() {
+        let mut rng = Rng::new(5);
+        for n in [1usize, 8, 13, 50] {
+            let x = rand_vec(n, &mut rng);
+            let a = [0.5f32, -1.25, 0.0, 2.0];
+            let mut tiled: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(n, &mut rng)).collect();
+            let mut scalar = tiled.clone();
+            {
+                let [y0, y1, y2, y3] = &mut tiled[..] else { unreachable!() };
+                axpy_x4(a, &x, [&mut y0[..], &mut y1[..], &mut y2[..], &mut y3[..]]);
+            }
+            for s in 0..4 {
+                reference::axpy(a[s], &x, &mut scalar[s]);
+                for (t, r) in tiled[s].iter().zip(scalar[s].iter()) {
+                    assert!((t - r).abs() < 1e-6, "n={n} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_acc_matches_sequential_axpys() {
+        let mut rng = Rng::new(6);
+        for n in [1usize, 8, 11, 40] {
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(n, &mut rng)).collect();
+            let a = [1.0f32, -0.5, 0.25, 3.0];
+            let mut tiled = rand_vec(n, &mut rng);
+            let mut scalar = tiled.clone();
+            axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut tiled);
+            for s in 0..4 {
+                reference::axpy(a[s], &xs[s], &mut scalar);
+            }
+            for (t, r) in tiled.iter().zip(scalar.iter()) {
+                assert!((t - r).abs() < 1e-5, "n={n}: {t} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_var_kernels_match_scalar_loops() {
+        let mut rng = Rng::new(7);
+        let n = 23;
+        let w = rand_vec(n, &mut rng);
+        let v: Vec<f32> = rand_vec(n, &mut rng).iter().map(|x| x.abs()).collect();
+        let (mut y, mut var) = (vec![0.0f32; n], vec![0.0f32; n]);
+        axpy_with_var(0.7, &w, &v, &mut y, &mut var);
+        axpy_sq(-0.4, 0.01, &w, &mut y, &mut var);
+        let (mut ye, mut ve) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for j in 0..n {
+            ye[j] += 0.7 * w[j];
+            ve[j] += v[j] * 0.7 * 0.7;
+            let wx = -0.4 * w[j];
+            ye[j] += wx;
+            ve[j] += 0.01 * (wx * wx);
+        }
+        for j in 0..n {
+            assert!((y[j] - ye[j]).abs() < 1e-6);
+            assert!((var[j] - ve[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn vadd_adds() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        vadd(&mut y, &[0.5, -2.0, 1.0]);
+        assert_eq!(y, vec![1.5, 0.0, 4.0]);
+    }
+}

@@ -7,6 +7,7 @@ pub mod forward;
 pub mod fp;
 pub mod grid;
 pub mod inference;
+pub mod kernels;
 pub mod pulsed_ops;
 
 pub use analog::AnalogTile;

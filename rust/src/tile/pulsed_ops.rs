@@ -22,6 +22,7 @@
 
 use crate::config::{PulseType, UpdateParameters};
 use crate::device::DeviceArray;
+use crate::tile::kernels;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_chunks_mut;
 
@@ -208,7 +209,8 @@ pub fn pulsed_update_sample(
 }
 
 /// Exact dense rank-1 update through the device's `set_weights` (clips at
-/// bounds). Used for `PulseType::None`.
+/// bounds). Used for `PulseType::None`. Rows go through the lane-blocked
+/// rank-1 [`kernels::axpy`] micro-kernel.
 fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32) {
     let rows = device.rows();
     let cols = device.cols();
@@ -218,9 +220,7 @@ fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32) {
         if a == 0.0 {
             continue;
         }
-        for j in 0..cols {
-            w[i * cols + j] += a * x[j];
-        }
+        kernels::axpy(a, x, &mut w[i * cols..(i + 1) * cols]);
     }
     device.set_weights(&w);
 }

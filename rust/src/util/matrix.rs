@@ -3,11 +3,14 @@
 //!
 //! This is the digital compute substrate underneath the floating-point
 //! baseline tile and the digital parts of analog tiles (im2col, activations
-//! operate on flat buffers elsewhere). The GEMM is cache-blocked with an
-//! unrolled inner kernel — not BLAS-class, but enough that the *analog*
-//! pulsed update (the paper's hot path) dominates profiles for realistic
-//! tile sizes, matching the paper's RPUCUDA balance.
+//! operate on flat buffers elsewhere). All inner loops route through the
+//! register-tiled micro-kernels in [`crate::tile::kernels`] (lane-blocked
+//! multi-accumulator dots, 4-row blocked rank-1 accumulation) — not
+//! BLAS-class, but enough that the *analog* pulsed update (the paper's
+//! hot path) dominates profiles for realistic tile sizes, matching the
+//! paper's RPUCUDA balance.
 
+use crate::tile::kernels;
 use crate::util::rng::Rng;
 
 /// Dense row-major matrix of f32.
@@ -134,18 +137,35 @@ impl Matrix {
         y
     }
 
-    /// y = selfᵀ * d into a preallocated buffer.
+    /// y = selfᵀ * d into a preallocated buffer. Weight rows are
+    /// consumed in blocks of four through the rank-1 accumulation
+    /// kernel, so `y` is loaded/stored once per four rows.
     pub fn tmatvec_into(&self, d: &[f32], y: &mut [f32]) {
         assert_eq!(d.len(), self.rows);
         assert_eq!(y.len(), self.cols);
         y.iter_mut().for_each(|v| *v = 0.0);
-        for r in 0..self.rows {
-            let dr = d[r];
-            if dr == 0.0 {
+        let cols = self.cols;
+        let quads = self.rows / 4 * 4;
+        for r in (0..quads).step_by(4) {
+            let a = [d[r], d[r + 1], d[r + 2], d[r + 3]];
+            if a == [0.0; 4] {
                 continue;
             }
-            let row = &self.data[r * self.cols..(r + 1) * self.cols];
-            axpy(dr, row, y);
+            kernels::axpy4_acc(
+                a,
+                [
+                    &self.data[r * cols..(r + 1) * cols],
+                    &self.data[(r + 1) * cols..(r + 2) * cols],
+                    &self.data[(r + 2) * cols..(r + 3) * cols],
+                    &self.data[(r + 3) * cols..(r + 4) * cols],
+                ],
+                y,
+            );
+        }
+        for r in quads..self.rows {
+            if d[r] != 0.0 {
+                axpy(d[r], &self.data[r * cols..(r + 1) * cols], y);
+            }
         }
     }
 
@@ -157,26 +177,42 @@ impl Matrix {
         c
     }
 
-    /// C = A @ B into a preallocated output. Cache-blocked i-k-j loop.
+    /// C = A @ B into a preallocated output. Cache-blocked i-k-j loop;
+    /// the k-loop runs four rank-1 updates per pass through the blocked
+    /// accumulation kernel (C's row loaded/stored once per four k).
     pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, b.rows);
         assert_eq!(c.rows, self.rows);
         assert_eq!(c.cols, b.cols);
         c.data.iter_mut().for_each(|v| *v = 0.0);
-        const KB: usize = 64;
+        const KB: usize = 64; // multiple of 4: quads never straddle blocks
         let n = b.cols;
         for kb in (0..self.cols).step_by(KB) {
             let kend = (kb + KB).min(self.cols);
+            let kquad = kb + (kend - kb) / 4 * 4;
             for i in 0..self.rows {
                 let arow = &self.data[i * self.cols..(i + 1) * self.cols];
                 let crow = &mut c.data[i * n..(i + 1) * n];
-                for k in kb..kend {
-                    let a = arow[k];
-                    if a == 0.0 {
+                for k in (kb..kquad).step_by(4) {
+                    let a = [arow[k], arow[k + 1], arow[k + 2], arow[k + 3]];
+                    if a == [0.0; 4] {
                         continue;
                     }
-                    let brow = &b.data[k * n..(k + 1) * n];
-                    axpy(a, brow, crow);
+                    kernels::axpy4_acc(
+                        a,
+                        [
+                            &b.data[k * n..(k + 1) * n],
+                            &b.data[(k + 1) * n..(k + 2) * n],
+                            &b.data[(k + 2) * n..(k + 3) * n],
+                            &b.data[(k + 3) * n..(k + 4) * n],
+                        ],
+                        crow,
+                    );
+                }
+                for k in kquad..kend {
+                    if arow[k] != 0.0 {
+                        axpy(arow[k], &b.data[k * n..(k + 1) * n], crow);
+                    }
                 }
             }
         }
@@ -233,9 +269,7 @@ impl Matrix {
         assert!(col0 + len <= self.cols, "column block out of range");
         for b in 0..self.rows {
             let dst = &mut self.data[b * self.cols + col0..b * self.cols + col0 + len];
-            for (d, &s) in dst.iter_mut().zip(src.row(b).iter()) {
-                *d += s;
-            }
+            kernels::vadd(dst, src.row(b));
         }
     }
 
@@ -250,9 +284,7 @@ impl Matrix {
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.rows, other.rows);
         assert_eq!(self.cols, other.cols);
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += b;
-        }
+        kernels::vadd(&mut self.data, &other.data);
     }
 
     /// self *= s (scalar).
@@ -288,40 +320,10 @@ impl Matrix {
     }
 }
 
-/// Unrolled dot product (the GEMV inner kernel).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 8;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-        s4 += a[j + 4] * b[j + 4];
-        s5 += a[j + 5] * b[j + 5];
-        s6 += a[j + 6] * b[j + 6];
-        s7 += a[j + 7] * b[j + 7];
-    }
-    let mut s = (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7));
-    for j in chunks * 8..n {
-        s += a[j] * b[j];
-    }
-    s
-}
-
-/// y += a * x (the GER/GEMM inner kernel).
-#[inline]
-pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * xi;
-    }
-}
+// The GEMV/GEMM inner kernels live in the micro-kernel layer
+// (`tile::kernels`); re-exported here so the historical import path
+// (`util::matrix::{dot, axpy}`) keeps working.
+pub use crate::tile::kernels::{axpy, dot};
 
 #[cfg(test)]
 mod tests {

@@ -139,6 +139,43 @@ impl Rng {
         }
     }
 
+    /// One Box–Muller pair entirely in f32 — both outputs of the trig
+    /// pair, no spare caching (independent of the f64 [`Self::normal`]
+    /// stream semantics: two uniforms in, two normals out).
+    #[inline]
+    fn normal_pair_f32(&mut self) -> (f32, f32) {
+        // uniform_f32 yields multiples of 2⁻²⁴; only exact 0 must be
+        // rejected to keep ln() finite.
+        let u1 = loop {
+            let u = self.uniform_f32();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform_f32();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f32::consts::TAU * u2;
+        (r * theta.cos(), r * theta.sin())
+    }
+
+    /// Batched standard-normal fill, f32 end to end — the fast path for
+    /// the MVM noise buffers. Unlike [`Self::fill_normal`] (one f64
+    /// Box–Muller call per element, half the trig pair cached), this
+    /// consumes **both** outputs of every trig pair and never widens to
+    /// f64, so filling n elements costs ⌈n/2⌉ sin/cos/ln/sqrt groups.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        let mut pairs = out.chunks_exact_mut(2);
+        for pair in pairs.by_ref() {
+            let (z0, z1) = self.normal_pair_f32();
+            pair[0] = z0;
+            pair[1] = z1;
+        }
+        if let [last] = pairs.into_remainder() {
+            let (z0, _) = self.normal_pair_f32();
+            *last = z0;
+        }
+    }
+
     /// Fill a slice with uniform [lo, hi).
     pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
         for v in out.iter_mut() {
@@ -227,6 +264,31 @@ mod tests {
         assert!(mean.abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
         assert!(skew.abs() < 0.05, "skew {skew}");
+    }
+
+    #[test]
+    fn fill_normal_f32_moments() {
+        let mut r = Rng::new(77);
+        let mut buf = vec![0.0f32; 200_001]; // odd length: remainder path
+        r.fill_normal_f32(&mut buf);
+        let n = buf.len() as f64;
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = buf.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n - mean * mean;
+        let skew: f64 = buf.iter().map(|&v| (v as f64).powi(3)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.05, "skew {skew}");
+        assert!(buf.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fill_normal_f32_deterministic_per_seed() {
+        let (mut a, mut b) = (Rng::new(123), Rng::new(123));
+        let mut x = vec![0.0f32; 65];
+        let mut y = vec![0.0f32; 65];
+        a.fill_normal_f32(&mut x);
+        b.fill_normal_f32(&mut y);
+        assert_eq!(x, y);
     }
 
     #[test]

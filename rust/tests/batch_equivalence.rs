@@ -368,19 +368,34 @@ fn noisy_grid_trajectory(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     (y.data().to_vec(), g.data().to_vec(), w.data().to_vec())
 }
 
-#[test]
-fn grid_bit_identical_across_thread_counts() {
-    // tiles own decorrelated Rng::split streams, so the parallel shard
-    // fan-out must be bit-deterministic at any AIHWSIM_THREADS
+/// Serializes every test that mutates the process-global AIHWSIM_THREADS
+/// env var — cargo runs tests of one binary in parallel threads, so
+/// unsynchronized set_var calls would race each other (and the getenv
+/// reads in `threadpool::num_threads`), making the thread-count
+/// determinism assertions vacuous and leaking the setting into
+/// unrelated tests.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Run `f` with AIHWSIM_THREADS pinned to `threads`, restoring the
+/// previous value afterwards; holds [`ENV_LOCK`] for the whole scope.
+fn with_threads<R>(threads: &str, f: impl FnOnce() -> R) -> R {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let saved = std::env::var("AIHWSIM_THREADS").ok();
-    std::env::set_var("AIHWSIM_THREADS", "1");
-    let serial = noisy_grid_trajectory(42);
-    std::env::set_var("AIHWSIM_THREADS", "4");
-    let parallel = noisy_grid_trajectory(42);
+    std::env::set_var("AIHWSIM_THREADS", threads);
+    let out = f();
     match saved {
         Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
         None => std::env::remove_var("AIHWSIM_THREADS"),
     }
+    out
+}
+
+#[test]
+fn grid_bit_identical_across_thread_counts() {
+    // tiles own decorrelated Rng::split streams, so the parallel shard
+    // fan-out must be bit-deterministic at any AIHWSIM_THREADS
+    let serial = with_threads("1", || noisy_grid_trajectory(42));
+    let parallel = with_threads("4", || noisy_grid_trajectory(42));
     assert_eq!(serial.0, parallel.0, "forward bits differ across thread counts");
     assert_eq!(serial.1, parallel.1, "backward bits differ across thread counts");
     assert_eq!(serial.2, parallel.2, "updated weights differ across thread counts");
@@ -493,4 +508,78 @@ fn default_batch_fallback_matches_per_row() {
         let expect = tile.w.tmatvec(d.row(b));
         assert_eq!(g.row(b), &expect[..], "backward row {b}");
     }
+}
+
+// ---------------------------------------------- bound-management resume
+
+/// A quiet (noise-free, quantization-free) config whose out_bound forces
+/// the iterative bound-management resume path for large outputs — the
+/// whole pipeline is then deterministic, so batch and scalar must agree.
+fn bm_io() -> IOParameters {
+    IOParameters {
+        inp_res: 0.0,
+        out_res: 0.0,
+        out_noise: 0.0,
+        inp_noise: 0.0,
+        w_noise: 0.0,
+        inp_bound: 1.0,
+        out_bound: 2.0,
+        noise_management: NoiseManagement::AbsMax,
+        bound_management: BoundManagement::Iterative,
+        max_bm_factor: 8,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn bound_managed_batch_matches_scalar_exactly() {
+    // regression for the clipped-row resume path (shared noise scratch):
+    // with all stochastic stages off the resume is deterministic, so the
+    // batched outputs must pin to the scalar reference bit for bit
+    let (out, inp) = (5, 8);
+    let mut cfg = RPUConfig::perfect();
+    cfg.forward = bm_io();
+    cfg.weight_scaling_omega = 0.0;
+    let mut tile = AnalogTile::new(out, inp, cfg, Rng::new(51));
+    let w = Matrix::full(out, inp, 1.0); // y = 8 ≫ out_bound = 2 → resume
+    tile.set_weights(&w);
+    let mut x = Matrix::full(9, inp, 1.0);
+    // mix in sign-alternating rows whose sums cancel (no clipping), so
+    // clipped and unclipped rows interleave inside the blocks
+    for j in 0..inp {
+        x.set(2, j, if j % 2 == 0 { 0.01 } else { -0.01 });
+        x.set(7, j, if j % 2 == 0 { -0.02 } else { 0.02 });
+    }
+    let mut y = Matrix::zeros(9, out);
+    tile.forward_batch(&x, &mut y);
+    for b in 0..9 {
+        let mut yr = vec![0.0; out];
+        tile.forward(x.row(b), &mut yr);
+        assert_eq!(y.row(b), &yr[..], "BM row {b} must match the scalar path exactly");
+    }
+    // and the recovered magnitude is right (not stuck at the clip bound)
+    assert!((y.get(0, 0) - 8.0).abs() < 1e-5, "BM must recover y=8, got {}", y.get(0, 0));
+}
+
+#[test]
+fn bound_managed_batch_bit_identical_across_thread_counts() {
+    // the resume path draws from per-row split streams + the worker's
+    // shared scratch — results must not depend on AIHWSIM_THREADS even
+    // with every noise source enabled
+    let run = || {
+        let (out, inp) = (6, 16);
+        let mut cfg = RPUConfig::default(); // full noisy pipeline, NM+BM on
+        cfg.forward.out_bound = 1.0; // clip aggressively → many resumes
+        cfg.weight_scaling_omega = 0.0;
+        let mut tile = AnalogTile::new(out, inp, cfg, Rng::new(52));
+        tile.set_weights(&Matrix::full(out, inp, 0.4));
+        let x = test_inputs(17, inp); // 17: odd batch, crosses block sizes
+        let mut y = Matrix::zeros(17, out);
+        tile.forward_batch(&x, &mut y);
+        y.data().to_vec()
+    };
+    let serial = with_threads("1", &run);
+    let parallel = with_threads("4", &run);
+    assert_eq!(serial, parallel, "BM resume must be bit-deterministic across thread counts");
+    assert!(serial.iter().any(|&v| v != 0.0));
 }

@@ -7,7 +7,8 @@ use aihwsim::config::{
 };
 use aihwsim::device::build;
 use aihwsim::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
-use aihwsim::tile::forward::{analog_mvm, mvm_plain, MvmScratch};
+use aihwsim::tile::forward::{analog_mvm, mvm_plain, mvm_plain_batch, MvmScratch};
+use aihwsim::tile::kernels;
 use aihwsim::tile::pulsed_ops::{pulsed_update_sample, UpdateScratch};
 use aihwsim::tile::{AnalogTile, Tile};
 use aihwsim::util::matrix::Matrix;
@@ -98,6 +99,157 @@ fn prop_update_moves_in_gradient_direction_on_average() {
                         "w[{i}{j}] = {got}, expected sign {expect_sign} (x={x:?}, d={d:?})"
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dyadic values (multiples of 1/8 in [-1, 1]): products are multiples
+/// of 1/64 and partial sums stay well under 2¹⁸, so every summation
+/// order is exact in f32 — tiled and scalar-reference kernels must agree
+/// bitwise.
+fn dyadic_vec(g: &mut Gen, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (g.usize_in(0, 16) as f32 - 8.0) / 8.0).collect()
+}
+
+/// A length that exercises the kernel edge cases: below one lane block
+/// (cols < 8), off-lane remainders (len % 8 ≠ 0), and exact multiples.
+fn kernel_len(g: &mut Gen) -> usize {
+    match g.usize_in(0, 3) {
+        0 => g.usize_in(1, 7),          // under one lane block
+        1 => g.usize_in(1, 40) * 8,     // exact lane multiple
+        _ => g.usize_in(8, 320),        // arbitrary (usually % 8 != 0)
+    }
+}
+
+#[test]
+fn prop_tiled_dot_matches_scalar_reference() {
+    check("tiled-dot-vs-reference", 60, |g| {
+        let n = kernel_len(g);
+        let a = g.vec_f32(n, -1.0, 1.0);
+        let b = g.vec_f32(n, -1.0, 1.0);
+        let tiled = kernels::dot(&a, &b);
+        let scalar = kernels::reference::dot(&a, &b);
+        let mag: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x * y).abs()).sum();
+        if (tiled - scalar).abs() > 1e-5 * (1.0 + mag) {
+            return Err(format!("n={n}: tiled {tiled} vs scalar {scalar}"));
+        }
+        // sample-blocked kernel must be bit-identical to the lane-blocked
+        // dot (the determinism contract)
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| g.vec_f32(n, -1.0, 1.0)).collect();
+        let quad = kernels::dot_x4(&a, [&xs[0], &xs[1], &xs[2], &xs[3]]);
+        for s in 0..4 {
+            let single = kernels::dot(&a, &xs[s]);
+            if quad[s] != single {
+                return Err(format!("dot_x4 lane {s} not bit-equal: {} vs {single}", quad[s]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_kernels_exact_on_dyadic_values() {
+    check("tiled-kernels-dyadic-exact", 40, |g| {
+        let n = kernel_len(g).min(256);
+        let a = dyadic_vec(g, n);
+        let b = dyadic_vec(g, n);
+        if kernels::dot(&a, &b) != kernels::reference::dot(&a, &b) {
+            return Err(format!("dot not exact on dyadics (n={n})"));
+        }
+        let (s, vs) = kernels::dot_sq(&a, &b);
+        let (rs, rvs) = kernels::reference::dot_sq(&a, &b);
+        if s != rs || vs != rvs {
+            return Err(format!("dot_sq not exact on dyadics (n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_var_kernels_match_reference() {
+    check("fused-var-vs-reference", 40, |g| {
+        let n = kernel_len(g);
+        let w = g.vec_f32(n, -1.0, 1.0);
+        let v: Vec<f32> = g.vec_f32(n, 0.0, 0.1);
+        let x = g.vec_f32(n, -1.0, 1.0);
+        let (s, vs) = kernels::dot_with_var(&w, &v, &x);
+        let (rs, rvs) = kernels::reference::dot_with_var(&w, &v, &x);
+        if (s - rs).abs() > 1e-5 * (1.0 + rs.abs()) || (vs - rvs).abs() > 1e-5 * (1.0 + rvs.abs())
+        {
+            return Err(format!("dot_with_var n={n}: ({s},{vs}) vs ({rs},{rvs})"));
+        }
+        let (s2, vs2) = kernels::dot_sq(&w, &x);
+        let (rs2, rvs2) = kernels::reference::dot_sq(&w, &x);
+        if (s2 - rs2).abs() > 1e-5 * (1.0 + rs2.abs())
+            || (vs2 - rvs2).abs() > 1e-5 * (1.0 + rvs2.abs())
+        {
+            return Err(format!("dot_sq n={n}: ({s2},{vs2}) vs ({rs2},{rvs2})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_mvm_matches_scalar_reference() {
+    // the production register-tiled batched kernel vs the naive scalar
+    // reference, over random shapes including batch % 4 != 0, cols < 8,
+    // and cols % 8 != 0 — both directions
+    check("batched-mvm-vs-reference", 40, |g| {
+        let rows = g.usize_in(1, 40);
+        let cols = kernel_len(g).min(96);
+        let batch = g.usize_in(1, 13); // covers batch % 4 != 0 and < 4
+        let w = g.vec_f32(rows * cols, -1.0, 1.0);
+        for &transposed in &[false, true] {
+            let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+            let x = Matrix::from_vec(batch, in_size, g.vec_f32(batch * in_size, -1.0, 1.0));
+            let mut y = Matrix::zeros(batch, out_size);
+            mvm_plain_batch(&w, rows, cols, &x, &mut y, transposed);
+            let mut y_ref = vec![0.0f32; batch * out_size];
+            kernels::reference::mvm_plain_batch_naive(
+                &w, rows, cols, x.data(), &mut y_ref, batch, transposed,
+            );
+            for b in 0..batch {
+                for (o, (a, e)) in
+                    y.row(b).iter().zip(y_ref[b * out_size..(b + 1) * out_size].iter()).enumerate()
+                {
+                    let mag: f32 = (0..in_size).map(|j| x.get(b, j).abs()).sum();
+                    if (a - e).abs() > 1e-5 * (1.0 + mag.max(e.abs())) {
+                        return Err(format!(
+                            "rows={rows} cols={cols} batch={batch} t={transposed} \
+                             [{b},{o}]: {a} vs {e}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_mvm_exact_on_dyadic_values() {
+    // on dyadic values every summation order is exact, so the tiled batch
+    // kernel must agree bitwise with the naive reference
+    check("batched-mvm-dyadic-exact", 30, |g| {
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 64);
+        let batch = g.usize_in(1, 11);
+        let w = dyadic_vec(g, rows * cols);
+        for &transposed in &[false, true] {
+            let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+            let x = Matrix::from_vec(batch, in_size, dyadic_vec(g, batch * in_size));
+            let mut y = Matrix::zeros(batch, out_size);
+            mvm_plain_batch(&w, rows, cols, &x, &mut y, transposed);
+            let mut y_ref = vec![0.0f32; batch * out_size];
+            kernels::reference::mvm_plain_batch_naive(
+                &w, rows, cols, x.data(), &mut y_ref, batch, transposed,
+            );
+            if y.data() != &y_ref[..] {
+                return Err(format!(
+                    "dyadic mismatch rows={rows} cols={cols} batch={batch} t={transposed}"
+                ));
             }
         }
         Ok(())
