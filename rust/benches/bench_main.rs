@@ -432,9 +432,116 @@ fn bench_tile_grid(csv: &mut CsvLogger) {
     println!("  wrote BENCH_mapping.json");
 }
 
+// ---------------------------------------------------- Eq. 2 row-sharded
+
+/// Scaling of the row-sharded pulsed-update engine: one full
+/// stochastic-compressed batch update on a constant-step device, swept
+/// over BL × tile size × batch × threads {1, N}. Emits BENCH_update.json;
+/// the acceptance bar is ≥2× single-vs-multi-thread speedup on the
+/// 512² × batch-64 row (checked in CI when the runner has ≥4 cores).
+fn bench_update_sharded(csv: &mut CsvLogger) {
+    let saved_threads = std::env::var("AIHWSIM_THREADS").ok();
+    std::env::remove_var("AIHWSIM_THREADS");
+    let threads_all = aihwsim::util::threadpool::num_threads();
+    let mut entries: Vec<Json> = Vec::new();
+    println!(
+        "  {:>4} {:>6} {:>6} {:>12} {:>12} {:>9} {:>10}",
+        "BL", "tile", "batch", "1-thr µs", "N-thr µs", "speedup", "Mpulses/s"
+    );
+    for &bl in &[7u32, 31] {
+        for &n in &[256usize, 512] {
+            for &batch in &[8usize, 64] {
+                let mut up = UpdateParameters::default();
+                up.desired_bl = bl;
+                up.update_bl_management = false; // pin BL to the swept value
+                let mut pulses = 0u64;
+                // rebuild device + data per thread setting so the RNG
+                // trajectory (and therefore the work) is identical
+                let mut time_at = |threads: Option<usize>| -> f64 {
+                    match threads {
+                        Some(t) => std::env::set_var("AIHWSIM_THREADS", t.to_string()),
+                        None => std::env::remove_var("AIHWSIM_THREADS"),
+                    }
+                    let mut rng = Rng::new(21);
+                    let mut dev =
+                        build(&presets::by_name("gokmen_vlasov").unwrap(), n, n, &mut rng);
+                    let mut scratch = UpdateScratch::default();
+                    let x = Matrix::rand_uniform(batch, n, -1.0, 1.0, &mut rng);
+                    let d = Matrix::rand_uniform(batch, n, -1.0, 1.0, &mut rng);
+                    time_median(5, || {
+                        let s = pulsed_update_batch(
+                            dev.as_mut(),
+                            x.data(),
+                            d.data(),
+                            batch,
+                            0.01,
+                            &up,
+                            &mut rng,
+                            &mut scratch,
+                        );
+                        pulses = s.pulses;
+                    })
+                };
+                let t1 = time_at(Some(1));
+                let tn = time_at(None);
+                let speedup = t1 / tn;
+                let mpulses = pulses as f64 / tn / 1e6;
+                println!(
+                    "  {:>4} {:>6} {:>6} {:>12.1} {:>12.1} {:>8.2}x {:>10.1}",
+                    bl, n, batch, t1 * 1e6, tn * 1e6, speedup, mpulses
+                );
+                csv.row_str(&[
+                    format!("update_sharded_bl{bl}_{n}_b{batch}"),
+                    format!("{:.3}", t1 * 1e6),
+                    format!("{:.3}", tn * 1e6),
+                    format!("{:.2}", speedup),
+                ])
+                .unwrap();
+                entries.push(Json::obj(vec![
+                    ("bl", Json::num(bl as f64)),
+                    ("tile", Json::num(n as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("one_thread_us", Json::num(t1 * 1e6)),
+                    ("all_threads_us", Json::num(tn * 1e6)),
+                    ("speedup", Json::num(speedup)),
+                    ("mpulses_per_s", Json::num(mpulses)),
+                    ("pulses", Json::num(pulses as f64)),
+                ]));
+            }
+        }
+    }
+    match saved_threads {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("row_sharded_pulsed_update")),
+        (
+            "method",
+            Json::str(
+                "full stochastic-compressed pulsed_update_batch on a gokmen_vlasov \
+                 (ConstantStep) device, lr 0.01, UBLM off so BL is pinned; device and \
+                 inputs rebuilt per thread setting from one seed so both rows replay \
+                 identical pulse trains; median of 5 timed reps after warmup; \
+                 speedup = 1-thread / N-thread wall time of the same update",
+            ),
+        ),
+        ("threads_all", Json::num(threads_all as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_update.json", doc.to_string_pretty()).unwrap();
+    println!("  wrote BENCH_update.json");
+}
+
 // --------------------------------------------------------------- Eq. 2
 
 fn bench_pulsed_update(csv: &mut CsvLogger) {
+    // historical single-thread trajectory row: pin the thread count so
+    // the `update_*` CSV rows stay comparable across commits now that
+    // the update engine shards rows over the pool (Eq1d measures the
+    // threaded scaling separately)
+    let saved_threads = std::env::var("AIHWSIM_THREADS").ok();
+    std::env::set_var("AIHWSIM_THREADS", "1");
     let up = UpdateParameters::default();
     let mut scratch = UpdateScratch::default();
     println!("  {:>16} {:>14} {:>14}", "device", "µs/update", "Mpulses/s");
@@ -462,6 +569,10 @@ fn bench_pulsed_update(csv: &mut CsvLogger) {
             String::new(),
         ])
         .unwrap();
+    }
+    match saved_threads {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
     }
 }
 
@@ -516,6 +627,9 @@ fn main() {
     }
     if section("Eq1c_tile_grid (inter-tile scaling, threads 1 vs N)", &filter) {
         bench_tile_grid(&mut csv);
+    }
+    if section("Eq1d_pulsed_update (row-sharded engine, threads 1 vs N)", &filter) {
+        bench_update_sharded(&mut csv);
     }
     if section("Eq2_pulsed_update", &filter) {
         bench_pulsed_update(&mut csv);

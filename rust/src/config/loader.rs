@@ -19,6 +19,12 @@
 //!   "weight_scaling_omega": 0.6
 //! }
 //! ```
+//!
+//! The complete field reference — every key, its paper symbol, default
+//! and units, plus copy-pasteable examples — lives in `docs/CONFIG.md`.
+//! Every JSON snippet in that file is parsed through this loader by
+//! `rust/tests/config_docs.rs`, so the reference cannot drift from the
+//! code.
 
 use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
 use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
@@ -203,6 +209,10 @@ fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
     io.inp_noise = j.f64_or("inp_noise", io.inp_noise as f64) as f32;
     io.out_noise = j.f64_or("out_noise", io.out_noise as f64) as f32;
     io.w_noise = j.f64_or("w_noise", io.w_noise as f64) as f32;
+    io.inp_sto_round = j.bool_or("inp_sto_round", io.inp_sto_round);
+    io.out_sto_round = j.bool_or("out_sto_round", io.out_sto_round);
+    io.nm_constant = j.f64_or("nm_constant", io.nm_constant as f64) as f32;
+    io.max_bm_factor = j.f64_or("max_bm_factor", io.max_bm_factor as f64) as u32;
     if let Some(bits) = j.get("inp_res_bits").and_then(Json::as_f64) {
         io.inp_res = if bits <= 0.0 { 0.0 } else { 1.0 / (2f32.powi(bits as i32) - 2.0) };
     } else {
@@ -348,6 +358,24 @@ mod tests {
         ] {
             assert!(rpu_config_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn io_extras_parsing() {
+        let j = Json::parse(
+            r#"{"forward": {"inp_sto_round": true, "out_sto_round": true,
+                            "noise_management": "constant", "nm_constant": 0.5,
+                            "max_bm_factor": 3}}"#,
+        )
+        .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert!(cfg.forward.inp_sto_round);
+        assert!(cfg.forward.out_sto_round);
+        assert_eq!(cfg.forward.noise_management, NoiseManagement::Constant);
+        assert!((cfg.forward.nm_constant - 0.5).abs() < 1e-9);
+        assert_eq!(cfg.forward.max_bm_factor, 3);
+        // backward inherits the forward overrides unless given its own
+        assert!(cfg.backward.inp_sto_round);
     }
 
     #[test]

@@ -10,9 +10,35 @@
 //!   with saturation-triggered refresh.
 
 use crate::config::{SingleDeviceConfig, UpdateParameters, VectorUpdatePolicy};
-use crate::device::single::SingleDeviceArray;
+use crate::device::single::{par_update_rows, SingleDeviceArray, StepCtx};
 use crate::device::DeviceArray;
+use crate::tile::pulsed_ops::{replay_row_trains, CoincidenceTrains};
 use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// One row of the one-sided pair's replay: each coincidence burst
+/// potentiates g⁺ (up) or g⁻ (down) through the sub-arrays' inlined step
+/// math. Shared by the sequential block and the row-sharded fan-out of
+/// [`OneSidedArray`].
+#[allow(clippy::too_many_arguments)]
+fn one_sided_replay_row(
+    trains: &CoincidenceTrains,
+    row: usize,
+    base: usize,
+    ctx_p: StepCtx<'_>,
+    ctx_m: StepCtx<'_>,
+    rp: &mut [f32],
+    rm: &mut [f32],
+    rng: &mut Rng,
+) -> u64 {
+    replay_row_trains(trains, row, rng, |j, up, c, r| {
+        if up {
+            ctx_p.pulse_n(&mut rp[j], base + j, true, c, r);
+        } else {
+            ctx_m.pulse_n(&mut rm[j], base + j, true, c, r);
+        }
+    })
+}
 
 // ---------------------------------------------------------------- Vector
 
@@ -60,6 +86,49 @@ impl VectorArray {
             }
         }
         self.dirty = false;
+    }
+
+    /// Shared policy/tally/dirty logic of the two block-update entry
+    /// points: delegate the plan to the policy's sub-device(s) through
+    /// `op` (negative-γ devices get the flipped plan, each sub continues
+    /// the same per-row RNG streams). The returned pulse tally counts the
+    /// **first** delegated sub's replay, matching the per-coincidence
+    /// accounting of the scalar path — under the stochastic plan every
+    /// sub applies identical counts, while under the implicit plan each
+    /// sub stochastically rounds its own counts (rounding is per
+    /// sub-device, like every other cycle-to-cycle process), so sub 0 is
+    /// the deterministic reference tally. The dirty flag tracks pulses on
+    /// *any* sub.
+    fn delegated_update(
+        &mut self,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+        mut op: impl FnMut(&mut SingleDeviceArray, &CoincidenceTrains, &mut [Rng]) -> u64,
+    ) -> u64 {
+        let mut pulses = 0;
+        let mut applied = 0u64; // across ALL subs (drives the dirty flag)
+        match self.policy {
+            VectorUpdatePolicy::All => {
+                for (k, sub) in self.subs.iter_mut().enumerate() {
+                    let t = if self.gammas[k] < 0.0 { trains.flipped() } else { *trains };
+                    let p = op(sub, &t, rngs);
+                    applied += p;
+                    if k == 0 {
+                        pulses = p;
+                    }
+                }
+            }
+            VectorUpdatePolicy::SingleSequential | VectorUpdatePolicy::SingleRandom => {
+                let k = self.active;
+                let t = if self.gammas[k] < 0.0 { trains.flipped() } else { *trains };
+                pulses = op(&mut self.subs[k], &t, rngs);
+                applied = pulses;
+            }
+        }
+        if applied > 0 {
+            self.dirty = true;
+        }
+        pulses
     }
 }
 
@@ -133,6 +202,26 @@ impl DeviceArray for VectorArray {
             }
             VectorUpdatePolicy::All => {}
         }
+    }
+
+    /// Sequential block replay — see `VectorArray::delegated_update`
+    /// for the policy delegation, flipped-plan, and tally semantics.
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        self.delegated_update(trains, rngs, |sub, t, r| {
+            sub.update_row_block(row_range.clone(), t, r)
+        })
+    }
+
+    /// Row-sharded replay: same delegation and tally semantics as the
+    /// sequential block (`VectorArray::delegated_update`), but each
+    /// sub-device fans its rows out over the thread pool.
+    fn update_with_trains(&mut self, trains: &CoincidenceTrains, row_rngs: &mut [Rng]) -> u64 {
+        self.delegated_update(trains, row_rngs, |sub, t, r| sub.update_with_trains(t, r))
     }
 
     fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
@@ -216,9 +305,10 @@ impl TransferArray {
             if rng.bernoulli((a - n as f32) as f64) {
                 n += 1;
             }
-            for _ in 0..n {
-                self.slow.pulse(idx, up, rng);
-            }
+            // one burst through the shared step math (distribution-
+            // equivalent to n sequential pulses; exact for state-
+            // dependent step kinds, which replay sequentially inside)
+            self.slow.pulse_n(idx, up, n, rng);
         }
         self.dirty = true;
     }
@@ -252,6 +342,30 @@ impl DeviceArray for TransferArray {
         if self.gamma != 0.0 {
             self.dirty = true;
         }
+    }
+
+    /// SGD pulses land on the fast tile A only (transfers to C happen in
+    /// `post_update`), so the block replay delegates wholesale.
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        let pulses = self.fast.update_row_block(row_range, trains, rngs);
+        if pulses > 0 && self.gamma != 0.0 {
+            self.dirty = true;
+        }
+        pulses
+    }
+
+    /// Row-sharded replay onto the fast tile A.
+    fn update_with_trains(&mut self, trains: &CoincidenceTrains, row_rngs: &mut [Rng]) -> u64 {
+        let pulses = self.fast.update_with_trains(trains, row_rngs);
+        if pulses > 0 && self.gamma != 0.0 {
+            self.dirty = true;
+        }
+        pulses
     }
 
     fn weights(&mut self) -> &[f32] {
@@ -382,6 +496,53 @@ impl DeviceArray for OneSidedArray {
             self.minus.pulse(idx, true, rng);
         }
         self.dirty = true;
+    }
+
+    /// Sequential block replay over the conductance pair: each burst
+    /// potentiates g⁺ (up) or g⁻ (down) through the sub-arrays' inlined
+    /// step math, walking both weight planes row by row.
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        assert_eq!(
+            rngs.len(),
+            row_range.len(),
+            "update_row_block: one RNG stream per row required"
+        );
+        let cols = self.plus.cols();
+        let (wp, ctx_p) = self.plus.split_state();
+        let (wm, ctx_m) = self.minus.split_state();
+        let mut pulses = 0;
+        for (i, rng) in row_range.zip(rngs.iter_mut()) {
+            let base = i * cols;
+            let rp = &mut wp[base..base + cols];
+            let rm = &mut wm[base..base + cols];
+            pulses += one_sided_replay_row(trains, i, base, ctx_p, ctx_m, rp, rm, rng);
+        }
+        if pulses > 0 {
+            self.dirty = true;
+        }
+        pulses
+    }
+
+    /// Row-sharded replay: both conductance planes split into the same
+    /// row blocks (a row of g⁺ and g⁻ always travels to one worker).
+    fn update_with_trains(&mut self, trains: &CoincidenceTrains, row_rngs: &mut [Rng]) -> u64 {
+        let cols = self.plus.cols();
+        let (wp, ctx_p) = self.plus.split_state();
+        let (wm, ctx_m) = self.minus.split_state();
+        let pulses =
+            par_update_rows(cols, wp, Some(wm), trains, row_rngs, |i, rp, rm, rng| {
+                let rm = rm.expect("minus plane sharded alongside plus");
+                one_sided_replay_row(trains, i, i * cols, ctx_p, ctx_m, rp, rm, rng)
+            });
+        if pulses > 0 {
+            self.dirty = true;
+        }
+        pulses
     }
 
     fn weights(&mut self) -> &[f32] {

@@ -15,7 +15,9 @@ pub use compound::{OneSidedArray, TransferArray, VectorArray};
 pub use single::SingleDeviceArray;
 
 use crate::config::{DeviceConfig, UpdateParameters};
+use crate::tile::pulsed_ops::{replay_row_trains, CoincidenceTrains};
 use crate::util::rng::Rng;
+use std::ops::Range;
 
 /// A rows×cols array of resistive devices with weight state.
 pub trait DeviceArray: Send {
@@ -63,6 +65,113 @@ pub trait DeviceArray: Send {
     /// Reset device columns to ~0 (with reset noise); `cols` are column
     /// indices. Models a hardware reset operation.
     fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng);
+
+    /// Replay a mini-batch's pulse plan for the rows in `row_range`,
+    /// strictly **sample-ordered per crosspoint** (the Eq. (2) analog-
+    /// accumulation semantics), drawing all per-pulse randomness from
+    /// `rngs[i - row_range.start]` — one decorrelated stream per row.
+    /// Returns the number of device pulses applied (coincidences × their
+    /// counts, counted once per crosspoint even for compound cells).
+    ///
+    /// The default replays through per-burst [`DeviceArray::pulse_n`]
+    /// calls — correct for any implementation, but with one virtual call
+    /// per coincidence. The built-in arrays override it with vectorized
+    /// row loops over their struct-of-arrays state (static dispatch, no
+    /// per-pulse branching on the step kind).
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        assert_eq!(
+            rngs.len(),
+            row_range.len(),
+            "update_row_block: one RNG stream per row required"
+        );
+        let cols = self.cols();
+        let mut pulses = 0;
+        for (i, rng) in row_range.zip(rngs.iter_mut()) {
+            let base = i * cols;
+            pulses +=
+                replay_row_trains(trains, i, rng, |j, up, c, r| self.pulse_n(base + j, up, c, r));
+        }
+        pulses
+    }
+
+    /// Row-sharded batch update: replay the plan for **every** row with
+    /// one RNG stream per row (`row_rngs.len() == rows`). Implementations
+    /// shard the rows over worker threads — crosspoint state is
+    /// row-disjoint and the streams are pre-split, so the result is
+    /// bit-identical to [`DeviceArray::update_row_block`] over `0..rows`
+    /// at any `AIHWSIM_THREADS`. The default is that sequential block
+    /// (the engine's *sequential reference*; see [`SequentialRef`]).
+    fn update_with_trains(&mut self, trains: &CoincidenceTrains, row_rngs: &mut [Rng]) -> u64 {
+        assert_eq!(
+            row_rngs.len(),
+            self.rows(),
+            "update_with_trains: one RNG stream per row required"
+        );
+        self.update_row_block(0..self.rows(), trains, row_rngs)
+    }
+}
+
+/// Wrapper forcing the **sequential reference** update path: every
+/// [`DeviceArray`] method delegates to the inner array *except*
+/// [`DeviceArray::update_with_trains`], which keeps the trait default —
+/// one sequential `update_row_block` over all rows, i.e. the inner
+/// array's own block replay run row by row on the calling thread. The
+/// equivalence tests pin each built-in array's parallel sharded path
+/// bitwise to this reference.
+pub struct SequentialRef(pub Box<dyn DeviceArray>);
+
+impl DeviceArray for SequentialRef {
+    fn rows(&self) -> usize {
+        self.0.rows()
+    }
+    fn cols(&self) -> usize {
+        self.0.cols()
+    }
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        self.0.pulse(idx, up, rng);
+    }
+    fn pulse_n(&mut self, idx: usize, up: bool, n: u32, rng: &mut Rng) {
+        self.0.pulse_n(idx, up, n, rng);
+    }
+    fn weights(&mut self) -> &[f32] {
+        self.0.weights()
+    }
+    fn dw_min(&self) -> f32 {
+        self.0.dw_min()
+    }
+    fn w_bound(&self) -> f32 {
+        self.0.w_bound()
+    }
+    fn set_weights(&mut self, w: &[f32]) {
+        self.0.set_weights(w);
+    }
+    fn post_batch(&mut self, rng: &mut Rng) {
+        self.0.post_batch(rng);
+    }
+    fn pre_update(&mut self, update: &UpdateParameters, rng: &mut Rng) {
+        self.0.pre_update(update, rng);
+    }
+    fn post_update(&mut self, update: &UpdateParameters, rng: &mut Rng) {
+        self.0.post_update(update, rng);
+    }
+    fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
+        self.0.reset_cols(cols, rng);
+    }
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        self.0.update_row_block(row_range, trains, rngs)
+    }
+    // update_with_trains intentionally NOT delegated: the trait default
+    // replays the full range sequentially through update_row_block.
 }
 
 /// Instantiate a device array from a config (sampling all d2d variations

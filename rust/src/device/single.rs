@@ -10,7 +10,10 @@
 
 use crate::config::{PulsedDeviceParams, SingleDeviceConfig, StepKind};
 use crate::device::DeviceArray;
+use crate::tile::pulsed_ops::{replay_row_trains, CoincidenceTrains};
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_tasks_mut;
+use std::ops::Range;
 
 /// Step-kind runtime data (per-crosspoint where the config says dtod).
 #[derive(Clone, Debug)]
@@ -140,12 +143,66 @@ impl SingleDeviceArray {
     pub fn ideal_step(&self, idx: usize, up: bool) -> f32 {
         let w = self.w[idx];
         let scale = if up { self.scale_up[idx] } else { self.scale_down[idx] };
-        scale * self.step_factor(idx, w, up)
+        scale * self.step_ctx().step_factor(idx, w, up)
     }
 
+    /// Read-only pulse context over this array's structural state.
+    fn step_ctx(&self) -> StepCtx<'_> {
+        StepCtx {
+            scale_up: &self.scale_up,
+            scale_down: &self.scale_down,
+            w_max: &self.w_max,
+            w_min: &self.w_min,
+            step: &self.step,
+            dw_min_std: self.dw_min_std,
+            dw_min_mean: self.dw_min_mean,
+        }
+    }
+
+    /// Split borrow: the mutable weight state next to the read-only pulse
+    /// context — lets callers shard `w` into row blocks across worker
+    /// threads while every block shares one context. Used by the
+    /// row-sharded update of this array and of the compound cells that
+    /// wrap it.
+    pub(crate) fn split_state(&mut self) -> (&mut [f32], StepCtx<'_>) {
+        (
+            &mut self.w,
+            StepCtx {
+                scale_up: &self.scale_up,
+                scale_down: &self.scale_down,
+                w_max: &self.w_max,
+                w_min: &self.w_min,
+                step: &self.step,
+                dw_min_std: self.dw_min_std,
+                dw_min_mean: self.dw_min_mean,
+            },
+        )
+    }
+}
+
+/// Borrowed per-pulse step machinery of a [`SingleDeviceArray`]: the
+/// read-only structural state (per-crosspoint scales/bounds, step-kind
+/// data, noise levels) with the step math on top. The scalar
+/// `pulse`/`pulse_n` path and the row-sharded block update both bottom
+/// out here — one implementation, so the two paths are bitwise identical
+/// by construction. `idx` arguments are flat crosspoint indices into the
+/// full array; the weight cell travels separately as `&mut f32` so row
+/// blocks can be dealt to different worker threads.
+#[derive(Clone, Copy)]
+pub(crate) struct StepCtx<'a> {
+    scale_up: &'a [f32],
+    scale_down: &'a [f32],
+    w_max: &'a [f32],
+    w_min: &'a [f32],
+    step: &'a StepData,
+    dw_min_std: f32,
+    dw_min_mean: f32,
+}
+
+impl StepCtx<'_> {
     #[inline]
     fn step_factor(&self, idx: usize, w: f32, up: bool) -> f32 {
-        match &self.step {
+        match self.step {
             StepData::Constant => 1.0,
             StepData::Linear { gamma_up, gamma_down, .. } => {
                 if up {
@@ -194,28 +251,20 @@ impl SingleDeviceArray {
 
     #[inline]
     fn mult_noise(&self) -> bool {
-        match &self.step {
+        match self.step {
             StepData::Linear { mult_noise, .. } | StepData::SoftBounds { mult_noise } => {
                 *mult_noise
             }
             _ => false,
         }
     }
-}
 
-impl DeviceArray for SingleDeviceArray {
-    fn rows(&self) -> usize {
-        self.rows
-    }
-    fn cols(&self) -> usize {
-        self.cols
-    }
-
+    /// One pulse on the cell `w` at flat index `idx`.
     #[inline]
-    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
-        let w = self.w[idx];
+    fn pulse(&self, w: &mut f32, idx: usize, up: bool, rng: &mut Rng) {
+        let cur = *w;
         let scale = if up { self.scale_up[idx] } else { self.scale_down[idx] };
-        let factor = self.step_factor(idx, w, up);
+        let factor = self.step_factor(idx, cur, up);
         let mut dw = scale * factor;
         if self.dw_min_std > 0.0 {
             if self.mult_noise() {
@@ -224,17 +273,18 @@ impl DeviceArray for SingleDeviceArray {
                 dw += self.dw_min_mean * self.dw_min_std * rng.normal() as f32;
             }
         }
-        let new = if up { w + dw } else { w - dw };
-        self.w[idx] = new.clamp(self.w_min[idx], self.w_max[idx]);
+        let new = if up { cur + dw } else { cur - dw };
+        *w = new.clamp(self.w_min[idx], self.w_max[idx]);
     }
 
     /// Burst of `n` same-direction pulses. For `ConstantStep` the sum of n
     /// pulses is exactly `n·scale + √n·σ_c2c·Δw·ξ` followed by one clamp
     /// (the step is state-independent and all steps share a sign, so the
     /// clamp commutes with the sum) — one RNG draw instead of n. Other
-    /// step kinds are state-dependent and stay sequential, but inline
-    /// (single virtual call per burst instead of per pulse).
-    fn pulse_n(&mut self, idx: usize, up: bool, n: u32, rng: &mut Rng) {
+    /// step kinds are state-dependent and stay sequential (but inline, no
+    /// per-pulse dispatch).
+    #[inline]
+    pub(crate) fn pulse_n(&self, w: &mut f32, idx: usize, up: bool, n: u32, rng: &mut Rng) {
         if n == 0 {
             return;
         }
@@ -247,14 +297,139 @@ impl DeviceArray for SingleDeviceArray {
                     * self.dw_min_std
                     * rng.normal() as f32;
             }
-            let w = self.w[idx];
-            let new = if up { w + dw } else { w - dw };
-            self.w[idx] = new.clamp(self.w_min[idx], self.w_max[idx]);
+            let cur = *w;
+            let new = if up { cur + dw } else { cur - dw };
+            *w = new.clamp(self.w_min[idx], self.w_max[idx]);
             return;
         }
         for _ in 0..n {
-            self.pulse(idx, up, rng);
+            self.pulse(w, idx, up, rng);
         }
+    }
+}
+
+/// Shard `w` (and a parallel `extra` weight plane, for two-device cells)
+/// into per-row tasks and replay the plan over them with [`par_tasks_mut`].
+/// `apply` handles one row given `(row, w_row, extra_row, rng)` and
+/// returns its pulse count. Free function so both [`SingleDeviceArray`]
+/// and the one-sided compound reuse the same fan-out.
+pub(crate) fn par_update_rows<F>(
+    cols: usize,
+    w: &mut [f32],
+    extra: Option<&mut [f32]>,
+    trains: &CoincidenceTrains,
+    row_rngs: &mut [Rng],
+    apply: F,
+) -> u64
+where
+    F: Fn(usize, &mut [f32], Option<&mut [f32]>, &mut Rng) -> u64 + Sync,
+{
+    if cols == 0 || w.is_empty() {
+        return 0;
+    }
+    assert_eq!(
+        row_rngs.len(),
+        w.len() / cols,
+        "par_update_rows: one RNG stream per row required"
+    );
+    struct Task<'a> {
+        w: &'a mut [f32],
+        extra: Option<&'a mut [f32]>,
+        rng: &'a mut Rng,
+        pulses: u64,
+    }
+    // one task Vec per update is the only allocation here — the row
+    // slices and streams are borrowed in place
+    let mut tasks: Vec<Task> = match extra {
+        Some(e) => w
+            .chunks_mut(cols)
+            .zip(e.chunks_mut(cols).map(Some))
+            .zip(row_rngs.iter_mut())
+            .map(|((w, extra), rng)| Task { w, extra, rng, pulses: 0 })
+            .collect(),
+        None => w
+            .chunks_mut(cols)
+            .zip(row_rngs.iter_mut())
+            .map(|(w, rng)| Task { w, extra: None, rng, pulses: 0 })
+            .collect(),
+    };
+    par_tasks_mut(&mut tasks, trains.ops_per_row(), |start, chunk| {
+        for (off, t) in chunk.iter_mut().enumerate() {
+            t.pulses = apply(start + off, t.w, t.extra.as_deref_mut(), t.rng);
+        }
+    });
+    tasks.iter().map(|t| t.pulses).sum()
+}
+
+impl DeviceArray for SingleDeviceArray {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
+        let (w, ctx) = self.split_state();
+        ctx.pulse(&mut w[idx], idx, up, rng);
+    }
+
+    /// Burst of `n` same-direction pulses — see `StepCtx::pulse_n` (the
+    /// shared crate-internal implementation: ConstantStep collapses the
+    /// burst into one draw; state-dependent kinds stay sequential but
+    /// inline).
+    fn pulse_n(&mut self, idx: usize, up: bool, n: u32, rng: &mut Rng) {
+        let (w, ctx) = self.split_state();
+        ctx.pulse_n(&mut w[idx], idx, up, n, rng);
+    }
+
+    /// Sequential block replay: row by row, sample by sample, bursts
+    /// applied through the inlined `StepCtx` math (no per-pulse virtual
+    /// dispatch, no per-pulse step-kind re-match beyond the burst call).
+    fn update_row_block(
+        &mut self,
+        row_range: Range<usize>,
+        trains: &CoincidenceTrains,
+        rngs: &mut [Rng],
+    ) -> u64 {
+        assert_eq!(
+            rngs.len(),
+            row_range.len(),
+            "update_row_block: one RNG stream per row required"
+        );
+        let cols = self.cols;
+        let (w, ctx) = self.split_state();
+        let mut pulses = 0;
+        for (i, rng) in row_range.zip(rngs.iter_mut()) {
+            let base = i * cols;
+            let row_w = &mut w[base..base + cols];
+            pulses += replay_row_trains(trains, i, rng, |j, up, c, r| {
+                ctx.pulse_n(&mut row_w[j], base + j, up, c, r)
+            });
+        }
+        pulses
+    }
+
+    /// Row-sharded parallel replay: the weight matrix splits into per-row
+    /// tasks fanned out over the thread pool; every row replays all
+    /// samples in batch order from its own pre-split stream, so the
+    /// result is bit-identical to the sequential block at any
+    /// `AIHWSIM_THREADS`.
+    fn update_with_trains(&mut self, trains: &CoincidenceTrains, row_rngs: &mut [Rng]) -> u64 {
+        assert_eq!(
+            row_rngs.len(),
+            self.rows,
+            "update_with_trains: one RNG stream per row required"
+        );
+        let cols = self.cols;
+        let (w, ctx) = self.split_state();
+        par_update_rows(cols, w, None, trains, row_rngs, |i, row_w, _, rng| {
+            let base = i * cols;
+            replay_row_trains(trains, i, rng, |j, up, c, r| {
+                ctx.pulse_n(&mut row_w[j], base + j, up, c, r)
+            })
+        })
     }
 
     fn weights(&mut self) -> &[f32] {

@@ -197,6 +197,10 @@ impl Tile for AnalogTile {
         self.apply_weight_modifier_impl();
     }
 
+    fn update_stats(&self) -> Option<UpdateStats> {
+        Some(self.last_update_stats)
+    }
+
     /// Fused batched forward: the weights are read once per mini-batch and
     /// the whole B×in block goes through one [`analog_mvm_batch`] call.
     fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {

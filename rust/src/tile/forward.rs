@@ -313,7 +313,7 @@ struct RowTask<'a> {
 /// noise-free configurations, in distribution otherwise (each row draws
 /// from its own [`Rng::split`] stream instead of one shared sequence).
 /// The kernel blocks the MVM so each weight row is streamed once per
-/// [`BATCH_BLOCK`] samples and fans the batch out across worker threads.
+/// `BATCH_BLOCK` samples and fans the batch out across worker threads.
 #[allow(clippy::too_many_arguments)]
 pub fn analog_mvm_batch(
     w: &[f32],
@@ -579,7 +579,7 @@ fn mvm_var_block(
 /// weight-row pass) and parallelized with the same chunking as the
 /// analog kernel. This is the perfect-path / FP-tile GEMM.
 /// `batch_worker`'s no-variance branch reuses the same
-/// [`plain_task_block`] kernel through per-row views.
+/// `plain_task_block` kernel through per-row views.
 pub fn mvm_plain_batch(
     w: &[f32],
     rows: usize,

@@ -24,14 +24,17 @@
 //! per-row streams off it), so parallel execution is bit-deterministic
 //! for a fixed seed at any `AIHWSIM_THREADS`.
 //!
-//! Known limitation: shard-level and batch-level parallelism compose —
-//! each shard's fused kernel may spawn its own `par_chunks_mut` workers
-//! inside a shard task, briefly oversubscribing cores for large grids of
-//! large shards. The batched kernels' `PAR_MIN_MACS` floor keeps small
-//! shards serial inside a task; a shared thread budget across the two
-//! levels is future work.
+//! Known limitation: shard-level and inner parallelism compose — each
+//! shard's fused MVM kernel (and, since the row-sharded update engine,
+//! each shard's `DeviceArray::update_with_trains`) may spawn its own
+//! workers inside a shard task, briefly oversubscribing cores for large
+//! grids of large shards. The batched kernels' `PAR_MIN_MACS` floor and
+//! the update engine's per-row cost floor (`threadpool::par_tasks_mut`)
+//! keep small shards serial inside a task; a shared thread budget across
+//! the levels is future work.
 
 use crate::config::{MappingParameter, RPUConfig};
+use crate::tile::pulsed_ops::UpdateStats;
 use crate::tile::{AnalogTile, FloatingPointTile, Tile};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -105,6 +108,9 @@ pub struct TileGrid {
     train: bool,
     is_analog: bool,
     scratch: GridScratch,
+    /// Aggregated shard statistics of the most recent [`Self::update`]
+    /// (pulses summed, BL / clip flag worst-cased across shards).
+    pub last_update_stats: UpdateStats,
 }
 
 impl TileGrid {
@@ -182,6 +188,7 @@ impl TileGrid {
             train: true,
             is_analog,
             scratch: GridScratch::default(),
+            last_update_stats: UpdateStats::default(),
         }
     }
 
@@ -434,6 +441,14 @@ impl TileGrid {
                 tile.update(xs, ds, lr);
             });
         }
+        // aggregate the shards' update statistics (observability)
+        let mut stats = UpdateStats::default();
+        for tile in &self.tiles {
+            if let Some(s) = tile.update_stats() {
+                stats.merge(&s);
+            }
+        }
+        self.last_update_stats = stats;
         if let Some(bias) = &mut self.bias {
             for (b, &g) in bias.iter_mut().zip(self.bias_grad.iter()) {
                 *b -= lr * g;
@@ -665,6 +680,27 @@ mod tests {
         grid.forward(&x);
         grid.update(0.5); // no caches → no-op
         assert_eq!(grid.get_weights().data(), w0.data());
+    }
+
+    #[test]
+    fn update_stats_aggregate_across_shards() {
+        // default (stochastic-pulsed) config over a 2x3 grid: after one
+        // real update the aggregated stats must show pulses from the
+        // shards and a BL within the configured ceiling
+        let mut rng = Rng::new(10);
+        let mut cfg = RPUConfig::default();
+        cfg.weight_scaling_omega = 0.0;
+        cfg.mapping = MappingParameter { max_input_size: 4, max_output_size: 4 };
+        let mut grid = TileGrid::analog(6, 10, false, cfg.clone(), &mut rng);
+        assert_eq!(grid.num_tiles(), 6);
+        let x = Matrix::rand_uniform(4, 10, -1.0, 1.0, &mut rng);
+        let d = Matrix::rand_uniform(4, 6, -1.0, 1.0, &mut rng);
+        grid.forward(&x);
+        grid.backward(&d);
+        grid.update(0.5);
+        let stats = grid.last_update_stats;
+        assert!(stats.pulses > 0, "expected pulses across shards");
+        assert!(stats.bl_used >= 1 && stats.bl_used <= cfg.update.desired_bl);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub use fp::FloatingPointTile;
 pub use grid::TileGrid;
 pub use inference::InferenceTile;
 
+use crate::tile::pulsed_ops::UpdateStats;
 use crate::util::matrix::Matrix;
 
 /// Common interface of all tiles. Shapes follow the convention
@@ -46,6 +47,13 @@ pub trait Tile: Send {
     /// Hardware-aware training hook: inject the configured weight noise
     /// for this mini-batch (no-op unless the tile supports modifiers).
     fn apply_weight_modifier(&mut self) {}
+
+    /// Statistics of this tile's most recent pulsed update (`None` for
+    /// tiles without a pulsed update path, e.g. floating-point tiles).
+    /// [`TileGrid`] aggregates these across its shards.
+    fn update_stats(&self) -> Option<UpdateStats> {
+        None
+    }
 
     /// Batched forward: `x` is B×in, `y` B×out.
     ///

@@ -19,6 +19,20 @@
 //! B_x/B_d = sqrt(d_max/x_max) so both probability ceilings match; update-
 //! BL management (UBLM) shortens the train to
 //! BL = ceil(λ·x_max·d_max/Δw_min) when the gradient is small.
+//!
+//! ## The row-sharded engine
+//!
+//! This module is the *driver*: it derives the per-sample scales, draws
+//! every sample's bit-trains in one parallel pass, and hands the whole
+//! batch's plan ([`CoincidenceTrains`]) to the device's block API
+//! ([`crate::device::DeviceArray::update_with_trains`]). The device
+//! replays the plan row block by row block on worker threads — legal
+//! because crosspoint state is row-disjoint — while each worker walks its
+//! rows **sample by sample in batch order**, preserving the
+//! per-crosspoint analog-accumulation semantics above. One decorrelated
+//! [`Rng::split`] stream per crossbar row makes the result bit-identical
+//! at any `AIHWSIM_THREADS` (same contract as the forward path); see
+//! DESIGN.md "Update path".
 
 use crate::config::{PulseType, UpdateParameters};
 use crate::device::DeviceArray;
@@ -27,8 +41,9 @@ use crate::util::rng::Rng;
 use crate::util::threadpool::par_chunks_mut;
 
 /// Scratch state for the update kernel (reused across calls). The mask
-/// buffers are batch-sized when driven by [`pulsed_update_batch`] and
-/// single-sample-sized under [`pulsed_update_sample`].
+/// buffers are batch-sized; `row_rngs` holds one decorrelated stream per
+/// crossbar row for the sharded replay; `dense_w` is the weight staging
+/// buffer of the exact (`PulseType::None`) path.
 #[derive(Default)]
 pub struct UpdateScratch {
     x_masks: Vec<u64>,
@@ -37,25 +52,178 @@ pub struct UpdateScratch {
     d_sign: Vec<bool>,
     metas: Vec<TrainMeta>,
     rngs: Vec<Rng>,
+    row_rngs: Vec<Rng>,
+    dense_w: Vec<f32>,
 }
 
-/// Per-sample pulse-train scaling derived by the batched driver.
+/// Per-sample pulse-train scaling derived by the update driver (paper
+/// Eq. (2) machinery: BL after update-BL management plus the x/d
+/// probability scale factors after update management).
 #[derive(Clone, Copy, Debug, Default)]
-struct TrainMeta {
+pub struct TrainMeta {
     /// Train length for this sample (0 = nothing to do).
-    bl: u32,
-    kx: f32,
-    kd: f32,
-    x_amax: f32,
-    d_amax: f32,
+    pub bl: u32,
+    /// Column probability scale: p_x(j) = `kx`·|x_j|/`x_amax`.
+    pub kx: f32,
+    /// Row probability scale: p_d(i) = `kd`·|d_i|/`d_amax`.
+    pub kd: f32,
+    /// abs-max of the sample's input vector.
+    pub x_amax: f32,
+    /// abs-max of the sample's error vector.
+    pub d_amax: f32,
 }
 
 /// Statistics of one update call (observability + tests).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct UpdateStats {
     pub bl_used: u32,
     pub pulses: u64,
     pub prob_clipped: bool,
+}
+
+impl UpdateStats {
+    /// Fold another call's stats into an aggregate (per-sample loops,
+    /// tile grids): pulses add, BL and the clip flag take the worst case.
+    pub fn merge(&mut self, other: &UpdateStats) {
+        self.pulses += other.pulses;
+        self.bl_used = self.bl_used.max(other.bl_used);
+        self.prob_clipped |= other.prob_clipped;
+    }
+}
+
+/// The batch's pulse plan in one of the two pulsed representations.
+#[derive(Clone, Copy)]
+pub enum PulsePlan<'a> {
+    /// Bit-packed stochastic trains (`PulseType::StochasticCompressed`):
+    /// per sample, `cols` column trains and `rows` row trains plus their
+    /// gradient signs; a coincidence is an AND of the two masks.
+    Stochastic {
+        /// `batch × cols` packed column trains.
+        x_masks: &'a [u64],
+        /// `batch × cols` signs (`true` = negative x).
+        x_sign: &'a [bool],
+        /// `batch × rows` packed row trains.
+        d_masks: &'a [u64],
+        /// `batch × rows` signs (`true` = negative d).
+        d_sign: &'a [bool],
+    },
+    /// Expected-coincidence replay (`PulseType::DeterministicImplicit`):
+    /// the raw gradients plus per-sample scales; the replay applies the
+    /// expected count BL·p_x·p_d per crosspoint, stochastically rounded
+    /// from the row's RNG stream.
+    Implicit {
+        /// `batch × cols` input vectors.
+        x: &'a [f32],
+        /// `batch × rows` error vectors.
+        d: &'a [f32],
+        /// Per-sample train scaling.
+        metas: &'a [TrainMeta],
+    },
+}
+
+/// A whole mini-batch's pre-drawn pulse plan, shared read-only by every
+/// row worker of the sharded update
+/// ([`crate::device::DeviceArray::update_with_trains`]).
+#[derive(Clone, Copy)]
+pub struct CoincidenceTrains<'a> {
+    /// Number of samples in the plan.
+    pub batch: usize,
+    /// Device rows (error dimension).
+    pub rows: usize,
+    /// Device columns (input dimension).
+    pub cols: usize,
+    /// Flip every pulse direction — used by compound cells whose
+    /// sub-device *subtracts* from the effective weight (negative γ).
+    pub flip: bool,
+    /// The per-sample trains / gradients.
+    pub plan: PulsePlan<'a>,
+}
+
+impl CoincidenceTrains<'_> {
+    /// The same plan with every pulse direction inverted.
+    pub fn flipped(&self) -> Self {
+        CoincidenceTrains { flip: !self.flip, ..*self }
+    }
+
+    /// Rough replay cost of one row (inner-loop ops) — used to size the
+    /// parallel row chunks so small updates stay single-threaded.
+    pub fn ops_per_row(&self) -> usize {
+        self.batch * self.cols + 1
+    }
+}
+
+/// Replay one crossbar row of the whole batch's plan, strictly in sample
+/// order (the analog-accumulation semantics of Eq. (2)): for every
+/// coincidence burst, `apply(col, up, count, rng)` is called exactly
+/// once. All randomness (implicit-plan stochastic rounding here, write
+/// noise inside `apply`) comes from the row's stream `rng`, so rows can
+/// replay concurrently without changing any row's bit pattern. Returns
+/// the number of pulses applied for this row.
+pub fn replay_row_trains(
+    trains: &CoincidenceTrains,
+    row: usize,
+    rng: &mut Rng,
+    mut apply: impl FnMut(usize, bool, u32, &mut Rng),
+) -> u64 {
+    let (batch, rows, cols) = (trains.batch, trains.rows, trains.cols);
+    let mut pulses = 0u64;
+    match trains.plan {
+        PulsePlan::Stochastic { x_masks, x_sign, d_masks, d_sign } => {
+            for b in 0..batch {
+                let dm = d_masks[b * rows + row];
+                if dm == 0 {
+                    continue;
+                }
+                let d_neg = d_sign[b * rows + row];
+                let xm = &x_masks[b * cols..(b + 1) * cols];
+                let xs = &x_sign[b * cols..(b + 1) * cols];
+                for j in 0..cols {
+                    let c = (dm & xm[j]).count_ones();
+                    if c == 0 {
+                        continue;
+                    }
+                    // SGD: ΔW = −lr·d⊗x ⇒ pulse up iff d_i·x_j < 0
+                    let up = (d_neg != xs[j]) != trains.flip;
+                    apply(j, up, c, rng);
+                    pulses += c as u64;
+                }
+            }
+        }
+        PulsePlan::Implicit { x, d, metas } => {
+            for b in 0..batch {
+                let m = &metas[b];
+                if m.bl == 0 {
+                    continue;
+                }
+                let dv = d[b * rows + row];
+                let pd = m.kd * dv.abs() / m.d_amax;
+                if pd <= 0.0 {
+                    continue;
+                }
+                let d_neg = dv < 0.0;
+                let xr = &x[b * cols..(b + 1) * cols];
+                for j in 0..cols {
+                    let px = m.kx * xr[j].abs() / m.x_amax;
+                    if px <= 0.0 {
+                        continue;
+                    }
+                    // expected coincidence count, stochastically rounded
+                    let expect = m.bl as f32 * px * pd;
+                    let mut c = expect.floor() as u32;
+                    if rng.bernoulli((expect - c as f32) as f64) {
+                        c += 1;
+                    }
+                    if c == 0 {
+                        continue;
+                    }
+                    let up = (d_neg != (xr[j] < 0.0)) != trains.flip;
+                    apply(j, up, c, rng);
+                    pulses += c as u64;
+                }
+            }
+        }
+    }
+    pulses
 }
 
 /// Draw a Bernoulli(p) bit-train of length `bl` as a packed u64.
@@ -89,9 +257,38 @@ fn draw_train(p: f32, bl: u32, rng: &mut Rng) -> u64 {
     mask
 }
 
+/// Derive one sample's train scaling (BL via UBLM, probability scales via
+/// UM — see the module docs). Returns the meta plus whether either
+/// probability ceiling clipped at 1.
+fn train_meta(
+    x_amax: f32,
+    d_amax: f32,
+    lr: f32,
+    dw_min: f32,
+    up: &UpdateParameters,
+) -> (TrainMeta, bool) {
+    if x_amax == 0.0 || d_amax == 0.0 || lr == 0.0 {
+        return (TrainMeta::default(), false);
+    }
+    let strength = lr * x_amax * d_amax / dw_min; // expected pulses at the max crosspoint
+    let bl = if up.update_bl_management {
+        (strength.ceil() as u32).clamp(1, up.desired_bl)
+    } else {
+        up.desired_bl
+    };
+    let k = strength / bl as f32; // p_x_max·p_d_max product
+    let um = if up.update_management { (d_amax / x_amax).sqrt() } else { 1.0 };
+    let kx = (k.sqrt() * um).min(1.0);
+    let kd = (k.sqrt() / um).min(1.0);
+    let clipped = k.sqrt() * um > 1.0 || k.sqrt() / um > 1.0;
+    (TrainMeta { bl, kx, kd, x_amax, d_amax }, clipped)
+}
+
 /// Apply the pulsed update for one sample: `W ← W − lr·d⊗x` in expectation.
 ///
 /// `x` has the tile's input size (cols), `d` the output size (rows).
+/// Runs the same row-sharded engine as [`pulsed_update_batch`] with a
+/// batch of one, minus the compound pre/post hooks.
 pub fn pulsed_update_sample(
     device: &mut dyn DeviceArray,
     x: &[f32],
@@ -101,120 +298,20 @@ pub fn pulsed_update_sample(
     rng: &mut Rng,
     scratch: &mut UpdateScratch,
 ) -> UpdateStats {
-    let rows = device.rows();
-    let cols = device.cols();
-    assert_eq!(x.len(), cols);
-    assert_eq!(d.len(), rows);
-    let mut stats = UpdateStats::default();
-
-    let x_amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let d_amax = d.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    if x_amax == 0.0 || d_amax == 0.0 || lr == 0.0 {
-        return stats;
-    }
-    let dw_min = device.dw_min().max(1e-12);
-
-    match up.pulse_type {
-        PulseType::None => {
-            // exact FP rank-1 through the device bounds
-            apply_dense(device, x, d, lr);
-            stats.bl_used = 0;
-            return stats;
-        }
-        PulseType::StochasticCompressed | PulseType::DeterministicImplicit => {}
-    }
-
-    // ---- BL and probability scales ----
-    let strength = lr * x_amax * d_amax / dw_min; // expected pulses at the max crosspoint
-    let bl = if up.update_bl_management {
-        (strength.ceil() as u32).clamp(1, up.desired_bl)
-    } else {
-        up.desired_bl
-    };
-    stats.bl_used = bl;
-    let k = strength / bl as f32; // p_x_max·p_d_max product
-    let um = if up.update_management { (d_amax / x_amax).sqrt() } else { 1.0 };
-    let kx = (k.sqrt() * um).min(1.0);
-    let kd = (k.sqrt() / um).min(1.0);
-    if k.sqrt() * um > 1.0 || k.sqrt() / um > 1.0 {
-        stats.prob_clipped = true;
-    }
-
-    match up.pulse_type {
-        PulseType::StochasticCompressed => {
-            // ---- draw trains ----
-            scratch.x_masks.resize(cols, 0);
-            scratch.d_masks.resize(rows, 0);
-            scratch.x_sign.resize(cols, false);
-            scratch.d_sign.resize(rows, false);
-            for j in 0..cols {
-                scratch.x_masks[j] = draw_train(kx * x[j].abs() / x_amax, bl, rng);
-                scratch.x_sign[j] = x[j] < 0.0;
-            }
-            for i in 0..rows {
-                scratch.d_masks[i] = draw_train(kd * d[i].abs() / d_amax, bl, rng);
-                scratch.d_sign[i] = d[i] < 0.0;
-            }
-            // ---- coincidence detection + sequential device pulses ----
-            for i in 0..rows {
-                let dm = scratch.d_masks[i];
-                if dm == 0 {
-                    continue;
-                }
-                let row_base = i * cols;
-                let d_neg = scratch.d_sign[i];
-                for j in 0..cols {
-                    let c = (dm & scratch.x_masks[j]).count_ones();
-                    if c == 0 {
-                        continue;
-                    }
-                    // SGD: ΔW = −lr·d⊗x ⇒ pulse up iff d_i·x_j < 0
-                    let up_dir = d_neg != scratch.x_sign[j];
-                    device.pulse_n(row_base + j, up_dir, c, rng);
-                    stats.pulses += c as u64;
-                }
-            }
-        }
-        PulseType::DeterministicImplicit => {
-            // expected coincidence count, stochastically rounded
-            for i in 0..rows {
-                let pd = kd * d[i].abs() / d_amax;
-                if pd <= 0.0 {
-                    continue;
-                }
-                let d_neg = d[i] < 0.0;
-                let row_base = i * cols;
-                for j in 0..cols {
-                    let px = kx * x[j].abs() / x_amax;
-                    if px <= 0.0 {
-                        continue;
-                    }
-                    let expect = bl as f32 * px * pd;
-                    let mut c = expect.floor() as u32;
-                    if rng.bernoulli((expect - c as f32) as f64) {
-                        c += 1;
-                    }
-                    if c == 0 {
-                        continue;
-                    }
-                    let up_dir = d_neg != (x[j] < 0.0);
-                    device.pulse_n(row_base + j, up_dir, c, rng);
-                    stats.pulses += c as u64;
-                }
-            }
-        }
-        PulseType::None => unreachable!(),
-    }
-    stats
+    assert_eq!(x.len(), device.cols());
+    assert_eq!(d.len(), device.rows());
+    update_core(device, x, d, 1, lr, up, rng, scratch)
 }
 
 /// Exact dense rank-1 update through the device's `set_weights` (clips at
 /// bounds). Used for `PulseType::None`. Rows go through the lane-blocked
-/// rank-1 [`kernels::axpy`] micro-kernel.
-fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32) {
+/// rank-1 [`kernels::axpy`] micro-kernel; the weight staging buffer is
+/// scratch reused across calls (no per-sample allocation).
+fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32, w: &mut Vec<f32>) {
     let rows = device.rows();
     let cols = device.cols();
-    let mut w = device.weights().to_vec();
+    w.clear();
+    w.extend_from_slice(device.weights());
     for i in 0..rows {
         let a = -lr * d[i];
         if a == 0.0 {
@@ -222,19 +319,21 @@ fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32) {
         }
         kernels::axpy(a, x, &mut w[i * cols..(i + 1) * cols]);
     }
-    device.set_weights(&w);
+    device.set_weights(w);
 }
 
 /// Batch update with the compound pre/post hooks.
 ///
-/// For the stochastic pulse trains this is a *batched outer-product
-/// driver*: phase 1 draws every sample's x/d bit-trains in one pass
-/// (parallelized across the batch with decorrelated [`Rng::split`]
-/// streams, so the result is deterministic for a given seed regardless
-/// of thread count); phase 2 applies the coincidences to the device
-/// **sequentially, sample by sample** — gradient accumulation happens in
-/// analog memory, the paper's §3 semantic that distinguishes Eq. (2)
-/// from a digitally accumulated outer product.
+/// Three phases (see the module docs): derive per-sample scales; draw
+/// every sample's x/d bit-trains in one pass (parallelized across the
+/// batch with decorrelated [`Rng::split`] streams); then hand the plan to
+/// the device's row-sharded block API, which replays all samples **in
+/// batch order per crosspoint** on parallel row blocks — gradient
+/// accumulation happens in analog memory, the paper's §3 semantic that
+/// distinguishes Eq. (2) from a digitally accumulated outer product. One
+/// split stream per sample (drawing) and per row (replay) makes the whole
+/// update bit-deterministic for a given seed at any `AIHWSIM_THREADS`.
+#[allow(clippy::too_many_arguments)]
 pub fn pulsed_update_batch(
     device: &mut dyn DeviceArray,
     x_batch: &[f32], // B × cols, row-major
@@ -245,36 +344,10 @@ pub fn pulsed_update_batch(
     rng: &mut Rng,
     scratch: &mut UpdateScratch,
 ) -> UpdateStats {
-    let rows = device.rows();
-    let cols = device.cols();
-    assert_eq!(x_batch.len(), batch * cols);
-    assert_eq!(d_batch.len(), batch * rows);
+    assert_eq!(x_batch.len(), batch * device.cols());
+    assert_eq!(d_batch.len(), batch * device.rows());
     device.pre_update(up, rng);
-    let total = match up.pulse_type {
-        PulseType::StochasticCompressed => {
-            batched_stochastic_update(device, x_batch, d_batch, batch, lr, up, rng, scratch)
-        }
-        // dense and deterministic-implicit updates draw no trains; keep
-        // the straightforward per-sample loop
-        PulseType::None | PulseType::DeterministicImplicit => {
-            let mut total = UpdateStats::default();
-            for b in 0..batch {
-                let s = pulsed_update_sample(
-                    device,
-                    &x_batch[b * cols..(b + 1) * cols],
-                    &d_batch[b * rows..(b + 1) * rows],
-                    lr,
-                    up,
-                    rng,
-                    scratch,
-                );
-                total.pulses += s.pulses;
-                total.bl_used = total.bl_used.max(s.bl_used);
-                total.prob_clipped |= s.prob_clipped;
-            }
-            total
-        }
-    };
+    let total = update_core(device, x_batch, d_batch, batch, lr, up, rng, scratch);
     device.post_update(up, rng);
     total
 }
@@ -291,9 +364,10 @@ struct TrainTask<'a> {
     rng: &'a mut Rng,
 }
 
-/// The stochastic-compressed batch driver (see [`pulsed_update_batch`]).
+/// The shared update engine behind [`pulsed_update_sample`] and
+/// [`pulsed_update_batch`] (which adds the compound pre/post hooks).
 #[allow(clippy::too_many_arguments)]
-fn batched_stochastic_update(
+fn update_core(
     device: &mut dyn DeviceArray,
     x_batch: &[f32],
     d_batch: &[f32],
@@ -306,116 +380,111 @@ fn batched_stochastic_update(
     let rows = device.rows();
     let cols = device.cols();
     let mut stats = UpdateStats::default();
-    if batch == 0 {
+    if batch == 0 || rows == 0 || cols == 0 {
         return stats;
     }
-    let dw_min = device.dw_min().max(1e-12);
+
+    if up.pulse_type == PulseType::None {
+        // exact FP rank-1 per sample through the device bounds
+        for b in 0..batch {
+            let x = &x_batch[b * cols..(b + 1) * cols];
+            let d = &d_batch[b * rows..(b + 1) * rows];
+            if x.iter().all(|&v| v == 0.0) || d.iter().all(|&v| v == 0.0) || lr == 0.0 {
+                continue;
+            }
+            apply_dense(device, x, d, lr, &mut scratch.dense_w);
+        }
+        return stats;
+    }
 
     // ---- per-sample BL and probability scales (cheap, serial) ----
+    let dw_min = device.dw_min().max(1e-12);
     scratch.metas.clear();
-    scratch.rngs.clear();
     for b in 0..batch {
         let x = &x_batch[b * cols..(b + 1) * cols];
         let d = &d_batch[b * rows..(b + 1) * rows];
         let x_amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let d_amax = d.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        let mut meta = TrainMeta::default();
-        if x_amax > 0.0 && d_amax > 0.0 && lr != 0.0 {
-            let strength = lr * x_amax * d_amax / dw_min;
-            let bl = if up.update_bl_management {
-                (strength.ceil() as u32).clamp(1, up.desired_bl)
-            } else {
-                up.desired_bl
-            };
-            let k = strength / bl as f32;
-            let um = if up.update_management { (d_amax / x_amax).sqrt() } else { 1.0 };
-            meta = TrainMeta {
-                bl,
-                kx: (k.sqrt() * um).min(1.0),
-                kd: (k.sqrt() / um).min(1.0),
-                x_amax,
-                d_amax,
-            };
-            stats.bl_used = stats.bl_used.max(bl);
-            if k.sqrt() * um > 1.0 || k.sqrt() / um > 1.0 {
-                stats.prob_clipped = true;
-            }
-        }
+        let (meta, clipped) = train_meta(x_amax, d_amax, lr, dw_min, up);
+        stats.bl_used = stats.bl_used.max(meta.bl);
+        stats.prob_clipped |= clipped;
         scratch.metas.push(meta);
-        scratch.rngs.push(rng.split());
+    }
+    if scratch.metas.iter().all(|m| m.bl == 0) {
+        return stats; // zero gradient / zero lr: nothing to replay
     }
 
-    // ---- phase 1: draw all trains for the whole batch in one pass ----
-    scratch.x_masks.resize(batch * cols, 0);
-    scratch.d_masks.resize(batch * rows, 0);
-    scratch.x_sign.resize(batch * cols, false);
-    scratch.d_sign.resize(batch * rows, false);
-    let mut tasks: Vec<TrainTask> = x_batch
-        .chunks(cols)
-        .zip(d_batch.chunks(rows))
-        .zip(scratch.x_masks.chunks_mut(cols))
-        .zip(scratch.d_masks.chunks_mut(rows))
-        .zip(scratch.x_sign.chunks_mut(cols))
-        .zip(scratch.d_sign.chunks_mut(rows))
-        .zip(scratch.metas.iter())
-        .zip(scratch.rngs.iter_mut())
-        .map(|(((((((x, d), x_masks), d_masks), x_sign), d_sign), meta), rng)| TrainTask {
-            x,
-            d,
-            x_masks,
-            d_masks,
-            x_sign,
-            d_sign,
-            meta: *meta,
-            rng,
-        })
-        .collect();
-    let min_samples = 1 + 4096 / (rows + cols + 1);
-    par_chunks_mut(&mut tasks, min_samples, |_, chunk| {
-        for t in chunk.iter_mut() {
-            let m = t.meta;
-            if m.bl == 0 {
-                continue;
-            }
-            for j in 0..t.x.len() {
-                t.x_masks[j] = draw_train(m.kx * t.x[j].abs() / m.x_amax, m.bl, t.rng);
-                t.x_sign[j] = t.x[j] < 0.0;
-            }
-            for i in 0..t.d.len() {
-                t.d_masks[i] = draw_train(m.kd * t.d[i].abs() / m.d_amax, m.bl, t.rng);
-                t.d_sign[i] = t.d[i] < 0.0;
-            }
+    // ---- draw phase (StochasticCompressed only): all trains, one pass ----
+    if up.pulse_type == PulseType::StochasticCompressed {
+        scratch.rngs.clear();
+        for _ in 0..batch {
+            scratch.rngs.push(rng.split());
         }
-    });
-
-    // ---- phase 2: coincidence detection + sequential device pulses ----
-    for b in 0..batch {
-        if scratch.metas[b].bl == 0 {
-            continue;
-        }
-        let xm = &scratch.x_masks[b * cols..(b + 1) * cols];
-        let xs = &scratch.x_sign[b * cols..(b + 1) * cols];
-        let dm = &scratch.d_masks[b * rows..(b + 1) * rows];
-        let ds = &scratch.d_sign[b * rows..(b + 1) * rows];
-        for i in 0..rows {
-            let dmask = dm[i];
-            if dmask == 0 {
-                continue;
-            }
-            let row_base = i * cols;
-            let d_neg = ds[i];
-            for j in 0..cols {
-                let c = (dmask & xm[j]).count_ones();
-                if c == 0 {
+        scratch.x_masks.resize(batch * cols, 0);
+        scratch.d_masks.resize(batch * rows, 0);
+        scratch.x_sign.resize(batch * cols, false);
+        scratch.d_sign.resize(batch * rows, false);
+        let mut tasks: Vec<TrainTask> = x_batch
+            .chunks(cols)
+            .zip(d_batch.chunks(rows))
+            .zip(scratch.x_masks.chunks_mut(cols))
+            .zip(scratch.d_masks.chunks_mut(rows))
+            .zip(scratch.x_sign.chunks_mut(cols))
+            .zip(scratch.d_sign.chunks_mut(rows))
+            .zip(scratch.metas.iter())
+            .zip(scratch.rngs.iter_mut())
+            .map(|(((((((x, d), x_masks), d_masks), x_sign), d_sign), meta), rng)| TrainTask {
+                x,
+                d,
+                x_masks,
+                d_masks,
+                x_sign,
+                d_sign,
+                meta: *meta,
+                rng,
+            })
+            .collect();
+        let min_samples = 1 + 4096 / (rows + cols + 1);
+        par_chunks_mut(&mut tasks, min_samples, |_, chunk| {
+            for t in chunk.iter_mut() {
+                let m = t.meta;
+                if m.bl == 0 {
+                    // the scratch masks may hold a previous batch's trains
+                    t.x_masks.fill(0);
+                    t.d_masks.fill(0);
                     continue;
                 }
-                // SGD: ΔW = −lr·d⊗x ⇒ pulse up iff d_i·x_j < 0
-                let up_dir = d_neg != xs[j];
-                device.pulse_n(row_base + j, up_dir, c, rng);
-                stats.pulses += c as u64;
+                for j in 0..t.x.len() {
+                    t.x_masks[j] = draw_train(m.kx * t.x[j].abs() / m.x_amax, m.bl, t.rng);
+                    t.x_sign[j] = t.x[j] < 0.0;
+                }
+                for i in 0..t.d.len() {
+                    t.d_masks[i] = draw_train(m.kd * t.d[i].abs() / m.d_amax, m.bl, t.rng);
+                    t.d_sign[i] = t.d[i] < 0.0;
+                }
             }
-        }
+        });
     }
+
+    // ---- replay phase: row-sharded, one split RNG stream per row ----
+    scratch.row_rngs.clear();
+    for _ in 0..rows {
+        scratch.row_rngs.push(rng.split());
+    }
+    let plan = match up.pulse_type {
+        PulseType::StochasticCompressed => PulsePlan::Stochastic {
+            x_masks: &scratch.x_masks,
+            x_sign: &scratch.x_sign,
+            d_masks: &scratch.d_masks,
+            d_sign: &scratch.d_sign,
+        },
+        PulseType::DeterministicImplicit => {
+            PulsePlan::Implicit { x: x_batch, d: d_batch, metas: &scratch.metas }
+        }
+        PulseType::None => unreachable!(),
+    };
+    let trains = CoincidenceTrains { batch, rows, cols, flip: false, plan };
+    stats.pulses = device.update_with_trains(&trains, &mut scratch.row_rngs);
     stats
 }
 
@@ -602,5 +671,77 @@ mod tests {
         }
         let w = dev.weights()[0];
         assert!(w > 0.02, "tiki-taka must move the effective weight, got {w}");
+    }
+
+    #[test]
+    fn flipped_plan_inverts_every_direction() {
+        // replay the same stochastic plan twice on an idealized device —
+        // once flipped — and check the weight movements are exact mirrors
+        // (idealized: symmetric constant steps, no write noise).
+        let up = UpdateParameters::default();
+        let mut s = UpdateScratch::default();
+        let (mut a, mut rng_a) = idealized_device(3, 4, 9);
+        let (mut b, mut rng_b) = idealized_device(3, 4, 9);
+        let x = vec![0.9f32, -0.4, 0.7, -0.2];
+        let d = vec![1.0f32, -0.6, 0.3];
+        pulsed_update_sample(a.as_mut(), &x, &d, 0.02, &up, &mut rng_a, &mut s);
+        // manual flipped replay with the identical RNG trajectory
+        let mut s2 = UpdateScratch::default();
+        flipped_update(b.as_mut(), &x, &d, 0.02, &up, &mut rng_b, &mut s2);
+        for (wa, wb) in a.weights().iter().zip(b.weights().iter()) {
+            assert!((wa + wb).abs() < 1e-7, "{wa} vs {wb} not mirrored");
+        }
+    }
+
+    /// Test helper: run the engine with the plan's `flip` bit set.
+    fn flipped_update(
+        device: &mut dyn DeviceArray,
+        x: &[f32],
+        d: &[f32],
+        lr: f32,
+        up: &UpdateParameters,
+        rng: &mut Rng,
+        scratch: &mut UpdateScratch,
+    ) {
+        // mirror of update_core's stochastic path with flip = true
+        let rows = device.rows();
+        let cols = device.cols();
+        let dw_min = device.dw_min().max(1e-12);
+        let x_amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d_amax = d.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let (meta, _) = train_meta(x_amax, d_amax, lr, dw_min, up);
+        assert!(meta.bl > 0);
+        let mut srng = rng.split();
+        scratch.x_masks.resize(cols, 0);
+        scratch.d_masks.resize(rows, 0);
+        scratch.x_sign.resize(cols, false);
+        scratch.d_sign.resize(rows, false);
+        for j in 0..cols {
+            scratch.x_masks[j] = draw_train(meta.kx * x[j].abs() / meta.x_amax, meta.bl, &mut srng);
+            scratch.x_sign[j] = x[j] < 0.0;
+        }
+        for i in 0..rows {
+            scratch.d_masks[i] = draw_train(meta.kd * d[i].abs() / meta.d_amax, meta.bl, &mut srng);
+            scratch.d_sign[i] = d[i] < 0.0;
+        }
+        scratch.row_rngs.clear();
+        for _ in 0..rows {
+            scratch.row_rngs.push(rng.split());
+        }
+        let trains = CoincidenceTrains {
+            batch: 1,
+            rows,
+            cols,
+            flip: false,
+            plan: PulsePlan::Stochastic {
+                x_masks: &scratch.x_masks,
+                x_sign: &scratch.x_sign,
+                d_masks: &scratch.d_masks,
+                d_sign: &scratch.d_sign,
+            },
+        }
+        .flipped();
+        assert!(trains.flip);
+        device.update_with_trains(&trains, &mut scratch.row_rngs);
     }
 }

@@ -86,6 +86,26 @@ where
     });
 }
 
+/// Minimum amount of per-chunk work (in rough inner-loop operations)
+/// before a fork-join helper is allowed to hand tasks to another worker:
+/// spawn/teardown of a scoped thread costs on the order of tens of
+/// microseconds, so chunks below this floor run serially.
+const MIN_OPS_PER_CHUNK: usize = 8192;
+
+/// Cost-aware fork-join over uniform tasks: like [`par_chunks_mut`], but
+/// the minimum chunk length is derived from `ops_per_task` (an estimate
+/// of one task's inner-loop work) so tiny workloads stay single-threaded
+/// instead of paying thread-spawn latency. Built for the row-sharded
+/// pulsed-update engine (one task per crossbar row, cost ~ batch × cols),
+/// but usable by any fan-out whose per-task cost is known up front.
+pub fn par_tasks_mut<T: Send, F>(tasks: &mut [T], ops_per_task: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let min_chunk = MIN_OPS_PER_CHUNK.div_ceil(ops_per_task.max(1)).max(1);
+    par_chunks_mut(tasks, min_chunk, f);
+}
+
 /// Parallel-for over an index range: runs `f(i)` for i in 0..n with results
 /// collected in order. `f` must be cheap to call in any order.
 pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
@@ -134,6 +154,34 @@ mod tests {
             counter.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn par_tasks_mut_covers_and_respects_cost_floor() {
+        // cheap tasks: the cost floor must collapse everything into one
+        // serial chunk (8192 / 1 ops ≥ the 100 tasks)
+        let counter = AtomicUsize::new(0);
+        let mut data = vec![0usize; 100];
+        par_tasks_mut(&mut data, 1, |start, chunk| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+        // expensive tasks: still covers every element exactly once
+        let mut big = vec![0usize; 257];
+        par_tasks_mut(&mut big, 1 << 20, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i + 1;
+            }
+        });
+        for (i, v) in big.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
     }
 
     #[test]

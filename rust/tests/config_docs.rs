@@ -1,0 +1,60 @@
+//! docs/CONFIG.md cannot drift from the code: every fenced ```json
+//! block in the configuration reference must load through
+//! `config::loader` (parse + validate). Illustrative fragments in the
+//! doc use plain fences precisely so this test only sees complete
+//! configs.
+
+use aihwsim::config::loader::rpu_config_from_json;
+use aihwsim::util::json::Json;
+
+/// Extract the contents of every ```json fenced block.
+fn json_blocks(markdown: &str) -> Vec<(usize, String)> {
+    let mut blocks = Vec::new();
+    let mut current: Option<(usize, String)> = None;
+    for (lineno, line) in markdown.lines().enumerate() {
+        let trimmed = line.trim();
+        match &mut current {
+            None => {
+                if trimmed == "```json" {
+                    current = Some((lineno + 1, String::new()));
+                }
+            }
+            Some((_, buf)) => {
+                if trimmed == "```" {
+                    blocks.push(current.take().unwrap());
+                } else {
+                    buf.push_str(line);
+                    buf.push('\n');
+                }
+            }
+        }
+    }
+    assert!(current.is_none(), "unterminated ```json block in docs/CONFIG.md");
+    blocks
+}
+
+#[test]
+fn every_config_md_snippet_loads() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/CONFIG.md");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+    let blocks = json_blocks(&text);
+    assert!(
+        blocks.len() >= 8,
+        "expected the reference to carry at least 8 loadable snippets, found {}",
+        blocks.len()
+    );
+    for (line, block) in &blocks {
+        let json = Json::parse(block)
+            .unwrap_or_else(|e| panic!("CONFIG.md snippet at line {line} is not valid JSON: {e}"));
+        rpu_config_from_json(&json).unwrap_or_else(|e| {
+            panic!("CONFIG.md snippet at line {line} rejected by config::loader: {e}")
+        });
+    }
+    // the smallest snippet documents that {} is a valid config — make
+    // sure it is actually present
+    assert!(
+        blocks.iter().any(|(_, b)| b.trim() == "{}"),
+        "the all-defaults `{{}}` snippet is missing"
+    );
+}

@@ -2,14 +2,14 @@
 //! hand-rolled `util::proptest` harness (seeded, replayable).
 
 use aihwsim::config::{
-    presets, BoundManagement, DeviceConfig, IOParameters, NoiseManagement, PulsedDeviceParams,
-    RPUConfig, SingleDeviceConfig, StepKind, UpdateParameters,
+    presets, BoundManagement, DeviceConfig, IOParameters, NoiseManagement, PulseType,
+    PulsedDeviceParams, RPUConfig, SingleDeviceConfig, StepKind, UpdateParameters,
 };
-use aihwsim::device::build;
+use aihwsim::device::{build, SequentialRef};
 use aihwsim::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
 use aihwsim::tile::forward::{analog_mvm, mvm_plain, mvm_plain_batch, MvmScratch};
 use aihwsim::tile::kernels;
-use aihwsim::tile::pulsed_ops::{pulsed_update_sample, UpdateScratch};
+use aihwsim::tile::pulsed_ops::{pulsed_update_batch, pulsed_update_sample, UpdateScratch};
 use aihwsim::tile::{AnalogTile, Tile};
 use aihwsim::util::matrix::Matrix;
 use aihwsim::util::proptest::{check, Gen};
@@ -388,6 +388,77 @@ fn prop_backward_is_transpose_of_forward_when_quiet() {
         let rhs: f64 = wtd.iter().zip(x.iter()).map(|(a, b)| (a * b) as f64).sum();
         if (lhs - rhs).abs() > 1e-3 * (1.0 + lhs.abs()) {
             return Err(format!("adjoint broken: {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_update_stats_match_sequential_reference() {
+    // the row-sharded engine's UpdateStats (pulses, bl_used, prob_clipped)
+    // and final weights must match the sequential reference exactly on
+    // random devices/shapes — including the update_bl_management clamp
+    // edge, driven here by oversized learning rates (strength ≥ desired_bl)
+    check("sharded-update-stats-vs-sequential", 30, |g| {
+        let rows = g.usize_in(1, 10);
+        let cols = g.usize_in(1, 12);
+        let batch = g.usize_in(1, 4);
+        let cfg = DeviceConfig::Single(random_single_device(g));
+        let mut up = UpdateParameters::default();
+        up.desired_bl = g.usize_in(1, 63) as u32;
+        up.update_management = g.bool();
+        up.update_bl_management = true;
+        up.pulse_type = *g.choose(&[
+            PulseType::StochasticCompressed,
+            PulseType::DeterministicImplicit,
+        ]);
+        // half the cases force the UBLM clamp: huge lr → strength ≥ BL
+        let lr = if g.bool() { g.f32_in(1.0, 20.0) } else { g.f32_in(1e-4, 0.05) };
+        let x = g.vec_f32(batch * cols, -1.0, 1.0);
+        let d = g.vec_f32(batch * rows, -1.0, 1.0);
+        let seed = g.seed ^ 0xBEEF;
+        let mut a = {
+            let mut r = Rng::new(seed);
+            build(&cfg, rows, cols, &mut r)
+        };
+        let mut b = SequentialRef({
+            let mut r = Rng::new(seed);
+            build(&cfg, rows, cols, &mut r)
+        });
+        let (mut rng_a, mut rng_b) = (Rng::new(seed ^ 1), Rng::new(seed ^ 1));
+        let (mut sc_a, mut sc_b) = (UpdateScratch::default(), UpdateScratch::default());
+        let sa = pulsed_update_batch(a.as_mut(), &x, &d, batch, lr, &up, &mut rng_a, &mut sc_a);
+        let sb = pulsed_update_batch(&mut b, &x, &d, batch, lr, &up, &mut rng_b, &mut sc_b);
+        if sa != sb {
+            return Err(format!("stats diverge: {sa:?} vs {sb:?}"));
+        }
+        for (i, (wa, wb)) in a.weights().iter().zip(b.weights().iter()).enumerate() {
+            if wa.to_bits() != wb.to_bits() {
+                return Err(format!("w[{i}] bits diverge: {wa} vs {wb}"));
+            }
+        }
+        // bl accounting invariants + the clamp edge
+        if sa.bl_used > up.desired_bl {
+            return Err(format!("bl_used {} exceeds desired_bl {}", sa.bl_used, up.desired_bl));
+        }
+        let dw_min = a.dw_min().max(1e-12);
+        let mut max_strength = 0.0f32;
+        for bidx in 0..batch {
+            let xa = x[bidx * cols..(bidx + 1) * cols]
+                .iter()
+                .fold(0.0f32, |m, &v| m.max(v.abs()));
+            let da = d[bidx * rows..(bidx + 1) * rows]
+                .iter()
+                .fold(0.0f32, |m, &v| m.max(v.abs()));
+            if xa > 0.0 && da > 0.0 {
+                max_strength = max_strength.max(lr * xa * da / dw_min);
+            }
+        }
+        if max_strength >= up.desired_bl as f32 && sa.bl_used != up.desired_bl {
+            return Err(format!(
+                "UBLM clamp edge: strength {max_strength} ≥ BL {} but bl_used {}",
+                up.desired_bl, sa.bl_used
+            ));
         }
         Ok(())
     });
