@@ -15,12 +15,14 @@
 //! Output: results/hwa_inference.csv
 
 use aihwsim::config::{InferenceRPUConfig, RPUConfig, WeightModifier};
-use aihwsim::coordinator::evaluator::{accuracy_over_time, InferenceMlp};
+use aihwsim::config::MappingParameter;
+use aihwsim::coordinator::checkpoint::collect_linear_layers;
+use aihwsim::coordinator::evaluator::{accuracy_over_time, mlp_from_layers};
 use aihwsim::coordinator::trainer::{train_classifier, TrainConfig};
 use aihwsim::data::synthetic::synthetic_images_noisy;
 use aihwsim::data::Dataset;
 use aihwsim::nn::sequential::{mlp, Backend};
-use aihwsim::nn::AnalogLinear;
+use aihwsim::nn::Module;
 use aihwsim::util::logging::CsvLogger;
 use aihwsim::util::matrix::Matrix;
 use aihwsim::util::rng::Rng;
@@ -38,15 +40,7 @@ fn train(hwa: bool, ds: &Dataset) -> (f64, Layers) {
     let tc =
         TrainConfig { epochs: 16, batch_size: 32, lr: 0.1, seed: 42, log_every: 0, csv_path: None };
     let rep = train_classifier(&mut model, ds, ds, &tc);
-    let mut layers = Vec::new();
-    for idx in [0usize, 2] {
-        let lin = model
-            .module_mut(idx)
-            .as_any_mut()
-            .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            .expect("linear layer");
-        layers.push((lin.get_weights(), lin.get_bias().unwrap().to_vec()));
-    }
+    let layers = collect_linear_layers(&mut model);
     (rep.final_test_acc(), layers)
 }
 
@@ -72,8 +66,8 @@ fn main() {
         cfg.noise_model.prog_noise_scale = 3.0; // pessimistic chip
         cfg.noise_model.read_noise_scale = 2.0;
         cfg.drift_compensation = gdc;
-        let mut net = InferenceMlp::from_weights(layers, &cfg, &mut Rng::new(99));
-        net.program();
+        let mut net = mlp_from_layers(layers, &MappingParameter::unlimited(), &mut Rng::new(5));
+        net.convert_to_inference(&cfg, &mut Rng::new(99));
         accuracy_over_time(&mut net, &ds, &times, 32)
     };
     let fp_gdc = sweep(&layers_fp, true);

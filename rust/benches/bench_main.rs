@@ -16,16 +16,19 @@
 use std::time::Instant;
 
 use aihwsim::config::{
-    presets, DeviceConfig, IOParameters, MappingParameter, RPUConfig, UpdateParameters,
+    presets, DeviceConfig, IOParameters, InferenceRPUConfig, MappingParameter, RPUConfig,
+    UpdateParameters,
 };
 use aihwsim::tile::TileGrid;
+use aihwsim::coordinator::evaluator::{drift_evaluate, DriftEvalConfig};
 use aihwsim::coordinator::experiments::{device_response, pcm_drift};
 #[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
 use aihwsim::coordinator::trainer::{train_classifier, TrainConfig};
 use aihwsim::data::synthetic_images;
 use aihwsim::device::build;
-use aihwsim::nn::sequential::{mlp, Backend};
+use aihwsim::nn::sequential::{lenet, mlp, Backend};
+use aihwsim::nn::Module;
 #[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::tile::forward::{
@@ -533,6 +536,116 @@ fn bench_update_sharded(csv: &mut CsvLogger) {
     println!("  wrote BENCH_update.json");
 }
 
+// ---------------------------------------------------- §5 drift engine
+
+/// (time × repeat) drift-evaluation engine scaling: an MLP and a LeNet
+/// swept over t ∈ {t0, 1 h, 1 d, 1 y} × 2 repeats, with the parallel
+/// cell fan-out on 1 worker thread vs all. Emits BENCH_inference.json;
+/// the advisory CI bar is ≥2× single-vs-multi-thread on ≥4-core runners.
+fn bench_drift_eval(csv: &mut CsvLogger) {
+    let saved_threads = std::env::var("AIHWSIM_THREADS").ok();
+    std::env::remove_var("AIHWSIM_THREADS");
+    let threads_all = aihwsim::util::threadpool::num_threads();
+    let times = vec![25.0f32, 3600.0, 86400.0, 3.15e7];
+    let n_reps = 2usize;
+    let mut entries: Vec<Json> = Vec::new();
+    println!(
+        "  {:>6} {:>6} {:>12} {:>12} {:>9}",
+        "net", "cells", "1-thr ms", "N-thr ms", "speedup"
+    );
+    let run_net = |name: &str, entries: &mut Vec<Json>, csv: &mut CsvLogger| {
+        let icfg = InferenceRPUConfig::default();
+        let mut dsrng = Rng::new(61);
+        let (ds, build): (_, Box<dyn Fn(u64) -> aihwsim::nn::Sequential + Sync>) = match name {
+            "mlp" => (
+                synthetic_images(96, 4, 8, 1, &mut dsrng),
+                Box::new({
+                    let icfg = icfg.clone();
+                    move |seed: u64| {
+                        let mut r = Rng::new(seed);
+                        let mut net =
+                            mlp(&[64, 32, 4], Backend::FloatingPoint, &RPUConfig::perfect(), &mut r);
+                        net.convert_to_inference(&icfg, &mut r);
+                        net
+                    }
+                }),
+            ),
+            _ => (
+                synthetic_images(96, 3, 12, 1, &mut dsrng),
+                Box::new({
+                    let icfg = icfg.clone();
+                    move |seed: u64| {
+                        let mut r = Rng::new(seed);
+                        let mut net =
+                            lenet(1, 12, 3, Backend::FloatingPoint, &RPUConfig::perfect(), &mut r);
+                        net.convert_to_inference(&icfg, &mut r);
+                        net
+                    }
+                }),
+            ),
+        };
+        let cfg = DriftEvalConfig { times: times.clone(), n_repeats: n_reps, batch: 32, seed: 7 };
+        let cells = times.len() * n_reps;
+        let time_at = |threads: Option<usize>| -> f64 {
+            match threads {
+                Some(t) => std::env::set_var("AIHWSIM_THREADS", t.to_string()),
+                None => std::env::remove_var("AIHWSIM_THREADS"),
+            }
+            time_median(3, || {
+                let _ = drift_evaluate(&build, &ds, &cfg);
+            })
+        };
+        let t1 = time_at(Some(1));
+        let tn = time_at(None);
+        let speedup = t1 / tn;
+        println!(
+            "  {:>6} {:>6} {:>12.1} {:>12.1} {:>8.2}x",
+            name,
+            cells,
+            t1 * 1e3,
+            tn * 1e3,
+            speedup
+        );
+        csv.row_str(&[
+            format!("drift_eval_{name}"),
+            format!("{:.3}", t1 * 1e3),
+            format!("{:.3}", tn * 1e3),
+            format!("{:.2}", speedup),
+        ])
+        .unwrap();
+        entries.push(Json::obj(vec![
+            ("net", Json::str(name)),
+            ("cells", Json::num(cells as f64)),
+            ("one_thread_ms", Json::num(t1 * 1e3)),
+            ("all_threads_ms", Json::num(tn * 1e3)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    };
+    run_net("mlp", &mut entries, csv);
+    run_net("lenet", &mut entries, csv);
+    match saved_threads {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("drift_eval_time_repeat_sweep")),
+        (
+            "method",
+            Json::str(
+                "generic (time x repeat) drift-evaluation engine: each cell builds a \
+                 converted network from its repeat seed, programs it, drifts to its time \
+                 point, and measures dataset accuracy; t in {t0, 1h, 1d, 1y} x 2 repeats \
+                 = 8 independent cells fanned out over the thread pool; median of 3 timed \
+                 reps after warmup; speedup = 1-thread / N-thread wall time",
+            ),
+        ),
+        ("threads_all", Json::num(threads_all as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_inference.json", doc.to_string_pretty()).unwrap();
+    println!("  wrote BENCH_inference.json");
+}
+
 // --------------------------------------------------------------- Eq. 2
 
 fn bench_pulsed_update(csv: &mut CsvLogger) {
@@ -633,6 +746,9 @@ fn main() {
     }
     if section("Eq2_pulsed_update", &filter) {
         bench_pulsed_update(&mut csv);
+    }
+    if section("Eq5_drift_eval (time x repeat engine, threads 1 vs N)", &filter) {
+        bench_drift_eval(&mut csv);
     }
     #[cfg(feature = "pjrt")]
     if section("E7_pjrt_step", &filter) {

@@ -29,7 +29,8 @@
 use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
 use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
 use super::update::{PulseType, UpdateParameters};
-use super::{presets, RPUConfig, WeightModifier};
+use super::{presets, InferenceRPUConfig, RPUConfig, WeightModifier};
+use crate::noise::pcm::PCMNoiseParams;
 use crate::util::json::Json;
 
 /// Load an [`RPUConfig`] from a JSON file.
@@ -223,19 +224,28 @@ fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
     } else {
         io.out_res = j.f64_or("out_res", io.out_res as f64) as f32;
     }
-    io.w_noise_type = match j.str_or("w_noise_type", "additive") {
-        "relative" | "relative_to_weight" => WeightNoiseType::RelativeToWeight,
-        _ => WeightNoiseType::AdditiveConstant,
-    };
-    io.noise_management = match j.str_or("noise_management", "abs_max") {
-        "none" => NoiseManagement::None,
-        "constant" => NoiseManagement::Constant,
-        _ => NoiseManagement::AbsMax,
-    };
-    io.bound_management = match j.str_or("bound_management", "iterative") {
-        "none" => BoundManagement::None,
-        _ => BoundManagement::Iterative,
-    };
+    // enum fields override only when the key is present — an absent key
+    // keeps the *base* (the inference defaults, or the parsed forward
+    // values when `backward` inherits them), not a hardcoded default
+    if let Some(v) = j.get("w_noise_type").and_then(Json::as_str) {
+        io.w_noise_type = match v {
+            "relative" | "relative_to_weight" => WeightNoiseType::RelativeToWeight,
+            _ => WeightNoiseType::AdditiveConstant,
+        };
+    }
+    if let Some(v) = j.get("noise_management").and_then(Json::as_str) {
+        io.noise_management = match v {
+            "none" => NoiseManagement::None,
+            "constant" => NoiseManagement::Constant,
+            _ => NoiseManagement::AbsMax,
+        };
+    }
+    if let Some(v) = j.get("bound_management").and_then(Json::as_str) {
+        io.bound_management = match v {
+            "none" => BoundManagement::None,
+            _ => BoundManagement::Iterative,
+        };
+    }
     Ok(io)
 }
 
@@ -251,6 +261,113 @@ fn update_from_json(j: &Json) -> Result<UpdateParameters, String> {
     };
     u.validate()?;
     Ok(u)
+}
+
+// --------------------------------------------------- inference options
+
+/// JSON-loadable inference-side options: the [`InferenceRPUConfig`] of
+/// the converted tiles plus the drift-evaluation schedule the engine
+/// consumes (`t_inference` seconds-after-programming list, repeat count).
+#[derive(Clone, Debug)]
+pub struct InferenceOptions {
+    pub config: InferenceRPUConfig,
+    /// The `t_inference` schedule (s after programming).
+    pub t_inference: Vec<f32>,
+    /// Independent programming instances per time point.
+    pub n_repeats: usize,
+}
+
+impl Default for InferenceOptions {
+    fn default() -> Self {
+        InferenceOptions {
+            config: InferenceRPUConfig::default(),
+            t_inference: vec![25.0, 3600.0, 86400.0, 2.6e6, 3.15e7],
+            n_repeats: 3,
+        }
+    }
+}
+
+/// Load [`InferenceOptions`] from a JSON file (the `infer-drift`
+/// `--config` entry point). The file may be a pure inference document or
+/// a combined training+inference config carrying an `"inference"` key.
+pub fn load_inference_options(path: &str) -> Result<InferenceOptions, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    inference_options_from_json(&json)
+}
+
+/// Build [`InferenceOptions`] from parsed JSON. Accepts either the
+/// inference object itself or a document with a top-level `"inference"`
+/// key (so one file can hold an `RPUConfig` and the inference options).
+pub fn inference_options_from_json(j: &Json) -> Result<InferenceOptions, String> {
+    let j = j.get("inference").unwrap_or(j);
+    let mut opts = InferenceOptions::default();
+    if let Some(fwd) = j.get("forward") {
+        opts.config.forward = io_from_json(fwd, IOParameters::inference_default())?;
+    }
+    if let Some(nm) = j.get("noise_model") {
+        opts.config.noise_model = pcm_noise_from_json(nm)?;
+    }
+    opts.config.drift_compensation =
+        j.bool_or("drift_compensation", opts.config.drift_compensation);
+    opts.config.weight_scaling_omega =
+        j.f64_or("weight_scaling_omega", opts.config.weight_scaling_omega as f64) as f32;
+    if let Some(ts) = j.get("t_inference") {
+        let ts = ts.to_f32_vec().ok_or("t_inference: must be an array of seconds")?;
+        if ts.is_empty() {
+            return Err("t_inference: empty schedule".into());
+        }
+        if ts.iter().any(|t| !t.is_finite() || *t < 0.0) {
+            return Err("t_inference: times must be finite and non-negative".into());
+        }
+        opts.t_inference = ts;
+    }
+    if let Some(n) = j.get("n_repeats") {
+        let n = n.as_usize().ok_or("n_repeats: must be a positive integer")?;
+        if n == 0 {
+            return Err("n_repeats: must be at least 1".into());
+        }
+        opts.n_repeats = n;
+    }
+    Ok(opts)
+}
+
+fn pcm_noise_from_json(j: &Json) -> Result<PCMNoiseParams, String> {
+    let d = PCMNoiseParams::default();
+    let p = PCMNoiseParams {
+        g_max: j.f64_or("g_max", d.g_max as f64) as f32,
+        prog_coeff: match j.get("prog_coeff") {
+            None => d.prog_coeff,
+            Some(v) => {
+                let c = v.to_f32_vec().ok_or("noise_model.prog_coeff: must be [c0, c1, c2]")?;
+                if c.len() != 3 {
+                    return Err(format!(
+                        "noise_model.prog_coeff: expected 3 coefficients, got {}",
+                        c.len()
+                    ));
+                }
+                [c[0], c[1], c[2]]
+            }
+        },
+        prog_noise_scale: j.f64_or("prog_noise_scale", d.prog_noise_scale as f64) as f32,
+        read_noise_scale: j.f64_or("read_noise_scale", d.read_noise_scale as f64) as f32,
+        drift_scale: j.f64_or("drift_scale", d.drift_scale as f64) as f32,
+        drift_nu_dtod: j.f64_or("drift_nu_dtod", d.drift_nu_dtod as f64) as f32,
+        drift_nu_min: j.f64_or("drift_nu_min", d.drift_nu_min as f64) as f32,
+        drift_nu_max: j.f64_or("drift_nu_max", d.drift_nu_max as f64) as f32,
+        t0: j.f64_or("t0", d.t0 as f64) as f32,
+        t_read: j.f64_or("t_read", d.t_read as f64) as f32,
+    };
+    if p.g_max <= 0.0 {
+        return Err("noise_model.g_max: must be positive".into());
+    }
+    if p.drift_nu_min > p.drift_nu_max {
+        return Err("noise_model: drift_nu_min must not exceed drift_nu_max".into());
+    }
+    if p.t0 <= 0.0 || p.t_read <= 0.0 {
+        return Err("noise_model: t0 and t_read must be positive".into());
+    }
+    Ok(p)
 }
 
 fn modifier_from_json(j: &Json) -> Result<WeightModifier, String> {
@@ -385,6 +502,68 @@ mod tests {
         match cfg.modifier {
             WeightModifier::Discretize { levels, .. } => assert_eq!(levels, 16),
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn inference_options_defaults_and_overrides() {
+        // empty object → defaults
+        let opts = inference_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(opts.config.drift_compensation);
+        assert_eq!(opts.n_repeats, 3);
+        assert_eq!(opts.t_inference.len(), 5);
+        // full document, wrapped in the "inference" key
+        let j = Json::parse(
+            r#"{"inference": {
+                "drift_compensation": false,
+                "t_inference": [25, 3600, 86400],
+                "n_repeats": 5,
+                "noise_model": {"g_max": 30.0, "drift_nu_dtod": 0.1,
+                                "prog_coeff": [0.3, 2.0, -1.0]},
+                "forward": {"out_noise": 0.02}
+            }}"#,
+        )
+        .unwrap();
+        let opts = inference_options_from_json(&j).unwrap();
+        assert!(!opts.config.drift_compensation);
+        assert_eq!(opts.t_inference, vec![25.0, 3600.0, 86400.0]);
+        assert_eq!(opts.n_repeats, 5);
+        assert!((opts.config.noise_model.g_max - 30.0).abs() < 1e-9);
+        assert!((opts.config.noise_model.prog_coeff[1] - 2.0).abs() < 1e-9);
+        assert!((opts.config.forward.out_noise - 0.02).abs() < 1e-9);
+        // an inference "forward" override must keep the *inference* IO
+        // defaults for everything it does not name — in particular the
+        // relative weight-read-noise type (regression: enum fields used
+        // to reset to the training-loader defaults)
+        assert_eq!(opts.config.forward.w_noise_type, WeightNoiseType::RelativeToWeight);
+        assert!((opts.config.forward.w_noise - 0.0175).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backward_inherits_forward_enums() {
+        // `backward` starts from the parsed forward values — including the
+        // enum-valued fields, which only change when named explicitly
+        let j = Json::parse(
+            r#"{"forward": {"w_noise_type": "relative", "noise_management": "constant"},
+                "backward": {"out_noise": 0.0}}"#,
+        )
+        .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.backward.w_noise_type, WeightNoiseType::RelativeToWeight);
+        assert_eq!(cfg.backward.noise_management, NoiseManagement::Constant);
+    }
+
+    #[test]
+    fn inference_options_bad_inputs_error() {
+        for bad in [
+            r#"{"t_inference": []}"#,
+            r#"{"t_inference": [-5.0]}"#,
+            r#"{"n_repeats": 0}"#,
+            r#"{"noise_model": {"g_max": -1.0}}"#,
+            r#"{"noise_model": {"prog_coeff": [1.0, 2.0]}}"#,
+            r#"{"noise_model": {"drift_nu_min": 0.5, "drift_nu_max": 0.1}}"#,
+        ] {
+            assert!(inference_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
     }
 }

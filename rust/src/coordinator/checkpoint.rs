@@ -12,12 +12,48 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::params::MlpParams;
+use crate::nn::{AnalogLinear, Module, Sequential};
 use crate::tile::TileGrid;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 
 /// A checkpoint: ordered (weight, bias) layers.
 pub type Layers = Vec<(Matrix, Vec<f32>)>;
+
+/// Collect every [`AnalogLinear`] layer's dense `(weights, bias)` from a
+/// network, in layer order — the `--save` checkpoint contract.
+pub fn collect_linear_layers(model: &mut Sequential) -> Layers {
+    let mut layers = Vec::new();
+    for i in 0..model.len() {
+        if let Some(lin) = model
+            .module_mut(i)
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<AnalogLinear>())
+        {
+            let w = lin.get_weights();
+            let b = lin.get_bias().map(|b| b.to_vec()).unwrap_or_default();
+            layers.push((w, b));
+        }
+    }
+    layers
+}
+
+/// Collect every [`AnalogLinear`] layer's per-shard grid snapshot, in
+/// layer order — the `--save-grid` checkpoint contract (preserves the
+/// physical tile mapping).
+pub fn collect_grid_layers(model: &mut Sequential) -> GridLayers {
+    let mut layers = Vec::new();
+    for i in 0..model.len() {
+        if let Some(lin) = model
+            .module_mut(i)
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<AnalogLinear>())
+        {
+            layers.push(GridLayer::from_grid(lin.grid_mut()));
+        }
+    }
+    layers
+}
 
 /// Serialize layers to a JSON document.
 pub fn layers_to_json(layers: &Layers) -> Json {
@@ -134,6 +170,27 @@ impl GridLayer {
             grid.set_bias(&vec![0.0; grid.out_size()]);
         }
         Ok(())
+    }
+
+    /// The [`MappingParameter`] that reproduces this layer's split layout
+    /// through [`crate::tile::grid::split_dim`] (uniform block sizes with
+    /// a smaller tail, which is the only layout the grid engine itself
+    /// produces). Used to rebuild a grid with the checkpoint's physical
+    /// tile mapping for shard-for-shard restore + inference conversion.
+    ///
+    /// [`MappingParameter`]: crate::config::MappingParameter
+    pub fn mapping(&self) -> crate::config::MappingParameter {
+        let max_of = |splits: &[(usize, usize)]| {
+            if splits.len() <= 1 {
+                0 // single block: unlimited
+            } else {
+                splits[0].1
+            }
+        };
+        crate::config::MappingParameter {
+            max_input_size: max_of(&self.col_splits),
+            max_output_size: max_of(&self.row_splits),
+        }
     }
 
     /// Assemble the dense `(out×in, bias)` view — the input the drift
@@ -422,6 +479,27 @@ mod tests {
         assert_eq!(back[0].shards.len(), layers[0].shards.len());
         assert_eq!(back[0].assemble().0, layers[0].assemble().0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_layer_mapping_rebuilds_matching_grid() {
+        use crate::config::{MappingParameter, RPUConfig};
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter { max_input_size: 4, max_output_size: 3 };
+        let mut grid = TileGrid::analog(7, 10, true, cfg, &mut Rng::new(5));
+        let ckpt = GridLayer::from_grid(&mut grid);
+        let mapping = ckpt.mapping();
+        assert_eq!(mapping.max_input_size, 4);
+        assert_eq!(mapping.max_output_size, 3);
+        // a grid rebuilt from the inferred mapping accepts the checkpoint
+        let mut rebuilt =
+            TileGrid::floating_point(7, 10, true, mapping, &mut Rng::new(6));
+        ckpt.restore_into(&mut rebuilt).unwrap();
+        assert_eq!(rebuilt.get_weights().data(), grid.get_weights().data());
+        // single-block dimensions map to "unlimited"
+        let mut single = TileGrid::analog(3, 4, false, RPUConfig::perfect(), &mut Rng::new(7));
+        let m = GridLayer::from_grid(&mut single).mapping();
+        assert_eq!((m.max_input_size, m.max_output_size), (0, 0));
     }
 
     #[test]

@@ -1,143 +1,284 @@
-//! Inference-over-time evaluation (paper §5): program a trained network
-//! onto PCM inference tiles and track accuracy as the devices drift.
+//! Generic drift evaluation (paper §5): program a trained network onto
+//! PCM inference tiles and track accuracy as the devices drift.
+//!
+//! The engine works on **any** [`Sequential`] — MLPs, conv nets, grid-
+//! mapped layers — because the inference lifecycle is a first-class tile
+//! capability routed through the module stack:
+//! [`Module::convert_to_inference`] swaps every analog layer's tile
+//! shards for PCM [`crate::tile::InferenceTile`]s in place (mapping
+//! split, digital bias, and out-scaling preserved), and
+//! [`Module::program`] / [`Module::drift_to`] fan out shard-parallel
+//! through [`crate::tile::TileGrid`]. This replaced the retired
+//! `InferenceMlp`, which assembled grid checkpoints into one giant dense
+//! tile per layer (unrealistic hardware) and hardcoded an MLP topology.
+//!
+//! Two entry points:
+//! * [`accuracy_over_time`] — one network instance, programmed once,
+//!   drifted through the schedule in order (one programming-noise draw);
+//! * [`drift_evaluate`] — the full §5 experiment: `n_repeats` independent
+//!   programming instances × the `t_inference` schedule, with every
+//!   (time × repeat) cell evaluated **in parallel** as a self-contained
+//!   network instance built from a deterministic per-repeat seed.
+//!   Results are bit-identical at any `AIHWSIM_THREADS` because a cell's
+//!   computation never depends on scheduling: cells of one repeat share
+//!   the builder seed (identical programming), and all randomness flows
+//!   from that seed's split streams.
 //!
 //! All tile reads go through `Tile::forward_batch` — the inference tile's
 //! fused batched kernel carries the drifted weights *and* the cached
 //! per-element read-noise variances in one pass per mini-batch.
 
-use crate::config::InferenceRPUConfig;
+use crate::config::{InferenceRPUConfig, MappingParameter};
+use crate::coordinator::checkpoint::{GridLayers, Layers};
 use crate::data::Dataset;
 use crate::nn::loss::accuracy;
-use crate::tile::{InferenceTile, Tile};
+use crate::nn::sequential::Sequential;
+use crate::nn::{AnalogLinear, LogSoftmax, Module, Tanh};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
 
-/// An MLP whose weight matrices are programmed onto PCM inference tiles
-/// (biases and tanh stay digital).
-pub struct InferenceMlp {
-    tiles: Vec<InferenceTile>,
-    biases: Vec<Vec<f32>>,
+/// Deterministic full-dataset classification accuracy: sequential batches
+/// in dataset order (no shuffling — the evaluation must not consume a
+/// training RNG).
+pub fn dataset_accuracy(model: &mut Sequential, ds: &Dataset, batch: usize) -> f64 {
+    assert!(batch > 0);
+    let total = ds.len();
+    let mut acc_sum = 0.0f64;
+    let mut start = 0;
+    while start < total {
+        let end = (start + batch).min(total);
+        let rows = end - start;
+        let mut xb = Matrix::zeros(rows, ds.dim());
+        let mut yb = Vec::with_capacity(rows);
+        for r in 0..rows {
+            xb.row_mut(r).copy_from_slice(ds.x.row(start + r));
+            yb.push(ds.y[start + r]);
+        }
+        let logp = model.forward(&xb);
+        acc_sum += accuracy(&logp, &yb) * rows as f64;
+        start = end;
+    }
+    acc_sum / total as f64
 }
 
-impl InferenceMlp {
-    /// Build from trained per-layer (weights, bias) pairs. `weights[k]` is
-    /// out_k × in_k.
-    pub fn from_weights(
-        layers: &[(Matrix, Vec<f32>)],
-        config: &InferenceRPUConfig,
-        rng: &mut Rng,
-    ) -> Self {
-        let mut tiles = Vec::new();
-        let mut biases = Vec::new();
-        for (w, b) in layers {
-            let mut tile =
-                InferenceTile::new(w.rows(), w.cols(), config.clone(), rng.split());
-            tile.set_weights(w);
-            tiles.push(tile);
-            biases.push(b.clone());
-        }
-        InferenceMlp { tiles, biases }
-    }
-
-    /// Build from a grid checkpoint: each grid-mapped layer's shards are
-    /// assembled into the dense weight view and programmed onto one PCM
-    /// inference tile per layer (drift/HWA evaluation consumes the
-    /// logical weights; the training-time shard layout is a training
-    /// concern).
-    pub fn from_grid_checkpoint(
-        layers: &crate::coordinator::checkpoint::GridLayers,
-        config: &InferenceRPUConfig,
-        rng: &mut Rng,
-    ) -> Self {
-        let dense: Vec<(Matrix, Vec<f32>)> = layers.iter().map(|l| l.assemble()).collect();
-        Self::from_weights(&dense, config, rng)
-    }
-
-    /// Program all tiles (applies programming noise) at t = t0.
-    pub fn program(&mut self) {
-        for t in self.tiles.iter_mut() {
-            t.program();
-        }
-    }
-
-    /// Advance all tiles to inference time `t` seconds after programming.
-    pub fn drift_to(&mut self, t: f32) {
-        for tile in self.tiles.iter_mut() {
-            tile.drift_to(t);
-        }
-    }
-
-    /// Noisy analog forward (log-softmax head).
-    pub fn forward(&mut self, x: &Matrix) -> Matrix {
-        let mut h = x.clone();
-        let n = self.tiles.len();
-        for (k, tile) in self.tiles.iter_mut().enumerate() {
-            let mut y = Matrix::zeros(h.rows(), tile.out_size());
-            tile.forward_batch(&h, &mut y);
-            let bias = &self.biases[k];
-            for b in 0..y.rows() {
-                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
-                    *v += bb;
-                }
-            }
-            if k + 1 < n {
-                y.map_inplace(|v| v.tanh());
-            }
-            h = y;
-        }
-        // log-softmax
-        for b in 0..h.rows() {
-            let row = h.row_mut(b);
-            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let lse = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
-            row.iter_mut().for_each(|v| *v -= lse);
-        }
-        h
-    }
-
-    /// Classification accuracy on a dataset at the current drift time.
-    pub fn accuracy(&mut self, ds: &Dataset, batch: usize) -> f64 {
-        let mut acc_sum = 0.0;
-        let mut n = 0usize;
-        let total = ds.len();
-        let mut start = 0;
-        while start < total {
-            let end = (start + batch).min(total);
-            let rows = end - start;
-            let mut xb = Matrix::zeros(rows, ds.dim());
-            let mut yb = Vec::with_capacity(rows);
-            for r in 0..rows {
-                xb.row_mut(r).copy_from_slice(ds.x.row(start + r));
-                yb.push(ds.y[start + r]);
-            }
-            let logp = self.forward(&xb);
-            acc_sum += accuracy(&logp, &yb) * rows as f64;
-            n += rows;
-            start = end;
-        }
-        acc_sum / n as f64
-    }
-
-    /// Mean GDC factor across tiles (observability).
-    pub fn mean_gdc(&self) -> f64 {
-        self.tiles.iter().map(|t| t.gdc_factor() as f64).sum::<f64>() / self.tiles.len() as f64
-    }
-}
-
-/// Accuracy-vs-time sweep: returns (t, accuracy) pairs. The §5 experiment.
+/// Single-instance accuracy-vs-time sweep: takes a **converted,
+/// un-programmed** network, programs it (one programming-noise draw),
+/// then drifts through `times` in order, evaluating at each point.
+/// Returns `(t, accuracy)` pairs. For repeat statistics and (time ×
+/// repeat) parallelism use [`drift_evaluate`].
 pub fn accuracy_over_time(
-    net: &mut InferenceMlp,
+    model: &mut Sequential,
     ds: &Dataset,
     times: &[f32],
     batch: usize,
 ) -> Vec<(f32, f64)> {
+    assert!(!times.is_empty(), "empty t_inference schedule");
+    model.set_train(false);
+    model.program();
+    // an un-converted network would sweep as a flat, drift-free ideal
+    // curve — a plausible-looking but meaningless §5 report; fail loudly
+    assert!(
+        !model.conductance_stats(times[0]).is_empty(),
+        "accuracy_over_time: no programmed inference tiles — convert the network with \
+         Module::convert_to_inference before evaluating"
+    );
     times
         .iter()
         .map(|&t| {
-            net.drift_to(t);
-            (t, net.accuracy(ds, batch))
+            model.drift_to(t);
+            (t, dataset_accuracy(model, ds, batch))
         })
         .collect()
+}
+
+/// Configuration of the (time × repeat) drift-evaluation sweep.
+#[derive(Clone, Debug)]
+pub struct DriftEvalConfig {
+    /// Inference times in seconds after programming (the `t_inference`
+    /// schedule).
+    pub times: Vec<f32>,
+    /// Independent programming instances per time point.
+    pub n_repeats: usize,
+    /// Evaluation mini-batch size.
+    pub batch: usize,
+    /// Master seed; repeat `r`'s builder seed is derived deterministically
+    /// (see [`repeat_seed`]).
+    pub seed: u64,
+}
+
+impl Default for DriftEvalConfig {
+    fn default() -> Self {
+        DriftEvalConfig {
+            // t0, 1 h, 1 d, 1 month, 1 year
+            times: vec![25.0, 3600.0, 86400.0, 2.6e6, 3.15e7],
+            n_repeats: 3,
+            batch: 32,
+            seed: 42,
+        }
+    }
+}
+
+/// One time point of a [`DriftEvalReport`].
+#[derive(Clone, Debug)]
+pub struct DriftEvalPoint {
+    /// Seconds after programming.
+    pub t: f32,
+    /// Per-repeat accuracies (length `n_repeats`).
+    pub acc: Vec<f64>,
+    pub acc_mean: f64,
+    /// Population std across repeats (0 for a single repeat).
+    pub acc_std: f64,
+    /// Per-analog-layer `(mean, std)` conductance in µS at `t`, averaged
+    /// over the repeats' programming instances (layer order).
+    pub layer_conductance: Vec<(f64, f64)>,
+}
+
+/// Result of [`drift_evaluate`].
+#[derive(Clone, Debug)]
+pub struct DriftEvalReport {
+    pub points: Vec<DriftEvalPoint>,
+}
+
+impl DriftEvalReport {
+    /// `(t, mean accuracy)` series — the Fig.-style headline curve.
+    pub fn series(&self) -> Vec<(f32, f64)> {
+        self.points.iter().map(|p| (p.t, p.acc_mean)).collect()
+    }
+}
+
+/// Builder seed of repeat `r`: the `(r+1)`-th raw output of an
+/// [`Rng`] seeded with `seed`. Every cell of repeat `r` hands this seed
+/// to the builder, so all time points of one repeat share the same
+/// programming instance.
+pub fn repeat_seed(seed: u64, r: usize) -> u64 {
+    let mut rng = Rng::new(seed);
+    let mut s = rng.next_u64();
+    for _ in 0..r {
+        s = rng.next_u64();
+    }
+    s
+}
+
+/// The §5 experiment on any architecture: evaluate `build`'s network at
+/// every `(t_inference, repeat)` cell, in parallel.
+///
+/// `build(seed)` must return a **converted, un-programmed** network (use
+/// [`Module::convert_to_inference`]) whose RNG state derives only from
+/// `seed` — the engine programs it, drifts it to the cell's time, and
+/// measures dataset accuracy plus per-layer conductance statistics. Each
+/// cell is a self-contained instance, so the sweep is bit-deterministic
+/// at any `AIHWSIM_THREADS` and repeats are statistically independent
+/// while a repeat's time points share one programming instance.
+pub fn drift_evaluate<F>(build: F, ds: &Dataset, cfg: &DriftEvalConfig) -> DriftEvalReport
+where
+    F: Fn(u64) -> Sequential + Sync,
+{
+    assert!(!cfg.times.is_empty(), "empty t_inference schedule");
+    let nr = cfg.n_repeats.max(1);
+    let nt = cfg.times.len();
+    let seeds: Vec<u64> = (0..nr).map(|r| repeat_seed(cfg.seed, r)).collect();
+    let cells: Vec<(f64, Vec<(f64, f64)>)> = par_map(nt * nr, |cell| {
+        let (ti, r) = (cell / nr, cell % nr);
+        let t = cfg.times[ti];
+        let mut net = build(seeds[r]);
+        net.set_train(false);
+        net.program();
+        net.drift_to(t);
+        let cond = net.conductance_stats(t);
+        assert!(
+            !cond.is_empty(),
+            "drift_evaluate: builder returned a network with no programmed inference tiles \
+             — convert it with Module::convert_to_inference before returning"
+        );
+        let acc = dataset_accuracy(&mut net, ds, cfg.batch);
+        (acc, cond)
+    });
+    let points = cfg
+        .times
+        .iter()
+        .enumerate()
+        .map(|(ti, &t)| {
+            let row = &cells[ti * nr..(ti + 1) * nr];
+            let acc: Vec<f64> = row.iter().map(|c| c.0).collect();
+            let mean = acc.iter().sum::<f64>() / nr as f64;
+            let var = acc.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / nr as f64;
+            // average the per-layer conductance stats across repeats
+            let n_layers = row.iter().map(|c| c.1.len()).max().unwrap_or(0);
+            let mut layer_conductance = Vec::with_capacity(n_layers);
+            for l in 0..n_layers {
+                let entries: Vec<&(f64, f64)> =
+                    row.iter().filter_map(|c| c.1.get(l)).collect();
+                let n = entries.len() as f64;
+                layer_conductance.push((
+                    entries.iter().map(|e| e.0).sum::<f64>() / n,
+                    entries.iter().map(|e| e.1).sum::<f64>() / n,
+                ));
+            }
+            DriftEvalPoint { t, acc, acc_mean: mean, acc_std: var.sqrt(), layer_conductance }
+        })
+        .collect();
+    DriftEvalReport { points }
+}
+
+// -------------------------------------------------- checkpoint rebuilds
+
+/// Rebuild the `--arch mlp` topology (Tanh hidden units, LogSoftmax head)
+/// from dense checkpoint layers on exact FP grids honoring `mapping` —
+/// the input of [`Module::convert_to_inference`]. `layers[k]` is the
+/// `(out×in, bias)` pair of linear layer `k`.
+pub fn mlp_from_layers(layers: &Layers, mapping: &MappingParameter, rng: &mut Rng) -> Sequential {
+    assert!(!layers.is_empty());
+    let mut net = Sequential::new();
+    let n = layers.len();
+    for (k, (w, b)) in layers.iter().enumerate() {
+        let mut lin = AnalogLinear::floating_point_mapped(
+            w.cols(),
+            w.rows(),
+            !b.is_empty(),
+            mapping.clone(),
+            rng,
+        );
+        lin.set_weights(w);
+        if !b.is_empty() {
+            lin.set_bias(b);
+        }
+        net.push(Box::new(lin));
+        if k + 1 < n {
+            net.push(Box::new(Tanh::new()));
+        }
+    }
+    net.push(Box::new(LogSoftmax::new()));
+    net
+}
+
+/// Rebuild the `--arch mlp` topology from a **per-shard grid checkpoint**,
+/// preserving the physical tile mapping (each layer's grid is rebuilt
+/// with the checkpoint's split layout and restored shard-for-shard) —
+/// unlike the retired `InferenceMlp::from_grid_checkpoint`, which
+/// flattened every grid onto one unrealistic dense tile.
+pub fn mlp_from_grid_checkpoint(layers: &GridLayers, rng: &mut Rng) -> Result<Sequential, String> {
+    if layers.is_empty() {
+        return Err("empty grid checkpoint".into());
+    }
+    let mut net = Sequential::new();
+    let n = layers.len();
+    for (k, l) in layers.iter().enumerate() {
+        let mut lin = AnalogLinear::floating_point_mapped(
+            l.in_features,
+            l.out_features,
+            !l.bias.is_empty(),
+            l.mapping(),
+            rng,
+        );
+        l.restore_into(lin.grid_mut()).map_err(|e| format!("layer {k}: {e}"))?;
+        net.push(Box::new(lin));
+        if k + 1 < n {
+            net.push(Box::new(Tanh::new()));
+        }
+    }
+    net.push(Box::new(LogSoftmax::new()));
+    Ok(net)
 }
 
 #[cfg(test)]
@@ -147,14 +288,15 @@ mod tests {
     use crate::coordinator::trainer::{train_classifier, TrainConfig};
     use crate::data::synthetic_images;
     use crate::nn::sequential::{mlp, Backend};
-    use crate::nn::AnalogLinear;
+    use crate::tile::{InferenceTile, Tile};
 
     /// Train a small FP MLP and extract its layer weights.
-    fn trained_layers(rng: &mut Rng) -> (Vec<(Matrix, Vec<f32>)>, crate::data::Dataset) {
+    fn trained_layers(rng: &mut Rng) -> (Layers, crate::data::Dataset) {
         let ds = synthetic_images(240, 4, 8, 1, rng);
         let cfg = RPUConfig::perfect();
         let mut model = mlp(&[64, 32, 4], Backend::FloatingPoint, &cfg, rng);
-        let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, log_every: 0, ..Default::default() };
+        let tc =
+            TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, log_every: 0, ..Default::default() };
         let report = train_classifier(&mut model, &ds, &ds, &tc);
         assert!(report.final_test_acc() > 0.9, "{:?}", report.epoch_test_acc);
         // layers 0 and 2 are the AnalogLinear modules (1 = Tanh, 3 = LogSoftmax)
@@ -172,74 +314,233 @@ mod tests {
         (layers, ds)
     }
 
+    /// Converted single-shard network from dense layers (the dense path).
+    fn converted_net(layers: &Layers, icfg: &InferenceRPUConfig, seed: u64) -> Sequential {
+        let mut rng = Rng::new(seed);
+        let mut net = mlp_from_layers(layers, &MappingParameter::unlimited(), &mut rng);
+        net.convert_to_inference(icfg, &mut Rng::new(seed ^ 0x5EED));
+        net
+    }
+
     #[test]
     fn programmed_network_keeps_most_accuracy_at_t0() {
         let mut rng = Rng::new(10);
         let (layers, ds) = trained_layers(&mut rng);
-        let cfg = InferenceRPUConfig::default();
-        let mut net = InferenceMlp::from_weights(&layers, &cfg, &mut rng);
+        let icfg = InferenceRPUConfig::default();
+        let mut net = converted_net(&layers, &icfg, 77);
         net.program();
-        let acc = net.accuracy(&ds, 32);
+        let acc = dataset_accuracy(&mut net, &ds, 32);
         assert!(acc > 0.8, "acc after programming {acc}");
     }
 
     #[test]
-    fn grid_checkpoint_programs_equivalently() {
-        // the dense assembly of a grid checkpoint must program exactly the
-        // same network as handing the dense weights directly
-        use crate::config::MappingParameter;
-        use crate::coordinator::checkpoint::GridLayer;
-        use crate::tile::TileGrid;
+    fn engine_reproduces_retired_inference_mlp_bitwise() {
+        // the new grid-routed path on a single-shard MLP must reproduce
+        // the retired InferenceMlp (a manual chain of dense InferenceTiles
+        // with digital bias + tanh) exactly: conversion draws one RNG
+        // split per shard in layer order, so a manual replication with
+        // the same split sequence sees identical programming, drift, GDC,
+        // and read-noise streams — accuracies must match to the last bit
         let mut rng = Rng::new(12);
         let (layers, ds) = trained_layers(&mut rng);
-        // re-shard the trained dense weights onto exact FP 2D grids (bit-
-        // preserving), checkpoint them shard by shard
-        let grid_ckpt: Vec<GridLayer> = layers
+        let icfg = InferenceRPUConfig::default();
+        let times = [25.0f32, 3600.0, 3.15e7];
+
+        // (a) the engine path: unlimited mapping → one shard per layer
+        let mut net = mlp_from_layers(&layers, &MappingParameter::unlimited(), &mut Rng::new(5));
+        net.convert_to_inference(&icfg, &mut Rng::new(99));
+        let engine_series = accuracy_over_time(&mut net, &ds, &times, 32);
+
+        // (b) manual replication of the retired InferenceMlp with the
+        // same split sequence (one split per layer from the same seed)
+        let mut conv_rng = Rng::new(99);
+        let mut tiles: Vec<InferenceTile> = layers
             .iter()
-            .map(|(w, b)| {
-                let mut g = TileGrid::floating_point(
-                    w.rows(),
-                    w.cols(),
-                    true,
-                    MappingParameter::max_size(24),
-                    &mut Rng::new(5),
-                );
-                g.set_weights(w);
-                g.set_bias(b);
-                GridLayer::from_grid(&mut g)
+            .map(|(w, _)| {
+                let mut t =
+                    InferenceTile::new(w.rows(), w.cols(), icfg.clone(), conv_rng.split());
+                t.set_weights(w);
+                t
             })
             .collect();
+        for t in tiles.iter_mut() {
+            t.program();
+        }
+        let mut manual_series = Vec::new();
+        for &t_inf in &times {
+            for t in tiles.iter_mut() {
+                t.drift_to(t_inf);
+            }
+            // forward: tile MVM + digital bias, tanh on hidden layers,
+            // log-softmax head (argmax-invariant; accuracy is the pin)
+            let total = ds.len();
+            let mut acc_sum = 0.0f64;
+            let mut start = 0;
+            while start < total {
+                let end = (start + 32).min(total);
+                let rows = end - start;
+                let mut h = Matrix::zeros(rows, ds.dim());
+                let mut yb = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    h.row_mut(r).copy_from_slice(ds.x.row(start + r));
+                    yb.push(ds.y[start + r]);
+                }
+                let n = tiles.len();
+                for (k, tile) in tiles.iter_mut().enumerate() {
+                    let mut y = Matrix::zeros(h.rows(), tile.out_size());
+                    tile.forward_batch(&h, &mut y);
+                    y.add_row_bias(&layers[k].1);
+                    if k + 1 < n {
+                        y.map_inplace(|v| v.tanh());
+                    }
+                    h = y;
+                }
+                // log-softmax head, exactly as the retired InferenceMlp
+                // (and the LogSoftmax module) computed it
+                for b in 0..h.rows() {
+                    let row = h.row_mut(b);
+                    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                    let lse = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+                    for v in row.iter_mut() {
+                        *v -= lse;
+                    }
+                }
+                acc_sum += accuracy(&h, &yb) * rows as f64;
+                start = end;
+            }
+            manual_series.push((t_inf, acc_sum / total as f64));
+        }
+        for (e, m) in engine_series.iter().zip(manual_series.iter()) {
+            assert_eq!(e.1, m.1, "t={}: engine {} vs retired behaviour {}", e.0, e.1, m.1);
+        }
+    }
+
+    #[test]
+    fn grid_checkpoint_single_shard_matches_dense() {
+        // a single-shard grid checkpoint must program exactly the same
+        // network as handing the dense weights directly (same seed, same
+        // split sequence); a genuinely sharded checkpoint stays accurate
+        use crate::coordinator::checkpoint::GridLayer;
+        use crate::tile::TileGrid;
+        let mut rng = Rng::new(13);
+        let (layers, ds) = trained_layers(&mut rng);
         let icfg = InferenceRPUConfig::default();
-        let mut from_grid = InferenceMlp::from_grid_checkpoint(&grid_ckpt, &icfg, &mut Rng::new(42));
-        let mut from_dense = InferenceMlp::from_weights(&layers, &icfg, &mut Rng::new(42));
+        let mk_ckpt = |mapping: MappingParameter| -> GridLayers {
+            layers
+                .iter()
+                .map(|(w, b)| {
+                    let mut g = TileGrid::floating_point(
+                        w.rows(),
+                        w.cols(),
+                        true,
+                        mapping.clone(),
+                        &mut Rng::new(5),
+                    );
+                    g.set_weights(w);
+                    g.set_bias(b);
+                    GridLayer::from_grid(&mut g)
+                })
+                .collect()
+        };
+        // single shard: bitwise-equivalent to the dense path
+        let ckpt = mk_ckpt(MappingParameter::unlimited());
+        let mut from_grid = mlp_from_grid_checkpoint(&ckpt, &mut Rng::new(7)).unwrap();
+        from_grid.convert_to_inference(&icfg, &mut Rng::new(42));
         from_grid.program();
+        let mut from_dense =
+            mlp_from_layers(&layers, &MappingParameter::unlimited(), &mut Rng::new(7));
+        from_dense.convert_to_inference(&icfg, &mut Rng::new(42));
         from_dense.program();
-        let a = from_grid.accuracy(&ds, 32);
-        let b = from_dense.accuracy(&ds, 32);
-        assert!((a - b).abs() < 1e-9, "same seed, same programming: {a} vs {b}");
+        let a = dataset_accuracy(&mut from_grid, &ds, 32);
+        let b = dataset_accuracy(&mut from_dense, &ds, 32);
+        assert_eq!(a, b, "same seed, same programming: {a} vs {b}");
         assert!(a > 0.8, "grid-checkpointed accuracy {a}");
+        // sharded checkpoint: realistic tile-mapped hardware, still works
+        let ckpt = mk_ckpt(MappingParameter::max_size(24));
+        assert!(ckpt[0].shards.len() > 1);
+        let mut mapped = mlp_from_grid_checkpoint(&ckpt, &mut Rng::new(7)).unwrap();
+        mapped.convert_to_inference(&icfg, &mut Rng::new(42));
+        mapped.program();
+        let c = dataset_accuracy(&mut mapped, &ds, 32);
+        assert!(c > 0.8, "tile-mapped programmed accuracy {c}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no programmed inference tiles")]
+    fn accuracy_over_time_rejects_unconverted_network() {
+        // without convert_to_inference the sweep would be a flat ideal
+        // curve — the engine must refuse instead of reporting it
+        let mut rng = Rng::new(15);
+        let ds = synthetic_images(16, 3, 4, 1, &mut rng);
+        let mut net = mlp(&[16, 3], Backend::FloatingPoint, &RPUConfig::perfect(), &mut rng);
+        accuracy_over_time(&mut net, &ds, &[25.0], 8);
     }
 
     #[test]
     fn gdc_beats_no_gdc_at_long_times() {
         let mut rng = Rng::new(11);
         let (layers, ds) = trained_layers(&mut rng);
-        let mut cfg = InferenceRPUConfig::default();
-        cfg.drift_compensation = true;
-        let mut with = InferenceMlp::from_weights(&layers, &cfg, &mut Rng::new(77));
-        with.program();
-        cfg.drift_compensation = false;
-        let mut without = InferenceMlp::from_weights(&layers, &cfg, &mut Rng::new(77));
-        without.program();
+        let mut icfg = InferenceRPUConfig::default();
+        icfg.drift_compensation = true;
+        let mut with = converted_net(&layers, &icfg, 77);
+        icfg.drift_compensation = false;
+        let mut without = converted_net(&layers, &icfg, 77);
         let t = 3e7; // ~1 year
-        with.drift_to(t);
-        without.drift_to(t);
-        let a_with = with.accuracy(&ds, 32);
-        let a_without = without.accuracy(&ds, 32);
+        let a_with = accuracy_over_time(&mut with, &ds, &[t], 32)[0].1;
+        let a_without = accuracy_over_time(&mut without, &ds, &[t], 32)[0].1;
         assert!(
             a_with >= a_without - 0.02,
             "GDC must not hurt: with {a_with} vs without {a_without}"
         );
-        assert!(with.mean_gdc() > 1.0);
+    }
+
+    #[test]
+    fn drift_evaluate_sweep_statistics_and_observability() {
+        // the (time × repeat) engine on a tile-mapped MLP: per-layer
+        // conductance observability, sane t0 accuracy, and genuinely
+        // independent repeats. (Thread-count bit-invariance of the same
+        // sweep is pinned in rust/tests/batch_equivalence.rs, whose
+        // binary owns the AIHWSIM_THREADS-mutating helper.)
+        let mut rng = Rng::new(14);
+        let (layers, ds) = trained_layers(&mut rng);
+        let icfg = InferenceRPUConfig::default();
+        let mapping = MappingParameter::max_size(24);
+        let build = |seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut net = mlp_from_layers(&layers, &mapping, &mut r);
+            net.convert_to_inference(&icfg, &mut r);
+            net
+        };
+        let cfg = DriftEvalConfig {
+            times: vec![25.0, 86400.0, 3.15e7],
+            n_repeats: 2,
+            batch: 32,
+            seed: 1234,
+        };
+        let report = drift_evaluate(&build, &ds, &cfg);
+        assert_eq!(report.points.len(), 3);
+        // per-layer conductance observability: one entry per linear layer,
+        // mean decaying over the schedule
+        let first = &report.points[0];
+        let last = report.points.last().unwrap();
+        assert_eq!(first.layer_conductance.len(), 2);
+        assert!(last.layer_conductance[0].0 < first.layer_conductance[0].0);
+        // accuracy stays sane at t0
+        assert!(first.acc_mean > 0.8, "t0 mean accuracy {}", first.acc_mean);
+        assert!(first.acc_std >= 0.0);
+        // repeats are independent programming instances: different repeat
+        // seeds must program different device weights
+        let weights_of = |seed: u64| {
+            let mut net = build(seed);
+            net.program();
+            net.module_mut(0)
+                .as_any_mut()
+                .and_then(|a| a.downcast_mut::<AnalogLinear>())
+                .unwrap()
+                .get_weights()
+        };
+        let w0 = weights_of(repeat_seed(cfg.seed, 0));
+        let w1 = weights_of(repeat_seed(cfg.seed, 1));
+        assert_ne!(w0.data(), w1.data(), "repeat programming instances must differ");
     }
 }

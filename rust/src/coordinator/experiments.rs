@@ -2,13 +2,19 @@
 //! experiment index in DESIGN.md). Each returns plain data series so
 //! examples, benches, and the CLI can render/record them uniformly.
 
-use crate::config::{presets, DeviceConfig, RPUConfig, SingleDeviceConfig};
+use crate::config::{
+    presets, DeviceConfig, InferenceRPUConfig, RPUConfig, SingleDeviceConfig, WeightModifier,
+};
+use crate::coordinator::checkpoint::collect_linear_layers;
+use crate::coordinator::evaluator::{
+    drift_evaluate, mlp_from_layers, DriftEvalConfig, DriftEvalReport,
+};
+use crate::coordinator::trainer::{train_classifier, TrainConfig, TrainReport};
 use crate::data::Dataset;
 use crate::device::single::SingleDeviceArray;
 use crate::device::DeviceArray;
 use crate::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
 use crate::nn::sequential::{mlp, Backend};
-use crate::coordinator::trainer::{train_classifier, TrainConfig, TrainReport};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------- Fig 3B
@@ -148,9 +154,75 @@ pub fn tiki_taka_comparison(
     (rep_sgd, rep_tt)
 }
 
+// ------------------------------------------------------------------- §5
+
+/// Parameters of the §5 accuracy-over-time experiment.
+#[derive(Clone, Debug)]
+pub struct InferenceDriftParams {
+    /// MLP layer sizes (`dims[0]` = input width).
+    pub dims: Vec<usize>,
+    /// HWA-training epochs before programming.
+    pub epochs: usize,
+    /// Additive HWA weight-noise std (relative to the weight bound).
+    pub w_noise: f32,
+    /// Inference-tile config of the converted network (PCM noise model,
+    /// drift compensation, forward non-idealities).
+    pub icfg: InferenceRPUConfig,
+    /// The `t_inference` schedule + repeats + batch + seed.
+    pub eval: DriftEvalConfig,
+}
+
+impl Default for InferenceDriftParams {
+    fn default() -> Self {
+        InferenceDriftParams {
+            dims: vec![256, 128, 10],
+            epochs: 12,
+            w_noise: 0.06,
+            icfg: InferenceRPUConfig::default(),
+            eval: DriftEvalConfig::default(),
+        }
+    }
+}
+
+/// §5 end to end on the generic engine: hardware-aware-train an MLP,
+/// convert it with [`crate::nn::Module::convert_to_inference`], and run
+/// the (time × repeat) drift sweep. Returns the training report plus the
+/// drift report (mean/std accuracy and per-layer conductance per time
+/// point).
+pub fn inference_drift_experiment(
+    ds: &Dataset,
+    params: &InferenceDriftParams,
+) -> (TrainReport, DriftEvalReport) {
+    let seed = params.eval.seed;
+    let mut rng = Rng::new(seed);
+    let hwa_cfg = RPUConfig::hwa_training(WeightModifier::AddNormal { std: params.w_noise });
+    let mut model = mlp(&params.dims, Backend::Analog, &hwa_cfg, &mut rng);
+    let tc = TrainConfig {
+        epochs: params.epochs,
+        batch_size: 32,
+        lr: 0.1,
+        seed,
+        log_every: 0,
+        csv_path: None,
+    };
+    let train_report = train_classifier(&mut model, ds, ds, &tc);
+    let layers = collect_linear_layers(&mut model);
+    let icfg = params.icfg.clone();
+    let mapping = hwa_cfg.mapping.clone();
+    let build = |s: u64| {
+        let mut r = Rng::new(s);
+        let mut net = mlp_from_layers(&layers, &mapping, &mut r);
+        net.convert_to_inference(&icfg, &mut r);
+        net
+    };
+    let drift_report = drift_evaluate(build, ds, &params.eval);
+    (train_report, drift_report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthetic_images;
 
     #[test]
     fn fig3b_reram_es_staircase_saturates() {
@@ -176,5 +248,40 @@ mod tests {
         }
         // higher target keeps higher conductance throughout
         assert!(tr.levels[0].1[3] > tr.levels[2].1[3]);
+    }
+
+    #[test]
+    fn sec5_inference_drift_experiment_end_to_end() {
+        // small §5 run: HWA training keeps accuracy, programming at t0
+        // stays close to it, and the conductance observability is present
+        let mut rng = Rng::new(31);
+        let ds = synthetic_images(200, 4, 8, 1, &mut rng);
+        let params = InferenceDriftParams {
+            dims: vec![64, 24, 4],
+            epochs: 10,
+            w_noise: 0.04,
+            icfg: InferenceRPUConfig::default(),
+            eval: DriftEvalConfig {
+                times: vec![25.0, 3.15e7],
+                n_repeats: 2,
+                batch: 32,
+                seed: 9,
+            },
+        };
+        let (train_rep, drift_rep) = inference_drift_experiment(&ds, &params);
+        assert!(train_rep.final_test_acc() > 0.75, "{:?}", train_rep.epoch_test_acc);
+        let t0 = &drift_rep.points[0];
+        assert!(
+            t0.acc_mean > train_rep.final_test_acc() - 0.2,
+            "t0 accuracy {} vs trained {}",
+            t0.acc_mean,
+            train_rep.final_test_acc()
+        );
+        assert_eq!(t0.layer_conductance.len(), 2, "one entry per linear layer");
+        let t1 = drift_rep.points.last().unwrap();
+        assert!(
+            t1.layer_conductance[0].0 < t0.layer_conductance[0].0,
+            "conductance decays over a year"
+        );
     }
 }

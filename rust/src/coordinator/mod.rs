@@ -10,5 +10,7 @@ pub mod hwa_pipeline;
 pub mod params;
 pub mod trainer;
 
-pub use evaluator::InferenceMlp;
+pub use evaluator::{
+    accuracy_over_time, drift_evaluate, DriftEvalConfig, DriftEvalPoint, DriftEvalReport,
+};
 pub use trainer::{evaluate, train_classifier, TrainConfig, TrainReport};

@@ -12,16 +12,19 @@
 //! `config::loader` for the schema); `--csv <path>` writes metrics.
 
 use aihwsim::config::{loader, presets, RPUConfig};
+use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
+use aihwsim::coordinator::evaluator::{accuracy_over_time, DriftEvalConfig};
 use aihwsim::coordinator::experiments;
 #[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
-use aihwsim::coordinator::{evaluator, trainer, InferenceMlp};
+use aihwsim::coordinator::trainer;
 use aihwsim::data::synthetic_images;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
-use aihwsim::nn::AnalogLinear;
+use aihwsim::nn::Module;
 #[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::util::argparse::Args;
+use aihwsim::util::json::Json;
 use aihwsim::util::logging::{info, CsvLogger};
 use aihwsim::util::rng::Rng;
 
@@ -32,8 +35,10 @@ fn usage() -> ! {
            train        --backend analog|fp --arch mlp|lenet --preset <name> \\\n\
                         --epochs N --batch N --lr F --samples N --csv path --config file.json \\\n\
                         --max-in N --max-out N (tile-grid mapping limits, 0 = unlimited) \\\n\
-                        --save path (dense ckpt) --save-grid path (per-shard ckpt)\n\
-           infer-drift  --epochs N --gdc true|false --csv path\n\
+                        --save path (dense ckpt) --save-grid path (per-shard ckpt) \\\n\
+                        --t-inference s1,s2,... (post-training PCM drift evaluation)\n\
+           infer-drift  --epochs N --gdc true|false --t-inference s1,s2,... --n-reps N \\\n\
+                        --config file.json (inference options) --csv path\n\
            response     --preset <name> --pulses N --devices N --csv path\n\
            drift        --csv path\n\
            e2e          --steps N --lr F --artifact hwa_train_step|fp_train_step\n\
@@ -42,10 +47,37 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-fn load_config(args: &Args) -> RPUConfig {
+/// Parse a `--t-inference` comma list, exiting on malformed input.
+fn t_inference_list(args: &Args) -> Option<Vec<f32>> {
+    match args.f32_list("t-inference") {
+        None => None,
+        Some(Ok(v)) if v.is_empty() => {
+            eprintln!("--t-inference: empty schedule");
+            std::process::exit(2);
+        }
+        Some(Ok(v)) => Some(v),
+        Some(Err(e)) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Load the training `RPUConfig`, returning the parsed `--config` JSON
+/// alongside it so combined documents' other sections (e.g. `"inference"`)
+/// can be consumed without re-reading the file.
+fn load_config(args: &Args) -> (RPUConfig, Option<Json>) {
+    let mut json = None;
     let mut cfg = if let Some(path) = args.get("config") {
-        match loader::load_rpu_config(path) {
-            Ok(c) => c,
+        let parsed = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))
+            .and_then(|text| Json::parse(&text).map_err(|e| format!("{path}: {e}")))
+            .and_then(|j| loader::rpu_config_from_json(&j).map(|c| (j, c)));
+        match parsed {
+            Ok((j, c)) => {
+                json = Some(j);
+                c
+            }
             Err(e) => {
                 eprintln!("config error: {e}");
                 std::process::exit(2);
@@ -68,7 +100,7 @@ fn load_config(args: &Args) -> RPUConfig {
     // split over a TileGrid of shards; 0 = unlimited)
     cfg.mapping.max_input_size = args.usize_or("max-in", cfg.mapping.max_input_size);
     cfg.mapping.max_output_size = args.usize_or("max-out", cfg.mapping.max_output_size);
-    cfg
+    (cfg, json)
 }
 
 fn cmd_train(args: &Args) {
@@ -76,7 +108,7 @@ fn cmd_train(args: &Args) {
         "fp" | "float" => Backend::FloatingPoint,
         _ => Backend::Analog,
     };
-    let cfg = load_config(args);
+    let (cfg, cfg_json) = load_config(args);
     let samples = args.usize_or("samples", 480);
     let side = args.usize_or("side", 16);
     let classes = args.usize_or("classes", 10);
@@ -109,18 +141,7 @@ fn cmd_train(args: &Args) {
     ));
     if let Some(path) = args.get("save") {
         // collect every AnalogLinear layer's weights into a checkpoint
-        let mut layers = Vec::new();
-        for i in 0..model.len() {
-            if let Some(lin) = model
-                .module_mut(i)
-                .as_any_mut()
-                .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            {
-                let w = lin.get_weights();
-                let b = lin.get_bias().map(|b| b.to_vec()).unwrap_or_default();
-                layers.push((w, b));
-            }
-        }
+        let layers = collect_linear_layers(&mut model);
         match aihwsim::coordinator::checkpoint::save(path, &layers) {
             Ok(()) => info(&format!("saved checkpoint ({} linear layers) to {path}", layers.len())),
             Err(e) => eprintln!("checkpoint save failed: {e}"),
@@ -129,18 +150,7 @@ fn cmd_train(args: &Args) {
     if let Some(path) = args.get("save-grid") {
         // per-shard grid checkpoint of the *linear* layers (same contract
         // as --save): preserves the physical tile mapping
-        let mut layers = Vec::new();
-        for i in 0..model.len() {
-            if let Some(lin) = model
-                .module_mut(i)
-                .as_any_mut()
-                .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            {
-                layers.push(aihwsim::coordinator::checkpoint::GridLayer::from_grid(
-                    lin.grid_mut(),
-                ));
-            }
-        }
+        let layers = collect_grid_layers(&mut model);
         let shards: usize = layers.iter().map(|l| l.shards.len()).sum();
         match aihwsim::coordinator::checkpoint::save_grids(path, &layers) {
             Ok(()) => info(&format!(
@@ -153,6 +163,33 @@ fn cmd_train(args: &Args) {
             eprintln!("warning: --save-grid found no linear layers (conv-only models are not grid-checkpointable yet)");
         }
     }
+    if let Some(times) = t_inference_list(args) {
+        // post-training inference lifecycle on the *trained* network —
+        // works for any architecture (conv included): convert the tile
+        // grids in place, program, and sweep the drift schedule. A
+        // combined --config file's "inference" section configures the
+        // converted tiles (the training keys were consumed above).
+        let mut icfg = aihwsim::config::InferenceRPUConfig::default();
+        if let Some(json) = &cfg_json {
+            if json.get("inference").is_some() {
+                match loader::inference_options_from_json(json) {
+                    Ok(o) => icfg = o.config,
+                    Err(e) => {
+                        eprintln!("config error: {e}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+        }
+        if let Some(g) = args.get("gdc") {
+            icfg.drift_compensation = g == "true";
+        }
+        model.convert_to_inference(&icfg, &mut rng);
+        let series = accuracy_over_time(&mut model, &test_ds, &times, tc.batch_size);
+        for (t, acc) in &series {
+            info(&format!("t = {t:>12.0}s  acc {acc:.3}"));
+        }
+    }
 }
 
 fn cmd_infer_drift(args: &Args) {
@@ -161,45 +198,54 @@ fn cmd_infer_drift(args: &Args) {
     let side = 16;
     let classes = 10;
     let train_ds = synthetic_images(480, classes, side, 1, &mut rng);
-    // 1) hardware-aware training (noisy fwd, perfect bwd/update)
-    let hwa_cfg = RPUConfig::hwa_training(aihwsim::config::WeightModifier::AddNormal {
-        std: args.f32_or("w-noise", 0.06),
-    });
-    let mut model = mlp(&[side * side, 128, classes], Backend::Analog, &hwa_cfg, &mut rng);
-    let tc = trainer::TrainConfig {
-        epochs: args.usize_or("epochs", 12),
-        batch_size: 32,
-        lr: 0.1,
-        seed,
-        log_every: 0,
-        csv_path: None,
+    // inference options: --config file first, then CLI overrides
+    let mut opts = match args.get("config") {
+        Some(path) => match loader::load_inference_options(path) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => loader::InferenceOptions::default(),
     };
-    let rep = trainer::train_classifier(&mut model, &train_ds, &train_ds, &tc);
-    info(&format!("HWA-trained: acc {:.3}", rep.final_test_acc()));
-    // 2) program onto PCM inference tiles and sweep time
-    let mut layers = Vec::new();
-    for idx in [0usize, 2] {
-        let lin = model
-            .module_mut(idx)
-            .as_any_mut()
-            .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            .expect("linear layer");
-        layers.push((lin.get_weights(), lin.get_bias().unwrap().to_vec()));
+    if let Some(times) = t_inference_list(args) {
+        opts.t_inference = times;
     }
-    let gdc = args.str_or("gdc", "true") == "true";
-    let mut icfg = aihwsim::config::InferenceRPUConfig::default();
-    icfg.drift_compensation = gdc;
-    let mut net = InferenceMlp::from_weights(&layers, &icfg, &mut rng);
-    net.program();
-    let times = [25.0f32, 3600.0, 86400.0, 2.6e6, 3.15e7];
-    let series = evaluator::accuracy_over_time(&mut net, &train_ds, &times, 32);
-    let mut csv = args
-        .get("csv")
-        .map(|p| CsvLogger::create(p, &["t_seconds", "accuracy", "gdc"]).unwrap());
-    for (t, acc) in &series {
-        info(&format!("t = {t:>12.0}s  acc {acc:.3}  (gdc={gdc})"));
+    opts.n_repeats = args.usize_or("n-reps", opts.n_repeats);
+    if let Some(g) = args.get("gdc") {
+        opts.config.drift_compensation = g == "true";
+    }
+    let gdc = opts.config.drift_compensation;
+    // HWA-train + (time × repeat) drift sweep on the generic engine
+    let params = experiments::InferenceDriftParams {
+        dims: vec![side * side, 128, classes],
+        epochs: args.usize_or("epochs", 12),
+        w_noise: args.f32_or("w-noise", 0.06),
+        icfg: opts.config.clone(),
+        eval: DriftEvalConfig {
+            times: opts.t_inference.clone(),
+            n_repeats: opts.n_repeats,
+            batch: 32,
+            seed,
+        },
+    };
+    let (rep, drift) = experiments::inference_drift_experiment(&train_ds, &params);
+    info(&format!("HWA-trained: acc {:.3}", rep.final_test_acc()));
+    let mut csv = args.get("csv").map(|p| {
+        CsvLogger::create(p, &["t_seconds", "acc_mean", "acc_std", "gdc", "g_mean_us"]).unwrap()
+    });
+    for p in &drift.points {
+        let g_mean = p.layer_conductance.first().map(|c| c.0).unwrap_or(0.0);
+        info(&format!(
+            "t = {t:>12.0}s  acc {m:.3} ± {s:.3}  (gdc={gdc}, n={n}, layer-0 g {g_mean:.1} µS)",
+            t = p.t,
+            m = p.acc_mean,
+            s = p.acc_std,
+            n = p.acc.len(),
+        ));
         if let Some(c) = csv.as_mut() {
-            c.row(&[*t as f64, *acc, gdc as u8 as f64]).unwrap();
+            c.row(&[p.t as f64, p.acc_mean, p.acc_std, gdc as u8 as f64, g_mean]).unwrap();
         }
     }
 }

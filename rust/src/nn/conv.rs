@@ -247,6 +247,30 @@ impl Module for AnalogConv2d {
             self.stride
         )
     }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn convert_to_inference(
+        &mut self,
+        config: &crate::config::InferenceRPUConfig,
+        rng: &mut Rng,
+    ) {
+        self.grid.convert_to_inference(config, rng);
+    }
+
+    fn program(&mut self) {
+        self.grid.program();
+    }
+
+    fn drift_to(&mut self, t_inference: f32) {
+        self.grid.drift_to(t_inference);
+    }
+
+    fn conductance_stats(&mut self, t: f32) -> Vec<(f64, f64)> {
+        self.grid.conductance_stats(t).into_iter().collect()
+    }
 }
 
 #[cfg(test)]

@@ -16,7 +16,9 @@ pub use linear::AnalogLinear;
 pub use loss::{mse_loss, nll_loss};
 pub use sequential::Sequential;
 
+use crate::config::InferenceRPUConfig;
 use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
 
 /// A network module with explicit backward and analog-aware update.
 ///
@@ -25,6 +27,12 @@ use crate::util::matrix::Matrix;
 /// 2. `backward(grad_out)` (caches whatever update needs, returns grad_in),
 /// 3. `update(lr)` (analog tiles: pulsed update; digital params: SGD),
 /// 4. `post_batch()` (decay/diffusion/modifier restore).
+///
+/// The **inference lifecycle** (paper §5) rides the same trait:
+/// `convert_to_inference` swaps a trained module's tile shards for PCM
+/// inference tiles in place, then `program` / `drift_to` position the
+/// whole network in device time. All four default to no-ops so purely
+/// digital modules (activations, losses) need nothing.
 pub trait Module: Send {
     fn forward(&mut self, x: &Matrix) -> Matrix;
     fn backward(&mut self, grad_out: &Matrix) -> Matrix;
@@ -40,5 +48,30 @@ pub trait Module: Send {
     /// extraction for inference programming, etc.).
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         None
+    }
+
+    // ------------------------------------------------ inference lifecycle
+
+    /// Swap this module's analog tile shards for PCM inference tiles in
+    /// place (mapping split, digital bias, and out-scaling preserved).
+    /// Deterministic RNG contract: exactly one `Rng::split` per tile
+    /// shard is drawn from `rng`, in layer order (row-major within a
+    /// grid). No-op for digital modules.
+    fn convert_to_inference(&mut self, _config: &InferenceRPUConfig, _rng: &mut Rng) {}
+
+    /// Program every inference tile onto its physical devices (applies
+    /// programming noise, positions the module at `t = t0`). No-op for
+    /// digital / training modules.
+    fn program(&mut self) {}
+
+    /// Advance every inference tile to `t_inference` seconds after
+    /// programming. No-op for digital / training modules.
+    fn drift_to(&mut self, _t_inference: f32) {}
+
+    /// `(mean, std)` conductance in µS per analog layer at time `t` —
+    /// one entry per programmed tile grid, in layer order; empty for
+    /// digital modules (and before programming).
+    fn conductance_stats(&mut self, _t: f32) -> Vec<(f64, f64)> {
+        Vec::new()
     }
 }

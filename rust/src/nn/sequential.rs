@@ -88,6 +88,36 @@ impl Module for Sequential {
     fn name(&self) -> String {
         "Sequential".into()
     }
+
+    /// Convert every analog layer in order — each layer draws its RNG
+    /// splits from `rng` deterministically (one per tile shard, row-major
+    /// within a grid), so the stream assignment depends only on the
+    /// architecture, never on timing.
+    fn convert_to_inference(
+        &mut self,
+        config: &crate::config::InferenceRPUConfig,
+        rng: &mut crate::util::rng::Rng,
+    ) {
+        for m in self.modules.iter_mut() {
+            m.convert_to_inference(config, rng);
+        }
+    }
+
+    fn program(&mut self) {
+        for m in self.modules.iter_mut() {
+            m.program();
+        }
+    }
+
+    fn drift_to(&mut self, t_inference: f32) {
+        for m in self.modules.iter_mut() {
+            m.drift_to(t_inference);
+        }
+    }
+
+    fn conductance_stats(&mut self, t: f32) -> Vec<(f64, f64)> {
+        self.modules.iter_mut().flat_map(|m| m.conductance_stats(t)).collect()
+    }
 }
 
 /// Whether networks are built with analog tiles or the FP baseline.

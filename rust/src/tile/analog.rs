@@ -264,6 +264,7 @@ mod tests {
             device: crate::config::DeviceConfig::Single(presets::idealized()),
             modifier: WeightModifier::None,
             weight_scaling_omega: 0.0,
+            mapping: crate::config::MappingParameter::default(),
         }
     }
 

@@ -24,6 +24,13 @@
 //! per-row streams off it), so parallel execution is bit-deterministic
 //! for a fixed seed at any `AIHWSIM_THREADS`.
 //!
+//! The **inference lifecycle** (paper §5) is a first-class grid
+//! capability: [`TileGrid::convert_to_inference`] swaps every shard for a
+//! PCM [`InferenceTile`] in place (mapping split, digital bias, and
+//! out-scaling preserved), and [`TileGrid::program`] /
+//! [`TileGrid::drift_to`] fan the lifecycle out shard-parallel under the
+//! same split-RNG determinism contract as forward/update.
+//!
 //! Known limitation: shard-level and inner parallelism compose — each
 //! shard's fused MVM kernel (and, since the row-sharded update engine,
 //! each shard's `DeviceArray::update_with_trains`) may spawn its own
@@ -33,9 +40,9 @@
 //! keep small shards serial inside a task; a shared thread budget across
 //! the levels is future work.
 
-use crate::config::{MappingParameter, RPUConfig};
+use crate::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
 use crate::tile::pulsed_ops::UpdateStats;
-use crate::tile::{AnalogTile, FloatingPointTile, Tile};
+use crate::tile::{AnalogTile, FloatingPointTile, InferenceTile, ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_for_each_mut;
@@ -327,11 +334,7 @@ impl TileGrid {
         }
 
         if let Some(bias) = &self.bias {
-            for b in 0..y.rows() {
-                for (v, &bb) in y.row_mut(b).iter_mut().zip(bias.iter()) {
-                    *v += bb;
-                }
-            }
+            y.add_row_bias(bias);
         }
     }
 
@@ -531,6 +534,96 @@ impl TileGrid {
         }
         Ok(())
     }
+
+    // ------------------------------------------------ inference lifecycle
+
+    /// Convert every shard to a PCM [`InferenceTile`] **in place**,
+    /// preserving the mapping split (row/col layout is untouched), the
+    /// digital bias, and the digital out-scaling (each new shard re-derives
+    /// its own `out_scale` from `config.weight_scaling_omega` so the
+    /// logical weights are unchanged).
+    ///
+    /// Deterministic RNG contract: exactly **one [`Rng::split`] per shard,
+    /// in row-major shard order**, is drawn from `rng` — callers (and the
+    /// grid-vs-dense equivalence tests) can reproduce the exact stream
+    /// assignment. The grid is switched to eval mode: inference tiles do
+    /// not train.
+    pub fn convert_to_inference(&mut self, config: &InferenceRPUConfig, rng: &mut Rng) {
+        let nc = self.col_splits.len();
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let (_, rlen) = self.row_splits[t / nc];
+            let (_, clen) = self.col_splits[t % nc];
+            let w = tile.get_weights();
+            let mut inf = InferenceTile::new(rlen, clen, config.clone(), rng.split());
+            inf.set_weights(&w);
+            *tile = Box::new(inf);
+        }
+        // stale training caches must not reach the inference tiles (their
+        // update path panics by contract)
+        self.x_cache = None;
+        self.d_cache = None;
+        self.is_analog = true;
+        self.train = false;
+    }
+
+    /// Program every shard onto its physical devices, shard-parallel with
+    /// each tile's own split RNG stream (bit-deterministic at any
+    /// `AIHWSIM_THREADS`). No-op on training/FP shards.
+    pub fn program(&mut self) {
+        par_for_each_mut(&mut self.tiles, |_, tile| tile.program());
+    }
+
+    /// Advance every shard to inference time `t_inference` seconds after
+    /// programming (same shard-parallel determinism contract as
+    /// [`Self::program`]).
+    pub fn drift_to(&mut self, t_inference: f32) {
+        par_for_each_mut(&mut self.tiles, |_, tile| tile.drift_to(t_inference));
+    }
+
+    /// Aggregate lifecycle state: `Ideal` when every shard is ideal,
+    /// `Unprogrammed` when any inference shard still holds only target
+    /// weights, else `Programmed` at the first shard's inference time
+    /// (all shards move together through [`Self::drift_to`]).
+    pub fn programming_state(&self) -> ProgrammingState {
+        let mut programmed_at: Option<f32> = None;
+        for tile in &self.tiles {
+            match tile.programming_state() {
+                ProgrammingState::Ideal => {}
+                ProgrammingState::Unprogrammed => return ProgrammingState::Unprogrammed,
+                ProgrammingState::Programmed { t_inference } => {
+                    programmed_at.get_or_insert(t_inference);
+                }
+            }
+        }
+        match programmed_at {
+            Some(t_inference) => ProgrammingState::Programmed { t_inference },
+            None => ProgrammingState::Ideal,
+        }
+    }
+
+    /// Element-count-weighted merge of the shards' `(mean, std)`
+    /// conductance statistics at time `t` (µS) — `None` when no shard is
+    /// programmed.
+    pub fn conductance_stats(&self, t: f32) -> Option<(f64, f64)> {
+        let mut n_total = 0.0f64;
+        let mut mean_acc = 0.0f64;
+        let mut m2_acc = 0.0f64; // Σ n·(σ² + µ²)
+        let nc = self.col_splits.len();
+        for (i, tile) in self.tiles.iter().enumerate() {
+            if let Some((m, s)) = tile.conductance_stats(t) {
+                let n = (self.row_splits[i / nc].1 * self.col_splits[i % nc].1) as f64;
+                n_total += n;
+                mean_acc += n * m;
+                m2_acc += n * (s * s + m * m);
+            }
+        }
+        if n_total == 0.0 {
+            return None;
+        }
+        let mean = mean_acc / n_total;
+        let var = (m2_acc / n_total - mean * mean).max(0.0);
+        Some((mean, var.sqrt()))
+    }
 }
 
 #[cfg(test)]
@@ -701,6 +794,68 @@ mod tests {
         let stats = grid.last_update_stats;
         assert!(stats.pulses > 0, "expected pulses across shards");
         assert!(stats.bl_used >= 1 && stats.bl_used <= cfg.update.desired_bl);
+    }
+
+    #[test]
+    fn convert_to_inference_preserves_logical_weights() {
+        // conversion must keep splits, bias, and the logical weight view
+        let mut rng = Rng::new(20);
+        let mut grid = TileGrid::analog(6, 10, true, mapped(4, 4, RPUConfig::perfect()), &mut rng);
+        let w = Matrix::rand_uniform(6, 10, -0.6, 0.6, &mut rng);
+        grid.set_weights(&w);
+        grid.set_bias(&[0.1, -0.2, 0.3, 0.0, 0.05, -0.15]);
+        let splits = (grid.row_splits().to_vec(), grid.col_splits().to_vec());
+        let bias = grid.bias().unwrap().to_vec();
+        grid.convert_to_inference(&crate::config::InferenceRPUConfig::default(), &mut rng);
+        assert_eq!(grid.programming_state(), ProgrammingState::Unprogrammed);
+        assert_eq!(grid.row_splits(), &splits.0[..]);
+        assert_eq!(grid.col_splits(), &splits.1[..]);
+        assert_eq!(grid.bias().unwrap(), &bias[..]);
+        assert!(!grid.is_train(), "conversion switches to eval mode");
+        // un-programmed logical weights == the trained weights (targets)
+        let got = grid.get_weights();
+        for (a, b) in got.data().iter().zip(w.data().iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert!(grid.conductance_stats(25.0).is_none());
+    }
+
+    #[test]
+    fn grid_lifecycle_program_and_drift() {
+        let mut rng = Rng::new(21);
+        let mut grid = TileGrid::analog(6, 10, false, mapped(4, 4, RPUConfig::perfect()), &mut rng);
+        let w = Matrix::rand_uniform(6, 10, -0.6, 0.6, &mut rng);
+        grid.set_weights(&w);
+        let mut icfg = crate::config::InferenceRPUConfig::default();
+        icfg.drift_compensation = false;
+        grid.convert_to_inference(&icfg, &mut rng);
+        grid.program();
+        let t0 = 20.0;
+        assert_eq!(grid.programming_state(), ProgrammingState::Programmed { t_inference: t0 });
+        let w0 = grid.get_weights().fro_norm();
+        let (m0, s0) = grid.conductance_stats(t0).unwrap();
+        assert!(m0 > 0.0 && s0 > 0.0);
+        grid.drift_to(1e7);
+        assert_eq!(grid.programming_state(), ProgrammingState::Programmed { t_inference: 1e7 });
+        let w1 = grid.get_weights().fro_norm();
+        assert!(w1 < w0, "drift shrinks the grid's logical weights: {w0} -> {w1}");
+        let (m1, _) = grid.conductance_stats(1e7).unwrap();
+        assert!(m1 < m0, "mean conductance decays: {m0} -> {m1}");
+    }
+
+    #[test]
+    fn training_grid_lifecycle_is_ideal_noop() {
+        let mut rng = Rng::new(22);
+        let mut grid = TileGrid::analog(4, 6, false, RPUConfig::perfect(), &mut rng);
+        let w = Matrix::rand_uniform(4, 6, -0.5, 0.5, &mut rng);
+        grid.set_weights(&w);
+        assert_eq!(grid.programming_state(), ProgrammingState::Ideal);
+        let before = grid.get_weights();
+        grid.program();
+        grid.drift_to(1e7);
+        assert_eq!(grid.get_weights().data(), before.data(), "no-op for training tiles");
+        assert_eq!(grid.programming_state(), ProgrammingState::Ideal);
+        assert!(grid.conductance_stats(1e7).is_none());
     }
 
     #[test]

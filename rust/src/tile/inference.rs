@@ -3,21 +3,31 @@
 //! with programming noise, conductance drift, time-dependent read noise,
 //! and optional global drift compensation (GDC).
 //!
-//! Life cycle:
-//! 1. `set_weights(w)` — store the trained digital weights.
+//! Life cycle (the [`Tile`] inference extension — [`Tile::program`],
+//! [`Tile::drift_to`], [`Tile::programming_state`],
+//! [`Tile::conductance_stats`]):
+//! 1. `set_weights(w)` — store the trained digital weights
+//!    ([`ProgrammingState::Unprogrammed`]).
 //! 2. `program()` — apply the statistical programming noise (one shot).
 //! 3. `drift_to(t)` — advance device time; caches the drifted weight
 //!    matrix, the per-element read-noise variances at `t`, and the GDC
 //!    factor.
 //! 4. `forward()` — analog MVM over the drifted weights with read noise,
 //!    ADC/DAC non-idealities, and the GDC factor applied digitally.
+//!
+//! **Un-programmed reads.** Before `program()` the tile forwards the
+//! *target* weights through the analog pipeline with ideal programming
+//! (no PCM read-noise variance) — the aihwkit convention, which lets a
+//! freshly converted network be evaluated before any device programming.
+//! It used to silently read the zero-initialized drifted buffer; now the
+//! un-programmed state is explicit and tested.
 
 use crate::config::InferenceRPUConfig;
 use crate::noise::pcm::ProgrammedWeights;
 use crate::tile::forward::{
     analog_mvm, analog_mvm_batch, mvm_plain_batch, MvmBatchScratch, MvmScratch,
 };
-use crate::tile::Tile;
+use crate::tile::{ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -60,19 +70,7 @@ impl InferenceTile {
         }
     }
 
-    /// Program the stored weights onto PCM (applies programming noise) and
-    /// position the tile at `t = t0`.
-    pub fn program(&mut self) {
-        let prog =
-            ProgrammedWeights::program(&self.target, 1.0, &self.config.noise_model, &mut self.rng);
-        self.programmed = Some(prog);
-        let t0 = self.config.noise_model.t0;
-        self.drift_to(t0);
-    }
-
-    /// Advance to inference time `t` seconds after programming: caches
-    /// drifted weights, read-noise variances, and the GDC factor.
-    pub fn drift_to(&mut self, t: f32) {
+    fn drift_impl(&mut self, t: f32) {
         let prog = self.programmed.as_ref().expect("program() before drift_to()");
         self.t_inference = t.max(self.config.noise_model.t0);
         self.drifted = prog.weights_at(self.t_inference);
@@ -103,15 +101,6 @@ impl InferenceTile {
     pub fn gdc_factor(&self) -> f32 {
         self.gdc_factor
     }
-
-    /// Observability for the Fig. 3C experiment: (mean, std) conductance
-    /// of the programmed devices at time t, in µS.
-    pub fn conductance_stats(&self, t: f32) -> (f64, f64) {
-        self.programmed
-            .as_ref()
-            .expect("program() first")
-            .mean_conductance_at(t.max(self.config.noise_model.t0))
-    }
 }
 
 impl Tile for InferenceTile {
@@ -123,15 +112,21 @@ impl Tile for InferenceTile {
     }
 
     fn forward(&mut self, x: &[f32], y: &mut [f32]) {
-        assert!(self.programmed.is_some(), "program() before forward()");
+        // programmed: drifted weights + cached PCM read-noise variances;
+        // un-programmed: ideal programming of the target weights
+        let (w, var): (&[f32], Option<&[f32]>) = if self.programmed.is_some() {
+            (&self.drifted, Some(&self.read_var))
+        } else {
+            (&self.target, None)
+        };
         analog_mvm(
-            &self.drifted,
+            w,
             self.out_size,
             self.in_size,
             x,
             y,
             &self.config.forward,
-            Some(&self.read_var),
+            var,
             false,
             &mut self.rng,
             &mut self.scratch,
@@ -168,22 +163,27 @@ impl Tile for InferenceTile {
         m
     }
 
-    /// Fused batched forward over the drifted weights: the cached
-    /// per-element read-noise variances ride through the same
-    /// [`analog_mvm_batch`] call as the weights (one pass per block).
+    /// Fused batched forward: the cached per-element read-noise variances
+    /// ride through the same [`analog_mvm_batch`] call as the weights
+    /// (one pass per block). Un-programmed tiles read the target weights
+    /// with ideal programming (no PCM variance) — see the module docs.
     fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
-        assert!(self.programmed.is_some(), "program() before forward()");
         assert_eq!(x.cols(), self.in_size);
         assert_eq!(y.cols(), self.out_size);
         assert_eq!(x.rows(), y.rows());
+        let (w, var): (&[f32], Option<&[f32]>) = if self.programmed.is_some() {
+            (&self.drifted, Some(&self.read_var))
+        } else {
+            (&self.target, None)
+        };
         analog_mvm_batch(
-            &self.drifted,
+            w,
             self.out_size,
             self.in_size,
             x,
             y,
             &self.config.forward,
-            Some(&self.read_var),
+            var,
             false,
             &mut self.rng,
             &mut self.batch_scratch,
@@ -220,6 +220,39 @@ impl Tile for InferenceTile {
     }
 
     fn post_batch(&mut self) {}
+
+    /// Program the stored weights onto PCM (applies programming noise) and
+    /// position the tile at `t = t0`.
+    fn program(&mut self) {
+        let prog =
+            ProgrammedWeights::program(&self.target, 1.0, &self.config.noise_model, &mut self.rng);
+        self.programmed = Some(prog);
+        let t0 = self.config.noise_model.t0;
+        self.drift_impl(t0);
+    }
+
+    /// Advance to inference time `t` seconds after programming: caches
+    /// drifted weights, read-noise variances, and the GDC factor.
+    fn drift_to(&mut self, t_inference: f32) {
+        self.drift_impl(t_inference);
+    }
+
+    fn programming_state(&self) -> ProgrammingState {
+        if self.programmed.is_some() {
+            ProgrammingState::Programmed { t_inference: self.t_inference }
+        } else {
+            ProgrammingState::Unprogrammed
+        }
+    }
+
+    /// Observability for the Fig. 3C experiment: (mean, std) conductance
+    /// of the programmed devices at time t, in µS (`None` before
+    /// programming).
+    fn conductance_stats(&self, t: f32) -> Option<(f64, f64)> {
+        self.programmed
+            .as_ref()
+            .map(|p| p.mean_conductance_at(t.max(self.config.noise_model.t0)))
+    }
 }
 
 #[cfg(test)]
@@ -242,12 +275,31 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "program() before forward()")]
-    fn forward_requires_programming() {
-        let mut t = mk_tile(1);
-        t.set_weights(&test_weights());
+    fn unprogrammed_forward_reads_target_ideally() {
+        // regression: the un-programmed state must forward the *target*
+        // weights (ideal programming), never the zero-initialized drifted
+        // buffer — and must not panic
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.forward = crate::config::IOParameters::perfect();
+        let mut t = InferenceTile::new(4, 8, cfg, Rng::new(1));
+        let w = test_weights();
+        t.set_weights(&w);
+        assert_eq!(t.programming_state(), ProgrammingState::Unprogrammed);
+        assert!(t.conductance_stats(25.0).is_none());
+        let x = vec![0.25f32; 8];
         let mut y = vec![0.0; 4];
-        t.forward(&[0.1; 8], &mut y);
+        t.forward(&x, &mut y);
+        let expect = w.matvec(&x);
+        for (a, e) in y.iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        // batched path agrees (noise-free config → exact)
+        let xb = Matrix::from_vec(1, 8, x);
+        let mut yb = Matrix::zeros(1, 4);
+        t.forward_batch(&xb, &mut yb);
+        for (a, e) in yb.row(0).iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-4, "batched {a} vs {e}");
+        }
     }
 
     #[test]
@@ -256,6 +308,7 @@ mod tests {
         let w = test_weights();
         t.set_weights(&w);
         t.program();
+        assert!(matches!(t.programming_state(), ProgrammingState::Programmed { .. }));
         let got = t.get_weights();
         let mut err = 0.0f32;
         for (a, b) in got.data().iter().zip(w.data().iter()) {
@@ -274,6 +327,7 @@ mod tests {
         t.program();
         let w0 = t.get_weights().fro_norm();
         t.drift_to(1e6);
+        assert_eq!(t.programming_state(), ProgrammingState::Programmed { t_inference: 1e6 });
         let w1 = t.get_weights().fro_norm();
         assert!(w1 < w0 * 0.95, "drift must shrink weights: {w0} -> {w1}");
     }
@@ -313,6 +367,17 @@ mod tests {
         t.drift_to(1e8);
         let s_late = spread(&mut t, &x);
         assert!(s_late > s_early, "read noise grows with t: {s_early} vs {s_late}");
+    }
+
+    #[test]
+    fn conductance_stats_decay_over_time() {
+        let mut t = mk_tile(7);
+        t.set_weights(&test_weights());
+        t.program();
+        let (m0, _) = t.conductance_stats(25.0).unwrap();
+        let (m1, s1) = t.conductance_stats(1e7).unwrap();
+        assert!(m1 < m0, "mean conductance decays: {m0} -> {m1}");
+        assert!(s1 > 0.0);
     }
 
     #[test]

@@ -18,6 +18,31 @@ pub use inference::InferenceTile;
 use crate::tile::pulsed_ops::UpdateStats;
 use crate::util::matrix::Matrix;
 
+/// Where a tile stands in the inference lifecycle (paper §5).
+///
+/// Training and floating-point tiles are permanently [`Ideal`]: their
+/// weights are exact digital state and `program`/`drift_to` are no-ops.
+/// An [`InferenceTile`] starts [`Unprogrammed`] after `set_weights`
+/// (holding the digital target weights) and becomes [`Programmed`] once
+/// `program()` has applied the statistical programming noise; from then
+/// on `drift_to(t)` positions it `t` seconds after programming.
+///
+/// [`Ideal`]: ProgrammingState::Ideal
+/// [`Unprogrammed`]: ProgrammingState::Unprogrammed
+/// [`Programmed`]: ProgrammingState::Programmed
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProgrammingState {
+    /// Digital/training weights; the inference lifecycle does not apply.
+    Ideal,
+    /// Target weights stored but not yet programmed onto devices.
+    Unprogrammed,
+    /// Programmed; positioned `t_inference` seconds after programming.
+    Programmed {
+        /// Current inference time in seconds after programming.
+        t_inference: f32,
+    },
+}
+
 /// Common interface of all tiles. Shapes follow the convention
 /// `y[out] = W[out × in] · x[in]`.
 pub trait Tile: Send {
@@ -52,6 +77,31 @@ pub trait Tile: Send {
     /// tiles without a pulsed update path, e.g. floating-point tiles).
     /// [`TileGrid`] aggregates these across its shards.
     fn update_stats(&self) -> Option<UpdateStats> {
+        None
+    }
+
+    // ------------------------------------------------ inference lifecycle
+
+    /// Program the stored weights onto the tile's physical devices
+    /// (paper §5: applies the statistical programming noise and positions
+    /// the tile at `t = t0`). No-op for training/FP tiles, whose weights
+    /// are ideal digital state.
+    fn program(&mut self) {}
+
+    /// Advance the tile to inference time `t_inference` seconds after
+    /// programming (conductance drift, time-dependent read noise, drift
+    /// compensation). No-op for training/FP tiles.
+    fn drift_to(&mut self, _t_inference: f32) {}
+
+    /// Where this tile stands in the inference lifecycle.
+    fn programming_state(&self) -> ProgrammingState {
+        ProgrammingState::Ideal
+    }
+
+    /// `(mean, std)` conductance in µS of the programmed devices at time
+    /// `t` (the Fig. 3C observable). `None` for tiles without programmed
+    /// devices ([`ProgrammingState::Programmed`] tiles return `Some`).
+    fn conductance_stats(&self, _t: f32) -> Option<(f64, f64)> {
         None
     }
 

@@ -84,6 +84,21 @@ impl Args {
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Comma-separated f32 list (`--t-inference 3600,86400,3.15e7`).
+    /// `None` when the option is absent; `Err` on any unparsable entry
+    /// (a typo in a schedule must not silently shrink the sweep).
+    pub fn f32_list(&self, key: &str) -> Option<Result<Vec<f32>, String>> {
+        self.get(key).map(|raw| {
+            raw.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<f32>().map_err(|_| format!("--{key}: bad number '{s}' in '{raw}'"))
+                })
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +143,14 @@ mod tests {
         let a = Args::parse(&sv(&["--a", "--b", "5"]));
         assert!(a.has_flag("a"));
         assert_eq!(a.usize_or("b", 0), 5);
+    }
+
+    #[test]
+    fn f32_list_parses_schedules() {
+        let a = Args::parse(&sv(&["--t-inference", "3600, 86400,3.15e7"]));
+        assert_eq!(a.f32_list("t-inference").unwrap().unwrap(), vec![3600.0, 86400.0, 3.15e7]);
+        assert!(a.f32_list("missing").is_none());
+        let bad = Args::parse(&sv(&["--t-inference", "10,oops"]));
+        assert!(bad.f32_list("t-inference").unwrap().is_err());
     }
 }

@@ -273,6 +273,17 @@ impl Matrix {
         }
     }
 
+    /// Add a bias vector to every row: `self[b, :] += bias` — the shared
+    /// digital bias epilogue of the tile-grid engine and the drift
+    /// evaluator, on the bounds-check-free [`kernels::vadd`] micro-kernel.
+    pub fn add_row_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols, "bias length must match columns");
+        for b in 0..self.rows {
+            let row = &mut self.data[b * self.cols..(b + 1) * self.cols];
+            kernels::vadd(row, bias);
+        }
+    }
+
     /// Elementwise in-place map.
     pub fn map_inplace<F: FnMut(f32) -> f32>(&mut self, mut f: F) {
         for v in self.data.iter_mut() {
@@ -444,6 +455,13 @@ mod tests {
             assert!(back.row(b)[..3].iter().all(|&v| v == 0.0));
             assert!(back.row(b)[7..].iter().all(|&v| v == 0.0));
         }
+    }
+
+    #[test]
+    fn add_row_bias_adds_to_every_row() {
+        let mut y = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        y.add_row_bias(&[10., 20., 30.]);
+        assert_eq!(y.data(), &[11., 22., 33., 14., 25., 36.]);
     }
 
     #[test]

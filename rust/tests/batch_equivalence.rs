@@ -272,6 +272,77 @@ fn inference_tile_batched_statistics_match() {
     assert!(sb > 0.0, "read noise must be present");
 }
 
+#[test]
+fn inference_tile_unprogrammed_batch_matches_scalar_targets() {
+    // un-programmed tiles forward the *target* weights ideally (see the
+    // inference-tile docs); with a noise-free forward config both paths
+    // reduce to exact GEMMs over the targets
+    let mut cfg = InferenceRPUConfig::default();
+    cfg.forward = IOParameters::perfect();
+    let mut t = InferenceTile::new(4, 16, cfg, Rng::new(31));
+    let w = test_weights(4, 16);
+    t.set_weights(&w);
+    let x = test_inputs(6, 16);
+    let mut y = Matrix::zeros(6, 4);
+    t.forward_batch(&x, &mut y);
+    for b in 0..6 {
+        let mut yr = vec![0.0; 4];
+        t.forward(x.row(b), &mut yr);
+        let expect = w.matvec(x.row(b));
+        for ((a, s), e) in y.row(b).iter().zip(yr.iter()).zip(expect.iter()) {
+            assert!((a - s).abs() < 1e-6, "batched vs scalar row {b}: {a} vs {s}");
+            assert!((a - e).abs() < 1e-4, "target weights row {b}: {a} vs {e}");
+        }
+    }
+}
+
+#[test]
+fn inference_tile_batched_read_noise_variance_tracks_drift_time() {
+    // the drifted-weights + cached read-noise-variance path: the batched
+    // kernel's output spread must match the scalar path at t0 AND at one
+    // year, and must grow with drift time (1/f read noise accumulates)
+    let out = 4;
+    let inp = 16;
+    let mut cfg = InferenceRPUConfig::default();
+    cfg.drift_compensation = false; // isolate the read-noise path
+    let w = test_weights(out, inp);
+    let probe: Vec<f32> = (0..inp).map(|j| ((j as f32) * 0.19).sin() * 0.6).collect();
+    let reps = 500;
+    let spread_at = |t_inf: f32, batched: bool, seed: u64| -> f64 {
+        let mut t = InferenceTile::new(out, inp, cfg.clone(), Rng::new(seed));
+        t.set_weights(&w);
+        t.program();
+        t.drift_to(t_inf);
+        let mut vals = Vec::with_capacity(reps);
+        if batched {
+            let mut xb = Matrix::zeros(reps, inp);
+            for b in 0..reps {
+                xb.row_mut(b).copy_from_slice(&probe);
+            }
+            let mut yb = Matrix::zeros(reps, out);
+            t.forward_batch(&xb, &mut yb);
+            for b in 0..reps {
+                vals.push(yb.get(b, 0));
+            }
+        } else {
+            for _ in 0..reps {
+                let mut y = vec![0.0; out];
+                t.forward(&probe, &mut y);
+                vals.push(y[0]);
+            }
+        }
+        stats::std(&vals)
+    };
+    let (t0, t_year) = (25.0f32, 3.15e7f32);
+    let sb0 = spread_at(t0, true, 41);
+    let ss0 = spread_at(t0, false, 41);
+    let sb1 = spread_at(t_year, true, 41);
+    let ss1 = spread_at(t_year, false, 41);
+    assert!((sb0 - ss0).abs() < 0.02, "t0 spreads: batched {sb0} vs scalar {ss0}");
+    assert!((sb1 - ss1).abs() < 0.03, "1y spreads: batched {sb1} vs scalar {ss1}");
+    assert!(sb1 > sb0, "batched read-noise spread grows with t: {sb0} -> {sb1}");
+}
+
 // ----------------------------------------------------------- tile grid
 
 /// Weights/inputs on a coarse dyadic lattice (multiples of 1/64 resp.
@@ -388,6 +459,33 @@ fn with_threads<R>(threads: &str, f: impl FnOnce() -> R) -> R {
         None => std::env::remove_var("AIHWSIM_THREADS"),
     }
     out
+}
+
+#[test]
+fn drift_engine_bit_identical_across_thread_counts() {
+    // the (time × repeat) drift-evaluation engine: every cell is a
+    // self-contained network instance built from its repeat seed, so the
+    // whole report must be bit-identical at any AIHWSIM_THREADS
+    use aihwsim::coordinator::evaluator::{drift_evaluate, DriftEvalConfig};
+    use aihwsim::data::synthetic_images;
+    use aihwsim::nn::sequential::{mlp, Backend};
+    use aihwsim::nn::Module;
+    let ds = synthetic_images(48, 3, 4, 1, &mut Rng::new(9));
+    let icfg = InferenceRPUConfig::default();
+    let build = |seed: u64| {
+        let mut r = Rng::new(seed);
+        let mut net = mlp(&[16, 8, 3], Backend::FloatingPoint, &RPUConfig::perfect(), &mut r);
+        net.convert_to_inference(&icfg, &mut r);
+        net
+    };
+    let cfg = DriftEvalConfig { times: vec![25.0, 3.15e7], n_repeats: 2, batch: 16, seed: 77 };
+    let serial = with_threads("1", || drift_evaluate(&build, &ds, &cfg));
+    let parallel = with_threads("4", || drift_evaluate(&build, &ds, &cfg));
+    assert_eq!(serial.points.len(), parallel.points.len());
+    for (s, p) in serial.points.iter().zip(parallel.points.iter()) {
+        assert_eq!(s.acc, p.acc, "t={}: accuracies differ across thread counts", s.t);
+        assert_eq!(s.layer_conductance, p.layer_conductance, "t={}", s.t);
+    }
 }
 
 #[test]

@@ -4,7 +4,7 @@
 //! doc use plain fences precisely so this test only sees complete
 //! configs.
 
-use aihwsim::config::loader::rpu_config_from_json;
+use aihwsim::config::loader::{inference_options_from_json, rpu_config_from_json};
 use aihwsim::util::json::Json;
 
 /// Extract the contents of every ```json fenced block.
@@ -44,13 +44,29 @@ fn every_config_md_snippet_loads() {
         "expected the reference to carry at least 8 loadable snippets, found {}",
         blocks.len()
     );
+    let mut inference_snippets = 0;
     for (line, block) in &blocks {
         let json = Json::parse(block)
             .unwrap_or_else(|e| panic!("CONFIG.md snippet at line {line} is not valid JSON: {e}"));
+        // snippets carrying a top-level "inference" key document the
+        // inference options (InferenceRPUConfig + t_inference schedule)
+        // and load through the inference loader; every snippet ALSO loads
+        // as an RPUConfig (which ignores the "inference" key), so the
+        // training half of a combined document is still validated
+        if json.get("inference").is_some() {
+            inference_snippets += 1;
+            inference_options_from_json(&json).unwrap_or_else(|e| {
+                panic!("CONFIG.md inference snippet at line {line} rejected: {e}")
+            });
+        }
         rpu_config_from_json(&json).unwrap_or_else(|e| {
             panic!("CONFIG.md snippet at line {line} rejected by config::loader: {e}")
         });
     }
+    assert!(
+        inference_snippets >= 1,
+        "the inference-options section must carry at least one loadable snippet"
+    );
     // the smallest snippet documents that {} is a valid config — make
     // sure it is actually present
     assert!(

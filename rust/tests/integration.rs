@@ -1,12 +1,18 @@
 //! Cross-module integration tests: config files → networks → training →
 //! inference programming → runtime artifacts.
 
-use aihwsim::config::{loader, presets, DeviceConfig, InferenceRPUConfig, RPUConfig};
-use aihwsim::coordinator::evaluator::{accuracy_over_time, InferenceMlp};
+use aihwsim::config::{
+    loader, presets, DeviceConfig, InferenceRPUConfig, MappingParameter, RPUConfig,
+};
+use aihwsim::coordinator::checkpoint::collect_linear_layers;
+use aihwsim::coordinator::evaluator::{
+    accuracy_over_time, dataset_accuracy, drift_evaluate, mlp_from_grid_checkpoint,
+    mlp_from_layers, DriftEvalConfig,
+};
 use aihwsim::coordinator::trainer::{evaluate, train_classifier, TrainConfig};
 use aihwsim::data::synthetic_images;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
-use aihwsim::nn::AnalogLinear;
+use aihwsim::nn::{AnalogLinear, Module};
 #[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::util::json::Json;
@@ -63,29 +69,52 @@ fn lenet_analog_smoke() {
 
 #[test]
 fn full_inference_lifecycle() {
-    // train FP → program onto PCM → drift sweep → accuracy ordering
+    // train FP → convert to inference tiles in place → program → drift
+    // sweep → accuracy ordering
     let mut rng = Rng::new(3);
     let ds = synthetic_images(240, 4, 8, 1, &mut rng);
     let mut model = mlp(&[64, 24, 4], Backend::FloatingPoint, &RPUConfig::perfect(), &mut rng);
     let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, seed: 7, log_every: 0, csv_path: None };
     let rep = train_classifier(&mut model, &ds, &ds, &tc);
     assert!(rep.final_test_acc() > 0.9);
-    let mut layers = Vec::new();
-    for idx in [0usize, 2] {
-        let lin = model
-            .module_mut(idx)
-            .as_any_mut()
-            .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            .unwrap();
-        layers.push((lin.get_weights(), lin.get_bias().unwrap().to_vec()));
-    }
     let cfg = InferenceRPUConfig::default();
-    let mut net = InferenceMlp::from_weights(&layers, &cfg, &mut rng);
-    net.program();
-    let series = accuracy_over_time(&mut net, &ds, &[25.0, 1e5, 3e7], 32);
+    model.convert_to_inference(&cfg, &mut rng);
+    let series = accuracy_over_time(&mut model, &ds, &[25.0, 1e5, 3e7], 32);
     assert_eq!(series.len(), 3);
     // accuracy at t0 close to digital accuracy
     assert!(series[0].1 > rep.final_test_acc() - 0.15, "{series:?}");
+    // per-layer conductance observability survives the sweep
+    assert_eq!(model.conductance_stats(3e7).len(), 2);
+}
+
+#[test]
+fn lenet_grid_mapped_inference_lifecycle() {
+    // the tentpole acceptance path: a grid-mapped LeNet (AnalogConv2d
+    // included) is trained, converted with convert_to_inference, and
+    // drift-evaluated end-to-end — impossible with the retired
+    // MLP-only InferenceMlp
+    let mut rng = Rng::new(8);
+    let ds = synthetic_images(90, 3, 12, 1, &mut rng);
+    let mut cfg = RPUConfig::default();
+    cfg.device = DeviceConfig::Single(presets::idealized());
+    // small tile limit → the conv patch matrices and the FC layer all
+    // split over multi-shard grids
+    cfg.mapping = MappingParameter::max_size(24);
+    let mut model = lenet(1, 12, 3, Backend::Analog, &cfg, &mut rng);
+    let tc = TrainConfig { epochs: 8, batch_size: 10, lr: 0.2, seed: 5, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &ds, &ds, &tc);
+    let best = rep.epoch_test_acc.iter().cloned().fold(0.0f64, f64::max);
+    assert!(best > 0.45, "{:?}", rep.epoch_test_acc);
+    let icfg = InferenceRPUConfig::default();
+    model.convert_to_inference(&icfg, &mut rng);
+    let series = accuracy_over_time(&mut model, &ds, &[25.0, 86400.0, 3.15e7], 16);
+    assert_eq!(series.len(), 3);
+    assert!(
+        series[0].1 > best - 0.2,
+        "programmed LeNet accuracy {series:?} vs trained {best}"
+    );
+    // conductance stats: one entry per analog grid (2 convs + 1 FC)
+    assert_eq!(model.conductance_stats(25.0).len(), 3);
 }
 
 #[test]
@@ -156,10 +185,10 @@ fn runtime_artifacts_or_graceful_skip() {
 #[test]
 fn grid_mapped_training_to_inference_lifecycle() {
     // a layer whose in AND out features exceed the tile limit trains on a
-    // 2D multi-tile grid, checkpoints per shard, and programs onto PCM
-    // inference tiles from the grid checkpoint
-    use aihwsim::config::MappingParameter;
-    use aihwsim::coordinator::checkpoint::{grids_from_json, grids_to_json, GridLayer};
+    // 2D multi-tile grid, checkpoints per shard, and is rebuilt from the
+    // checkpoint with its *physical tile mapping preserved* before
+    // programming onto PCM inference tiles
+    use aihwsim::coordinator::checkpoint::{collect_grid_layers, grids_from_json, grids_to_json};
     let mut rng = Rng::new(6);
     let ds = synthetic_images(240, 4, 8, 1, &mut rng);
     let mut cfg = RPUConfig::default();
@@ -173,15 +202,7 @@ fn grid_mapped_training_to_inference_lifecycle() {
     assert!(best > 0.5, "grid-mapped training works: {:?}", rep.epoch_test_acc);
 
     // per-shard checkpoint of both linear layers, through JSON
-    let mut layers = Vec::new();
-    for idx in [0usize, 2] {
-        let lin = model
-            .module_mut(idx)
-            .as_any_mut()
-            .and_then(|a| a.downcast_mut::<AnalogLinear>())
-            .unwrap();
-        layers.push(GridLayer::from_grid(lin.grid_mut()));
-    }
+    let layers = collect_grid_layers(&mut model);
     assert_eq!(layers[0].shards.len(), 4); // 24×64 over 16/32 limits → 2×2
     let json = grids_to_json(&layers);
     let restored = grids_from_json(&Json::parse(&json.to_string()).unwrap()).unwrap();
@@ -195,12 +216,46 @@ fn grid_mapped_training_to_inference_lifecycle() {
     let (dense0, _) = restored[0].assemble();
     assert_eq!(dense0.data(), lin0.get_weights().data());
 
-    // program the grid checkpoint onto PCM inference tiles and evaluate
+    // rebuild the network from the grid checkpoint (same shard layout),
+    // convert, program, and evaluate
+    let mut net = mlp_from_grid_checkpoint(&restored, &mut rng).unwrap();
+    assert!(net.summary().contains("2x2 tiles"), "mapping preserved: {}", net.summary());
     let icfg = InferenceRPUConfig::default();
-    let mut net = InferenceMlp::from_grid_checkpoint(&restored, &icfg, &mut rng);
-    net.program();
+    net.convert_to_inference(&icfg, &mut rng);
     let series = accuracy_over_time(&mut net, &ds, &[25.0, 1e5], 32);
     assert!(series[0].1 > best - 0.15, "programmed accuracy {series:?} vs trained {best}");
+}
+
+#[test]
+fn drift_engine_from_trained_checkpoint() {
+    // trainer → dense checkpoint layers → (time × repeat) engine: the
+    // CLI's infer-drift flow as a library call
+    let mut rng = Rng::new(9);
+    let ds = synthetic_images(240, 4, 8, 1, &mut rng);
+    let mut model = mlp(&[64, 24, 4], Backend::FloatingPoint, &RPUConfig::perfect(), &mut rng);
+    let tc = TrainConfig { epochs: 10, batch_size: 16, lr: 0.5, seed: 3, log_every: 0, csv_path: None };
+    let rep = train_classifier(&mut model, &ds, &ds, &tc);
+    assert!(rep.final_test_acc() > 0.9);
+    let layers = collect_linear_layers(&mut model);
+    let icfg = InferenceRPUConfig::default();
+    let mapping = MappingParameter::max_size(24);
+    let build = |seed: u64| {
+        let mut r = Rng::new(seed);
+        let mut net = mlp_from_layers(&layers, &mapping, &mut r);
+        net.convert_to_inference(&icfg, &mut r);
+        net
+    };
+    let cfg = DriftEvalConfig { times: vec![25.0, 3.15e7], n_repeats: 2, batch: 32, seed: 17 };
+    let report = drift_evaluate(build, &ds, &cfg);
+    assert_eq!(report.points.len(), 2);
+    assert!(report.points[0].acc_mean > rep.final_test_acc() - 0.15);
+    assert_eq!(report.points[0].acc.len(), 2);
+    // sanity: single-instance path agrees in magnitude with the engine
+    let mut single = mlp_from_layers(&layers, &mapping, &mut Rng::new(5));
+    single.convert_to_inference(&icfg, &mut Rng::new(5));
+    single.program();
+    let acc = dataset_accuracy(&mut single, &ds, 32);
+    assert!((acc - report.points[0].acc_mean).abs() < 0.15);
 }
 
 #[test]
