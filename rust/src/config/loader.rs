@@ -31,6 +31,7 @@ use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType}
 use super::update::{PulseType, UpdateParameters};
 use super::{presets, InferenceRPUConfig, RPUConfig, WeightModifier};
 use crate::noise::pcm::PCMNoiseParams;
+use crate::serve::ServeOptions;
 use crate::util::json::Json;
 
 /// Load an [`RPUConfig`] from a JSON file.
@@ -332,6 +333,37 @@ pub fn inference_options_from_json(j: &Json) -> Result<InferenceOptions, String>
     Ok(opts)
 }
 
+// ----------------------------------------------------- serving options
+
+/// Build [`ServeOptions`] from parsed JSON. Accepts either the serving
+/// object itself or a document with a top-level `"serving"` key, so one
+/// combined file can carry training, inference, and serving sections
+/// (unknown sections are ignored by the other loaders, as usual).
+pub fn serving_options_from_json(j: &Json) -> Result<ServeOptions, String> {
+    let j = j.get("serving").unwrap_or(j);
+    let d = ServeOptions::default();
+    let opts = ServeOptions {
+        batch_window_us: match j.get("batch_window_us") {
+            None => d.batch_window_us,
+            Some(v) => v
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                .map(|x| x as u64)
+                .ok_or("serving.batch_window_us: must be a non-negative integer (µs)")?,
+        },
+        max_batch: match j.get("max_batch") {
+            None => d.max_batch,
+            Some(v) => v.as_usize().ok_or("serving.max_batch: must be a positive integer")?,
+        },
+        queue_depth: match j.get("queue_depth") {
+            None => d.queue_depth,
+            Some(v) => v.as_usize().ok_or("serving.queue_depth: must be a positive integer")?,
+        },
+    };
+    opts.validate()?;
+    Ok(opts)
+}
+
 fn pcm_noise_from_json(j: &Json) -> Result<PCMNoiseParams, String> {
     let d = PCMNoiseParams::default();
     let p = PCMNoiseParams {
@@ -551,6 +583,38 @@ mod tests {
         let cfg = rpu_config_from_json(&j).unwrap();
         assert_eq!(cfg.backward.w_noise_type, WeightNoiseType::RelativeToWeight);
         assert_eq!(cfg.backward.noise_management, NoiseManagement::Constant);
+    }
+
+    #[test]
+    fn serving_options_defaults_and_overrides() {
+        // empty object → defaults
+        let opts = serving_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(opts, ServeOptions::default());
+        // full document, wrapped in the "serving" key
+        let j = Json::parse(
+            r#"{"serving": {"batch_window_us": 250, "max_batch": 16, "queue_depth": 128}}"#,
+        )
+        .unwrap();
+        let opts = serving_options_from_json(&j).unwrap();
+        assert_eq!(opts.batch_window_us, 250);
+        assert_eq!(opts.max_batch, 16);
+        assert_eq!(opts.queue_depth, 128);
+        // zero window (immediate dispatch) is a valid setting
+        let j = Json::parse(r#"{"serving": {"batch_window_us": 0}}"#).unwrap();
+        assert_eq!(serving_options_from_json(&j).unwrap().batch_window_us, 0);
+    }
+
+    #[test]
+    fn serving_options_bad_inputs_error() {
+        for bad in [
+            r#"{"serving": {"batch_window_us": -5}}"#,
+            r#"{"serving": {"batch_window_us": 0.5}}"#,
+            r#"{"serving": {"max_batch": 0}}"#,
+            r#"{"serving": {"queue_depth": 0}}"#,
+            r#"{"serving": {"max_batch": 64, "queue_depth": 8}}"#,
+        ] {
+            assert!(serving_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -20,7 +20,9 @@ use crate::util::rng::Rng;
 use std::ops::Range;
 
 /// A rows×cols array of resistive devices with weight state.
-pub trait DeviceArray: Send {
+/// (`Sync` because [`crate::tile::Tile`] is `Sync`; all mutation goes
+/// through `&mut self`, so there is nothing to synchronize.)
+pub trait DeviceArray: Send + Sync {
     fn rows(&self) -> usize;
     fn cols(&self) -> usize;
 

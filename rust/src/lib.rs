@@ -8,6 +8,7 @@
 //! Layer map:
 //! * `config`/`device`/`tile`/`noise` — the RPU core (analog tile model)
 //! * `nn`/`optim`/`data` — the DNN front-end (AnalogLinear & friends)
+//! * `serve` — concurrent inference serving (shared read path + micro-batching queue)
 //! * `runtime` — PJRT loader for the AOT-compiled JAX/Pallas artifacts
 //! * `coordinator` — training/evaluation orchestration + experiments
 //! * `util` — std-only substrate (RNG, matrix, JSON, threads, stats)
@@ -31,5 +32,6 @@ compile_error!(
 );
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tile;
 pub mod util;

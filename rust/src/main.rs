@@ -6,10 +6,13 @@
 //!   response     — device pulse-response traces (Fig. 3B)
 //!   drift        — PCM conductance drift traces (Fig. 3C)
 //!   e2e          — runtime-backed (AOT/PJRT) hardware-aware training
+//!   serve-bench  — concurrent-serving benchmark (micro-batching queue)
 //!   presets      — list device presets
 //!
 //! Common options: `--config <file.json>` loads an RPUConfig (see
-//! `config::loader` for the schema); `--csv <path>` writes metrics.
+//! `config::loader` for the schema); `--csv <path>` writes metrics;
+//! `--threads N` pins the worker-thread count (same effect as the
+//! `AIHWSIM_THREADS` env var, which it overrides).
 
 use aihwsim::config::{loader, presets, RPUConfig};
 use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
@@ -21,6 +24,7 @@ use aihwsim::coordinator::trainer;
 use aihwsim::data::synthetic_images;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
 use aihwsim::nn::Module;
+use aihwsim::serve::{MicroBatcher, ServeOptions};
 #[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
 use aihwsim::util::argparse::Args;
@@ -42,9 +46,47 @@ fn usage() -> ! {
            response     --preset <name> --pulses N --devices N --csv path\n\
            drift        --csv path\n\
            e2e          --steps N --lr F --artifact hwa_train_step|fp_train_step\n\
-           presets"
+           serve-bench  --dims d0,d1,... --clients 1,4,8,16 --windows-us 0,100,1000 \\\n\
+                        --max-batch N --requests-per-client N --out BENCH_serving.json \\\n\
+                        --config file.json (training + inference + serving sections)\n\
+           presets\n\
+         common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)"
     );
     std::process::exit(2);
+}
+
+/// `--threads N` pins the worker-thread count for this process by setting
+/// `AIHWSIM_THREADS` before any parallel region runs (the threadpool
+/// re-reads the variable on every fan-out, but setting it up front keeps
+/// one process at one setting).
+fn apply_thread_override(args: &Args) {
+    if let Some(v) = args.get("threads") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => std::env::set_var("AIHWSIM_THREADS", n.to_string()),
+            _ => {
+                eprintln!("--threads: expected a positive integer, got '{v}'");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parse a comma-separated usize list option, exiting on malformed input.
+fn usize_list(args: &Args, key: &str, default: &[usize]) -> Vec<usize> {
+    match args.get(key) {
+        None => default.to_vec(),
+        Some(raw) => raw
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>().unwrap_or_else(|_| {
+                    eprintln!("--{key}: bad number '{s}' in '{raw}'");
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+    }
 }
 
 /// Parse a `--t-inference` comma list, exiting on malformed input.
@@ -333,6 +375,152 @@ fn cmd_e2e(args: &Args) {
     ));
 }
 
+/// One serving-grid cell: `clients` closed-loop threads × `rpc` requests
+/// each against a fresh [`MicroBatcher`]. Returns
+/// `(requests/s, p50 latency ms, p99 latency ms)`.
+fn serve_cell(
+    net: &dyn Module,
+    clients: usize,
+    window_us: u64,
+    max_batch: usize,
+    rpc: usize,
+    in_features: usize,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let opts = ServeOptions {
+        batch_window_us: window_us,
+        max_batch,
+        queue_depth: (4 * max_batch).max(64),
+    };
+    let batcher = MicroBatcher::new(net, opts).unwrap_or_else(|e| {
+        eprintln!("serve-bench: {e}");
+        std::process::exit(2);
+    });
+    let t0 = std::time::Instant::now();
+    let mut lats: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|t| {
+                let batcher = &batcher;
+                s.spawn(move || {
+                    // one deterministic session stream per client; one
+                    // split per request
+                    let mut session =
+                        Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1));
+                    let mut lat = Vec::with_capacity(rpc);
+                    for k in 0..rpc {
+                        let x: Vec<f32> = (0..in_features)
+                            .map(|j| ((((t * rpc + k) * in_features + j) as f32) * 0.013).sin())
+                            .collect();
+                        let req_rng = session.split();
+                        let t1 = std::time::Instant::now();
+                        let y = batcher.submit(x, req_rng);
+                        lat.push(t1.elapsed().as_secs_f64() * 1e3);
+                        std::hint::black_box(y);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p).round() as usize];
+    ((clients * rpc) as f64 / wall, pct(0.50), pct(0.99))
+}
+
+/// Closed-loop concurrent-serving benchmark over a converted (programmed)
+/// analog MLP: clients × batch-window grid, with a serial (`max_batch` 1)
+/// reference row per client count. Emits `BENCH_serving.json`.
+fn cmd_serve_bench(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let (cfg, cfg_json) = load_config(args);
+    let dims = usize_list(args, "dims", &[64, 128, 32]);
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        eprintln!("--dims: need at least two positive layer sizes");
+        std::process::exit(2);
+    }
+    let clients = usize_list(args, "clients", &[1, 4, 8, 16]);
+    let windows: Vec<u64> =
+        usize_list(args, "windows-us", &[0, 100, 1000]).into_iter().map(|w| w as u64).collect();
+    let max_batch = args.usize_or("max-batch", 32);
+    let rpc = args.usize_or("requests-per-client", 64);
+    let out = args.str_or("out", "BENCH_serving.json");
+
+    // inference lifecycle: build → convert → program (t = t0)
+    let mut rng = Rng::new(seed);
+    let mut model = mlp(&dims, Backend::Analog, &cfg, &mut rng);
+    let mut icfg = aihwsim::config::InferenceRPUConfig::default();
+    if let Some(json) = &cfg_json {
+        if json.get("inference").is_some() {
+            match loader::inference_options_from_json(json) {
+                Ok(o) => icfg = o.config,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    model.convert_to_inference(&icfg, &mut rng);
+    model.program();
+    info(&model.summary());
+    info(&format!(
+        "serve-bench: {} worker threads, {rpc} requests/client, max_batch {max_batch}",
+        aihwsim::util::threadpool::num_threads()
+    ));
+
+    let mut entries = Vec::new();
+    println!(
+        "{:>8} {:>12} {:>8} {:>12} {:>10} {:>10}",
+        "clients", "window_us", "mode", "req/s", "p50_ms", "p99_ms"
+    );
+    for &c in &clients {
+        // serial reference: every request is its own batch
+        let (rps, p50, p99) = serve_cell(&model, c, 0, 1, rpc, dims[0], seed);
+        println!("{c:>8} {:>12} {:>8} {rps:>12.0} {p50:>10.3} {p99:>10.3}", 0, "serial");
+        entries.push(Json::obj(vec![
+            ("clients", Json::num(c as f64)),
+            ("batch_window_us", Json::num(0.0)),
+            ("mode", Json::str("serial")),
+            ("requests_per_s", Json::num(rps)),
+            ("p50_ms", Json::num(p50)),
+            ("p99_ms", Json::num(p99)),
+        ]));
+        for &w in &windows {
+            let (rps, p50, p99) = serve_cell(&model, c, w, max_batch, rpc, dims[0], seed);
+            println!("{c:>8} {w:>12} {:>8} {rps:>12.0} {p50:>10.3} {p99:>10.3}", "micro");
+            entries.push(Json::obj(vec![
+                ("clients", Json::num(c as f64)),
+                ("batch_window_us", Json::num(w as f64)),
+                ("mode", Json::str("micro")),
+                ("requests_per_s", Json::num(rps)),
+                ("p50_ms", Json::num(p50)),
+                ("p99_ms", Json::num(p99)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("dims", Json::arr_f32(&dims.iter().map(|&d| d as f32).collect::<Vec<f32>>())),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("requests_per_client", Json::num(rpc as f64)),
+        ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
+        (
+            "cores",
+            Json::num(
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64
+            ),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write(&out, doc.to_string_pretty()).unwrap_or_else(|e| {
+        eprintln!("serve-bench: cannot write {out}: {e}");
+        std::process::exit(1);
+    });
+    info(&format!("wrote {out}"));
+}
+
 fn cmd_presets() {
     for name in presets::SINGLE_PRESET_NAMES {
         let cfg = presets::by_name(name).unwrap();
@@ -343,13 +531,43 @@ fn cmd_presets() {
 
 fn main() {
     let args = Args::from_env();
+    apply_thread_override(&args);
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("infer-drift") => cmd_infer_drift(&args),
         Some("response") => cmd_response(&args),
         Some("drift") => cmd_drift(&args),
         Some("e2e") => cmd_e2e(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("presets") => cmd_presets(),
         _ => usage(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_flag_overrides_env() {
+        // no other unit test in this binary touches AIHWSIM_THREADS, so
+        // the process-global env var is safe to probe here
+        std::env::set_var("AIHWSIM_THREADS", "2");
+        let args = Args::parse(&["x".to_string(), "--threads".to_string(), "3".to_string()]);
+        apply_thread_override(&args);
+        assert_eq!(std::env::var("AIHWSIM_THREADS").unwrap(), "3");
+        assert_eq!(aihwsim::util::threadpool::num_threads(), 3);
+        // absent flag: leaves the env var alone
+        let args = Args::parse(&["x".to_string()]);
+        apply_thread_override(&args);
+        assert_eq!(aihwsim::util::threadpool::num_threads(), 3);
+        std::env::remove_var("AIHWSIM_THREADS");
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let args = Args::parse(&["x".to_string(), "--clients".to_string(), "1, 4,8".to_string()]);
+        assert_eq!(usize_list(&args, "clients", &[7]), vec![1, 4, 8]);
+        assert_eq!(usize_list(&args, "missing", &[7]), vec![7]);
     }
 }

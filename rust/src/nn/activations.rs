@@ -2,8 +2,9 @@
 //! are computed digitally after the analog MVM results are digitized, so
 //! these are exact FP ops with cached values for the backward pass.
 
-use crate::nn::Module;
+use crate::nn::{LayerFwdCtx, Module};
 use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
 
 macro_rules! act_module {
     ($name:ident, $fwd:expr, $bwd:expr, $doc:literal) => {
@@ -48,6 +49,28 @@ macro_rules! act_module {
             fn set_train(&mut self, _train: bool) {}
             fn name(&self) -> String {
                 stringify!($name).to_string()
+            }
+
+            fn supports_shared(&self) -> bool {
+                true
+            }
+
+            /// Cache-free elementwise eval into `y` (shared read path —
+            /// digital, so the noise streams are untouched).
+            fn forward_shared(
+                &self,
+                x: &Matrix,
+                y: &mut Matrix,
+                _rngs: &mut [Rng],
+                _ctx: &mut LayerFwdCtx,
+            ) {
+                if y.rows() != x.rows() || y.cols() != x.cols() {
+                    *y = Matrix::zeros(x.rows(), x.cols());
+                }
+                let f: fn(f32) -> f32 = $fwd;
+                for (yv, &xv) in y.data_mut().iter_mut().zip(x.data().iter()) {
+                    *yv = f(xv);
+                }
             }
         }
     };
@@ -120,6 +143,26 @@ impl Module for LogSoftmax {
     fn set_train(&mut self, _train: bool) {}
     fn name(&self) -> String {
         "LogSoftmax".into()
+    }
+
+    fn supports_shared(&self) -> bool {
+        true
+    }
+
+    /// Cache-free per-row log-softmax into `y` (shared read path) — the
+    /// same max-shifted logsumexp as [`Module::forward`].
+    fn forward_shared(&self, x: &Matrix, y: &mut Matrix, _rngs: &mut [Rng], _ctx: &mut LayerFwdCtx) {
+        if y.rows() != x.rows() || y.cols() != x.cols() {
+            *y = Matrix::zeros(x.rows(), x.cols());
+        }
+        for b in 0..x.rows() {
+            let xrow = x.row(b);
+            let mx = xrow.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = xrow.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            for (yv, &xv) in y.row_mut(b).iter_mut().zip(xrow.iter()) {
+                *yv = xv - lse;
+            }
+        }
     }
 }
 

@@ -18,7 +18,7 @@
 //! modifier, and the consume-once update caches.
 
 use crate::config::{MappingParameter, RPUConfig};
-use crate::nn::Module;
+use crate::nn::{LayerFwdCtx, Module};
 use crate::tile::TileGrid;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -270,6 +270,56 @@ impl Module for AnalogConv2d {
 
     fn conductance_stats(&mut self, t: f32) -> Vec<(f64, f64)> {
         self.grid.conductance_stats(t).into_iter().collect()
+    }
+
+    // ------------------------------------------------ shared read path
+
+    fn supports_shared(&self) -> bool {
+        self.grid.supports_shared()
+    }
+
+    /// Shared eval: the same im2col lowering as [`Module::forward`], but
+    /// all scratch (patch matrix, grid output, per-patch streams) lives in
+    /// `ctx`. Each image's `P = out_size²` patch rows draw from streams
+    /// split off that image's root RNG **serially, patch-major** — so a
+    /// patch's noise depends only on its own image's root stream, never on
+    /// which other images share the batch.
+    fn forward_shared(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut LayerFwdCtx) {
+        let b = x.rows();
+        assert_eq!(x.cols(), self.in_ch * self.in_size * self.in_size, "input shape");
+        assert_eq!(b, rngs.len(), "one root RNG stream per image");
+        let p = self.out_size * self.out_size;
+        let LayerFwdCtx { grid, patches, patches_out, patch_rngs, .. } = ctx;
+        if patches.rows() != b * p || patches.cols() != self.in_ch * self.k * self.k {
+            *patches = Matrix::zeros(b * p, self.in_ch * self.k * self.k);
+        }
+        for bi in 0..b {
+            self.im2col(x.row(bi), patches, bi * p);
+        }
+        if patch_rngs.len() != b * p {
+            patch_rngs.resize_with(b * p, || Rng::new(0));
+        }
+        for (bi, root) in rngs.iter_mut().enumerate() {
+            for pi in 0..p {
+                patch_rngs[bi * p + pi] = root.split();
+            }
+        }
+        if patches_out.rows() != b * p || patches_out.cols() != self.out_ch {
+            *patches_out = Matrix::zeros(b * p, self.out_ch);
+        }
+        self.grid.forward_shared_into(patches, patches_out, patch_rngs, grid);
+        // reshape (B·P)×out_ch → B×(out_ch·P)
+        if y.rows() != b || y.cols() != self.out_ch * p {
+            *y = Matrix::zeros(b, self.out_ch * p);
+        }
+        for bi in 0..b {
+            for pi in 0..p {
+                let src = patches_out.row(bi * p + pi);
+                for (c, &v) in src.iter().enumerate() {
+                    y.row_mut(bi)[c * p + pi] = v;
+                }
+            }
+        }
     }
 }
 

@@ -8,7 +8,7 @@
 //! with `RPUConfig::mapping`, which splits both dimensions.
 
 use crate::config::{MappingParameter, RPUConfig};
-use crate::nn::Module;
+use crate::nn::{LayerFwdCtx, Module};
 use crate::tile::TileGrid;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -103,6 +103,19 @@ impl Module for TiledLinear {
 
     fn conductance_stats(&mut self, t: f32) -> Vec<(f64, f64)> {
         self.grid.conductance_stats(t).into_iter().collect()
+    }
+
+    // ------------------------------------------------ shared read path
+
+    fn supports_shared(&self) -> bool {
+        self.grid.supports_shared()
+    }
+
+    fn forward_shared(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut LayerFwdCtx) {
+        if y.rows() != x.rows() || y.cols() != self.grid.out_size() {
+            *y = Matrix::zeros(x.rows(), self.grid.out_size());
+        }
+        self.grid.forward_shared_into(x, y, rngs, &mut ctx.grid);
     }
 }
 

@@ -17,8 +17,48 @@ pub use loss::{mse_loss, nll_loss};
 pub use sequential::Sequential;
 
 use crate::config::InferenceRPUConfig;
+use crate::tile::grid::GridForwardCtx;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
+
+/// Per-request, per-layer state for the shared read path
+/// ([`Module::forward_shared`]). One tree of contexts serves one
+/// request (or one coalesced micro-batch): a [`Sequential`] uses
+/// `children` (one per layer) plus the `ping`/`pong` activation pair,
+/// a grid-backed layer uses `grid`, a conv layer additionally uses the
+/// im2col `patches` buffers and per-patch streams. All buffers are
+/// lazily sized on first use and reused afterwards, so steady-state
+/// serving does zero per-request allocations on the digital path.
+pub struct LayerFwdCtx {
+    /// Tile-grid context for layers backed by a [`crate::tile::TileGrid`].
+    pub grid: GridForwardCtx,
+    /// Conv im2col patch buffer (`B·P × in_ch·k²`).
+    pub patches: Matrix,
+    /// Conv grid output over patches (`B·P × out_ch`).
+    pub patches_out: Matrix,
+    /// Conv per-patch-row noise streams (`B·P`, derived from the roots).
+    pub patch_rngs: Vec<Rng>,
+    /// Child contexts for container modules (one per child layer).
+    pub children: Vec<LayerFwdCtx>,
+    /// Ping half of a container's reusable activation pair.
+    pub ping: Matrix,
+    /// Pong half of a container's reusable activation pair.
+    pub pong: Matrix,
+}
+
+impl Default for LayerFwdCtx {
+    fn default() -> Self {
+        LayerFwdCtx {
+            grid: GridForwardCtx::default(),
+            patches: Matrix::zeros(0, 0),
+            patches_out: Matrix::zeros(0, 0),
+            patch_rngs: Vec::new(),
+            children: Vec::new(),
+            ping: Matrix::zeros(0, 0),
+            pong: Matrix::zeros(0, 0),
+        }
+    }
+}
 
 /// A network module with explicit backward and analog-aware update.
 ///
@@ -33,7 +73,10 @@ use crate::util::rng::Rng;
 /// inference tiles in place, then `program` / `drift_to` position the
 /// whole network in device time. All four default to no-ops so purely
 /// digital modules (activations, losses) need nothing.
-pub trait Module: Send {
+/// (Modules are `Sync` because all per-request state of the shared read
+/// path lives in [`LayerFwdCtx`]; the `&mut self` methods remain the
+/// exclusive training API.)
+pub trait Module: Send + Sync {
     fn forward(&mut self, x: &Matrix) -> Matrix;
     fn backward(&mut self, grad_out: &Matrix) -> Matrix;
     fn update(&mut self, lr: f32);
@@ -73,5 +116,26 @@ pub trait Module: Send {
     /// digital modules (and before programming).
     fn conductance_stats(&mut self, _t: f32) -> Vec<(f64, f64)> {
         Vec::new()
+    }
+
+    // ------------------------------------------------ shared read path
+
+    /// Whether this module implements the shared (`&self`) read path —
+    /// true once every analog shard is a converted inference tile (or
+    /// FP), false while training tiles are present.
+    fn supports_shared(&self) -> bool {
+        false
+    }
+
+    /// Concurrent-safe eval forward: `y = module(x)` without mutating
+    /// the module. `rngs` carries one root noise stream per batch row
+    /// (row `b` only ever draws from `rngs[b]`, so its output is bitwise
+    /// independent of which other rows share the batch); `ctx` carries
+    /// every scratch buffer. Implementations must resize `y` themselves
+    /// when its shape does not match (steady state: no reallocation).
+    /// Panics unless [`Self::supports_shared`].
+    fn forward_shared(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut LayerFwdCtx) {
+        let _ = (x, y, rngs, ctx);
+        panic!("{}: this module does not implement the shared read path", self.name());
     }
 }

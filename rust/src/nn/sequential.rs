@@ -118,6 +118,51 @@ impl Module for Sequential {
     fn conductance_stats(&mut self, t: f32) -> Vec<(f64, f64)> {
         self.modules.iter_mut().flat_map(|m| m.conductance_stats(t)).collect()
     }
+
+    // ------------------------------------------------ shared read path
+
+    fn supports_shared(&self) -> bool {
+        self.modules.iter().all(|m| m.supports_shared())
+    }
+
+    /// Shared eval through the whole stack using the context's reusable
+    /// `ping`/`pong` activation pair — steady-state serving reuses the
+    /// same two buffers for every intermediate activation, so no fresh
+    /// allocation happens per request once the shapes have settled.
+    fn forward_shared(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+        rngs: &mut [crate::util::rng::Rng],
+        ctx: &mut crate::nn::LayerFwdCtx,
+    ) {
+        let n = self.modules.len();
+        if n == 0 {
+            *y = x.clone();
+            return;
+        }
+        let crate::nn::LayerFwdCtx { children, ping, pong, .. } = ctx;
+        if children.len() != n {
+            children.resize_with(n, crate::nn::LayerFwdCtx::default);
+        }
+        // invariant: before iteration i > 0, `a` holds layer i-1's output
+        let (mut a, mut b): (&mut Matrix, &mut Matrix) = (ping, pong);
+        for (i, (m, child)) in self.modules.iter().zip(children.iter_mut()).enumerate() {
+            let last = i + 1 == n;
+            if i == 0 {
+                if last {
+                    m.forward_shared(x, y, rngs, child);
+                } else {
+                    m.forward_shared(x, a, rngs, child);
+                }
+            } else if last {
+                m.forward_shared(a, y, rngs, child);
+            } else {
+                m.forward_shared(a, b, rngs, child);
+                std::mem::swap(&mut a, &mut b);
+            }
+        }
+    }
 }
 
 /// Whether networks are built with analog tiles or the FP baseline.

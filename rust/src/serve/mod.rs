@@ -1,0 +1,329 @@
+//! Concurrent inference serving: a micro-batching request queue over the
+//! shared (`&self`) read path.
+//!
+//! The paper's inference story (§5) converts a trained network to PCM
+//! inference tiles, programs them, and then only ever *reads* the analog
+//! state. After [`crate::nn::Module::forward_shared`] split that read
+//! path from the per-request scratch, one converted network can serve any
+//! number of threads at once. This module adds the serving layer on top:
+//!
+//! * [`ServeOptions`] — batch window / max batch / queue depth knobs
+//!   (JSON-loadable via `crate::config::loader::serving_options_from_json`).
+//! * [`MicroBatcher`] — a leader/follower combining queue. Concurrent
+//!   single-sample requests are coalesced into one fused batched MVM per
+//!   layer; per-request outputs are handed back to their submitters.
+//!
+//! **Determinism.** Every request carries its *own* root [`Rng`] stream,
+//! and the shared read path guarantees batch row `b` only ever draws from
+//! `rngs[b]`. A request's output is therefore bitwise identical whether
+//! it is served alone, inside a coalesced batch of 8, or through the
+//! legacy `&mut` forward — and at any `AIHWSIM_THREADS` setting.
+//!
+//! **Execution model.** There is no server thread. A waiting client
+//! becomes the *leader* when the batch is full, the oldest request's
+//! batch window has expired, or the window is zero: it drains up to
+//! `max_batch` requests, runs one shared forward under the execution
+//! lock (batches are serialized — intra-batch parallelism comes from the
+//! kernel threadpool), distributes the output rows, and wakes everyone.
+
+use crate::nn::{LayerFwdCtx, Module};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for the micro-batching request queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeOptions {
+    /// How long the leader waits for co-riders after the oldest request
+    /// arrived, in microseconds. `0` disables coalescing-by-time: a
+    /// request is dispatched as soon as a leader can run it (requests
+    /// arriving while a batch executes still coalesce).
+    pub batch_window_us: u64,
+    /// Largest number of requests fused into one batched forward.
+    pub max_batch: usize,
+    /// Backpressure bound: `submit` blocks while this many requests are
+    /// already queued.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { batch_window_us: 100, max_batch: 32, queue_depth: 1024 }
+    }
+}
+
+impl ServeOptions {
+    /// Validate the combination of knobs.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("serving.max_batch must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("serving.queue_depth must be >= 1".into());
+        }
+        if self.queue_depth < self.max_batch {
+            return Err(format!(
+                "serving.queue_depth ({}) must be >= serving.max_batch ({})",
+                self.queue_depth, self.max_batch
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-request completion mailbox.
+#[derive(Default)]
+struct Slot {
+    out: Mutex<Option<Vec<f32>>>,
+}
+
+/// One queued request: input row, its private noise stream, its mailbox.
+struct PendingReq {
+    x: Vec<f32>,
+    rng: Rng,
+    slot: Arc<Slot>,
+    enqueued: Instant,
+}
+
+/// Queue state guarded by the batcher's main mutex.
+struct QueueState {
+    pending: VecDeque<PendingReq>,
+    /// True while a leader is executing a batch.
+    busy: bool,
+}
+
+/// The reusable execution scratch (one batch at a time).
+#[derive(Default)]
+struct ExecState {
+    ctx: LayerFwdCtx,
+    xbuf: Matrix,
+    ybuf: Matrix,
+    rngs: Vec<Rng>,
+}
+
+/// Leader/follower micro-batching queue over a shared-read-path network.
+///
+/// The network is borrowed immutably for the batcher's lifetime, so the
+/// same converted [`crate::nn::Sequential`] can sit behind several
+/// batchers (or be read directly) at once.
+pub struct MicroBatcher<'a> {
+    net: &'a dyn Module,
+    opts: ServeOptions,
+    state: Mutex<QueueState>,
+    /// Notified on every queue transition: enqueue, batch completion.
+    cv: Condvar,
+    exec: Mutex<ExecState>,
+}
+
+impl<'a> MicroBatcher<'a> {
+    /// Wrap a network. Fails if the options are inconsistent or the
+    /// network still contains training tiles (no shared read path).
+    pub fn new(net: &'a dyn Module, opts: ServeOptions) -> Result<Self, String> {
+        opts.validate()?;
+        if !net.supports_shared() {
+            return Err(format!(
+                "{}: network does not support the shared read path \
+                 (convert_to_inference + program it, or use the FP backend)",
+                net.name()
+            ));
+        }
+        Ok(MicroBatcher {
+            net,
+            opts,
+            state: Mutex::new(QueueState { pending: VecDeque::new(), busy: false }),
+            cv: Condvar::new(),
+            exec: Mutex::new(ExecState::default()),
+        })
+    }
+
+    /// The options this batcher runs with.
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    /// Serve one request: blocks until the output row is ready and
+    /// returns it. `rng` is the request's private noise stream — the
+    /// caller owns seeding (e.g. one [`Rng::split`] per request off a
+    /// session stream), and the result is bitwise determined by
+    /// `(network state, x, rng)` alone, independent of batch placement.
+    pub fn submit(&self, x: Vec<f32>, rng: Rng) -> Vec<f32> {
+        let slot = Arc::new(Slot::default());
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.pending.len() >= self.opts.queue_depth {
+                st = self.cv.wait(st).unwrap();
+            }
+            st.pending.push_back(PendingReq {
+                x,
+                rng,
+                slot: slot.clone(),
+                enqueued: Instant::now(),
+            });
+            self.cv.notify_all();
+        }
+        let window = Duration::from_micros(self.opts.batch_window_us);
+        loop {
+            let st = self.state.lock().unwrap();
+            // completion check under the state lock: the leader fills
+            // mailboxes *before* clearing `busy` under this same lock,
+            // so a filled slot is always observed before we could wait
+            if let Some(y) = slot.out.lock().unwrap().take() {
+                return y;
+            }
+            let now = Instant::now();
+            let ready = !st.busy
+                && !st.pending.is_empty()
+                && (st.pending.len() >= self.opts.max_batch
+                    || self.opts.batch_window_us == 0
+                    || now.duration_since(st.pending.front().unwrap().enqueued) >= window);
+            if ready {
+                self.lead(st);
+                continue;
+            }
+            if st.busy || st.pending.is_empty() {
+                // a leader is running (or our request rides its batch):
+                // it will notify when done
+                drop(self.cv.wait(st).unwrap());
+            } else {
+                // window still open: sleep until the oldest request's
+                // deadline, or until the queue changes
+                let age = now.duration_since(st.pending.front().unwrap().enqueued);
+                let timeout = window.saturating_sub(age);
+                drop(self.cv.wait_timeout(st, timeout).unwrap().0);
+            }
+        }
+    }
+
+    /// Become the leader: drain up to `max_batch` requests, execute the
+    /// fused forward, deliver the rows, release the queue.
+    fn lead(&self, mut st: std::sync::MutexGuard<'_, QueueState>) {
+        st.busy = true;
+        let n = st.pending.len().min(self.opts.max_batch);
+        let batch: Vec<PendingReq> = st.pending.drain(..n).collect();
+        drop(st);
+
+        self.execute(batch);
+
+        let mut st = self.state.lock().unwrap();
+        st.busy = false;
+        self.cv.notify_all();
+    }
+
+    /// Run one coalesced batch through the shared read path.
+    fn execute(&self, mut batch: Vec<PendingReq>) {
+        let n = batch.len();
+        let in_features = batch[0].x.len();
+        let mut ex = self.exec.lock().unwrap();
+        let ExecState { ctx, xbuf, ybuf, rngs } = &mut *ex;
+        if xbuf.rows() != n || xbuf.cols() != in_features {
+            *xbuf = Matrix::zeros(n, in_features);
+        }
+        for (b, req) in batch.iter().enumerate() {
+            assert_eq!(req.x.len(), in_features, "all requests must share the input width");
+            xbuf.row_mut(b).copy_from_slice(&req.x);
+        }
+        rngs.clear();
+        rngs.extend(batch.iter().map(|r| r.rng.clone()));
+        self.net.forward_shared(xbuf, ybuf, rngs, ctx);
+        for (b, req) in batch.drain(..).enumerate() {
+            *req.slot.out.lock().unwrap() = Some(ybuf.row(b).to_vec());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RPUConfig;
+    use crate::nn::sequential::{mlp, Backend};
+
+    #[test]
+    fn options_validate() {
+        assert!(ServeOptions::default().validate().is_ok());
+        assert!(ServeOptions { max_batch: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeOptions { queue_depth: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeOptions { max_batch: 64, queue_depth: 32, batch_window_us: 0 }
+            .validate()
+            .is_err());
+        assert!(ServeOptions { max_batch: 8, queue_depth: 8, batch_window_us: 0 }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn rejects_training_network() {
+        let mut rng = Rng::new(1);
+        let net = mlp(&[4, 8, 3], Backend::Analog, &RPUConfig::default(), &mut rng);
+        assert!(!net.supports_shared());
+        assert!(MicroBatcher::new(&net, ServeOptions::default()).is_err());
+    }
+
+    #[test]
+    fn serves_concurrent_clients_deterministically() {
+        let mut rng = Rng::new(2);
+        let net = mlp(&[6, 10, 4], Backend::FloatingPoint, &RPUConfig::default(), &mut rng);
+        let batcher = MicroBatcher::new(
+            &net,
+            ServeOptions { batch_window_us: 200, max_batch: 8, queue_depth: 64 },
+        )
+        .unwrap();
+
+        // reference: direct shared forward, one request at a time
+        let requests: Vec<Vec<f32>> = (0..24)
+            .map(|i| (0..6).map(|j| ((i * 6 + j) as f32 * 0.11).sin()).collect())
+            .collect();
+        let mut expected = Vec::new();
+        let mut ctx = LayerFwdCtx::default();
+        let mut y = Matrix::zeros(0, 0);
+        for (i, x) in requests.iter().enumerate() {
+            let xm = Matrix::from_vec(1, 6, x.clone());
+            let mut rngs = [Rng::new(1000 + i as u64)];
+            net.forward_shared(&xm, &mut y, &mut rngs, &mut ctx);
+            expected.push(y.row(0).to_vec());
+        }
+
+        // 4 closed-loop client threads × 6 requests each, coalesced
+        let got: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let batcher = &batcher;
+                    let requests = &requests;
+                    s.spawn(move || {
+                        (0..6)
+                            .map(|k| {
+                                let i = t * 6 + k;
+                                batcher.submit(
+                                    requests[i].clone(),
+                                    Rng::new(1000 + i as u64),
+                                )
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (t, outs) in got.iter().enumerate() {
+            for (k, out) in outs.iter().enumerate() {
+                assert_eq!(out, &expected[t * 6 + k], "request {}", t * 6 + k);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_window_dispatches_immediately() {
+        let mut rng = Rng::new(3);
+        let net = mlp(&[3, 5, 2], Backend::FloatingPoint, &RPUConfig::default(), &mut rng);
+        let batcher = MicroBatcher::new(
+            &net,
+            ServeOptions { batch_window_us: 0, max_batch: 4, queue_depth: 16 },
+        )
+        .unwrap();
+        let y = batcher.submit(vec![0.1, -0.2, 0.3], Rng::new(7));
+        assert_eq!(y.len(), 2);
+        let p: f32 = y.iter().map(|v| v.exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5, "log-softmax head must normalize, got {p}");
+    }
+}

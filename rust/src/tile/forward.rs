@@ -347,11 +347,51 @@ pub fn analog_mvm_batch(
     scratch.rngs.clear();
     scratch.rngs.extend((0..batch).map(|_| rng.split()));
 
+    analog_mvm_batch_rows(w, rows, cols, x, y, io, w_noise_var, transposed, &mut scratch.rngs);
+}
+
+/// Fused batched analog MVM with **caller-supplied per-row RNG
+/// streams** — the serving-engine entry point. Row `b` consumes exactly
+/// `rngs[b]`, and the fused block kernels have a fixed per-sample
+/// summation order (see `crate::tile::kernels`), so a row's output is
+/// bitwise independent of which other rows share the batch, of chunk
+/// boundaries, and of `AIHWSIM_THREADS`. [`analog_mvm_batch`] is this
+/// kernel with the per-row streams split off one parent RNG.
+///
+/// The perfect path never touches `rngs` (matching
+/// [`analog_mvm_batch`], whose perfect path returns before splitting).
+#[allow(clippy::too_many_arguments)]
+pub fn analog_mvm_batch_rows(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Matrix,
+    y: &mut Matrix,
+    io: &IOParameters,
+    w_noise_var: Option<&[f32]>,
+    transposed: bool,
+    rngs: &mut [Rng],
+) {
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.cols(), in_size);
+    assert_eq!(y.cols(), out_size);
+    assert_eq!(x.rows(), y.rows());
+    if x.rows() == 0 || in_size == 0 || out_size == 0 {
+        return;
+    }
+
+    if io.is_perfect {
+        mvm_plain_batch(w, rows, cols, x, y, transposed);
+        return;
+    }
+
+    assert_eq!(x.rows(), rngs.len());
     let mut tasks: Vec<RowTask> = x
         .data()
         .chunks(in_size)
         .zip(y.data_mut().chunks_mut(out_size))
-        .zip(scratch.rngs.iter_mut())
+        .zip(rngs.iter_mut())
         .map(|((x, y), rng)| RowTask { x, y, rng })
         .collect();
 

@@ -7,8 +7,9 @@
 //! substrate allows (see `crate::tile::kernels`).
 
 use crate::tile::forward::mvm_plain_batch;
-use crate::tile::Tile;
+use crate::tile::{ForwardCtx, Tile};
 use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
 
 /// Exact digital tile.
 pub struct FloatingPointTile {
@@ -64,6 +65,27 @@ impl Tile for FloatingPointTile {
     /// Exact batched GEMM `G = D·W`.
     fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
         mvm_plain_batch(self.w.data(), self.w.rows(), self.w.cols(), d, g, true);
+    }
+
+    // ------------------------------------------------ shared read path
+    // The FP forward is a pure GEMM — no noise, no mutable state — so
+    // the shared path is the exact same kernel and never touches `ctx`.
+
+    fn supports_shared(&self) -> bool {
+        true
+    }
+
+    fn forward_shared(&self, x: &[f32], y: &mut [f32], _ctx: &mut ForwardCtx) {
+        self.w.matvec_into(x, y);
+    }
+
+    fn forward_batch_shared(&self, x: &Matrix, y: &mut Matrix, _ctx: &mut ForwardCtx) {
+        mvm_plain_batch(self.w.data(), self.w.rows(), self.w.cols(), x, y, false);
+    }
+
+    fn forward_batch_rows(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], _ctx: &mut ForwardCtx) {
+        assert_eq!(x.rows(), rngs.len());
+        mvm_plain_batch(self.w.data(), self.w.rows(), self.w.cols(), x, y, false);
     }
 }
 

@@ -42,7 +42,7 @@
 
 use crate::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
 use crate::tile::pulsed_ops::UpdateStats;
-use crate::tile::{AnalogTile, FloatingPointTile, InferenceTile, ProgrammingState, Tile};
+use crate::tile::{AnalogTile, FloatingPointTile, ForwardCtx, InferenceTile, ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_for_each_mut;
@@ -97,6 +97,54 @@ impl GridScratch {
             .flat_map(|_| cols.iter().map(|&(_, clen)| Matrix::zeros(batch, clen)))
             .collect();
     }
+}
+
+/// Per-request state for [`TileGrid::forward_shared_into`]: partial
+/// buffers, one [`ForwardCtx`] per shard, and the per-shard × per-row
+/// RNG streams. One context serves one request (or one coalesced
+/// micro-batch) against **one** grid — contexts are not meant to be
+/// moved between grids of different layouts.
+#[derive(Default)]
+pub struct GridForwardCtx {
+    batch: usize,
+    /// Per grid column: `B × col_len` input slices.
+    x_blocks: Vec<Matrix>,
+    /// Per tile (row-major): `B × row_len` forward partials.
+    parts: Vec<Matrix>,
+    /// Per tile: scratch for the shared kernels.
+    tile_ctxs: Vec<ForwardCtx>,
+    /// Per tile × per batch row: the derived noise streams.
+    row_rngs: Vec<Vec<Rng>>,
+}
+
+impl GridForwardCtx {
+    fn ensure(&mut self, batch: usize, rows: &[(usize, usize)], cols: &[(usize, usize)]) {
+        let n_tiles = rows.len() * cols.len();
+        if self.tile_ctxs.len() != n_tiles {
+            self.tile_ctxs = (0..n_tiles).map(|_| ForwardCtx::new(Rng::new(0))).collect();
+        }
+        if self.row_rngs.len() != n_tiles || self.batch != batch {
+            self.row_rngs =
+                (0..n_tiles).map(|_| (0..batch).map(|_| Rng::new(0)).collect()).collect();
+        }
+        if self.batch != batch || self.parts.len() != n_tiles {
+            self.x_blocks = cols.iter().map(|&(_, len)| Matrix::zeros(batch, len)).collect();
+            self.parts = rows
+                .iter()
+                .flat_map(|&(_, rlen)| cols.iter().map(move |_| Matrix::zeros(batch, rlen)))
+                .collect();
+        }
+        self.batch = batch;
+    }
+}
+
+/// One shard's work item for the shared forward fan-out: the immutable
+/// tile plus this request's mutable partial / scratch / streams.
+struct SharedFwdTask<'a> {
+    tile: &'a dyn Tile,
+    part: &'a mut Matrix,
+    ctx: &'a mut ForwardCtx,
+    rngs: &'a mut [Rng],
 }
 
 /// An R×C grid of tile shards acting as one logical `out×in` layer engine.
@@ -324,6 +372,99 @@ impl TileGrid {
             for (r, &(rstart, _)) in self.row_splits.iter().enumerate() {
                 for c in 0..nc {
                     let part = &scratch.fwd_parts[r * nc + c];
+                    if c == 0 {
+                        y.scatter_col_block(rstart, part);
+                    } else {
+                        y.add_col_block(rstart, part);
+                    }
+                }
+            }
+        }
+
+        if let Some(bias) = &self.bias {
+            y.add_row_bias(bias);
+        }
+    }
+
+    // ------------------------------------------------- shared read path
+
+    /// Whether every shard implements the shared (`&self`) read path —
+    /// true for converted ([`InferenceTile`]) and FP grids, false while
+    /// training [`AnalogTile`]s are present.
+    pub fn supports_shared(&self) -> bool {
+        self.tiles.iter().all(|t| t.supports_shared())
+    }
+
+    /// Concurrent-safe forward `y = x·Wᵀ + b`: the grid is only read, so
+    /// any number of callers can run this at once, each with its own
+    /// per-row root RNG streams (`rngs`, one per batch row) and
+    /// [`GridForwardCtx`].
+    ///
+    /// **Deterministic stream contract.** Before any shard runs, each
+    /// shard's per-row stream is derived **serially, in row-major shard
+    /// order**: shard `s` row `b` gets the `s`-th [`Rng::split`] of
+    /// `rngs[b]` (so one grid forward advances each root stream by
+    /// exactly [`Self::num_tiles`] splits). Row `b` of every shard then
+    /// consumes exactly its own derived stream
+    /// ([`Tile::forward_batch_rows`]), making row outputs bitwise
+    /// independent of which other rows share the batch, of shard
+    /// scheduling, and of `AIHWSIM_THREADS`.
+    ///
+    /// This is an eval-mode read: train-mode weight modifiers are not
+    /// applied and nothing is cached (training still goes through the
+    /// `&mut` [`Self::forward`]).
+    pub fn forward_shared_into(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+        rngs: &mut [Rng],
+        ctx: &mut GridForwardCtx,
+    ) {
+        assert_eq!(x.cols(), self.in_size, "input features");
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        assert_eq!(x.rows(), rngs.len(), "one root RNG stream per batch row");
+        let (nr, nc) = (self.row_splits.len(), self.col_splits.len());
+        ctx.ensure(x.rows(), &self.row_splits, &self.col_splits);
+        let GridForwardCtx { x_blocks, parts, tile_ctxs, row_rngs, .. } = ctx;
+
+        // serial pre-split: shard-major over the row-major shard order
+        for shard_rngs in row_rngs.iter_mut() {
+            for (root, slot) in rngs.iter_mut().zip(shard_rngs.iter_mut()) {
+                *slot = root.split();
+            }
+        }
+
+        if nr == 1 && nc == 1 {
+            self.tiles[0].forward_batch_rows(x, y, &mut row_rngs[0], &mut tile_ctxs[0]);
+        } else {
+            if nc > 1 {
+                for (c, &(start, _)) in self.col_splits.iter().enumerate() {
+                    x.copy_col_block(start, &mut x_blocks[c]);
+                }
+            }
+            let x_blocks = &*x_blocks;
+            let mut tasks: Vec<SharedFwdTask> = self
+                .tiles
+                .iter()
+                .zip(parts.iter_mut())
+                .zip(tile_ctxs.iter_mut())
+                .zip(row_rngs.iter_mut())
+                .map(|(((tile, part), tctx), shard_rngs)| SharedFwdTask {
+                    tile: tile.as_ref(),
+                    part,
+                    ctx: tctx,
+                    rngs: shard_rngs.as_mut_slice(),
+                })
+                .collect();
+            par_for_each_mut(&mut tasks, |t, task| {
+                let xin = if nc == 1 { x } else { &x_blocks[t % nc] };
+                task.tile.forward_batch_rows(xin, task.part, task.rngs, task.ctx);
+            });
+            // digital partial-sum reduction, same ordering as forward_into
+            for (r, &(rstart, _)) in self.row_splits.iter().enumerate() {
+                for c in 0..nc {
+                    let part = &parts[r * nc + c];
                     if c == 0 {
                         y.scatter_col_block(rstart, part);
                     } else {

@@ -25,9 +25,10 @@
 use crate::config::InferenceRPUConfig;
 use crate::noise::pcm::ProgrammedWeights;
 use crate::tile::forward::{
-    analog_mvm, analog_mvm_batch, mvm_plain_batch, MvmBatchScratch, MvmScratch,
+    analog_mvm, analog_mvm_batch, analog_mvm_batch_rows, mvm_plain_batch, MvmBatchScratch,
+    MvmScratch,
 };
-use crate::tile::{ProgrammingState, Tile};
+use crate::tile::{ForwardCtx, ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -101,6 +102,34 @@ impl InferenceTile {
     pub fn gdc_factor(&self) -> f32 {
         self.gdc_factor
     }
+
+    /// `(weights, per-element read-noise variance)` the read path sees:
+    /// the cached drifted state once programmed, the ideal target
+    /// weights before (see the module docs on un-programmed reads).
+    fn read_view(&self) -> (&[f32], Option<&[f32]>) {
+        if self.programmed.is_some() {
+            (&self.drifted, Some(&self.read_var))
+        } else {
+            (&self.target, None)
+        }
+    }
+
+    /// Lend the tile's own RNG and scratch buffers to a [`ForwardCtx`]
+    /// for the duration of `f` — this is how the legacy `&mut` forward
+    /// delegates to the shared read path without cloning state, so the
+    /// two paths are one implementation (and bitwise-equal by
+    /// construction).
+    fn with_own_ctx(&mut self, f: impl FnOnce(&Self, &mut ForwardCtx)) {
+        let mut ctx = ForwardCtx {
+            rng: std::mem::replace(&mut self.rng, Rng::new(0)),
+            scratch: std::mem::take(&mut self.scratch),
+            batch_scratch: std::mem::take(&mut self.batch_scratch),
+        };
+        f(self, &mut ctx);
+        self.rng = ctx.rng;
+        self.scratch = ctx.scratch;
+        self.batch_scratch = ctx.batch_scratch;
+    }
 }
 
 impl Tile for InferenceTile {
@@ -112,31 +141,9 @@ impl Tile for InferenceTile {
     }
 
     fn forward(&mut self, x: &[f32], y: &mut [f32]) {
-        // programmed: drifted weights + cached PCM read-noise variances;
-        // un-programmed: ideal programming of the target weights
-        let (w, var): (&[f32], Option<&[f32]>) = if self.programmed.is_some() {
-            (&self.drifted, Some(&self.read_var))
-        } else {
-            (&self.target, None)
-        };
-        analog_mvm(
-            w,
-            self.out_size,
-            self.in_size,
-            x,
-            y,
-            &self.config.forward,
-            var,
-            false,
-            &mut self.rng,
-            &mut self.scratch,
-        );
-        let s = self.out_scale * self.gdc_factor;
-        if s != 1.0 {
-            for v in y.iter_mut() {
-                *v *= s;
-            }
-        }
+        // thin wrapper over the shared read path: the tile's own RNG and
+        // scratch are lent to a ForwardCtx for the call
+        self.with_own_ctx(|tile, ctx| tile.forward_shared(x, y, ctx));
     }
 
     fn backward(&mut self, d: &[f32], g: &mut [f32]) {
@@ -167,31 +174,9 @@ impl Tile for InferenceTile {
     /// ride through the same [`analog_mvm_batch`] call as the weights
     /// (one pass per block). Un-programmed tiles read the target weights
     /// with ideal programming (no PCM variance) — see the module docs.
+    /// Thin wrapper over [`Tile::forward_batch_shared`].
     fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {
-        assert_eq!(x.cols(), self.in_size);
-        assert_eq!(y.cols(), self.out_size);
-        assert_eq!(x.rows(), y.rows());
-        let (w, var): (&[f32], Option<&[f32]>) = if self.programmed.is_some() {
-            (&self.drifted, Some(&self.read_var))
-        } else {
-            (&self.target, None)
-        };
-        analog_mvm_batch(
-            w,
-            self.out_size,
-            self.in_size,
-            x,
-            y,
-            &self.config.forward,
-            var,
-            false,
-            &mut self.rng,
-            &mut self.batch_scratch,
-        );
-        let s = self.out_scale * self.gdc_factor;
-        if s != 1.0 {
-            y.scale(s);
-        }
+        self.with_own_ctx(|tile, ctx| tile.forward_batch_shared(x, y, ctx));
     }
 
     /// Exact transposed GEMM (inference chips have no analog backward).
@@ -252,6 +237,91 @@ impl Tile for InferenceTile {
         self.programmed
             .as_ref()
             .map(|p| p.mean_conductance_at(t.max(self.config.noise_model.t0)))
+    }
+
+    // ------------------------------------------------ shared read path
+
+    /// The programmed/drifted state is immutable at inference time, so
+    /// the tile is shareable across threads once each caller brings its
+    /// own [`ForwardCtx`].
+    fn supports_shared(&self) -> bool {
+        true
+    }
+
+    /// Scalar shared forward — the single implementation both the
+    /// legacy `&mut` [`Tile::forward`] and concurrent callers route
+    /// through.
+    fn forward_shared(&self, x: &[f32], y: &mut [f32], ctx: &mut ForwardCtx) {
+        let (w, var) = self.read_view();
+        analog_mvm(
+            w,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            var,
+            false,
+            &mut ctx.rng,
+            &mut ctx.scratch,
+        );
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            for v in y.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Batched shared forward over one RNG stream (per-row streams are
+    /// split off `ctx.rng` inside the kernel, exactly like the legacy
+    /// batched path splits off the tile RNG).
+    fn forward_batch_shared(&self, x: &Matrix, y: &mut Matrix, ctx: &mut ForwardCtx) {
+        assert_eq!(x.cols(), self.in_size);
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        let (w, var) = self.read_view();
+        analog_mvm_batch(
+            w,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            var,
+            false,
+            &mut ctx.rng,
+            &mut ctx.batch_scratch,
+        );
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            y.scale(s);
+        }
+    }
+
+    /// Serving entry point: row `b` draws noise from exactly `rngs[b]`,
+    /// so its output is bitwise independent of batch composition and
+    /// thread count (see [`analog_mvm_batch_rows`]).
+    fn forward_batch_rows(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], _ctx: &mut ForwardCtx) {
+        assert_eq!(x.cols(), self.in_size);
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        let (w, var) = self.read_view();
+        analog_mvm_batch_rows(
+            w,
+            self.out_size,
+            self.in_size,
+            x,
+            y,
+            &self.config.forward,
+            var,
+            false,
+            rngs,
+        );
+        let s = self.out_scale * self.gdc_factor;
+        if s != 1.0 {
+            y.scale(s);
+        }
     }
 }
 

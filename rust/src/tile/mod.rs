@@ -15,8 +15,40 @@ pub use fp::FloatingPointTile;
 pub use grid::TileGrid;
 pub use inference::InferenceTile;
 
+use crate::tile::forward::{MvmBatchScratch, MvmScratch};
 use crate::tile::pulsed_ops::UpdateStats;
 use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Per-request state for the shared (`&self`) read path: the noise
+/// stream plus every scratch buffer the MVM pipeline mutates. A
+/// converted tile's programmed/drifted weights are immutable at
+/// inference time, so moving the RNG and scratch out of the tile makes
+/// [`Tile::forward_shared`] safe to call from many threads at once —
+/// each caller brings its own `ForwardCtx`.
+///
+/// The RNG is public on purpose: the serving engine seeds it per
+/// request ([`Rng::split`] off the request's root stream) so results
+/// are independent of batch composition and thread count.
+pub struct ForwardCtx {
+    /// Noise stream consumed by this request's MVMs.
+    pub rng: Rng,
+    /// Scalar-pipeline scratch (quantized input, variance, noise draws).
+    pub scratch: MvmScratch,
+    /// Batched-pipeline scratch (per-row split RNG streams).
+    pub batch_scratch: MvmBatchScratch,
+}
+
+impl ForwardCtx {
+    /// A fresh context drawing noise from `rng`.
+    pub fn new(rng: Rng) -> Self {
+        ForwardCtx {
+            rng,
+            scratch: MvmScratch::default(),
+            batch_scratch: MvmBatchScratch::default(),
+        }
+    }
+}
 
 /// Where a tile stands in the inference lifecycle (paper §5).
 ///
@@ -45,7 +77,11 @@ pub enum ProgrammingState {
 
 /// Common interface of all tiles. Shapes follow the convention
 /// `y[out] = W[out × in] · x[in]`.
-pub trait Tile: Send {
+///
+/// Tiles are `Sync` because all mutable per-request state of the read
+/// path lives in [`ForwardCtx`]; the `&mut self` methods remain the
+/// exclusive-access training/lifecycle API.
+pub trait Tile: Send + Sync {
     fn in_size(&self) -> usize;
     fn out_size(&self) -> usize;
 
@@ -130,6 +166,54 @@ pub trait Tile: Send {
         assert_eq!(d.rows(), g.rows());
         for b in 0..d.rows() {
             self.backward(d.row(b), g.row_mut(b));
+        }
+    }
+
+    // ------------------------------------------------ shared read path
+
+    /// Whether this tile implements the shared (`&self`) read path.
+    /// Tiles that return `false` (e.g. training [`AnalogTile`]s, whose
+    /// forward mutates diffusion/decay state) can only be served through
+    /// the exclusive `&mut` API.
+    fn supports_shared(&self) -> bool {
+        false
+    }
+
+    /// `y = W·x` without mutating the tile: noise and scratch come from
+    /// `ctx`. Must produce exactly the same pipeline as [`Self::forward`]
+    /// given the same RNG state. Panics unless [`Self::supports_shared`].
+    fn forward_shared(&self, x: &[f32], y: &mut [f32], ctx: &mut ForwardCtx) {
+        let _ = (x, y, ctx);
+        panic!("this tile does not implement the shared read path (supports_shared() == false)");
+    }
+
+    /// Batched shared forward: `x` is B×in, `y` B×out; the whole batch
+    /// draws noise from `ctx.rng` exactly like [`Self::forward_batch`]
+    /// does from the tile's own stream.
+    fn forward_batch_shared(&self, x: &Matrix, y: &mut Matrix, ctx: &mut ForwardCtx) {
+        assert_eq!(x.cols(), self.in_size());
+        assert_eq!(y.cols(), self.out_size());
+        assert_eq!(x.rows(), y.rows());
+        for b in 0..x.rows() {
+            self.forward_shared(x.row(b), y.row_mut(b), ctx);
+        }
+    }
+
+    /// Batched shared forward with one RNG stream **per row** — the
+    /// serving entry point. Row `b` consumes exactly `rngs[b]`, so its
+    /// output is bitwise independent of which other rows share the batch
+    /// (see `tile::kernels`' determinism contract). The default runs the
+    /// scalar shared pipeline per row; [`InferenceTile`] overrides it
+    /// with the fused batched kernel.
+    fn forward_batch_rows(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut ForwardCtx) {
+        assert_eq!(x.cols(), self.in_size());
+        assert_eq!(y.cols(), self.out_size());
+        assert_eq!(x.rows(), y.rows());
+        assert_eq!(x.rows(), rngs.len());
+        for (b, rng) in rngs.iter_mut().enumerate() {
+            std::mem::swap(rng, &mut ctx.rng);
+            self.forward_shared(x.row(b), y.row_mut(b), ctx);
+            std::mem::swap(rng, &mut ctx.rng);
         }
     }
 }

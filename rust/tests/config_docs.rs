@@ -4,7 +4,9 @@
 //! doc use plain fences precisely so this test only sees complete
 //! configs.
 
-use aihwsim::config::loader::{inference_options_from_json, rpu_config_from_json};
+use aihwsim::config::loader::{
+    inference_options_from_json, rpu_config_from_json, serving_options_from_json,
+};
 use aihwsim::util::json::Json;
 
 /// Extract the contents of every ```json fenced block.
@@ -45,6 +47,7 @@ fn every_config_md_snippet_loads() {
         blocks.len()
     );
     let mut inference_snippets = 0;
+    let mut serving_snippets = 0;
     for (line, block) in &blocks {
         let json = Json::parse(block)
             .unwrap_or_else(|e| panic!("CONFIG.md snippet at line {line} is not valid JSON: {e}"));
@@ -59,6 +62,14 @@ fn every_config_md_snippet_loads() {
                 panic!("CONFIG.md inference snippet at line {line} rejected: {e}")
             });
         }
+        // snippets carrying a top-level "serving" key document the
+        // micro-batching queue options and load through the serving loader
+        if json.get("serving").is_some() {
+            serving_snippets += 1;
+            serving_options_from_json(&json).unwrap_or_else(|e| {
+                panic!("CONFIG.md serving snippet at line {line} rejected: {e}")
+            });
+        }
         rpu_config_from_json(&json).unwrap_or_else(|e| {
             panic!("CONFIG.md snippet at line {line} rejected by config::loader: {e}")
         });
@@ -66,6 +77,10 @@ fn every_config_md_snippet_loads() {
     assert!(
         inference_snippets >= 1,
         "the inference-options section must carry at least one loadable snippet"
+    );
+    assert!(
+        serving_snippets >= 1,
+        "the serving-options section must carry at least one loadable snippet"
     );
     // the smallest snippet documents that {} is a valid config — make
     // sure it is actually present

@@ -1,0 +1,324 @@
+//! Serving-path equivalence and invariance suite.
+//!
+//! Pins the contracts the serving engine is built on:
+//!
+//! * **Legacy == shared.** The `&mut` forward delegates to the shared
+//!   read path, so on any deterministic read (FP backend, or converted
+//!   tiles with a perfect IO forward) the two are bitwise identical.
+//! * **Batch invariance.** A request's output is a function of
+//!   `(network state, x, its root RNG)` alone: bitwise identical served
+//!   alone, inside a coalesced batch of 8, or through the
+//!   [`MicroBatcher`] — including multi-shard grids and conv layers.
+//! * **Thread invariance.** `AIHWSIM_THREADS` never changes results.
+
+use aihwsim::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
+use aihwsim::nn::sequential::{lenet, mlp, Backend, Sequential};
+use aihwsim::nn::{LayerFwdCtx, Module};
+use aihwsim::serve::{MicroBatcher, ServeOptions};
+use aihwsim::tile::{ForwardCtx, InferenceTile, Tile};
+use aihwsim::util::matrix::Matrix;
+use aihwsim::util::rng::Rng;
+
+// ----------------------------------------------------------- helpers
+
+/// Serializes the tests that mutate the process-global AIHWSIM_THREADS
+/// env var (same idiom as `batch_equivalence.rs`).
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn with_threads<R>(threads: &str, f: impl FnOnce() -> R) -> R {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let saved = std::env::var("AIHWSIM_THREADS").ok();
+    std::env::set_var("AIHWSIM_THREADS", threads);
+    let out = f();
+    match saved {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+    out
+}
+
+fn test_inputs(batch: usize, inp: usize) -> Matrix {
+    let mut x = Matrix::zeros(batch, inp);
+    for b in 0..batch {
+        for j in 0..inp {
+            x.set(b, j, ((b * inp + j) as f32 * 0.3).cos());
+        }
+    }
+    x
+}
+
+/// Analog MLP taken through the full inference lifecycle
+/// (convert → program → drift), in eval mode. `perfect` selects a
+/// noise-free IO forward (deterministic reads — the legacy-equality
+/// legs); otherwise the default PCM read noise is live.
+fn converted_mlp(
+    dims: &[usize],
+    perfect: bool,
+    seed: u64,
+    mapping: Option<(usize, usize)>,
+) -> Sequential {
+    let mut rng = Rng::new(seed);
+    let mut cfg = RPUConfig::default();
+    if let Some((mi, mo)) = mapping {
+        cfg.mapping = MappingParameter { max_input_size: mi, max_output_size: mo };
+    }
+    let mut model = mlp(dims, Backend::Analog, &cfg, &mut rng);
+    let mut icfg = InferenceRPUConfig::default();
+    if perfect {
+        icfg.forward.is_perfect = true;
+    }
+    model.convert_to_inference(&icfg, &mut rng);
+    model.program();
+    model.drift_to(3600.0);
+    model.set_train(false);
+    model
+}
+
+/// One shared forward with fresh root streams seeded from `seeds`.
+fn shared_forward(model: &Sequential, x: &Matrix, seeds: &[u64]) -> Matrix {
+    assert_eq!(x.rows(), seeds.len());
+    let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+    let mut ctx = LayerFwdCtx::default();
+    let mut y = Matrix::zeros(0, 0);
+    model.forward_shared(x, &mut y, &mut rngs, &mut ctx);
+    y
+}
+
+// ------------------------------------------------- legacy == shared
+
+#[test]
+fn fp_mlp_legacy_equals_shared_bitwise() {
+    let mut rng = Rng::new(1);
+    let mut cfg = RPUConfig::default();
+    // grid-mapped FP shards: the reduction order must match too
+    cfg.mapping = MappingParameter { max_input_size: 7, max_output_size: 5 };
+    let mut model = mlp(&[12, 9, 4], Backend::FloatingPoint, &cfg, &mut rng);
+    model.set_train(false);
+    assert!(model.supports_shared());
+    let x = test_inputs(3, 12);
+    let y_legacy = model.forward(&x);
+    let y_shared = shared_forward(&model, &x, &[1, 2, 3]);
+    assert_eq!(y_legacy.data(), y_shared.data());
+}
+
+#[test]
+fn fp_lenet_legacy_equals_shared_bitwise() {
+    let mut rng = Rng::new(2);
+    let cfg = RPUConfig::default();
+    let mut model = lenet(1, 8, 4, Backend::FloatingPoint, &cfg, &mut rng);
+    model.set_train(false);
+    assert!(model.supports_shared());
+    let x = test_inputs(2, 64);
+    let y_legacy = model.forward(&x);
+    let y_shared = shared_forward(&model, &x, &[7, 8]);
+    assert_eq!(y_legacy.data(), y_shared.data());
+}
+
+#[test]
+fn perfect_converted_mlp_legacy_equals_shared_bitwise() {
+    // converted + programmed + drifted tiles, but a noise-free IO
+    // forward: both paths read the same drifted weights with no RNG
+    // draws, so legacy &mut and shared must agree bit for bit —
+    // including across a multi-shard grid's digital reduction
+    let mut model = converted_mlp(&[10, 8, 3], true, 3, Some((4, 4)));
+    assert!(model.supports_shared());
+    let x = test_inputs(4, 10);
+    let y_legacy = model.forward(&x);
+    let y_shared = shared_forward(&model, &x, &[10, 11, 12, 13]);
+    assert_eq!(y_legacy.data(), y_shared.data());
+}
+
+#[test]
+fn training_network_does_not_support_shared() {
+    let mut rng = Rng::new(4);
+    let model = mlp(&[6, 5, 2], Backend::Analog, &RPUConfig::default(), &mut rng);
+    assert!(!model.supports_shared());
+}
+
+// ----------------------------------------------- tile-level contract
+
+#[test]
+fn noisy_tile_single_row_equals_batch_row_bitwise() {
+    // the kernel determinism contract in one assertion: a row served
+    // through the fused batch kernel with its own stream is bit-identical
+    // to the single-sample shared forward with that same stream
+    let (out, inp) = (5, 13);
+    let mut tile = InferenceTile::new(out, inp, InferenceRPUConfig::default(), Rng::new(21));
+    let mut w = Matrix::zeros(out, inp);
+    for i in 0..out * inp {
+        w.data_mut()[i] = ((i as f32) * 0.7).sin() * 0.4;
+    }
+    tile.set_weights(&w);
+    tile.program();
+    tile.drift_to(1e4);
+
+    let x = test_inputs(3, inp);
+    let mut y_batch = Matrix::zeros(3, out);
+    let mut ctx = ForwardCtx::new(Rng::new(0));
+    let mut rngs = vec![Rng::new(100), Rng::new(200), Rng::new(300)];
+    tile.forward_batch_rows(&x, &mut y_batch, &mut rngs, &mut ctx);
+
+    for (b, seed) in [(0usize, 100u64), (1, 200), (2, 300)] {
+        let mut y = vec![0.0; out];
+        let mut ctx = ForwardCtx::new(Rng::new(seed));
+        tile.forward_shared(x.row(b), &mut y, &mut ctx);
+        assert_eq!(y_batch.row(b), &y[..], "row {b}");
+    }
+}
+
+// -------------------------------------------------- batch invariance
+
+#[test]
+fn noisy_request_is_batch_invariant() {
+    // same request + same root stream → bitwise identical output served
+    // alone or inside a batch of 8 strangers (read noise fully live)
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let x8 = test_inputs(8, 9);
+    let seeds: Vec<u64> = (900..908).collect();
+    let y8 = shared_forward(&model, &x8, &seeds);
+    for b in 0..8 {
+        let mut x1 = Matrix::zeros(1, 9);
+        x1.row_mut(0).copy_from_slice(x8.row(b));
+        let y1 = shared_forward(&model, &x1, &seeds[b..=b]);
+        assert_eq!(y8.row(b), y1.row(0), "request {b}");
+    }
+}
+
+#[test]
+fn multi_shard_noisy_batch_invariance() {
+    // grid split along both dimensions: the serial shard-major stream
+    // pre-split must keep per-row outputs independent of batch peers
+    let model = converted_mlp(&[11, 6, 3], false, 6, Some((4, 2)));
+    let x4 = test_inputs(4, 11);
+    let seeds = [41u64, 42, 43, 44];
+    let y4 = shared_forward(&model, &x4, &seeds);
+    for b in 0..4 {
+        let mut x1 = Matrix::zeros(1, 11);
+        x1.row_mut(0).copy_from_slice(x4.row(b));
+        let y1 = shared_forward(&model, &x1, &seeds[b..=b]);
+        assert_eq!(y4.row(b), y1.row(0), "request {b}");
+    }
+}
+
+#[test]
+fn noisy_conv_batch_invariance() {
+    // conv expands each image's root stream into per-patch streams —
+    // still a function of the image's own root only
+    let mut rng = Rng::new(7);
+    let mut model = lenet(1, 8, 3, Backend::Analog, &RPUConfig::default(), &mut rng);
+    model.convert_to_inference(&InferenceRPUConfig::default(), &mut rng);
+    model.program();
+    model.drift_to(3600.0);
+    model.set_train(false);
+    let x3 = test_inputs(3, 64);
+    let seeds = [71u64, 72, 73];
+    let y3 = shared_forward(&model, &x3, &seeds);
+    for b in 0..3 {
+        let mut x1 = Matrix::zeros(1, 64);
+        x1.row_mut(0).copy_from_slice(x3.row(b));
+        let y1 = shared_forward(&model, &x1, &seeds[b..=b]);
+        assert_eq!(y3.row(b), y1.row(0), "image {b}");
+    }
+}
+
+// ------------------------------------------------ serving engine
+
+#[test]
+fn engine_coalesced_batch_matches_direct_and_alone() {
+    // 8 concurrent clients forced into one coalesced batch: every
+    // request's output must equal the direct single-request shared
+    // forward with the same root stream
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let x8 = test_inputs(8, 9);
+    let batcher = MicroBatcher::new(
+        &model,
+        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64 },
+    )
+    .unwrap();
+    let served: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|b| {
+                let batcher = &batcher;
+                let x8 = &x8;
+                s.spawn(move || batcher.submit(x8.row(b).to_vec(), Rng::new(900 + b as u64)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for b in 0..8 {
+        let mut x1 = Matrix::zeros(1, 9);
+        x1.row_mut(0).copy_from_slice(x8.row(b));
+        let alone = shared_forward(&model, &x1, &[900 + b as u64]);
+        assert_eq!(served[b].as_slice(), alone.row(0), "request {b}");
+    }
+}
+
+#[test]
+fn engine_matches_legacy_forward_on_deterministic_reads() {
+    // the full satellite triangle on a perfect-IO converted network:
+    // legacy &mut forward == served alone == served in a batch of 8,
+    // all bitwise (no RNG draws on a perfect read, so streams align)
+    let mut model = converted_mlp(&[8, 6, 3], true, 9, None);
+    let x8 = test_inputs(8, 8);
+    let y_legacy = model.forward(&x8);
+    let batcher = MicroBatcher::new(
+        &model,
+        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64 },
+    )
+    .unwrap();
+    let served: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|b| {
+                let batcher = &batcher;
+                let x8 = &x8;
+                s.spawn(move || batcher.submit(x8.row(b).to_vec(), Rng::new(b as u64)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for b in 0..8 {
+        let mut x1 = Matrix::zeros(1, 8);
+        x1.row_mut(0).copy_from_slice(x8.row(b));
+        let alone = shared_forward(&model, &x1, &[b as u64]);
+        assert_eq!(served[b].as_slice(), y_legacy.row(b), "legacy vs engine, request {b}");
+        assert_eq!(served[b].as_slice(), alone.row(0), "alone vs engine, request {b}");
+    }
+}
+
+// ------------------------------------------------ thread invariance
+
+#[test]
+fn shared_outputs_bit_identical_across_thread_counts() {
+    let model = converted_mlp(&[11, 6, 3], false, 6, Some((4, 2)));
+    let x = test_inputs(8, 11);
+    let seeds: Vec<u64> = (500..508).collect();
+    let y1 = with_threads("1", || shared_forward(&model, &x, &seeds));
+    let y4 = with_threads("4", || shared_forward(&model, &x, &seeds));
+    assert_eq!(y1.data(), y4.data());
+}
+
+#[test]
+fn engine_outputs_bit_identical_across_thread_counts() {
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let x = test_inputs(4, 9);
+    let serve_all = |threads: &str| -> Vec<Vec<f32>> {
+        with_threads(threads, || {
+            let batcher = MicroBatcher::new(
+                &model,
+                ServeOptions { batch_window_us: 100_000, max_batch: 4, queue_depth: 16 },
+            )
+            .unwrap();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4)
+                    .map(|b| {
+                        let batcher = &batcher;
+                        let x = &x;
+                        s.spawn(move || batcher.submit(x.row(b).to_vec(), Rng::new(60 + b as u64)))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        })
+    };
+    assert_eq!(serve_all("1"), serve_all("4"));
+}
