@@ -31,8 +31,9 @@ use aihwsim::nn::sequential::{lenet, mlp, Backend};
 use aihwsim::nn::Module;
 #[cfg(feature = "pjrt")]
 use aihwsim::runtime::Runtime;
+use aihwsim::tile::backend::{self, Kb};
 use aihwsim::tile::forward::{
-    analog_mvm, analog_mvm_batch, mvm_plain, mvm_plain_batch, MvmBatchScratch, MvmScratch,
+    analog_mvm, analog_mvm_batch, mvm_plain, mvm_plain_batch_kb, MvmBatchScratch, MvmScratch,
 };
 use aihwsim::tile::pulsed_ops::{pulsed_update_batch, UpdateScratch};
 use aihwsim::util::json::Json;
@@ -239,6 +240,11 @@ fn bench_mvm_batched(csv: &mut CsvLogger) {
         ("bench", Json::str("analog_mvm_batch_vs_per_sample")),
         ("io", Json::str("default IOParameters (7-bit DAC, 9-bit ADC, nm+bm)")),
         ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
+        ("backend", Json::str(backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(backend::detected_features().iter().map(|f| Json::str(f)).collect()),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_mvm.json", doc.to_string_pretty()).unwrap();
@@ -247,19 +253,35 @@ fn bench_mvm_batched(csv: &mut CsvLogger) {
 
 // ------------------------------------------------------ Eq. 1 kernels
 
-/// Naive (scalar single-accumulator) vs register-tiled noise-free MVM:
-/// the micro-kernel speedup table. Sweeps 1/N threads × 256²/512²/1024²
-/// × batch 1/8/64 and emits BENCH_kernels.json with GFLOP/s columns —
-/// the acceptance gate is ≥2× single-thread on 512²×batch-64.
+/// Cross-backend noise-free MVM grid: every [`KernelBackend`] the host
+/// can run (scalar reference, register-tiled, explicit SIMD, and the
+/// FMA-contracted SIMD variant where the unit exists) × 256²/512²/1024²
+/// × batch 1/8/64 × threads {1, N}, all through the same
+/// `mvm_plain_batch_kb` entry point. Emits BENCH_kernels.json with
+/// per-backend GFLOP/s — the CI gate reads the threads=1, 512²×batch-64
+/// rows (tiled and simd each ≥2× scalar; simd ≥ 0.95× tiled where AVX2
+/// is detected, since bitwise identity pins both to the same FP
+/// dependency chain).
+///
+/// [`KernelBackend`]: aihwsim::tile::backend::KernelBackend
 fn bench_kernels(csv: &mut CsvLogger) {
     let saved_threads = std::env::var("AIHWSIM_THREADS").ok();
     std::env::remove_var("AIHWSIM_THREADS");
     let threads_all = aihwsim::util::threadpool::num_threads();
+    // explicit handles, not resolve(): the grid must measure each backend
+    // regardless of any AIHWSIM_BACKEND override in the environment
+    let mut backends: Vec<Kb> = vec![&backend::SCALAR, &backend::TILED];
+    if backend::simd::available() {
+        backends.push(&backend::SIMD);
+    }
+    if backend::simd::fma_available() {
+        backends.push(&backend::SIMD_FMA);
+    }
     let mut rng = Rng::new(17);
     let mut entries: Vec<Json> = Vec::new();
     println!(
-        "  {:>8} {:>6} {:>6} {:>11} {:>11} {:>9} {:>9} {:>8}",
-        "threads", "tile", "batch", "naive-1t µs", "tiled µs", "naive GF", "tiled GF", "speedup"
+        "  {:>9} {:>8} {:>6} {:>6} {:>11} {:>9} {:>8}",
+        "backend", "threads", "tile", "batch", "µs", "GFLOP/s", "speedup"
     );
     for &n in &[256usize, 512, 1024] {
         let w: Vec<f32> = (0..n * n).map(|_| rng.uniform_f32() - 0.5).collect();
@@ -268,66 +290,54 @@ fn bench_kernels(csv: &mut CsvLogger) {
             let flops = 2.0 * (n * n * batch) as f64;
             let reps = (1 << 26) / (n * n * batch).max(1) + 1;
             let mut y = Matrix::zeros(batch, n);
-            // naive: per sample, per row, scalar single-accumulator dot —
-            // the loop-carried-dependency baseline. It has no threading,
-            // so it is measured ONCE and reported as `naive_1t_*`; rows
-            // with threads > 1 therefore mix kernel + parallelism wins in
-            // their speedup column (by construction — the threads=1 row
-            // is the pure kernel comparison the CI gate reads).
-            let t_naive = time_median(5, || {
-                for _ in 0..reps {
-                    aihwsim::tile::kernels::reference::mvm_plain_batch_naive(
-                        &w,
-                        n,
-                        n,
-                        x.data(),
-                        y.data_mut(),
-                        batch,
-                        false,
-                    );
-                }
-            }) / reps as f64;
-            for &threads in &[Some(1usize), None] {
-                match threads {
-                    Some(t) => std::env::set_var("AIHWSIM_THREADS", t.to_string()),
-                    None => std::env::remove_var("AIHWSIM_THREADS"),
-                }
-                // tiled: the register-tiled lane-blocked production kernel
-                let t_tiled = time_median(5, || {
-                    for _ in 0..reps {
-                        mvm_plain_batch(&w, n, n, &x, &mut y, false);
+            // baseline for this (tile, batch) cell: scalar at 1 thread —
+            // backends[0] is SCALAR and Some(1) is timed first below, so
+            // the baseline exists before any speedup is computed
+            let mut t_scalar_1t = f64::NAN;
+            for &kb in &backends {
+                for &threads in &[Some(1usize), None] {
+                    match threads {
+                        Some(t) => std::env::set_var("AIHWSIM_THREADS", t.to_string()),
+                        None => std::env::remove_var("AIHWSIM_THREADS"),
                     }
-                }) / reps as f64;
-                let speedup = t_naive / t_tiled;
-                let tl = threads.map(|t| t.to_string()).unwrap_or_else(|| format!("{threads_all}"));
-                println!(
-                    "  {:>8} {:>6} {:>6} {:>11.2} {:>11.2} {:>9.2} {:>9.2} {:>7.2}x",
-                    tl,
-                    n,
-                    batch,
-                    t_naive * 1e6,
-                    t_tiled * 1e6,
-                    flops / t_naive / 1e9,
-                    flops / t_tiled / 1e9,
-                    speedup
-                );
-                csv.row_str(&[
-                    format!("kernel_{n}_b{batch}_t{tl}"),
-                    format!("{:.3}", t_naive * 1e6),
-                    format!("{:.3}", t_tiled * 1e6),
-                    format!("{:.2}", speedup),
-                ])
-                .unwrap();
-                entries.push(Json::obj(vec![
-                    ("threads", Json::num(threads.unwrap_or(threads_all) as f64)),
-                    ("tile", Json::num(n as f64)),
-                    ("batch", Json::num(batch as f64)),
-                    ("naive_1t_us", Json::num(t_naive * 1e6)),
-                    ("tiled_us", Json::num(t_tiled * 1e6)),
-                    ("gflops_naive_1t", Json::num(flops / t_naive / 1e9)),
-                    ("gflops_tiled", Json::num(flops / t_tiled / 1e9)),
-                    ("speedup_vs_naive_1t", Json::num(speedup)),
-                ]));
+                    let t = time_median(5, || {
+                        for _ in 0..reps {
+                            mvm_plain_batch_kb(kb, &w, n, n, &x, &mut y, false);
+                        }
+                    }) / reps as f64;
+                    if kb.name() == "scalar" && threads == Some(1) {
+                        t_scalar_1t = t;
+                    }
+                    let speedup = t_scalar_1t / t;
+                    let tl =
+                        threads.map(|t| t.to_string()).unwrap_or_else(|| format!("{threads_all}"));
+                    println!(
+                        "  {:>9} {:>8} {:>6} {:>6} {:>11.2} {:>9.2} {:>7.2}x",
+                        kb.name(),
+                        tl,
+                        n,
+                        batch,
+                        t * 1e6,
+                        flops / t / 1e9,
+                        speedup
+                    );
+                    csv.row_str(&[
+                        format!("kernel_{}_{n}_b{batch}_t{tl}", kb.name()),
+                        format!("{:.3}", t * 1e6),
+                        format!("{:.2}", flops / t / 1e9),
+                        format!("{:.2}", speedup),
+                    ])
+                    .unwrap();
+                    entries.push(Json::obj(vec![
+                        ("backend", Json::str(kb.name())),
+                        ("threads", Json::num(threads.unwrap_or(threads_all) as f64)),
+                        ("tile", Json::num(n as f64)),
+                        ("batch", Json::num(batch as f64)),
+                        ("us", Json::num(t * 1e6)),
+                        ("gflops", Json::num(flops / t / 1e9)),
+                        ("speedup_vs_scalar_1t", Json::num(speedup)),
+                    ]));
+                }
             }
         }
     }
@@ -336,19 +346,27 @@ fn bench_kernels(csv: &mut CsvLogger) {
         None => std::env::remove_var("AIHWSIM_THREADS"),
     }
     let doc = Json::obj(vec![
-        ("bench", Json::str("naive_vs_register_tiled_mvm_kernels")),
+        ("bench", Json::str("cross_backend_mvm_kernels")),
         (
             "method",
             Json::str(
-                "noise-free batched MVM Y=X*W^T; naive = scalar single-accumulator dot per \
-                 sample/row (tile::kernels::reference), always single-threaded; tiled = \
-                 lane-blocked 8-accumulator dots register-tiled 4 samples per weight-row \
-                 pass (production path) at the row's thread count — threads=1 rows are the \
-                 pure kernel comparison, threads>1 rows fold in batch parallelism; median \
-                 of 5 timed reps after warmup; GFLOP/s = 2*rows*cols*batch/t",
+                "noise-free batched MVM Y=X*W^T through mvm_plain_batch_kb for every \
+                 KernelBackend the host can run: scalar = single-accumulator reference; \
+                 tiled = lane-blocked 8-accumulator dots register-tiled 4 samples per \
+                 weight-row pass (LLVM autovectorized); simd = explicit std::arch AVX2/NEON \
+                 mirroring tiled's reduction tree bit for bit; simd_fma = the FMA-contracted \
+                 opt-in variant (only where detected). threads=1 rows are the pure kernel \
+                 comparison the CI gate reads; threads>1 rows fold in batch parallelism. \
+                 median of 5 timed reps after warmup; GFLOP/s = 2*rows*cols*batch/t; \
+                 speedup column is vs the scalar threads=1 row of the same (tile, batch)",
             ),
         ),
         ("threads_all", Json::num(threads_all as f64)),
+        ("backend", Json::str(backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(backend::detected_features().iter().map(|f| Json::str(f)).collect()),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_kernels.json", doc.to_string_pretty()).unwrap();
@@ -429,6 +447,11 @@ fn bench_tile_grid(csv: &mut CsvLogger) {
         ("bench", Json::str("tile_grid_inter_tile_scaling")),
         ("layer", Json::str("256x256 analog, default IOParameters")),
         ("threads_all", Json::num(threads_all as f64)),
+        ("backend", Json::str(backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(backend::detected_features().iter().map(|f| Json::str(f)).collect()),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_mapping.json", doc.to_string_pretty()).unwrap();
@@ -530,6 +553,11 @@ fn bench_update_sharded(csv: &mut CsvLogger) {
             ),
         ),
         ("threads_all", Json::num(threads_all as f64)),
+        ("backend", Json::str(backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(backend::detected_features().iter().map(|f| Json::str(f)).collect()),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_update.json", doc.to_string_pretty()).unwrap();
@@ -640,6 +668,11 @@ fn bench_drift_eval(csv: &mut CsvLogger) {
             ),
         ),
         ("threads_all", Json::num(threads_all as f64)),
+        ("backend", Json::str(backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(backend::detected_features().iter().map(|f| Json::str(f)).collect()),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_inference.json", doc.to_string_pretty()).unwrap();

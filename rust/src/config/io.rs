@@ -11,6 +11,8 @@
 //! [-1, 1], weights in [-1, 1] (device bounds usually ±0.6), outputs
 //! bounded by `out_bound`.
 
+use crate::tile::backend::ForwardBackend;
+
 /// Input scaling strategy ("noise management" in RPU terms): how the input
 /// vector is rescaled into the DAC range before conversion.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,6 +83,15 @@ pub struct IOParameters {
     pub bound_management: BoundManagement,
     /// Max number of iterative halvings for `BoundManagement::Iterative`.
     pub max_bm_factor: u32,
+    /// Which micro-kernel implementation runs this direction's MVMs
+    /// (JSON `backend`; [`ForwardBackend::Auto`] picks the best
+    /// detected — all choices except an explicit `scalar` are
+    /// bit-identical, see [`crate::tile::backend`]).
+    pub backend: ForwardBackend,
+    /// Opt into FMA contraction on the `simd` backend (JSON
+    /// `backend_fma`). Faster, but results differ from `tiled` within
+    /// rounding — off by default to preserve bitwise reproducibility.
+    pub backend_fma: bool,
 }
 
 impl Default for IOParameters {
@@ -103,6 +114,8 @@ impl Default for IOParameters {
             nm_constant: 1.0,
             bound_management: BoundManagement::Iterative,
             max_bm_factor: 5,
+            backend: ForwardBackend::Auto,
+            backend_fma: false,
         }
     }
 }

@@ -28,6 +28,7 @@
 
 use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
 use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use crate::tile::backend::ForwardBackend;
 use super::update::{PulseType, UpdateParameters};
 use super::{presets, InferenceRPUConfig, RPUConfig, WeightModifier};
 use crate::noise::pcm::PCMNoiseParams;
@@ -247,6 +248,10 @@ fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
             _ => BoundManagement::Iterative,
         };
     }
+    if let Some(v) = j.get("backend").and_then(Json::as_str) {
+        io.backend = ForwardBackend::parse(v).unwrap_or(ForwardBackend::Auto);
+    }
+    io.backend_fma = j.bool_or("backend_fma", io.backend_fma);
     Ok(io)
 }
 
@@ -583,6 +588,29 @@ mod tests {
         let cfg = rpu_config_from_json(&j).unwrap();
         assert_eq!(cfg.backward.w_noise_type, WeightNoiseType::RelativeToWeight);
         assert_eq!(cfg.backward.noise_management, NoiseManagement::Constant);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        let j = Json::parse(
+            r#"{"forward": {"backend": "simd", "backend_fma": true},
+                "backward": {"out_noise": 0.0}}"#,
+        )
+        .unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.forward.backend, ForwardBackend::Simd);
+        assert!(cfg.forward.backend_fma);
+        // backward inherits the forward backend selection
+        assert_eq!(cfg.backward.backend, ForwardBackend::Simd);
+        assert!(cfg.backward.backend_fma);
+        // absent → Auto; unknown values fall back to Auto (the loader's
+        // enum convention: silent fallback, never an error)
+        let cfg = rpu_config_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.forward.backend, ForwardBackend::Auto);
+        assert!(!cfg.forward.backend_fma);
+        let j = Json::parse(r#"{"forward": {"backend": "cuda"}}"#).unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.forward.backend, ForwardBackend::Auto);
     }
 
     #[test]

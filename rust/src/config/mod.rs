@@ -12,6 +12,7 @@ pub mod update;
 pub use device::{
     DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind, VectorUpdatePolicy,
 };
+pub use crate::tile::backend::ForwardBackend;
 pub use io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
 pub use update::{PulseType, UpdateParameters};
 

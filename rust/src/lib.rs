@@ -23,12 +23,17 @@ pub mod optim;
 // The `pjrt` modules need the vendored `xla` + `anyhow` crates. Fail with
 // an actionable message instead of a wall of unresolved imports: vendor
 // the crates, update [features] in Cargo.toml (see its comments), and
-// delete this guard.
+// delete this guard. The CPU-side integration seam already exists: a
+// PJRT/XLA executor plugs in as one more `KernelBackend` implementation
+// (`tile::backend`) — the same trait the `scalar`/`tiled`/`simd` CPU
+// paths implement — so `runtime/` only has to provide the kernel surface
+// and a `ForwardBackend` variant, not new tile plumbing.
 #[cfg(feature = "pjrt")]
 compile_error!(
     "the `pjrt` feature requires the vendored `xla` and `anyhow` crates: \
      uncomment the dependency lines in rust/Cargo.toml, change the feature to \
-     `pjrt = [\"dep:anyhow\", \"dep:xla\"]`, and remove this compile_error."
+     `pjrt = [\"dep:anyhow\", \"dep:xla\"]`, and remove this compile_error. \
+     Implement the executor as a `tile::backend::KernelBackend`."
 );
 #[cfg(feature = "pjrt")]
 pub mod runtime;

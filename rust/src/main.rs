@@ -12,9 +12,11 @@
 //! Common options: `--config <file.json>` loads an RPUConfig (see
 //! `config::loader` for the schema); `--csv <path>` writes metrics;
 //! `--threads N` pins the worker-thread count (same effect as the
-//! `AIHWSIM_THREADS` env var, which it overrides).
+//! `AIHWSIM_THREADS` env var, which it overrides); `--kernel-backend
+//! auto|scalar|tiled|simd` forces the MVM kernel backend for the whole
+//! process (same effect as `AIHWSIM_BACKEND`, which it overrides).
 
-use aihwsim::config::{loader, presets, RPUConfig};
+use aihwsim::config::{loader, presets, ForwardBackend, RPUConfig};
 use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
 use aihwsim::coordinator::evaluator::{accuracy_over_time, DriftEvalConfig};
 use aihwsim::coordinator::experiments;
@@ -50,7 +52,10 @@ fn usage() -> ! {
                         --max-batch N --requests-per-client N --out BENCH_serving.json \\\n\
                         --config file.json (training + inference + serving sections)\n\
            presets\n\
-         common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)"
+         common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)\n\
+                 --kernel-backend auto|scalar|tiled|simd (force the MVM kernel\n\
+                 backend process-wide; overrides AIHWSIM_BACKEND and any\n\
+                 per-config forward.backend setting)"
     );
     std::process::exit(2);
 }
@@ -68,6 +73,27 @@ fn apply_thread_override(args: &Args) {
                 std::process::exit(2);
             }
         }
+    }
+}
+
+/// `--kernel-backend NAME` forces the MVM kernel backend for this process
+/// by setting `AIHWSIM_BACKEND` (re-read on every `backend::resolve`, so
+/// it overrides both the Auto default and any `forward.backend` config
+/// key). `--backend NAME` is also honored when its value names a kernel
+/// backend — `train` already uses `--backend analog|fp` for the tile
+/// substrate, and the two value sets are disjoint, so there is no
+/// ambiguity.
+fn apply_backend_override(args: &Args) {
+    if let Some(v) = args.get("kernel-backend") {
+        match ForwardBackend::parse(v) {
+            Some(b) => std::env::set_var("AIHWSIM_BACKEND", b.as_str()),
+            None => {
+                eprintln!("--kernel-backend: expected auto|scalar|tiled|simd, got '{v}'");
+                std::process::exit(2);
+            }
+        }
+    } else if let Some(b) = args.get("backend").and_then(|v| ForwardBackend::parse(v)) {
+        std::env::set_var("AIHWSIM_BACKEND", b.as_str());
     }
 }
 
@@ -512,6 +538,16 @@ fn cmd_serve_bench(args: &Args) {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64
             ),
         ),
+        ("backend", Json::str(aihwsim::tile::backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(
+                aihwsim::tile::backend::detected_features()
+                    .iter()
+                    .map(|f| Json::str(f))
+                    .collect(),
+            ),
+        ),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write(&out, doc.to_string_pretty()).unwrap_or_else(|e| {
@@ -532,6 +568,7 @@ fn cmd_presets() {
 fn main() {
     let args = Args::from_env();
     apply_thread_override(&args);
+    apply_backend_override(&args);
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("infer-drift") => cmd_infer_drift(&args),
@@ -562,6 +599,27 @@ mod tests {
         apply_thread_override(&args);
         assert_eq!(aihwsim::util::threadpool::num_threads(), 3);
         std::env::remove_var("AIHWSIM_THREADS");
+    }
+
+    #[test]
+    fn kernel_backend_flag_sets_env() {
+        // no other unit test in this binary touches AIHWSIM_BACKEND, so
+        // the process-global env var is safe to probe here
+        std::env::remove_var("AIHWSIM_BACKEND");
+        let args =
+            Args::parse(&["x".to_string(), "--kernel-backend".to_string(), "tiled".to_string()]);
+        apply_backend_override(&args);
+        assert_eq!(std::env::var("AIHWSIM_BACKEND").unwrap(), "tiled");
+        assert_eq!(aihwsim::tile::backend::resolve(ForwardBackend::Auto, false).name(), "tiled");
+        // `--backend` doubles as the kernel selector when its value names
+        // a kernel backend (train's analog|fp values never parse here)
+        let args = Args::parse(&["x".to_string(), "--backend".to_string(), "scalar".to_string()]);
+        apply_backend_override(&args);
+        assert_eq!(std::env::var("AIHWSIM_BACKEND").unwrap(), "scalar");
+        let args = Args::parse(&["x".to_string(), "--backend".to_string(), "analog".to_string()]);
+        std::env::remove_var("AIHWSIM_BACKEND");
+        apply_backend_override(&args);
+        assert!(std::env::var("AIHWSIM_BACKEND").is_err());
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Pluggable micro-kernel backends — the innermost compute layer.
+//!
+//! Every hot loop in the simulator bottoms out in one of the kernels of
+//! the [`KernelBackend`] trait: lane-blocked dot products, the fused
+//! MVM+variance reductions, the rank-1 `axpy` family, the grid's digital
+//! partial-sum accumulation ([`KernelBackend::vadd`]), and the
+//! sample-blocked noise-free batch kernel
+//! ([`KernelBackend::plain_task_block`]). Three implementations ship:
+//!
+//! * [`scalar`] — plain single-accumulator loops, the semantic reference
+//!   every other backend is tested against. Never fast, always obvious.
+//! * [`tiled`] — the register-tiled kernels (8 independent accumulator
+//!   lanes over `chunks_exact(8)` blocks, 4-sample register tiling);
+//!   LLVM autovectorizes the lanes while keeping strict IEEE semantics
+//!   per lane. This is the portable fast path.
+//! * [`simd`] — explicit `std::arch` intrinsics (AVX2 on x86-64, NEON on
+//!   aarch64) with runtime feature detection, mirroring the tiled path's
+//!   reduction tree **exactly** so its outputs are bit-identical to
+//!   [`tiled`]. An opt-in FMA variant (config `forward.backend_fma`)
+//!   contracts multiply-add pairs for extra throughput at the cost of
+//!   that bitwise identity.
+//!
+//! ## Selection and dispatch
+//!
+//! Backends are chosen per tile at config time via
+//! [`ForwardBackend`] (`RPUConfig`/`InferenceRPUConfig` JSON key
+//! `forward.backend`), resolved by [`resolve`] in this order:
+//!
+//! 1. the `AIHWSIM_BACKEND` env var (set by the global `--kernel-backend`
+//!    / `--backend` CLI override) — forces one backend process-wide;
+//! 2. the config's `forward.backend` value;
+//! 3. `auto` (the default): [`simd`] where AVX2/NEON is detected at
+//!    runtime, otherwise [`tiled`].
+//!
+//! Paths with no tile config in scope (`Matrix::{matvec, tmatvec,
+//! matmul}`, the grid's partial-sum reduction) use [`global_default`],
+//! i.e. the same resolution with `auto` as the config value.
+//!
+//! **Determinism contract.** Each output element is a reduction with a
+//! *fixed summation order* that depends only on the slice length: lane
+//! `l` accumulates elements `l, l+LANES, l+2·LANES, …`, the lanes are
+//! combined pairwise as `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`
+//! ([`reduce_lanes`]), and the tail (`len % LANES`) is added last, in
+//! index order. Sample blocking never changes a sample's own reduction
+//! order — `dot_x4` is bit-identical to four `dot` calls — so results
+//! are independent of batch position, chunk boundaries, and therefore of
+//! `AIHWSIM_THREADS`. [`simd`] reproduces this order instruction for
+//! instruction (one vector accumulator per lane group, the same pairwise
+//! horizontal reduction, the same scalar tail), so switching `auto`
+//! between [`tiled`] and [`simd`] never changes results. [`scalar`]
+//! intentionally uses the single-accumulator order and therefore differs
+//! within rounding (bit-equal only on dyadic values); selecting it is an
+//! explicit config choice. The FMA variant is the one exception to
+//! bitwise identity and must be opted into per config.
+//!
+//! A future PJRT/XLA accelerator path plugs in at exactly this seam: a
+//! fourth `KernelBackend` (or a batch-level override above it) — see the
+//! `pjrt` feature notes in `rust/src/lib.rs`.
+
+pub mod scalar;
+pub mod simd;
+pub mod tiled;
+
+/// The scalar reference kernels under their historical name
+/// (`kernels::reference::…` call sites read naturally as
+/// `backend::reference::…`).
+pub use self::scalar as reference;
+
+/// Free-function re-exports of the register-tiled kernels — the
+/// historical `tile::kernels::{dot, axpy, …}` surface. Statically
+/// dispatched call sites (and the `util::matrix` re-export) keep
+/// working against the tiled implementation.
+pub use self::tiled::{
+    axpy, axpy4_acc, axpy_sq, axpy_with_var, axpy_x4, dot, dot_sq, dot_with_var, dot_x4, vadd,
+};
+
+/// SIMD-width lane count of the blocked reductions (8 × f32 = one AVX2
+/// register). Fixed — results must not depend on the host ISA.
+pub const LANES: usize = 8;
+
+/// Samples processed per weight-row pass by the register-tiled batched
+/// kernels.
+pub const SAMPLE_BLOCK: usize = 4;
+
+/// The fixed pairwise lane reduction: `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`.
+/// Part of the determinism contract — every backend's lane reduction
+/// funnels through this exact association.
+#[inline]
+pub fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// One sample's view into the noise-free batch kernel: the input row and
+/// its output row. Blocks of these are handed to
+/// [`KernelBackend::plain_task_block`].
+pub struct PlainTask<'a> {
+    /// Input row (length = MVM input size).
+    pub x: &'a [f32],
+    /// Output row (length = MVM output size), overwritten.
+    pub y: &'a mut [f32],
+}
+
+/// A `&'static` kernel-backend handle — how backends are passed through
+/// the forward/update hot paths after [`resolve`].
+pub type Kb = &'static dyn KernelBackend;
+
+/// The micro-kernel seam. All methods are *semantically* equal across
+/// implementations; [`tiled`] and [`simd`] are additionally bit-equal to
+/// each other (see the module docs for the summation-order contract).
+pub trait KernelBackend: Send + Sync {
+    /// Stable lowercase identifier (`"scalar"`, `"tiled"`, `"simd"`,
+    /// `"simd_fma"`), used in bench metadata and logs.
+    fn name(&self) -> &'static str;
+
+    /// Dot product `Σ_j a[j]·b[j]`.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// One weight row dotted against [`SAMPLE_BLOCK`] input rows; must be
+    /// bit-identical to four [`KernelBackend::dot`] calls.
+    fn dot_x4(&self, w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK];
+
+    /// Fused dot + per-element-variance reduction:
+    /// `(Σ_j w[j]·x[j], Σ_j v[j]·x[j]²)`.
+    fn dot_with_var(&self, w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32);
+
+    /// Fused dot + squared-term reduction:
+    /// `(Σ_j w[j]·x[j], Σ_j (w[j]·x[j])²)`.
+    fn dot_sq(&self, w: &[f32], x: &[f32]) -> (f32, f32);
+
+    /// Rank-1 update `y[j] += a·x[j]`.
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]);
+
+    /// Transposed register-tiled rank-1: `ys[s][j] += a[s]·x[j]` for
+    /// [`SAMPLE_BLOCK`] output rows per pass over `x`.
+    fn axpy_x4(&self, a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]);
+
+    /// Blocked 4-row rank-1 accumulation into one output row:
+    /// `y[j] += (a0·x0[j] + a1·x1[j]) + (a2·x2[j] + a3·x3[j])` (that
+    /// exact association — part of the bitwise contract).
+    fn axpy4_acc(&self, a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]);
+
+    /// Fused transposed-MVM + per-element-variance row update:
+    /// `y[j] += xr·w[j]`, `out_var[j] += v[j]·xr²`.
+    fn axpy_with_var(&self, xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]);
+
+    /// Fused transposed-MVM + squared-term row update:
+    /// `y[j] += xr·w[j]`, `out_var[j] += s2·(xr·w[j])²`.
+    fn axpy_sq(&self, xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]);
+
+    /// Element-wise accumulation `y[j] += x[j]` (the grid's digital
+    /// partial-sum reduction).
+    fn vadd(&self, y: &mut [f32], x: &[f32]);
+
+    /// Noise-free MVM over a block of samples (`y = W·x` per task, or
+    /// `y = Wᵀ·x` when `transposed`), register-tiled [`SAMPLE_BLOCK`]
+    /// samples per weight-row pass. The provided implementation composes
+    /// the backend's own `dot_x4`/`dot`/`axpy_x4`/`axpy`, so per-sample
+    /// reductions keep the backend's summation order; overriding is an
+    /// optimization, never a semantic change.
+    fn plain_task_block(
+        &self,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        block: &mut [PlainTask],
+        transposed: bool,
+    ) {
+        assert_eq!(w.len(), rows * cols);
+        let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+        for task in block.iter() {
+            assert_eq!(task.x.len(), in_size);
+            assert_eq!(task.y.len(), out_size);
+        }
+        let quads = block.len() / SAMPLE_BLOCK * SAMPLE_BLOCK;
+        if !transposed {
+            for r in 0..rows {
+                let wr = &w[r * cols..(r + 1) * cols];
+                for quad in block[..quads].chunks_exact_mut(SAMPLE_BLOCK) {
+                    let ys = self.dot_x4(wr, [quad[0].x, quad[1].x, quad[2].x, quad[3].x]);
+                    for (t, task) in quad.iter_mut().enumerate() {
+                        task.y[r] = ys[t];
+                    }
+                }
+                for task in block[quads..].iter_mut() {
+                    task.y[r] = self.dot(wr, task.x);
+                }
+            }
+        } else {
+            for task in block.iter_mut() {
+                task.y.iter_mut().for_each(|v| *v = 0.0);
+            }
+            for r in 0..rows {
+                let wr = &w[r * cols..(r + 1) * cols];
+                for quad in block[..quads].chunks_exact_mut(SAMPLE_BLOCK) {
+                    let a = [quad[0].x[r], quad[1].x[r], quad[2].x[r], quad[3].x[r]];
+                    if a == [0.0; SAMPLE_BLOCK] {
+                        continue; // zeroed inputs (bound-managed rows) cost nothing
+                    }
+                    let [t0, t1, t2, t3] = quad else { unreachable!() };
+                    self.axpy_x4(a, wr, [&mut *t0.y, &mut *t1.y, &mut *t2.y, &mut *t3.y]);
+                }
+                for task in block[quads..].iter_mut() {
+                    let xr = task.x[r];
+                    if xr != 0.0 {
+                        self.axpy(xr, wr, task.y);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Config-time backend selection (`forward.backend` in the JSON schema).
+/// `Auto` resolves at run time to the best detected implementation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ForwardBackend {
+    /// Best detected: [`simd`] where AVX2/NEON is available, else [`tiled`].
+    #[default]
+    Auto,
+    /// The single-accumulator reference kernels (different rounding!).
+    Scalar,
+    /// The register-tiled autovectorized kernels.
+    Tiled,
+    /// Explicit `std::arch` intrinsics, bit-identical to `Tiled`.
+    Simd,
+}
+
+impl ForwardBackend {
+    /// Parse the JSON/CLI spelling. Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(ForwardBackend::Auto),
+            "scalar" => Some(ForwardBackend::Scalar),
+            "tiled" => Some(ForwardBackend::Tiled),
+            "simd" => Some(ForwardBackend::Simd),
+            _ => None,
+        }
+    }
+
+    /// The canonical config spelling (inverse of [`ForwardBackend::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ForwardBackend::Auto => "auto",
+            ForwardBackend::Scalar => "scalar",
+            ForwardBackend::Tiled => "tiled",
+            ForwardBackend::Simd => "simd",
+        }
+    }
+}
+
+/// The three backend instances handed out by [`resolve`] (plus the FMA
+/// variant of [`simd`]). Unit state — a backend handle is just a vtable.
+pub static SCALAR: scalar::ScalarBackend = scalar::ScalarBackend;
+/// See [`SCALAR`].
+pub static TILED: tiled::TiledBackend = tiled::TiledBackend;
+/// See [`SCALAR`].
+pub static SIMD: simd::SimdBackend = simd::SimdBackend { fma: false };
+/// The FMA-contracted [`simd`] variant (config `forward.backend_fma`).
+pub static SIMD_FMA: simd::SimdBackend = simd::SimdBackend { fma: true };
+
+/// The process-wide override, if any: `AIHWSIM_BACKEND` names a backend
+/// (`auto|scalar|tiled|simd`). Re-read on every resolution — same
+/// convention as `AIHWSIM_THREADS` in `util::threadpool` — so the
+/// `--kernel-backend` CLI flag (which sets the variable up front) and
+/// tests can steer dispatch without plumbing. Unknown values are ignored.
+fn env_override() -> Option<ForwardBackend> {
+    match std::env::var("AIHWSIM_BACKEND") {
+        Ok(v) => ForwardBackend::parse(&v),
+        Err(_) => None,
+    }
+}
+
+/// Resolve a config selection to a backend handle. Order: the
+/// `AIHWSIM_BACKEND` process override, then `sel`, with `Auto` mapping
+/// to [`simd`] where the host supports it and [`tiled`] otherwise.
+/// `fma` opts the SIMD choice into the FMA-contracted variant (only
+/// honoured where FMA units are detected).
+pub fn resolve(sel: ForwardBackend, fma: bool) -> Kb {
+    let pick_simd = || -> Kb {
+        if fma && simd::fma_available() {
+            &SIMD_FMA
+        } else {
+            &SIMD
+        }
+    };
+    match env_override().unwrap_or(sel) {
+        ForwardBackend::Scalar => &SCALAR,
+        ForwardBackend::Tiled => &TILED,
+        ForwardBackend::Simd => pick_simd(),
+        ForwardBackend::Auto => {
+            if simd::available() {
+                pick_simd()
+            } else {
+                &TILED
+            }
+        }
+    }
+}
+
+/// The backend used by paths with no tile config in scope
+/// (`Matrix::{matvec, tmatvec, matmul}`, grid reductions, the exact
+/// dense update): [`resolve`] with the `Auto` default and no FMA.
+pub fn global_default() -> Kb {
+    resolve(ForwardBackend::Auto, false)
+}
+
+/// CPU SIMD features detected at run time, as stable lowercase names —
+/// recorded in the metadata header of every `BENCH_*.json` so bench
+/// trajectories are comparable across runners.
+pub fn detected_features() -> Vec<&'static str> {
+    #[allow(unused_mut)]
+    let mut f: Vec<&'static str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse2") {
+            f.push("sse2");
+        }
+        if std::arch::is_x86_feature_detected!("avx") {
+            f.push("avx");
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            f.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            f.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            f.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            f.push("neon");
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for b in [
+            ForwardBackend::Auto,
+            ForwardBackend::Scalar,
+            ForwardBackend::Tiled,
+            ForwardBackend::Simd,
+        ] {
+            assert_eq!(ForwardBackend::parse(b.as_str()), Some(b));
+        }
+        assert_eq!(ForwardBackend::parse("analog"), None);
+        assert_eq!(ForwardBackend::parse("fp"), None);
+        assert_eq!(ForwardBackend::parse(""), None);
+    }
+
+    #[test]
+    fn resolve_honours_selection() {
+        assert_eq!(resolve(ForwardBackend::Scalar, false).name(), "scalar");
+        assert_eq!(resolve(ForwardBackend::Tiled, false).name(), "tiled");
+        let auto = resolve(ForwardBackend::Auto, false).name();
+        assert!(auto == "simd" || auto == "tiled", "auto resolved to {auto}");
+        if simd::available() {
+            assert_eq!(auto, "simd");
+            let s = resolve(ForwardBackend::Simd, true).name();
+            assert!(s == "simd_fma" || s == "simd");
+            assert_eq!(resolve(ForwardBackend::Simd, false).name(), "simd");
+        }
+    }
+
+    #[test]
+    fn default_plain_task_block_matches_per_sample_kernels() {
+        // the provided trait body must equal row-by-row dot/axpy calls of
+        // the same backend, bit for bit (here: on the scalar backend,
+        // whose dot_x4 is literally four dots)
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let (rows, cols, batch) = (5, 11, 7); // batch % 4 != 0 on purpose
+        let mut w = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        for &transposed in &[false, true] {
+            let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+            let xs: Vec<Vec<f32>> = (0..batch)
+                .map(|_| {
+                    let mut v = vec![0.0f32; in_size];
+                    rng.fill_uniform(&mut v, -1.0, 1.0);
+                    v
+                })
+                .collect();
+            let mut ys = vec![vec![0.0f32; out_size]; batch];
+            let mut tasks: Vec<PlainTask> = xs
+                .iter()
+                .zip(ys.iter_mut())
+                .map(|(x, y)| PlainTask { x, y })
+                .collect();
+            SCALAR.plain_task_block(&w, rows, cols, &mut tasks, transposed);
+            for b in 0..batch {
+                let mut expect = vec![0.0f32; out_size];
+                if !transposed {
+                    for r in 0..rows {
+                        expect[r] = SCALAR.dot(&w[r * cols..(r + 1) * cols], &xs[b]);
+                    }
+                } else {
+                    for r in 0..rows {
+                        SCALAR.axpy(xs[b][r], &w[r * cols..(r + 1) * cols], &mut expect);
+                    }
+                }
+                assert_eq!(ys[b], expect, "transposed={transposed} b={b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Plain scalar single-accumulator kernels — the semantic reference the
+//! tiled and SIMD backends are tested and benchmarked against. Every
+//! public kernel of the [`KernelBackend`](super::KernelBackend) surface
+//! has a counterpart here, each written as the obvious loop (one
+//! accumulator, no lane blocking, no register tiling). Never used on a
+//! hot path unless explicitly selected (`forward.backend = "scalar"`).
+//!
+//! The reductions use a *different summation order* from the
+//! tiled/SIMD backends (a single loop-carried chain), so reference
+//! results agree with them within rounding only — bit-equal on dyadic
+//! values where every order is exact (see the parity property tests in
+//! `rust/tests/backends.rs`).
+
+use super::{KernelBackend, SAMPLE_BLOCK};
+
+/// Single-accumulator dot product (one loop-carried FP dependency —
+/// exactly what the tiled kernels exist to avoid).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (av, bv) in a.iter().zip(b.iter()) {
+        s += av * bv;
+    }
+    s
+}
+
+/// Four independent scalar dots of one weight row against
+/// [`SAMPLE_BLOCK`] input rows (the reference twin of the register-tiled
+/// `dot_x4`; trivially bit-equal to four [`dot`] calls).
+pub fn dot_x4(w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+    [dot(w, xs[0]), dot(w, xs[1]), dot(w, xs[2]), dot(w, xs[3])]
+}
+
+/// Scalar rank-1 axpy.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// Four sequential scalar axpys into four output rows (the reference
+/// twin of `axpy_x4`).
+pub fn axpy_x4(a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+    let [y0, y1, y2, y3] = ys;
+    axpy(a[0], x, y0);
+    axpy(a[1], x, y1);
+    axpy(a[2], x, y2);
+    axpy(a[3], x, y3);
+}
+
+/// Four sequential scalar axpys accumulated into ONE output row (the
+/// reference twin of `axpy4_acc`; note the sequential order —
+/// `y += a0·x0; y += a1·x1; …` — differs from the blocked backends'
+/// pairwise association within rounding).
+pub fn axpy4_acc(a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+    for (ai, xi) in a.iter().zip(xs.iter()) {
+        axpy(*ai, xi, y);
+    }
+}
+
+/// Scalar fused dot + per-element variance.
+pub fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+    assert_eq!(w.len(), v.len());
+    assert_eq!(w.len(), x.len());
+    let (mut s, mut vs) = (0.0f32, 0.0f32);
+    for j in 0..w.len() {
+        s += w[j] * x[j];
+        vs += v[j] * (x[j] * x[j]);
+    }
+    (s, vs)
+}
+
+/// Scalar fused dot + squared-term reduction.
+pub fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
+    assert_eq!(w.len(), x.len());
+    let (mut s, mut vs) = (0.0f32, 0.0f32);
+    for j in 0..w.len() {
+        let wx = w[j] * x[j];
+        s += wx;
+        vs += wx * wx;
+    }
+    (s, vs)
+}
+
+/// Scalar fused transposed-MVM + per-element-variance row update.
+pub fn axpy_with_var(xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+    let n = w.len();
+    assert_eq!(n, v.len());
+    assert_eq!(n, y.len());
+    assert_eq!(n, out_var.len());
+    for j in 0..n {
+        y[j] += xr * w[j];
+        out_var[j] += v[j] * (xr * xr);
+    }
+}
+
+/// Scalar fused transposed-MVM + squared-term row update.
+pub fn axpy_sq(xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+    let n = w.len();
+    assert_eq!(n, y.len());
+    assert_eq!(n, out_var.len());
+    for j in 0..n {
+        let wx = xr * w[j];
+        y[j] += wx;
+        out_var[j] += s2 * (wx * wx);
+    }
+}
+
+/// Scalar element-wise accumulation `y[j] += x[j]`.
+pub fn vadd(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += xi;
+    }
+}
+
+/// Naive batched noise-free MVM: per sample, per row, scalar dot —
+/// the baseline of the `BENCH_kernels.json` speedup columns.
+pub fn mvm_plain_batch_naive(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    batch: usize,
+    transposed: bool,
+) {
+    assert_eq!(w.len(), rows * cols);
+    let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+    assert_eq!(x.len(), batch * in_size);
+    assert_eq!(y.len(), batch * out_size);
+    for b in 0..batch {
+        let xr = &x[b * in_size..(b + 1) * in_size];
+        let yr = &mut y[b * out_size..(b + 1) * out_size];
+        if !transposed {
+            for r in 0..rows {
+                yr[r] = dot(&w[r * cols..(r + 1) * cols], xr);
+            }
+        } else {
+            yr.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..rows {
+                axpy(xr[r], &w[r * cols..(r + 1) * cols], yr);
+            }
+        }
+    }
+}
+
+/// The reference backend: every trait method delegates to the free
+/// functions above (and `plain_task_block` uses the provided trait body,
+/// which composes them).
+pub struct ScalarBackend;
+
+impl KernelBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        dot(a, b)
+    }
+    fn dot_x4(&self, w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+        dot_x4(w, xs)
+    }
+    fn dot_with_var(&self, w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+        dot_with_var(w, v, x)
+    }
+    fn dot_sq(&self, w: &[f32], x: &[f32]) -> (f32, f32) {
+        dot_sq(w, x)
+    }
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        axpy(a, x, y)
+    }
+    fn axpy_x4(&self, a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+        axpy_x4(a, x, ys)
+    }
+    fn axpy4_acc(&self, a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+        axpy4_acc(a, xs, y)
+    }
+    fn axpy_with_var(&self, xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        axpy_with_var(xr, w, v, y, out_var)
+    }
+    fn axpy_sq(&self, xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        axpy_sq(xr, s2, w, y, out_var)
+    }
+    fn vadd(&self, y: &mut [f32], x: &[f32]) {
+        vadd(y, x)
+    }
+}

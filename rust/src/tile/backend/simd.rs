@@ -1,0 +1,615 @@
+//! Explicit `std::arch` SIMD kernels with runtime feature dispatch.
+//!
+//! [`SimdBackend`] mirrors the [`tiled`](super::tiled) kernels
+//! instruction for instruction: the AVX2 path keeps **one 8-wide vector
+//! accumulator per lane group** updated as `acc = acc + a·b`
+//! (`_mm256_add_ps` of a separate `_mm256_mul_ps` — never contracted to
+//! an FMA), reduces it by storing the register to a `[f32; 8]` and
+//! applying the same pairwise [`reduce_lanes`](super::reduce_lanes)
+//! association, and adds the `len % 8` tail last in index order with
+//! scalar ops. The NEON path uses two 4-wide accumulators covering lanes
+//! 0–3 and 4–7 of the same layout (`vaddq_f32` of `vmulq_f32`, never
+//! `vfmaq_f32`). Outputs are therefore **bit-identical** to the tiled
+//! backend on every input, which is what lets `auto` pick this backend
+//! without perturbing any pinned result or the `AIHWSIM_THREADS`
+//! determinism contract.
+//!
+//! **FMA opt-in.** `SimdBackend { fma: true }` (config
+//! `forward.backend_fma`, resolved only where the `fma` feature is
+//! detected) switches the x86-64 path to `_mm256_fmadd_ps`, contracting
+//! each multiply-add to one rounding. That breaks bitwise identity with
+//! `tiled` (results differ within rounding) in exchange for up to 2× the
+//! multiply-add throughput; it is never selected implicitly. On aarch64
+//! the flag is a no-op (the unfused NEON path is always used).
+//!
+//! **Dispatch.** Every method checks `is_x86_feature_detected!` (cached
+//! by `std` after the first probe) and falls back to the tiled free
+//! functions when AVX2 is absent — so a `simd` config selection is
+//! always safe, merely redundant on hosts without vector units. On
+//! non-x86/non-aarch64 targets the backend is a pure delegation to
+//! [`tiled`](super::tiled).
+//!
+//! NEON implements the reduction kernels (`dot`, `dot_with_var`,
+//! `dot_sq`) explicitly; the element-wise and register-tiled variants
+//! delegate to [`tiled`](super::tiled), whose autovectorized loops are
+//! already bit-equal by the shared summation-order contract.
+
+use super::{tiled, KernelBackend, SAMPLE_BLOCK};
+
+/// Whether the host has the vector unit the explicit SIMD path needs
+/// (AVX2 on x86-64, NEON on aarch64). Decides `auto` resolution.
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(target_arch = "aarch64")]
+    return std::arch::is_aarch64_feature_detected!("neon");
+    #[allow(unreachable_code)]
+    false
+}
+
+/// Whether the FMA-contracted variant can run here (x86-64 with both
+/// `avx2` and `fma`; the aarch64 path never contracts).
+pub fn fma_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma");
+    #[allow(unreachable_code)]
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The AVX2 kernels, generated twice: `avx2` accumulates with
+    //! separate mul + add (bit-identical to `tiled`), `avx2_fma` with
+    //! `_mm256_fmadd_ps` (the opt-in contracted variant). The only
+    //! difference between the submodules is the `mac!` expansion.
+
+    macro_rules! mac_mul_add {
+        ($acc:expr, $a:expr, $b:expr) => {
+            _mm256_add_ps($acc, _mm256_mul_ps($a, $b))
+        };
+    }
+    macro_rules! mac_fma {
+        ($acc:expr, $a:expr, $b:expr) => {
+            _mm256_fmadd_ps($a, $b, $acc)
+        };
+    }
+
+    macro_rules! avx2_kernels {
+        ($name:ident, $feat:literal, $mac:ident) => {
+            pub mod $name {
+                use crate::tile::backend::{reduce_lanes, LANES, SAMPLE_BLOCK};
+                use core::arch::x86_64::*;
+
+                /// # Safety
+                /// Requires the CPU features in this module's
+                /// `target_feature` set (checked by the caller via
+                /// `is_x86_feature_detected!`).
+                #[target_feature(enable = $feat)]
+                pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+                    let n = a.len();
+                    assert_eq!(n, b.len());
+                    let blocks = n - n % LANES;
+                    let mut acc = _mm256_setzero_ps();
+                    let mut j = 0;
+                    while j < blocks {
+                        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+                        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+                        acc = $mac!(acc, av, bv);
+                        j += LANES;
+                    }
+                    let mut l = [0.0f32; LANES];
+                    _mm256_storeu_ps(l.as_mut_ptr(), acc);
+                    let mut s = reduce_lanes(&l);
+                    for k in blocks..n {
+                        s += a[k] * b[k];
+                    }
+                    s
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn dot_x4(
+                    w: &[f32],
+                    xs: [&[f32]; SAMPLE_BLOCK],
+                ) -> [f32; SAMPLE_BLOCK] {
+                    let n = w.len();
+                    for x in &xs {
+                        assert_eq!(n, x.len());
+                    }
+                    let blocks = n - n % LANES;
+                    let mut acc = [_mm256_setzero_ps(); SAMPLE_BLOCK];
+                    let mut j = 0;
+                    while j < blocks {
+                        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+                        for (s, x) in xs.iter().enumerate() {
+                            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                            acc[s] = $mac!(acc[s], wv, xv);
+                        }
+                        j += LANES;
+                    }
+                    let mut out = [0.0f32; SAMPLE_BLOCK];
+                    for (s, x) in xs.iter().enumerate() {
+                        let mut l = [0.0f32; LANES];
+                        _mm256_storeu_ps(l.as_mut_ptr(), acc[s]);
+                        let mut a = reduce_lanes(&l);
+                        for k in blocks..n {
+                            a += w[k] * x[k];
+                        }
+                        out[s] = a;
+                    }
+                    out
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+                    let n = w.len();
+                    assert_eq!(n, v.len());
+                    assert_eq!(n, x.len());
+                    let blocks = n - n % LANES;
+                    let mut acc = _mm256_setzero_ps();
+                    let mut vacc = _mm256_setzero_ps();
+                    let mut j = 0;
+                    while j < blocks {
+                        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+                        let vv = _mm256_loadu_ps(v.as_ptr().add(j));
+                        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                        acc = $mac!(acc, wv, xv);
+                        vacc = $mac!(vacc, vv, _mm256_mul_ps(xv, xv));
+                        j += LANES;
+                    }
+                    let mut l = [0.0f32; LANES];
+                    _mm256_storeu_ps(l.as_mut_ptr(), acc);
+                    let mut s = reduce_lanes(&l);
+                    _mm256_storeu_ps(l.as_mut_ptr(), vacc);
+                    let mut vs = reduce_lanes(&l);
+                    for k in blocks..n {
+                        s += w[k] * x[k];
+                        vs += v[k] * (x[k] * x[k]);
+                    }
+                    (s, vs)
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
+                    let n = w.len();
+                    assert_eq!(n, x.len());
+                    let blocks = n - n % LANES;
+                    let mut acc = _mm256_setzero_ps();
+                    let mut vacc = _mm256_setzero_ps();
+                    let mut j = 0;
+                    while j < blocks {
+                        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+                        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                        let wx = _mm256_mul_ps(wv, xv);
+                        acc = _mm256_add_ps(acc, wx);
+                        vacc = $mac!(vacc, wx, wx);
+                        j += LANES;
+                    }
+                    let mut l = [0.0f32; LANES];
+                    _mm256_storeu_ps(l.as_mut_ptr(), acc);
+                    let mut s = reduce_lanes(&l);
+                    _mm256_storeu_ps(l.as_mut_ptr(), vacc);
+                    let mut vs = reduce_lanes(&l);
+                    for k in blocks..n {
+                        let wx = w[k] * x[k];
+                        s += wx;
+                        vs += wx * wx;
+                    }
+                    (s, vs)
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+                    let n = x.len();
+                    assert_eq!(n, y.len());
+                    let blocks = n - n % LANES;
+                    let av = _mm256_set1_ps(a);
+                    let mut j = 0;
+                    while j < blocks {
+                        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+                        _mm256_storeu_ps(y.as_mut_ptr().add(j), $mac!(yv, av, xv));
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        y[k] += a * x[k];
+                    }
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn axpy_x4(
+                    a: [f32; SAMPLE_BLOCK],
+                    x: &[f32],
+                    ys: [&mut [f32]; SAMPLE_BLOCK],
+                ) {
+                    let n = x.len();
+                    for y in &ys {
+                        assert_eq!(n, y.len());
+                    }
+                    let blocks = n - n % LANES;
+                    let [y0, y1, y2, y3] = ys;
+                    let a0 = _mm256_set1_ps(a[0]);
+                    let a1 = _mm256_set1_ps(a[1]);
+                    let a2 = _mm256_set1_ps(a[2]);
+                    let a3 = _mm256_set1_ps(a[3]);
+                    let mut j = 0;
+                    while j < blocks {
+                        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                        let v0 = _mm256_loadu_ps(y0.as_ptr().add(j));
+                        _mm256_storeu_ps(y0.as_mut_ptr().add(j), $mac!(v0, a0, xv));
+                        let v1 = _mm256_loadu_ps(y1.as_ptr().add(j));
+                        _mm256_storeu_ps(y1.as_mut_ptr().add(j), $mac!(v1, a1, xv));
+                        let v2 = _mm256_loadu_ps(y2.as_ptr().add(j));
+                        _mm256_storeu_ps(y2.as_mut_ptr().add(j), $mac!(v2, a2, xv));
+                        let v3 = _mm256_loadu_ps(y3.as_ptr().add(j));
+                        _mm256_storeu_ps(y3.as_mut_ptr().add(j), $mac!(v3, a3, xv));
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        let xk = x[k];
+                        y0[k] += a[0] * xk;
+                        y1[k] += a[1] * xk;
+                        y2[k] += a[2] * xk;
+                        y3[k] += a[3] * xk;
+                    }
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn axpy4_acc(
+                    a: [f32; SAMPLE_BLOCK],
+                    xs: [&[f32]; SAMPLE_BLOCK],
+                    y: &mut [f32],
+                ) {
+                    let n = y.len();
+                    for x in &xs {
+                        assert_eq!(n, x.len());
+                    }
+                    let blocks = n - n % LANES;
+                    let [x0, x1, x2, x3] = xs;
+                    let a0 = _mm256_set1_ps(a[0]);
+                    let a1 = _mm256_set1_ps(a[1]);
+                    let a2 = _mm256_set1_ps(a[2]);
+                    let a3 = _mm256_set1_ps(a[3]);
+                    let mut j = 0;
+                    while j < blocks {
+                        let p0 = _mm256_mul_ps(a0, _mm256_loadu_ps(x0.as_ptr().add(j)));
+                        let t01 = $mac!(p0, a1, _mm256_loadu_ps(x1.as_ptr().add(j)));
+                        let p2 = _mm256_mul_ps(a2, _mm256_loadu_ps(x2.as_ptr().add(j)));
+                        let t23 = $mac!(p2, a3, _mm256_loadu_ps(x3.as_ptr().add(j)));
+                        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+                        _mm256_storeu_ps(
+                            y.as_mut_ptr().add(j),
+                            _mm256_add_ps(yv, _mm256_add_ps(t01, t23)),
+                        );
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        y[k] += (a[0] * x0[k] + a[1] * x1[k]) + (a[2] * x2[k] + a[3] * x3[k]);
+                    }
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn axpy_with_var(
+                    xr: f32,
+                    w: &[f32],
+                    v: &[f32],
+                    y: &mut [f32],
+                    out_var: &mut [f32],
+                ) {
+                    let n = w.len();
+                    assert_eq!(n, v.len());
+                    assert_eq!(n, y.len());
+                    assert_eq!(n, out_var.len());
+                    let blocks = n - n % LANES;
+                    let x2 = xr * xr;
+                    let xrv = _mm256_set1_ps(xr);
+                    let x2v = _mm256_set1_ps(x2);
+                    let mut j = 0;
+                    while j < blocks {
+                        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+                        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+                        _mm256_storeu_ps(y.as_mut_ptr().add(j), $mac!(yv, xrv, wv));
+                        let vv = _mm256_loadu_ps(v.as_ptr().add(j));
+                        let ov = _mm256_loadu_ps(out_var.as_ptr().add(j));
+                        _mm256_storeu_ps(out_var.as_mut_ptr().add(j), $mac!(ov, vv, x2v));
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        y[k] += xr * w[k];
+                        out_var[k] += v[k] * x2;
+                    }
+                }
+
+                /// # Safety
+                /// See [`dot`].
+                #[target_feature(enable = $feat)]
+                pub unsafe fn axpy_sq(
+                    xr: f32,
+                    s2: f32,
+                    w: &[f32],
+                    y: &mut [f32],
+                    out_var: &mut [f32],
+                ) {
+                    let n = w.len();
+                    assert_eq!(n, y.len());
+                    assert_eq!(n, out_var.len());
+                    let blocks = n - n % LANES;
+                    let xrv = _mm256_set1_ps(xr);
+                    let s2v = _mm256_set1_ps(s2);
+                    let mut j = 0;
+                    while j < blocks {
+                        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+                        let wx = _mm256_mul_ps(xrv, wv);
+                        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+                        _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(yv, wx));
+                        let ov = _mm256_loadu_ps(out_var.as_ptr().add(j));
+                        _mm256_storeu_ps(
+                            out_var.as_mut_ptr().add(j),
+                            $mac!(ov, s2v, _mm256_mul_ps(wx, wx)),
+                        );
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        let wx = xr * w[k];
+                        y[k] += wx;
+                        out_var[k] += s2 * (wx * wx);
+                    }
+                }
+
+                /// # Safety
+                /// See [`dot`]. (No multiply — identical in both
+                /// submodules; kept here so dispatch stays uniform.)
+                #[target_feature(enable = $feat)]
+                pub unsafe fn vadd(y: &mut [f32], x: &[f32]) {
+                    let n = x.len();
+                    assert_eq!(n, y.len());
+                    let blocks = n - n % LANES;
+                    let mut j = 0;
+                    while j < blocks {
+                        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+                        _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(yv, xv));
+                        j += LANES;
+                    }
+                    for k in blocks..n {
+                        y[k] += x[k];
+                    }
+                }
+            }
+        };
+    }
+
+    avx2_kernels!(avx2, "avx2", mac_mul_add);
+    avx2_kernels!(avx2_fma, "avx2,fma", mac_fma);
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON reduction kernels: two 4-wide accumulators cover lanes 0–3
+    //! and 4–7 of the tiled layout, combined through the shared
+    //! [`reduce_lanes`] — bit-identical to `tiled`. `vaddq_f32` of
+    //! `vmulq_f32`, never the fused `vfmaq_f32`. The element-wise and
+    //! register-tiled kernels delegate to `tiled` (already bit-equal by
+    //! the summation-order contract). NEON is baseline on aarch64, so no
+    //! `target_feature` gymnastics are needed.
+
+    use crate::tile::backend::{reduce_lanes, tiled, LANES, SAMPLE_BLOCK};
+    use core::arch::aarch64::*;
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        assert_eq!(n, b.len());
+        let blocks = n - n % LANES;
+        unsafe {
+            let mut lo = vdupq_n_f32(0.0);
+            let mut hi = vdupq_n_f32(0.0);
+            let mut j = 0;
+            while j < blocks {
+                let alo = vld1q_f32(a.as_ptr().add(j));
+                let ahi = vld1q_f32(a.as_ptr().add(j + 4));
+                let blo = vld1q_f32(b.as_ptr().add(j));
+                let bhi = vld1q_f32(b.as_ptr().add(j + 4));
+                lo = vaddq_f32(lo, vmulq_f32(alo, blo));
+                hi = vaddq_f32(hi, vmulq_f32(ahi, bhi));
+                j += LANES;
+            }
+            let mut l = [0.0f32; LANES];
+            vst1q_f32(l.as_mut_ptr(), lo);
+            vst1q_f32(l.as_mut_ptr().add(4), hi);
+            let mut s = reduce_lanes(&l);
+            for k in blocks..n {
+                s += a[k] * b[k];
+            }
+            s
+        }
+    }
+
+    pub fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+        let n = w.len();
+        assert_eq!(n, v.len());
+        assert_eq!(n, x.len());
+        let blocks = n - n % LANES;
+        unsafe {
+            let mut slo = vdupq_n_f32(0.0);
+            let mut shi = vdupq_n_f32(0.0);
+            let mut vlo = vdupq_n_f32(0.0);
+            let mut vhi = vdupq_n_f32(0.0);
+            let mut j = 0;
+            while j < blocks {
+                let wlo = vld1q_f32(w.as_ptr().add(j));
+                let whi = vld1q_f32(w.as_ptr().add(j + 4));
+                let xlo = vld1q_f32(x.as_ptr().add(j));
+                let xhi = vld1q_f32(x.as_ptr().add(j + 4));
+                let plo = vld1q_f32(v.as_ptr().add(j));
+                let phi = vld1q_f32(v.as_ptr().add(j + 4));
+                slo = vaddq_f32(slo, vmulq_f32(wlo, xlo));
+                shi = vaddq_f32(shi, vmulq_f32(whi, xhi));
+                vlo = vaddq_f32(vlo, vmulq_f32(plo, vmulq_f32(xlo, xlo)));
+                vhi = vaddq_f32(vhi, vmulq_f32(phi, vmulq_f32(xhi, xhi)));
+                j += LANES;
+            }
+            let mut l = [0.0f32; LANES];
+            vst1q_f32(l.as_mut_ptr(), slo);
+            vst1q_f32(l.as_mut_ptr().add(4), shi);
+            let mut s = reduce_lanes(&l);
+            vst1q_f32(l.as_mut_ptr(), vlo);
+            vst1q_f32(l.as_mut_ptr().add(4), vhi);
+            let mut vs = reduce_lanes(&l);
+            for k in blocks..n {
+                s += w[k] * x[k];
+                vs += v[k] * (x[k] * x[k]);
+            }
+            (s, vs)
+        }
+    }
+
+    pub fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
+        let n = w.len();
+        assert_eq!(n, x.len());
+        let blocks = n - n % LANES;
+        unsafe {
+            let mut slo = vdupq_n_f32(0.0);
+            let mut shi = vdupq_n_f32(0.0);
+            let mut vlo = vdupq_n_f32(0.0);
+            let mut vhi = vdupq_n_f32(0.0);
+            let mut j = 0;
+            while j < blocks {
+                let wxlo = vmulq_f32(vld1q_f32(w.as_ptr().add(j)), vld1q_f32(x.as_ptr().add(j)));
+                let wxhi = vmulq_f32(
+                    vld1q_f32(w.as_ptr().add(j + 4)),
+                    vld1q_f32(x.as_ptr().add(j + 4)),
+                );
+                slo = vaddq_f32(slo, wxlo);
+                shi = vaddq_f32(shi, wxhi);
+                vlo = vaddq_f32(vlo, vmulq_f32(wxlo, wxlo));
+                vhi = vaddq_f32(vhi, vmulq_f32(wxhi, wxhi));
+                j += LANES;
+            }
+            let mut l = [0.0f32; LANES];
+            vst1q_f32(l.as_mut_ptr(), slo);
+            vst1q_f32(l.as_mut_ptr().add(4), shi);
+            let mut s = reduce_lanes(&l);
+            vst1q_f32(l.as_mut_ptr(), vlo);
+            vst1q_f32(l.as_mut_ptr().add(4), vhi);
+            let mut vs = reduce_lanes(&l);
+            for k in blocks..n {
+                let wx = w[k] * x[k];
+                s += wx;
+                vs += wx * wx;
+            }
+            (s, vs)
+        }
+    }
+
+    pub fn dot_x4(w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+        tiled::dot_x4(w, xs)
+    }
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        tiled::axpy(a, x, y)
+    }
+    pub fn axpy_x4(a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+        tiled::axpy_x4(a, x, ys)
+    }
+    pub fn axpy4_acc(a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+        tiled::axpy4_acc(a, xs, y)
+    }
+    pub fn axpy_with_var(xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        tiled::axpy_with_var(xr, w, v, y, out_var)
+    }
+    pub fn axpy_sq(xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        tiled::axpy_sq(xr, s2, w, y, out_var)
+    }
+    pub fn vadd(y: &mut [f32], x: &[f32]) {
+        tiled::vadd(y, x)
+    }
+}
+
+/// The explicit-SIMD backend. `fma: false` is bit-identical to
+/// [`TiledBackend`](super::tiled::TiledBackend); `fma: true` is the
+/// opt-in contracted variant (see the module docs).
+pub struct SimdBackend {
+    /// Contract multiply-adds with FMA where the host supports it
+    /// (breaks bitwise identity with `tiled`; config `forward.backend_fma`).
+    pub fma: bool,
+}
+
+/// Per-method dispatch: AVX2(+FMA) where detected, NEON on aarch64,
+/// tiled free functions everywhere else. `is_x86_feature_detected!` is
+/// cached by `std`, so the probe is a relaxed atomic load per call.
+macro_rules! dispatch {
+    ($self:ident, $fn:ident ( $($arg:expr),* )) => {{
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                if $self.fma && std::arch::is_x86_feature_detected!("fma") {
+                    // SAFETY: avx2 + fma just verified on this CPU
+                    return unsafe { x86::avx2_fma::$fn($($arg),*) };
+                }
+                // SAFETY: avx2 just verified on this CPU
+                return unsafe { x86::avx2::$fn($($arg),*) };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return neon::$fn($($arg),*);
+        }
+        #[allow(unreachable_code)]
+        {
+            tiled::$fn($($arg),*)
+        }
+    }};
+}
+
+impl KernelBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        if self.fma {
+            "simd_fma"
+        } else {
+            "simd"
+        }
+    }
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        dispatch!(self, dot(a, b))
+    }
+    fn dot_x4(&self, w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+        dispatch!(self, dot_x4(w, xs))
+    }
+    fn dot_with_var(&self, w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+        dispatch!(self, dot_with_var(w, v, x))
+    }
+    fn dot_sq(&self, w: &[f32], x: &[f32]) -> (f32, f32) {
+        dispatch!(self, dot_sq(w, x))
+    }
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        dispatch!(self, axpy(a, x, y))
+    }
+    fn axpy_x4(&self, a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+        dispatch!(self, axpy_x4(a, x, ys))
+    }
+    fn axpy4_acc(&self, a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+        dispatch!(self, axpy4_acc(a, xs, y))
+    }
+    fn axpy_with_var(&self, xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        dispatch!(self, axpy_with_var(xr, w, v, y, out_var))
+    }
+    fn axpy_sq(&self, xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        dispatch!(self, axpy_sq(xr, s2, w, y, out_var))
+    }
+    fn vadd(&self, y: &mut [f32], x: &[f32]) {
+        dispatch!(self, vadd(y, x))
+    }
+}

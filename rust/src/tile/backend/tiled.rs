@@ -1,7 +1,7 @@
-//! Register-tiled, SIMD-width micro-kernels — the innermost compute layer.
+//! Register-tiled, SIMD-width micro-kernels — the portable fast path.
 //!
-//! Every hot loop in the simulator bottoms out here. The design targets
-//! what `rustc`/LLVM can and cannot do with strict IEEE semantics:
+//! The design targets what `rustc`/LLVM can and cannot do with strict
+//! IEEE semantics:
 //!
 //! * **Multi-accumulator lane blocking.** A single-accumulator
 //!   `for j { acc += w[j] * x[j] }` is a loop-carried floating-point
@@ -20,29 +20,18 @@
 //!   ahead of the inner loop, so LLVM proves the indexing in-bounds and
 //!   elides per-element checks.
 //!
-//! **Determinism contract.** Each output element is a reduction with a
-//! *fixed summation order* that depends only on the slice length: lane
-//! `l` accumulates elements `l, l+LANES, l+2·LANES, …`, the lanes are
-//! combined pairwise as `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`, and the
-//! tail (`len % LANES`) is added last, in index order. Sample blocking
-//! never changes a sample's own reduction order — [`dot_x4`] is
-//! bit-identical to four [`dot`] calls — so results are independent of
-//! batch position, chunk boundaries, and therefore of `AIHWSIM_THREADS`.
-//! The [`reference`] module keeps the plain single-accumulator kernels;
-//! tests and benches compare against it (equal within 1e-5 relative
-//! tolerance in general, bit-equal on dyadic values where every
-//! summation order is exact).
+//! The summation order is the module contract of
+//! [`crate::tile::backend`]: lane `l` accumulates elements
+//! `l, l+LANES, …`, lanes combine via
+//! [`reduce_lanes`](super::reduce_lanes), the `len % LANES` tail is
+//! added last in index order. The [`simd`](super::simd) backend
+//! reproduces this order with explicit intrinsics and is bit-identical;
+//! the [`scalar`](super::scalar) reference is not (single accumulator).
 
-/// SIMD-width lane count of the blocked reductions (8 × f32 = one AVX2
-/// register). Fixed — results must not depend on the host ISA.
-pub const LANES: usize = 8;
-
-/// Samples processed per weight-row pass by the register-tiled batched
-/// kernels.
-pub const SAMPLE_BLOCK: usize = 4;
+use super::{reduce_lanes, KernelBackend, LANES, SAMPLE_BLOCK};
 
 /// Lane-blocked dot product `Σ_j a[j]·b[j]` with [`LANES`] independent
-/// accumulators and the fixed reduction order of the module contract.
+/// accumulators and the fixed reduction order of the backend contract.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
@@ -60,12 +49,6 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += av * bv;
     }
     s
-}
-
-/// The fixed pairwise lane reduction: `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`.
-#[inline]
-fn reduce_lanes(l: &[f32; LANES]) -> f32 {
-    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
 }
 
 /// Register-tiled dot of one weight row against [`SAMPLE_BLOCK`] input
@@ -237,87 +220,49 @@ pub fn vadd(y: &mut [f32], x: &[f32]) {
     }
 }
 
-/// Plain scalar single-accumulator kernels — the semantic reference the
-/// tiled kernels are tested and benchmarked against. Never used on a hot
-/// path.
-pub mod reference {
-    /// Single-accumulator dot product (one loop-carried FP dependency —
-    /// exactly what the tiled kernels exist to avoid).
-    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-        assert_eq!(a.len(), b.len());
-        let mut s = 0.0f32;
-        for (av, bv) in a.iter().zip(b.iter()) {
-            s += av * bv;
-        }
-        s
-    }
+/// The register-tiled backend: every trait method delegates to the
+/// statically-dispatched free functions above.
+pub struct TiledBackend;
 
-    /// Scalar rank-1 axpy.
-    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), y.len());
-        for (yi, xi) in y.iter_mut().zip(x.iter()) {
-            *yi += a * xi;
-        }
+impl KernelBackend for TiledBackend {
+    fn name(&self) -> &'static str {
+        "tiled"
     }
-
-    /// Scalar fused dot + per-element variance.
-    pub fn dot_with_var(w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
-        assert_eq!(w.len(), v.len());
-        assert_eq!(w.len(), x.len());
-        let (mut s, mut vs) = (0.0f32, 0.0f32);
-        for j in 0..w.len() {
-            s += w[j] * x[j];
-            vs += v[j] * (x[j] * x[j]);
-        }
-        (s, vs)
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        dot(a, b)
     }
-
-    /// Scalar fused dot + squared-term reduction.
-    pub fn dot_sq(w: &[f32], x: &[f32]) -> (f32, f32) {
-        assert_eq!(w.len(), x.len());
-        let (mut s, mut vs) = (0.0f32, 0.0f32);
-        for j in 0..w.len() {
-            let wx = w[j] * x[j];
-            s += wx;
-            vs += wx * wx;
-        }
-        (s, vs)
+    fn dot_x4(&self, w: &[f32], xs: [&[f32]; SAMPLE_BLOCK]) -> [f32; SAMPLE_BLOCK] {
+        dot_x4(w, xs)
     }
-
-    /// Naive batched noise-free MVM: per sample, per row, scalar dot —
-    /// the baseline of the `BENCH_kernels.json` speedup column.
-    pub fn mvm_plain_batch_naive(
-        w: &[f32],
-        rows: usize,
-        cols: usize,
-        x: &[f32],
-        y: &mut [f32],
-        batch: usize,
-        transposed: bool,
-    ) {
-        assert_eq!(w.len(), rows * cols);
-        let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
-        assert_eq!(x.len(), batch * in_size);
-        assert_eq!(y.len(), batch * out_size);
-        for b in 0..batch {
-            let xr = &x[b * in_size..(b + 1) * in_size];
-            let yr = &mut y[b * out_size..(b + 1) * out_size];
-            if !transposed {
-                for r in 0..rows {
-                    yr[r] = dot(&w[r * cols..(r + 1) * cols], xr);
-                }
-            } else {
-                yr.iter_mut().for_each(|v| *v = 0.0);
-                for r in 0..rows {
-                    axpy(xr[r], &w[r * cols..(r + 1) * cols], yr);
-                }
-            }
-        }
+    fn dot_with_var(&self, w: &[f32], v: &[f32], x: &[f32]) -> (f32, f32) {
+        dot_with_var(w, v, x)
+    }
+    fn dot_sq(&self, w: &[f32], x: &[f32]) -> (f32, f32) {
+        dot_sq(w, x)
+    }
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        axpy(a, x, y)
+    }
+    fn axpy_x4(&self, a: [f32; SAMPLE_BLOCK], x: &[f32], ys: [&mut [f32]; SAMPLE_BLOCK]) {
+        axpy_x4(a, x, ys)
+    }
+    fn axpy4_acc(&self, a: [f32; SAMPLE_BLOCK], xs: [&[f32]; SAMPLE_BLOCK], y: &mut [f32]) {
+        axpy4_acc(a, xs, y)
+    }
+    fn axpy_with_var(&self, xr: f32, w: &[f32], v: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        axpy_with_var(xr, w, v, y, out_var)
+    }
+    fn axpy_sq(&self, xr: f32, s2: f32, w: &[f32], y: &mut [f32], out_var: &mut [f32]) {
+        axpy_sq(xr, s2, w, y, out_var)
+    }
+    fn vadd(&self, y: &mut [f32], x: &[f32]) {
+        vadd(y, x)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::reference;
     use super::*;
     use crate::util::rng::Rng;
 

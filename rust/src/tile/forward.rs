@@ -25,16 +25,21 @@
 //! worker-thread count. The scalar [`analog_mvm`] remains the reference
 //! implementation (and handles the rare bound-management retries).
 //!
-//! **Micro-kernels.** All inner loops route through
-//! [`crate::tile::kernels`]: lane-blocked multi-accumulator dots,
-//! register-tiled 4-samples-per-weight-row batched passes, and fused
-//! MVM+variance reductions — see that module's determinism contract.
-//! Gaussian noise is drawn through batched
+//! **Micro-kernels.** All inner loops route through a
+//! [`KernelBackend`](crate::tile::backend::KernelBackend): lane-blocked
+//! multi-accumulator dots, register-tiled 4-samples-per-weight-row
+//! batched passes, and fused MVM+variance reductions — see
+//! [`crate::tile::backend`]'s determinism contract. The backend is
+//! resolved once per MVM entry point from `io.backend` /
+//! `io.backend_fma` ([`crate::tile::backend::resolve`]); every
+//! implementation except the explicit `scalar` selection and the FMA
+//! opt-in is bit-identical, so the choice never perturbs pinned
+//! results. Gaussian noise is drawn through batched
 //! [`Rng::fill_normal_f32`] fills into a scratch buffer, one pass per
 //! pipeline stage, never one scalar Box–Muller call per element.
 
 use crate::config::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
-use crate::tile::kernels;
+use crate::tile::backend::{self, Kb, PlainTask};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_chunks_mut;
@@ -205,7 +210,8 @@ pub fn analog_mvm(
     rng: &mut Rng,
     scratch: &mut MvmScratch,
 ) {
-    analog_mvm_from(w, rows, cols, x, y, io, w_noise_var, transposed, rng, scratch, 0);
+    let kb = backend::resolve(io.backend, io.backend_fma);
+    analog_mvm_from(kb, w, rows, cols, x, y, io, w_noise_var, transposed, rng, scratch, 0);
 }
 
 /// The scalar pipeline starting at bound-management attempt
@@ -214,6 +220,7 @@ pub fn analog_mvm(
 /// attempt 1 so the retry distribution matches the scalar reference.
 #[allow(clippy::too_many_arguments)]
 fn analog_mvm_from(
+    kb: Kb,
     w: &[f32],
     rows: usize,
     cols: usize,
@@ -232,7 +239,7 @@ fn analog_mvm_from(
     assert_eq!(y.len(), out_size);
 
     if io.is_perfect {
-        mvm_plain(w, rows, cols, x, y, transposed);
+        mvm_plain_kb(kb, w, rows, cols, x, y, transposed);
         return;
     }
 
@@ -263,22 +270,30 @@ fn analog_mvm_from(
         // --- analog MVM + weight-noise variance accumulation ---
         let need_var = w_noise_var.is_some() || io.w_noise > 0.0;
         if !need_var {
-            mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
+            mvm_plain_kb(kb, w, rows, cols, &scratch.xq, y, transposed);
             noise_epilogue(y, None, io, rng, &mut scratch.noise);
         } else {
             match (w_noise_var, io.w_noise_type) {
-                (Some(var), _) => {
-                    mvm_with_var(w, var, rows, cols, &scratch.xq, y, &mut scratch.var, transposed)
-                }
+                (Some(var), _) => mvm_with_var(
+                    kb,
+                    w,
+                    var,
+                    rows,
+                    cols,
+                    &scratch.xq,
+                    y,
+                    &mut scratch.var,
+                    transposed,
+                ),
                 (None, WeightNoiseType::AdditiveConstant) => {
-                    mvm_plain(w, rows, cols, &scratch.xq, y, transposed);
+                    mvm_plain_kb(kb, w, rows, cols, &scratch.xq, y, transposed);
                     let x2: f32 = scratch.xq.iter().map(|v| v * v).sum();
                     let sig = io.w_noise * x2.sqrt();
                     scratch.var.iter_mut().for_each(|v| *v = sig * sig);
                 }
                 (None, WeightNoiseType::RelativeToWeight) => {
                     let sv = &mut scratch.var;
-                    mvm_rel_var(w, io.w_noise, rows, cols, &scratch.xq, y, sv, transposed);
+                    mvm_rel_var(kb, w, io.w_noise, rows, cols, &scratch.xq, y, sv, transposed);
                 }
             }
             noise_epilogue(y, Some(&scratch.var), io, rng, &mut scratch.noise);
@@ -338,7 +353,8 @@ pub fn analog_mvm_batch(
     }
 
     if io.is_perfect {
-        mvm_plain_batch(w, rows, cols, x, y, transposed);
+        let kb = backend::resolve(io.backend, io.backend_fma);
+        mvm_plain_batch_kb(kb, w, rows, cols, x, y, transposed);
         return;
     }
 
@@ -353,7 +369,7 @@ pub fn analog_mvm_batch(
 /// Fused batched analog MVM with **caller-supplied per-row RNG
 /// streams** — the serving-engine entry point. Row `b` consumes exactly
 /// `rngs[b]`, and the fused block kernels have a fixed per-sample
-/// summation order (see `crate::tile::kernels`), so a row's output is
+/// summation order (see `crate::tile::backend`), so a row's output is
 /// bitwise independent of which other rows share the batch, of chunk
 /// boundaries, and of `AIHWSIM_THREADS`. [`analog_mvm_batch`] is this
 /// kernel with the per-row streams split off one parent RNG.
@@ -381,8 +397,9 @@ pub fn analog_mvm_batch_rows(
         return;
     }
 
+    let kb = backend::resolve(io.backend, io.backend_fma);
     if io.is_perfect {
-        mvm_plain_batch(w, rows, cols, x, y, transposed);
+        mvm_plain_batch_kb(kb, w, rows, cols, x, y, transposed);
         return;
     }
 
@@ -397,12 +414,14 @@ pub fn analog_mvm_batch_rows(
 
     let min_rows = 1 + PAR_MIN_MACS / (rows * cols).max(1);
     par_chunks_mut(&mut tasks, min_rows, |_, chunk| {
-        batch_worker(w, rows, cols, io, w_noise_var, transposed, chunk);
+        batch_worker(kb, w, rows, cols, io, w_noise_var, transposed, chunk);
     });
 }
 
 /// Process a contiguous chunk of batch rows in blocks of [`BATCH_BLOCK`].
+#[allow(clippy::too_many_arguments)]
 fn batch_worker(
+    kb: Kb,
     w: &[f32],
     rows: usize,
     cols: usize,
@@ -469,7 +488,7 @@ fn batch_worker(
                     PlainTask { x: view(6), y: &mut *t6.y },
                     PlainTask { x: view(7), y: &mut *t7.y },
                 ];
-                plain_task_block(w, rows, cols, &mut views, transposed);
+                kb.plain_task_block(w, rows, cols, &mut views, transposed);
             } else {
                 let mut views: Vec<PlainTask> = block
                     .iter_mut()
@@ -479,10 +498,11 @@ fn batch_worker(
                         y: &mut *task.y,
                     })
                     .collect();
-                plain_task_block(w, rows, cols, &mut views, transposed);
+                kb.plain_task_block(w, rows, cols, &mut views, transposed);
             }
         } else {
             mvm_var_block(
+                kb,
                 w,
                 w_noise_var,
                 io.w_noise,
@@ -520,6 +540,7 @@ fn batch_worker(
                 // the shared `scalar` scratch hands the resume the same
                 // one-pass noise buffer the fused path used
                 analog_mvm_from(
+                    kb,
                     w,
                     rows,
                     cols,
@@ -543,6 +564,7 @@ fn batch_worker(
 /// per-element and relative-to-weight noise models.
 #[allow(clippy::too_many_arguments)]
 fn mvm_var_block(
+    kb: Kb,
     w: &[f32],
     w_noise_var: Option<&[f32]>,
     sigma: f32,
@@ -564,7 +586,7 @@ fn mvm_var_block(
                     let vr = &vm[r * cols..(r + 1) * cols];
                     for (s, task) in block.iter_mut().enumerate() {
                         let xrow = &xq[s * in_size..(s + 1) * in_size];
-                        let (acc, vacc) = kernels::dot_with_var(wr, vr, xrow);
+                        let (acc, vacc) = kb.dot_with_var(wr, vr, xrow);
                         task.y[r] = acc;
                         var[s * out_size + r] = vacc;
                     }
@@ -573,7 +595,7 @@ fn mvm_var_block(
                     debug_assert_eq!(noise_type, WeightNoiseType::RelativeToWeight);
                     for (s, task) in block.iter_mut().enumerate() {
                         let xrow = &xq[s * in_size..(s + 1) * in_size];
-                        let (acc, vacc) = kernels::dot_sq(wr, xrow);
+                        let (acc, vacc) = kb.dot_sq(wr, xrow);
                         task.y[r] = acc;
                         var[s * out_size + r] = s2 * vacc;
                     }
@@ -596,7 +618,7 @@ fn mvm_var_block(
                             continue;
                         }
                         let vrow = &mut var[s * out_size..(s + 1) * out_size];
-                        kernels::axpy_with_var(xr, wr, vr, task.y, vrow);
+                        kb.axpy_with_var(xr, wr, vr, task.y, vrow);
                     }
                 }
                 None => {
@@ -606,7 +628,7 @@ fn mvm_var_block(
                             continue;
                         }
                         let vrow = &mut var[s * out_size..(s + 1) * out_size];
-                        kernels::axpy_sq(xr, s2, wr, task.y, vrow);
+                        kb.axpy_sq(xr, s2, wr, task.y, vrow);
                     }
                 }
             }
@@ -615,12 +637,32 @@ fn mvm_var_block(
 }
 
 /// Noise-free batched MVM `Y = X·Wᵀ` (or `X·W` when `transposed`):
-/// register-tiled over the batch ([`kernels::SAMPLE_BLOCK`] samples per
-/// weight-row pass) and parallelized with the same chunking as the
-/// analog kernel. This is the perfect-path / FP-tile GEMM.
-/// `batch_worker`'s no-variance branch reuses the same
-/// `plain_task_block` kernel through per-row views.
+/// register-tiled over the batch
+/// ([`backend::SAMPLE_BLOCK`](crate::tile::backend::SAMPLE_BLOCK)
+/// samples per weight-row pass) and parallelized with the same chunking
+/// as the analog kernel. This is the perfect-path / FP-tile GEMM,
+/// running on the process-default backend
+/// ([`backend::global_default`]); [`mvm_plain_batch_kb`] is the same
+/// kernel with an explicit backend.
 pub fn mvm_plain_batch(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Matrix,
+    y: &mut Matrix,
+    transposed: bool,
+) {
+    mvm_plain_batch_kb(backend::global_default(), w, rows, cols, x, y, transposed);
+}
+
+/// [`mvm_plain_batch`] on an explicit [`KernelBackend`]
+/// (`batch_worker`'s no-variance branch reuses the same
+/// [`KernelBackend::plain_task_block`] kernel through per-row views).
+///
+/// [`KernelBackend`]: crate::tile::backend::KernelBackend
+/// [`KernelBackend::plain_task_block`]: crate::tile::backend::KernelBackend::plain_task_block
+pub fn mvm_plain_batch_kb(
+    kb: Kb,
     w: &[f32],
     rows: usize,
     cols: usize,
@@ -647,79 +689,41 @@ pub fn mvm_plain_batch(
     let min_rows = 1 + PAR_MIN_MACS / (rows * cols).max(1);
     par_chunks_mut(&mut tasks, min_rows, |_, chunk| {
         for block in chunk.chunks_mut(BATCH_BLOCK) {
-            plain_task_block(w, rows, cols, block, transposed);
+            kb.plain_task_block(w, rows, cols, block, transposed);
         }
     });
 }
 
-struct PlainTask<'a> {
-    x: &'a [f32],
-    y: &'a mut [f32],
+/// Plain (noise-free) MVM used by the perfect path and inside the
+/// pipeline, on the process-default backend ([`backend::global_default`];
+/// [`mvm_plain_kb`] takes an explicit one). Lane-blocked dots; the
+/// transposed path accumulates weight rows **sequentially in row
+/// order** — the same summation order as the batched transposed kernel
+/// ([`crate::tile::backend::KernelBackend::axpy_x4`] adds one row per
+/// pass) — so scalar and batched results stay bit-identical on
+/// noise-free configs. (The digital-side `Matrix::{tmatvec, matmul}`
+/// use the quad-grouped
+/// [`axpy4_acc`](crate::tile::backend::KernelBackend::axpy4_acc)
+/// instead; they carry no exact-equivalence contract with this
+/// pipeline.)
+pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], transposed: bool) {
+    mvm_plain_kb(backend::global_default(), w, rows, cols, x, y, transposed);
 }
 
-/// Register-tiled noise-free MVM over one block of plain tasks — THE
-/// fused block kernel: [`kernels::SAMPLE_BLOCK`]-sample passes over each
-/// weight row, lane-blocked dots for the remainder samples. Used
-/// directly by [`mvm_plain_batch`] and, through per-row views onto the
-/// DAC'd scratch, by `batch_worker`'s no-variance branch.
-fn plain_task_block(
+/// [`mvm_plain`] on an explicit [`KernelBackend`](crate::tile::backend::KernelBackend).
+pub fn mvm_plain_kb(
+    kb: Kb,
     w: &[f32],
     rows: usize,
     cols: usize,
-    block: &mut [PlainTask],
+    x: &[f32],
+    y: &mut [f32],
     transposed: bool,
 ) {
-    const SB: usize = kernels::SAMPLE_BLOCK;
-    let quads = block.len() / SB * SB;
-    if !transposed {
-        for r in 0..rows {
-            let wr = &w[r * cols..(r + 1) * cols];
-            for quad in block[..quads].chunks_exact_mut(SB) {
-                let ys = kernels::dot_x4(wr, [quad[0].x, quad[1].x, quad[2].x, quad[3].x]);
-                for (t, task) in quad.iter_mut().enumerate() {
-                    task.y[r] = ys[t];
-                }
-            }
-            for task in block[quads..].iter_mut() {
-                task.y[r] = kernels::dot(wr, task.x);
-            }
-        }
-    } else {
-        for task in block.iter_mut() {
-            task.y.iter_mut().for_each(|v| *v = 0.0);
-        }
-        for r in 0..rows {
-            let wr = &w[r * cols..(r + 1) * cols];
-            for quad in block[..quads].chunks_exact_mut(SB) {
-                let a = [quad[0].x[r], quad[1].x[r], quad[2].x[r], quad[3].x[r]];
-                if a == [0.0; SB] {
-                    continue;
-                }
-                let [t0, t1, t2, t3] = quad else { unreachable!() };
-                kernels::axpy_x4(a, wr, [&mut *t0.y, &mut *t1.y, &mut *t2.y, &mut *t3.y]);
-            }
-            for task in block[quads..].iter_mut() {
-                if task.x[r] != 0.0 {
-                    kernels::axpy(task.x[r], wr, task.y);
-                }
-            }
-        }
-    }
-}
-
-/// Plain (noise-free) MVM used by the perfect path and inside the
-/// pipeline. Lane-blocked dots; the transposed path accumulates weight
-/// rows **sequentially in row order** — the same summation order as the
-/// batched transposed kernel ([`kernels::axpy_x4`] adds one row per
-/// pass) — so scalar and batched results stay bit-identical on
-/// noise-free configs. (The digital-side `Matrix::{tmatvec, matmul}`
-/// use the quad-grouped [`kernels::axpy4_acc`] instead; they carry no
-/// exact-equivalence contract with this pipeline.)
-pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], transposed: bool) {
     assert_eq!(w.len(), rows * cols);
     if !transposed {
         for (r, yr) in y.iter_mut().enumerate() {
-            *yr = kernels::dot(&w[r * cols..(r + 1) * cols], x);
+            *yr = kb.dot(&w[r * cols..(r + 1) * cols], x);
         }
     } else {
         y.iter_mut().for_each(|v| *v = 0.0);
@@ -727,14 +731,16 @@ pub fn mvm_plain(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], 
             if xr == 0.0 {
                 continue;
             }
-            kernels::axpy(xr, &w[r * cols..(r + 1) * cols], y);
+            kb.axpy(xr, &w[r * cols..(r + 1) * cols], y);
         }
     }
 }
 
 /// MVM + per-output noise variance from a per-element variance matrix:
 /// var_i = Σ_j var_ij · x_j².
+#[allow(clippy::too_many_arguments)]
 fn mvm_with_var(
+    kb: Kb,
     w: &[f32],
     var: &[f32],
     rows: usize,
@@ -748,7 +754,7 @@ fn mvm_with_var(
         for r in 0..rows {
             let wr = &w[r * cols..(r + 1) * cols];
             let vr = &var[r * cols..(r + 1) * cols];
-            let (s, vs) = kernels::dot_with_var(wr, vr, x);
+            let (s, vs) = kb.dot_with_var(wr, vr, x);
             y[r] = s;
             out_var[r] = vs;
         }
@@ -762,13 +768,15 @@ fn mvm_with_var(
             }
             let wr = &w[r * cols..(r + 1) * cols];
             let vr = &var[r * cols..(r + 1) * cols];
-            kernels::axpy_with_var(xr, wr, vr, y, out_var);
+            kb.axpy_with_var(xr, wr, vr, y, out_var);
         }
     }
 }
 
 /// MVM + variance for relative weight noise: var_i = σ²·Σ_j w_ij²·x_j².
+#[allow(clippy::too_many_arguments)]
 fn mvm_rel_var(
+    kb: Kb,
     w: &[f32],
     sigma: f32,
     #[allow(unused_variables)] rows: usize,
@@ -782,7 +790,7 @@ fn mvm_rel_var(
     if !transposed {
         for r in 0..rows {
             let wr = &w[r * cols..(r + 1) * cols];
-            let (s, vs) = kernels::dot_sq(wr, x);
+            let (s, vs) = kb.dot_sq(wr, x);
             y[r] = s;
             out_var[r] = s2 * vs;
         }
@@ -795,7 +803,7 @@ fn mvm_rel_var(
                 continue;
             }
             let wr = &w[r * cols..(r + 1) * cols];
-            kernels::axpy_sq(xr, s2, wr, y, out_var);
+            kb.axpy_sq(xr, s2, wr, y, out_var);
         }
     }
 }

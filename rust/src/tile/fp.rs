@@ -4,7 +4,7 @@
 //! All compute rides the register-tiled micro-kernels — the scalar paths
 //! via `Matrix::{matvec_into, tmatvec_into}` and the batched paths via
 //! [`mvm_plain_batch`] — so the FP baseline is as fast as the digital
-//! substrate allows (see `crate::tile::kernels`).
+//! substrate allows (see `crate::tile::backend`).
 
 use crate::tile::forward::mvm_plain_batch;
 use crate::tile::{ForwardCtx, Tile};

@@ -9,7 +9,7 @@
 //!   (`y[:, rows_r] = Σ_c tile_{r,c}(x[:, cols_c])`), through reusable
 //!   scratch buffers — the hot path performs no per-tile allocations and
 //!   the reduction rides the bounds-check-free
-//!   [`crate::tile::kernels::vadd`] micro-kernel
+//!   [`vadd`](crate::tile::backend::KernelBackend::vadd) micro-kernel
 //!   (via [`Matrix::add_col_block`]);
 //! * the digital bias and its gradient;
 //! * the x/d caches for the update step, **consume-once**: `update`

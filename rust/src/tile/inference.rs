@@ -25,8 +25,7 @@
 use crate::config::InferenceRPUConfig;
 use crate::noise::pcm::ProgrammedWeights;
 use crate::tile::forward::{
-    analog_mvm, analog_mvm_batch, analog_mvm_batch_rows, mvm_plain_batch, MvmBatchScratch,
-    MvmScratch,
+    analog_mvm, analog_mvm_batch, analog_mvm_batch_rows, MvmBatchScratch, MvmScratch,
 };
 use crate::tile::{ForwardCtx, ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
@@ -148,9 +147,14 @@ impl Tile for InferenceTile {
 
     fn backward(&mut self, d: &[f32], g: &mut [f32]) {
         // inference chips have no analog backward; provide the exact
-        // transpose for evaluation-time gradient probes.
+        // transpose for evaluation-time gradient probes, on the tile's
+        // configured kernel backend.
+        let kb = crate::tile::backend::resolve(
+            self.config.forward.backend,
+            self.config.forward.backend_fma,
+        );
         let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
-        crate::tile::forward::mvm_plain(w, self.out_size, self.in_size, d, g, true);
+        crate::tile::forward::mvm_plain_kb(kb, w, self.out_size, self.in_size, d, g, true);
         let s = self.out_scale * self.gdc_factor;
         if s != 1.0 {
             for v in g.iter_mut() {
@@ -184,8 +188,12 @@ impl Tile for InferenceTile {
         assert_eq!(d.cols(), self.out_size);
         assert_eq!(g.cols(), self.in_size);
         assert_eq!(d.rows(), g.rows());
+        let kb = crate::tile::backend::resolve(
+            self.config.forward.backend,
+            self.config.forward.backend_fma,
+        );
         let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
-        mvm_plain_batch(w, self.out_size, self.in_size, d, g, true);
+        crate::tile::forward::mvm_plain_batch_kb(kb, w, self.out_size, self.in_size, d, g, true);
         let s = self.out_scale * self.gdc_factor;
         if s != 1.0 {
             g.scale(s);

@@ -3,11 +3,11 @@
 //! and the digital periphery (output scaling).
 
 pub mod analog;
+pub mod backend;
 pub mod forward;
 pub mod fp;
 pub mod grid;
 pub mod inference;
-pub mod kernels;
 pub mod pulsed_ops;
 
 pub use analog::AnalogTile;
@@ -202,7 +202,7 @@ pub trait Tile: Send + Sync {
     /// Batched shared forward with one RNG stream **per row** — the
     /// serving entry point. Row `b` consumes exactly `rngs[b]`, so its
     /// output is bitwise independent of which other rows share the batch
-    /// (see `tile::kernels`' determinism contract). The default runs the
+    /// (see `tile::backend`'s determinism contract). The default runs the
     /// scalar shared pipeline per row; [`InferenceTile`] overrides it
     /// with the fused batched kernel.
     fn forward_batch_rows(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut ForwardCtx) {

@@ -36,7 +36,7 @@
 
 use crate::config::{PulseType, UpdateParameters};
 use crate::device::DeviceArray;
-use crate::tile::kernels;
+use crate::tile::backend;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_chunks_mut;
 
@@ -304,12 +304,15 @@ pub fn pulsed_update_sample(
 }
 
 /// Exact dense rank-1 update through the device's `set_weights` (clips at
-/// bounds). Used for `PulseType::None`. Rows go through the lane-blocked
-/// rank-1 [`kernels::axpy`] micro-kernel; the weight staging buffer is
-/// scratch reused across calls (no per-sample allocation).
+/// bounds). Used for `PulseType::None`. Rows go through the
+/// process-default backend's rank-1
+/// [`axpy`](crate::tile::backend::KernelBackend::axpy) micro-kernel; the
+/// weight staging buffer is scratch reused across calls (no per-sample
+/// allocation).
 fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32, w: &mut Vec<f32>) {
     let rows = device.rows();
     let cols = device.cols();
+    let kb = backend::global_default();
     w.clear();
     w.extend_from_slice(device.weights());
     for i in 0..rows {
@@ -317,7 +320,7 @@ fn apply_dense(device: &mut dyn DeviceArray, x: &[f32], d: &[f32], lr: f32, w: &
         if a == 0.0 {
             continue;
         }
-        kernels::axpy(a, x, &mut w[i * cols..(i + 1) * cols]);
+        kb.axpy(a, x, &mut w[i * cols..(i + 1) * cols]);
     }
     device.set_weights(w);
 }

@@ -4,13 +4,15 @@
 //! This is the digital compute substrate underneath the floating-point
 //! baseline tile and the digital parts of analog tiles (im2col, activations
 //! operate on flat buffers elsewhere). All inner loops route through the
-//! register-tiled micro-kernels in [`crate::tile::kernels`] (lane-blocked
-//! multi-accumulator dots, 4-row blocked rank-1 accumulation) — not
-//! BLAS-class, but enough that the *analog* pulsed update (the paper's
-//! hot path) dominates profiles for realistic tile sizes, matching the
-//! paper's RPUCUDA balance.
+//! process-default [`KernelBackend`](crate::tile::backend::KernelBackend)
+//! ([`backend::global_default`](crate::tile::backend::global_default):
+//! lane-blocked multi-accumulator dots, 4-row blocked rank-1
+//! accumulation, explicit SIMD where detected) — not BLAS-class, but
+//! enough that the *analog* pulsed update (the paper's hot path)
+//! dominates profiles for realistic tile sizes, matching the paper's
+//! RPUCUDA balance.
 
-use crate::tile::kernels;
+use crate::tile::backend;
 use crate::util::rng::Rng;
 
 /// Dense row-major matrix of f32.
@@ -124,9 +126,10 @@ impl Matrix {
     pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
+        let kb = backend::global_default();
         for (r, yr) in y.iter_mut().enumerate() {
             let row = &self.data[r * self.cols..(r + 1) * self.cols];
-            *yr = dot(row, x);
+            *yr = kb.dot(row, x);
         }
     }
 
@@ -144,6 +147,7 @@ impl Matrix {
         assert_eq!(d.len(), self.rows);
         assert_eq!(y.len(), self.cols);
         y.iter_mut().for_each(|v| *v = 0.0);
+        let kb = backend::global_default();
         let cols = self.cols;
         let quads = self.rows / 4 * 4;
         for r in (0..quads).step_by(4) {
@@ -151,7 +155,7 @@ impl Matrix {
             if a == [0.0; 4] {
                 continue;
             }
-            kernels::axpy4_acc(
+            kb.axpy4_acc(
                 a,
                 [
                     &self.data[r * cols..(r + 1) * cols],
@@ -164,7 +168,7 @@ impl Matrix {
         }
         for r in quads..self.rows {
             if d[r] != 0.0 {
-                axpy(d[r], &self.data[r * cols..(r + 1) * cols], y);
+                kb.axpy(d[r], &self.data[r * cols..(r + 1) * cols], y);
             }
         }
     }
@@ -186,6 +190,7 @@ impl Matrix {
         assert_eq!(c.cols, b.cols);
         c.data.iter_mut().for_each(|v| *v = 0.0);
         const KB: usize = 64; // multiple of 4: quads never straddle blocks
+        let kernel = backend::global_default();
         let n = b.cols;
         for kb in (0..self.cols).step_by(KB) {
             let kend = (kb + KB).min(self.cols);
@@ -198,7 +203,7 @@ impl Matrix {
                     if a == [0.0; 4] {
                         continue;
                     }
-                    kernels::axpy4_acc(
+                    kernel.axpy4_acc(
                         a,
                         [
                             &b.data[k * n..(k + 1) * n],
@@ -211,7 +216,7 @@ impl Matrix {
                 }
                 for k in kquad..kend {
                     if arow[k] != 0.0 {
-                        axpy(arow[k], &b.data[k * n..(k + 1) * n], crow);
+                        kernel.axpy(arow[k], &b.data[k * n..(k + 1) * n], crow);
                     }
                 }
             }
@@ -224,13 +229,14 @@ impl Matrix {
     pub fn ger(&mut self, alpha: f32, d: &[f32], x: &[f32]) {
         assert_eq!(d.len(), self.rows);
         assert_eq!(x.len(), self.cols);
+        let kb = backend::global_default();
         for r in 0..self.rows {
             let a = alpha * d[r];
             if a == 0.0 {
                 continue;
             }
             let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
-            axpy(a, x, row);
+            kb.axpy(a, x, row);
         }
     }
 
@@ -267,20 +273,23 @@ impl Matrix {
         assert_eq!(src.rows, self.rows);
         let len = src.cols;
         assert!(col0 + len <= self.cols, "column block out of range");
+        let kb = backend::global_default();
         for b in 0..self.rows {
             let dst = &mut self.data[b * self.cols + col0..b * self.cols + col0 + len];
-            kernels::vadd(dst, src.row(b));
+            kb.vadd(dst, src.row(b));
         }
     }
 
     /// Add a bias vector to every row: `self[b, :] += bias` — the shared
     /// digital bias epilogue of the tile-grid engine and the drift
-    /// evaluator, on the bounds-check-free [`kernels::vadd`] micro-kernel.
+    /// evaluator, on the backend's
+    /// [`vadd`](crate::tile::backend::KernelBackend::vadd) micro-kernel.
     pub fn add_row_bias(&mut self, bias: &[f32]) {
         assert_eq!(bias.len(), self.cols, "bias length must match columns");
+        let kb = backend::global_default();
         for b in 0..self.rows {
             let row = &mut self.data[b * self.cols..(b + 1) * self.cols];
-            kernels::vadd(row, bias);
+            kb.vadd(row, bias);
         }
     }
 
@@ -295,7 +304,7 @@ impl Matrix {
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.rows, other.rows);
         assert_eq!(self.cols, other.cols);
-        kernels::vadd(&mut self.data, &other.data);
+        backend::global_default().vadd(&mut self.data, &other.data);
     }
 
     /// self *= s (scalar).
@@ -332,9 +341,9 @@ impl Matrix {
 }
 
 // The GEMV/GEMM inner kernels live in the micro-kernel layer
-// (`tile::kernels`); re-exported here so the historical import path
-// (`util::matrix::{dot, axpy}`) keeps working.
-pub use crate::tile::kernels::{axpy, dot};
+// (`tile::backend`, tiled implementation); re-exported here so the
+// historical import path (`util::matrix::{dot, axpy}`) keeps working.
+pub use crate::tile::backend::{axpy, dot};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,350 @@
+//! Cross-backend kernel parity tests.
+//!
+//! Two distinct contracts are exercised (see `tile::backend`'s module
+//! docs):
+//!
+//! * **scalar vs tiled** — the single-accumulator reference and the
+//!   lane-blocked production kernels agree within rounding on every
+//!   kernel pair (bit-equal where the kernel is element-wise and has no
+//!   reduction, and on dyadic inputs where every summation order is
+//!   exact).
+//! * **simd vs tiled** — the explicit `std::arch` backend mirrors the
+//!   tiled reduction tree instruction for instruction, so it must be
+//!   **bitwise identical** on arbitrary inputs, including every edge
+//!   shape: `cols < 8`, `cols % 8 != 0`, unaligned slice starts,
+//!   `batch % 4 != 0`, and any `AIHWSIM_THREADS` setting. On hosts
+//!   without AVX2/NEON the simd backend dispatches to the tiled code, so
+//!   these tests pass trivially there (and actually bite on CI's x86-64
+//!   runners).
+
+use aihwsim::tile::backend::{KernelBackend, SCALAR, SIMD, SIMD_FMA, TILED};
+use aihwsim::tile::forward::mvm_plain_batch_kb;
+use aihwsim::util::matrix::Matrix;
+use aihwsim::util::proptest::{check, Gen};
+
+/// Dyadic values (multiples of 1/8 in [-1, 1]): products are multiples
+/// of 1/64 and partial sums stay far below 2¹⁸, so every summation order
+/// — and FMA contraction — is exact in f32.
+fn dyadic_vec(g: &mut Gen, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (g.usize_in(0, 16) as f32 - 8.0) / 8.0).collect()
+}
+
+/// A length that exercises the kernel edge cases: below one lane block
+/// (len < 8), off-lane remainders (len % 8 ≠ 0), and exact multiples.
+fn kernel_len(g: &mut Gen) -> usize {
+    match g.usize_in(0, 3) {
+        0 => g.usize_in(1, 7),
+        1 => g.usize_in(1, 40) * 8,
+        _ => g.usize_in(8, 320),
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ------------------------------------------------------ scalar vs tiled
+
+#[test]
+fn prop_scalar_twin_axpy_family_matches_tiled() {
+    // the rank-1 kernels are element-wise (no reduction across j), so the
+    // reference and tiled implementations must agree bit for bit; only
+    // axpy4_acc reduces across its four rows and is rounding-equal
+    check("scalar-twin-axpy-family", 50, |g| {
+        let n = kernel_len(g);
+        let w = g.vec_f32(n, -1.0, 1.0);
+        let v = g.vec_f32(n, 0.0, 0.1);
+        let a = [g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0)];
+        let base = g.vec_f32(n, -1.0, 1.0);
+
+        // axpy
+        let (mut ys, mut yt) = (base.clone(), base.clone());
+        SCALAR.axpy(a[0], &w, &mut ys);
+        TILED.axpy(a[0], &w, &mut yt);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("axpy diverges (n={n})"));
+        }
+
+        // axpy_x4: four rows, each bit-equal to a plain axpy
+        let mut rows_s = vec![base.clone(); 4];
+        let mut rows_t = vec![base.clone(); 4];
+        {
+            let [s0, s1, s2, s3] = &mut rows_s[..] else { unreachable!() };
+            SCALAR.axpy_x4(a, &w, [&mut s0[..], &mut s1[..], &mut s2[..], &mut s3[..]]);
+            let [t0, t1, t2, t3] = &mut rows_t[..] else { unreachable!() };
+            TILED.axpy_x4(a, &w, [&mut t0[..], &mut t1[..], &mut t2[..], &mut t3[..]]);
+        }
+        for s in 0..4 {
+            if bits(&rows_s[s]) != bits(&rows_t[s]) {
+                return Err(format!("axpy_x4 row {s} diverges (n={n})"));
+            }
+        }
+
+        // vadd
+        let (mut ys, mut yt) = (base.clone(), base.clone());
+        SCALAR.vadd(&mut ys, &w);
+        TILED.vadd(&mut yt, &w);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("vadd diverges (n={n})"));
+        }
+
+        // axpy_with_var / axpy_sq: element-wise fused updates
+        let (mut ys, mut vs) = (base.clone(), vec![0.0f32; n]);
+        let (mut yt, mut vt) = (base.clone(), vec![0.0f32; n]);
+        SCALAR.axpy_with_var(a[1], &w, &v, &mut ys, &mut vs);
+        TILED.axpy_with_var(a[1], &w, &v, &mut yt, &mut vt);
+        if bits(&ys) != bits(&yt) || bits(&vs) != bits(&vt) {
+            return Err(format!("axpy_with_var diverges (n={n})"));
+        }
+        let (mut ys, mut vs) = (base.clone(), vec![0.0f32; n]);
+        let (mut yt, mut vt) = (base.clone(), vec![0.0f32; n]);
+        SCALAR.axpy_sq(a[2], 0.25, &w, &mut ys, &mut vs);
+        TILED.axpy_sq(a[2], 0.25, &w, &mut yt, &mut vt);
+        if bits(&ys) != bits(&yt) || bits(&vs) != bits(&vt) {
+            return Err(format!("axpy_sq diverges (n={n})"));
+        }
+
+        // axpy4_acc: reduces across the four rows — rounding-equal on
+        // arbitrary inputs…
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| g.vec_f32(n, -1.0, 1.0)).collect();
+        let (mut ys, mut yt) = (base.clone(), base.clone());
+        SCALAR.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut ys);
+        TILED.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut yt);
+        for j in 0..n {
+            let mag: f32 = xs.iter().zip(a.iter()).map(|(x, ai)| (ai * x[j]).abs()).sum();
+            if (ys[j] - yt[j]).abs() > 1e-5 * (1.0 + mag) {
+                return Err(format!("axpy4_acc[{j}]: {} vs {} (n={n})", ys[j], yt[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scalar_twin_axpy4_acc_exact_on_dyadics() {
+    // …and bit-equal where every association is exact
+    check("scalar-twin-axpy4-dyadic", 30, |g| {
+        let n = kernel_len(g).min(128);
+        let a = [
+            (g.usize_in(0, 16) as f32 - 8.0) / 8.0,
+            (g.usize_in(0, 16) as f32 - 8.0) / 8.0,
+            (g.usize_in(0, 16) as f32 - 8.0) / 8.0,
+            (g.usize_in(0, 16) as f32 - 8.0) / 8.0,
+        ];
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| dyadic_vec(g, n)).collect();
+        let base = dyadic_vec(g, n);
+        let (mut ys, mut yt) = (base.clone(), base);
+        SCALAR.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut ys);
+        TILED.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut yt);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("axpy4_acc not exact on dyadics (n={n})"));
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------- simd vs tiled
+
+/// Compare every reduction kernel of two backends on the given slices,
+/// requiring bitwise identity.
+fn assert_reductions_bitwise(l: &dyn KernelBackend, r: &dyn KernelBackend, w: &[f32], v: &[f32], x: &[f32], xs: [&[f32]; 4]) -> Result<(), String> {
+    let n = w.len();
+    let (dl, dr) = (l.dot(w, x), r.dot(w, x));
+    if dl.to_bits() != dr.to_bits() {
+        return Err(format!("{}≠{} dot n={n}: {dl} vs {dr}", l.name(), r.name()));
+    }
+    let (ql, qr) = (l.dot_x4(w, xs), r.dot_x4(w, xs));
+    for s in 0..4 {
+        if ql[s].to_bits() != qr[s].to_bits() {
+            return Err(format!("{}≠{} dot_x4[{s}] n={n}", l.name(), r.name()));
+        }
+        // and dot_x4 must equal four dots, per backend
+        if ql[s].to_bits() != l.dot(w, xs[s]).to_bits() {
+            return Err(format!("{} dot_x4[{s}] != dot n={n}", l.name()));
+        }
+    }
+    let ((s1, v1), (s2, v2)) = (l.dot_with_var(w, v, x), r.dot_with_var(w, v, x));
+    if s1.to_bits() != s2.to_bits() || v1.to_bits() != v2.to_bits() {
+        return Err(format!("{}≠{} dot_with_var n={n}", l.name(), r.name()));
+    }
+    let ((s1, v1), (s2, v2)) = (l.dot_sq(w, x), r.dot_sq(w, x));
+    if s1.to_bits() != s2.to_bits() || v1.to_bits() != v2.to_bits() {
+        return Err(format!("{}≠{} dot_sq n={n}", l.name(), r.name()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_simd_dots_bitwise_identical_to_tiled() {
+    check("simd-dots-bitwise", 80, |g| {
+        let n = kernel_len(g);
+        let w = g.vec_f32(n, -1.0, 1.0);
+        let v = g.vec_f32(n, 0.0, 0.1);
+        let x = g.vec_f32(n, -1.0, 1.0);
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| g.vec_f32(n, -1.0, 1.0)).collect();
+        assert_reductions_bitwise(&SIMD, &TILED, &w, &v, &x, [&xs[0], &xs[1], &xs[2], &xs[3]])?;
+        // unaligned starts: intrinsic loads are `loadu`, so slicing off
+        // the first element must not change anything but the data
+        if n > 1 {
+            let off = [&xs[0][1..], &xs[1][1..], &xs[2][1..], &xs[3][1..]];
+            assert_reductions_bitwise(&SIMD, &TILED, &w[1..], &v[1..], &x[1..], off)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_axpy_family_bitwise_identical_to_tiled() {
+    check("simd-axpy-bitwise", 60, |g| {
+        let n = kernel_len(g);
+        let w = g.vec_f32(n, -1.0, 1.0);
+        let v = g.vec_f32(n, 0.0, 0.1);
+        let a = [g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0)];
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| g.vec_f32(n, -1.0, 1.0)).collect();
+        let base = g.vec_f32(n, -1.0, 1.0);
+
+        let (mut ys, mut yt) = (base.clone(), base.clone());
+        SIMD.axpy(a[0], &w, &mut ys);
+        TILED.axpy(a[0], &w, &mut yt);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("axpy diverges (n={n})"));
+        }
+
+        let mut rows_s = vec![base.clone(); 4];
+        let mut rows_t = vec![base.clone(); 4];
+        {
+            let [s0, s1, s2, s3] = &mut rows_s[..] else { unreachable!() };
+            SIMD.axpy_x4(a, &w, [&mut s0[..], &mut s1[..], &mut s2[..], &mut s3[..]]);
+            let [t0, t1, t2, t3] = &mut rows_t[..] else { unreachable!() };
+            TILED.axpy_x4(a, &w, [&mut t0[..], &mut t1[..], &mut t2[..], &mut t3[..]]);
+        }
+        for s in 0..4 {
+            if bits(&rows_s[s]) != bits(&rows_t[s]) {
+                return Err(format!("axpy_x4 row {s} diverges (n={n})"));
+            }
+        }
+
+        let (mut ys, mut yt) = (base.clone(), base.clone());
+        SIMD.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut ys);
+        TILED.axpy4_acc(a, [&xs[0], &xs[1], &xs[2], &xs[3]], &mut yt);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("axpy4_acc diverges (n={n})"));
+        }
+
+        let (mut ys, mut vs) = (base.clone(), vec![0.0f32; n]);
+        let (mut yt, mut vt) = (base.clone(), vec![0.0f32; n]);
+        SIMD.axpy_with_var(a[1], &w, &v, &mut ys, &mut vs);
+        TILED.axpy_with_var(a[1], &w, &v, &mut yt, &mut vt);
+        if bits(&ys) != bits(&yt) || bits(&vs) != bits(&vt) {
+            return Err(format!("axpy_with_var diverges (n={n})"));
+        }
+
+        let (mut ys, mut vs) = (base.clone(), vec![0.0f32; n]);
+        let (mut yt, mut vt) = (base.clone(), vec![0.0f32; n]);
+        SIMD.axpy_sq(a[2], 0.5, &w, &mut ys, &mut vs);
+        TILED.axpy_sq(a[2], 0.5, &w, &mut yt, &mut vt);
+        if bits(&ys) != bits(&yt) || bits(&vs) != bits(&vt) {
+            return Err(format!("axpy_sq diverges (n={n})"));
+        }
+
+        let (mut ys, mut yt) = (base.clone(), base);
+        SIMD.vadd(&mut ys, &w);
+        TILED.vadd(&mut yt, &w);
+        if bits(&ys) != bits(&yt) {
+            return Err(format!("vadd diverges (n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_dot_edge_lengths_bitwise() {
+    // explicit sweep of the lengths the tail/lane logic can get wrong
+    let mut rng = aihwsim::util::rng::Rng::new(99);
+    for n in [1usize, 2, 3, 5, 7, 8, 9, 15, 16, 17, 24, 31, 33, 63, 64, 65] {
+        let mut w = vec![0.0f32; n + 1];
+        let mut x = vec![0.0f32; n + 1];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        rng.fill_uniform(&mut x, -1.0, 1.0);
+        assert_eq!(
+            SIMD.dot(&w[..n], &x[..n]).to_bits(),
+            TILED.dot(&w[..n], &x[..n]).to_bits(),
+            "n={n}"
+        );
+        // unaligned start
+        assert_eq!(
+            SIMD.dot(&w[1..], &x[1..]).to_bits(),
+            TILED.dot(&w[1..], &x[1..]).to_bits(),
+            "n={n} off=1"
+        );
+    }
+}
+
+#[test]
+fn prop_simd_batch_mvm_bitwise_and_thread_invariant() {
+    // the full noise-free batch path: simd ≡ tiled bitwise on shapes with
+    // batch % 4 != 0, cols < 8, cols % 8 != 0, both orientations — and the
+    // result is invariant under AIHWSIM_THREADS (the determinism contract),
+    // checked at 1 and 4 workers
+    let saved = std::env::var("AIHWSIM_THREADS").ok();
+    check("simd-batch-mvm-bitwise", 25, |g| {
+        let rows = g.usize_in(1, 40);
+        let cols = kernel_len(g).min(96);
+        let batch = g.usize_in(1, 13);
+        let w = g.vec_f32(rows * cols, -1.0, 1.0);
+        for &transposed in &[false, true] {
+            let (in_size, out_size) = if transposed { (rows, cols) } else { (cols, rows) };
+            let x = Matrix::from_vec(batch, in_size, g.vec_f32(batch * in_size, -1.0, 1.0));
+            let mut outs: Vec<Vec<u32>> = Vec::new();
+            for threads in ["1", "4"] {
+                std::env::set_var("AIHWSIM_THREADS", threads);
+                let mut y_s = Matrix::zeros(batch, out_size);
+                let mut y_t = Matrix::zeros(batch, out_size);
+                mvm_plain_batch_kb(&SIMD, &w, rows, cols, &x, &mut y_s, transposed);
+                mvm_plain_batch_kb(&TILED, &w, rows, cols, &x, &mut y_t, transposed);
+                if bits(y_s.data()) != bits(y_t.data()) {
+                    return Err(format!(
+                        "simd != tiled: rows={rows} cols={cols} batch={batch} \
+                         t={transposed} threads={threads}"
+                    ));
+                }
+                outs.push(bits(y_s.data()));
+            }
+            if outs[0] != outs[1] {
+                return Err(format!(
+                    "thread-count changed the result: rows={rows} cols={cols} batch={batch} t={transposed}"
+                ));
+            }
+        }
+        Ok(())
+    });
+    match saved {
+        Some(v) => std::env::set_var("AIHWSIM_THREADS", v),
+        None => std::env::remove_var("AIHWSIM_THREADS"),
+    }
+}
+
+#[test]
+fn prop_simd_fma_exact_on_dyadics() {
+    // FMA contraction changes rounding in general, but on dyadic inputs
+    // every product and partial sum is exactly representable, so even the
+    // opt-in FMA variant must agree bit for bit with all other backends
+    check("simd-fma-dyadic-exact", 30, |g| {
+        let n = kernel_len(g).min(256);
+        let w = dyadic_vec(g, n);
+        let x = dyadic_vec(g, n);
+        let d_ref = SCALAR.dot(&w, &x);
+        for kb in [&TILED as &dyn KernelBackend, &SIMD, &SIMD_FMA] {
+            let d = kb.dot(&w, &x);
+            if d.to_bits() != d_ref.to_bits() {
+                return Err(format!("{} dot not exact on dyadics (n={n})", kb.name()));
+            }
+            let (s, vs) = kb.dot_sq(&w, &x);
+            let (rs, rvs) = SCALAR.dot_sq(&w, &x);
+            if s.to_bits() != rs.to_bits() || vs.to_bits() != rvs.to_bits() {
+                return Err(format!("{} dot_sq not exact on dyadics (n={n})", kb.name()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -8,7 +8,7 @@ use aihwsim::config::{
 use aihwsim::device::{build, SequentialRef};
 use aihwsim::noise::pcm::{PCMNoiseParams, ProgrammedWeights};
 use aihwsim::tile::forward::{analog_mvm, mvm_plain, mvm_plain_batch, MvmScratch};
-use aihwsim::tile::kernels;
+use aihwsim::tile::backend as kernels;
 use aihwsim::tile::pulsed_ops::{pulsed_update_batch, pulsed_update_sample, UpdateScratch};
 use aihwsim::tile::{AnalogTile, Tile};
 use aihwsim::util::matrix::Matrix;
