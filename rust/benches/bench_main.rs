@@ -27,6 +27,7 @@ use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
 use aihwsim::coordinator::trainer::{train_classifier, TrainConfig};
 use aihwsim::data::synthetic_images;
 use aihwsim::device::build;
+use aihwsim::faults::FaultModel;
 use aihwsim::nn::sequential::{lenet, mlp, Backend};
 use aihwsim::nn::Module;
 #[cfg(feature = "pjrt")]
@@ -679,6 +680,41 @@ fn bench_drift_eval(csv: &mut CsvLogger) {
     println!("  wrote BENCH_inference.json");
 }
 
+// ------------------------------------------------ §Faults programming
+
+/// Programming cost of the fault/verify path (DESIGN.md "Fault
+/// injection & resilience"): legacy single-shot vs 3-round
+/// program-and-verify vs verify with 1% stuck cells, on a 256² grid
+/// split into 2×2 shards. Each timed rep reprograms the same converted
+/// grid (defect maps resample per instance). Trajectory rows in
+/// results/bench.csv only — the accuracy observable lives in
+/// BENCH_faults.json (CLI `fault-sweep`).
+fn bench_program_verify(csv: &mut CsvLogger) {
+    let n = 256usize;
+    let mut cfg = RPUConfig::default();
+    cfg.mapping = MappingParameter::max_size(n / 2);
+    let variants: [(&str, &str, f64, usize); 3] = [
+        ("program_single_shot", "single-shot, healthy", 0.0, 1),
+        ("program_verify3", "verify x3, healthy", 0.0, 3),
+        ("program_verify3_faulty", "verify x3, 1% stuck", 0.01, 3),
+    ];
+    println!("  {:>22} {:>12}", "variant", "ms/program");
+    for (slug, label, rate, iters) in variants {
+        let mut icfg = InferenceRPUConfig::default();
+        icfg.faults = FaultModel::stuck(rate);
+        icfg.programming.max_program_iter = iters;
+        let mut rng = Rng::new(31);
+        let mut grid = TileGrid::analog(n, n, true, cfg.clone(), &mut rng);
+        grid.convert_to_inference(&icfg, &mut rng);
+        let t = time_median(5, || {
+            grid.program();
+        });
+        println!("  {label:>22} {:>12.2}", t * 1e3);
+        csv.row_str(&[slug.into(), format!("{:.3}", t * 1e3), String::new(), String::new()])
+            .unwrap();
+    }
+}
+
 // --------------------------------------------------------------- Eq. 2
 
 fn bench_pulsed_update(csv: &mut CsvLogger) {
@@ -782,6 +818,9 @@ fn main() {
     }
     if section("Eq5_drift_eval (time x repeat engine, threads 1 vs N)", &filter) {
         bench_drift_eval(&mut csv);
+    }
+    if section("Eq5b_program_verify (fault/verify programming cost)", &filter) {
+        bench_program_verify(&mut csv);
     }
     #[cfg(feature = "pjrt")]
     if section("E7_pjrt_step", &filter) {

@@ -156,6 +156,36 @@ impl IOParameters {
             (1.0 / self.out_res).round() as u32 + 1
         }
     }
+
+    /// Reject parameter combinations that would silently corrupt a
+    /// simulation instead of configuring one: NaN or negative noise
+    /// scales and resolutions, non-positive bounds. The config loader
+    /// calls this on every parsed `forward`/`backward` section.
+    pub fn validate(&self) -> Result<(), String> {
+        let nonneg = |name: &str, v: f32| {
+            if v.is_finite() && v >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("io.{name}: must be finite and >= 0, got {v}"))
+            }
+        };
+        nonneg("inp_noise", self.inp_noise)?;
+        nonneg("out_noise", self.out_noise)?;
+        nonneg("w_noise", self.w_noise)?;
+        nonneg("inp_res", self.inp_res)?;
+        nonneg("out_res", self.out_res)?;
+        let positive = |name: &str, v: f32| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("io.{name}: must be finite and > 0, got {v}"))
+            }
+        };
+        positive("inp_bound", self.inp_bound)?;
+        positive("out_bound", self.out_bound)?;
+        positive("nm_constant", self.nm_constant)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -180,5 +210,22 @@ mod tests {
         let io = IOParameters { inp_res: 0.0, out_res: 0.0, ..Default::default() };
         assert_eq!(io.dac_levels(), 0);
         assert_eq!(io.adc_levels(), 0);
+    }
+
+    #[test]
+    fn validate_rejects_corrupting_parameters() {
+        assert!(IOParameters::default().validate().is_ok());
+        assert!(IOParameters::perfect().validate().is_ok());
+        assert!(IOParameters::inference_default().validate().is_ok());
+        let cases: [(&str, IOParameters); 4] = [
+            ("negative noise", IOParameters { out_noise: -0.1, ..Default::default() }),
+            ("NaN noise", IOParameters { w_noise: f32::NAN, ..Default::default() }),
+            ("zero bound", IOParameters { inp_bound: 0.0, ..Default::default() }),
+            ("negative res", IOParameters { inp_res: -1.0, ..Default::default() }),
+        ];
+        for (what, io) in cases {
+            let err = io.validate().expect_err(what);
+            assert!(err.starts_with("io."), "{what}: {err}");
+        }
     }
 }

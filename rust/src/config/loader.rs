@@ -31,6 +31,7 @@ use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType}
 use crate::tile::backend::ForwardBackend;
 use super::update::{PulseType, UpdateParameters};
 use super::{presets, InferenceRPUConfig, RPUConfig, WeightModifier};
+use crate::faults::{FaultModel, ProgrammingParams};
 use crate::noise::pcm::PCMNoiseParams;
 use crate::serve::ServeOptions;
 use crate::util::json::Json;
@@ -252,6 +253,7 @@ fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
         io.backend = ForwardBackend::parse(v).unwrap_or(ForwardBackend::Auto);
     }
     io.backend_fma = j.bool_or("backend_fma", io.backend_fma);
+    io.validate()?;
     Ok(io)
 }
 
@@ -318,6 +320,12 @@ pub fn inference_options_from_json(j: &Json) -> Result<InferenceOptions, String>
         j.bool_or("drift_compensation", opts.config.drift_compensation);
     opts.config.weight_scaling_omega =
         j.f64_or("weight_scaling_omega", opts.config.weight_scaling_omega as f64) as f32;
+    if let Some(f) = j.get("faults") {
+        opts.config.faults = faults_from_json(f)?;
+    }
+    if let Some(p) = j.get("programming") {
+        opts.config.programming = programming_from_json(p)?;
+    }
     if let Some(ts) = j.get("t_inference") {
         let ts = ts.to_f32_vec().ok_or("t_inference: must be an array of seconds")?;
         if ts.is_empty() {
@@ -335,7 +343,45 @@ pub fn inference_options_from_json(j: &Json) -> Result<InferenceOptions, String>
         }
         opts.n_repeats = n;
     }
+    opts.config.validate()?;
     Ok(opts)
+}
+
+/// Parse the `faults` section: per-tile hard-fault probabilities (see
+/// [`crate::faults::FaultModel`]). All fields optional, defaulting to a
+/// healthy (all-zero) model; probabilities are validated on the spot.
+fn faults_from_json(j: &Json) -> Result<FaultModel, String> {
+    let d = FaultModel::default();
+    let f = FaultModel {
+        p_stuck_gmin: j.f64_or("p_stuck_gmin", d.p_stuck_gmin),
+        p_stuck_gmax: j.f64_or("p_stuck_gmax", d.p_stuck_gmax),
+        p_stuck_value: j.f64_or("p_stuck_value", d.p_stuck_value),
+        stuck_value: j.f64_or("stuck_value", d.stuck_value as f64) as f32,
+        p_dead_row: j.f64_or("p_dead_row", d.p_dead_row),
+        p_dead_col: j.f64_or("p_dead_col", d.p_dead_col),
+    };
+    f.validate()?;
+    Ok(f)
+}
+
+/// Parse the `programming` section: the program-and-verify loop knobs
+/// (see [`crate::faults::ProgrammingParams`]). Defaults reproduce the
+/// legacy single-shot programming bit-for-bit.
+fn programming_from_json(j: &Json) -> Result<ProgrammingParams, String> {
+    let d = ProgrammingParams::default();
+    let p = ProgrammingParams {
+        max_program_iter: match j.get("max_program_iter") {
+            None => d.max_program_iter,
+            Some(v) => v
+                .as_usize()
+                .ok_or("programming.max_program_iter: must be a positive integer")?,
+        },
+        tolerance: j.f64_or("tolerance", d.tolerance as f64) as f32,
+        backoff: j.f64_or("backoff", d.backoff as f64) as f32,
+        alpha_rescale: j.bool_or("alpha_rescale", d.alpha_rescale),
+    };
+    p.validate()?;
+    Ok(p)
 }
 
 // ----------------------------------------------------- serving options
@@ -363,6 +409,14 @@ pub fn serving_options_from_json(j: &Json) -> Result<ServeOptions, String> {
         queue_depth: match j.get("queue_depth") {
             None => d.queue_depth,
             Some(v) => v.as_usize().ok_or("serving.queue_depth: must be a positive integer")?,
+        },
+        request_timeout_us: match j.get("request_timeout_us") {
+            None => d.request_timeout_us,
+            Some(v) => v
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                .map(|x| x as u64)
+                .ok_or("serving.request_timeout_us: must be a non-negative integer (µs, 0 = off)")?,
         },
     };
     opts.validate()?;
@@ -395,8 +449,20 @@ fn pcm_noise_from_json(j: &Json) -> Result<PCMNoiseParams, String> {
         t0: j.f64_or("t0", d.t0 as f64) as f32,
         t_read: j.f64_or("t_read", d.t_read as f64) as f32,
     };
-    if p.g_max <= 0.0 {
-        return Err("noise_model.g_max: must be positive".into());
+    if !p.g_max.is_finite() || p.g_max <= 0.0 {
+        return Err(format!("noise_model.g_max: must be finite and positive, got {}", p.g_max));
+    }
+    // NaN or negative scale factors silently corrupt every downstream
+    // statistic — reject them with the offending value in the message
+    for (name, v) in [
+        ("prog_noise_scale", p.prog_noise_scale),
+        ("read_noise_scale", p.read_noise_scale),
+        ("drift_scale", p.drift_scale),
+        ("drift_nu_dtod", p.drift_nu_dtod),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("noise_model.{name}: must be finite and >= 0, got {v}"));
+        }
     }
     if p.drift_nu_min > p.drift_nu_max {
         return Err("noise_model: drift_nu_min must not exceed drift_nu_max".into());
@@ -654,8 +720,73 @@ mod tests {
             r#"{"noise_model": {"g_max": -1.0}}"#,
             r#"{"noise_model": {"prog_coeff": [1.0, 2.0]}}"#,
             r#"{"noise_model": {"drift_nu_min": 0.5, "drift_nu_max": 0.1}}"#,
+            r#"{"noise_model": {"prog_noise_scale": -1.0}}"#,
+            r#"{"noise_model": {"read_noise_scale": -0.5}}"#,
+            r#"{"noise_model": {"drift_scale": -2.0}}"#,
+            r#"{"forward": {"out_noise": -0.1}}"#,
+            r#"{"forward": {"inp_bound": 0.0}}"#,
         ] {
             assert!(inference_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn faults_and_programming_parsing() {
+        // absent sections → healthy defaults (zero faults, single-shot)
+        let opts = inference_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(opts.config.faults.is_zero());
+        assert_eq!(opts.config.programming, ProgrammingParams::default());
+        // full document, nested under "inference" like the CLI sees it
+        let j = Json::parse(
+            r#"{"inference": {
+                "faults": {"p_stuck_gmin": 0.01, "p_stuck_gmax": 0.005,
+                           "p_stuck_value": 0.002, "stuck_value": 12.5,
+                           "p_dead_row": 0.001, "p_dead_col": 0.001},
+                "programming": {"max_program_iter": 8, "tolerance": 0.01,
+                                "backoff": 0.6, "alpha_rescale": true}
+            }}"#,
+        )
+        .unwrap();
+        let opts = inference_options_from_json(&j).unwrap();
+        assert!((opts.config.faults.p_stuck_gmin - 0.01).abs() < 1e-12);
+        assert!((opts.config.faults.p_stuck_gmax - 0.005).abs() < 1e-12);
+        assert!((opts.config.faults.stuck_value - 12.5).abs() < 1e-6);
+        assert!((opts.config.faults.p_dead_row - 0.001).abs() < 1e-12);
+        assert_eq!(opts.config.programming.max_program_iter, 8);
+        assert!((opts.config.programming.tolerance - 0.01).abs() < 1e-6);
+        assert!((opts.config.programming.backoff - 0.6).abs() < 1e-6);
+        assert!(opts.config.programming.alpha_rescale);
+    }
+
+    #[test]
+    fn faults_and_programming_bad_inputs_error() {
+        for bad in [
+            r#"{"faults": {"p_stuck_gmin": -0.1}}"#,
+            r#"{"faults": {"p_stuck_gmax": 1.5}}"#,
+            r#"{"faults": {"p_dead_row": 2.0}}"#,
+            r#"{"faults": {"p_stuck_gmin": 0.6, "p_stuck_gmax": 0.6}}"#,
+            r#"{"faults": {"stuck_value": -1.0}}"#,
+            r#"{"programming": {"max_program_iter": 0}}"#,
+            r#"{"programming": {"tolerance": -0.01}}"#,
+            r#"{"programming": {"backoff": 0.0}}"#,
+        ] {
+            assert!(inference_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serving_timeout_parsing() {
+        // absent → 0 (deadline off)
+        let opts = serving_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(opts.request_timeout_us, 0);
+        let j =
+            Json::parse(r#"{"serving": {"request_timeout_us": 250000}}"#).unwrap();
+        assert_eq!(serving_options_from_json(&j).unwrap().request_timeout_us, 250_000);
+        for bad in [
+            r#"{"serving": {"request_timeout_us": -1}}"#,
+            r#"{"serving": {"request_timeout_us": 0.5}}"#,
+        ] {
+            assert!(serving_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
     }
 }

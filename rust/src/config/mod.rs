@@ -16,6 +16,7 @@ pub use crate::tile::backend::ForwardBackend;
 pub use io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
 pub use update::{PulseType, UpdateParameters};
 
+use crate::faults::{FaultModel, ProgrammingParams};
 use crate::noise::pcm::PCMNoiseParams;
 
 /// Weight-noise injection used during hardware-aware training (paper §5):
@@ -150,6 +151,13 @@ pub struct InferenceRPUConfig {
     pub drift_compensation: bool,
     pub modifier: WeightModifier,
     pub weight_scaling_omega: f32,
+    /// Hard-fault injection model (defaults to a healthy array; see
+    /// [`crate::faults`]). Sampled into a per-tile defect map at
+    /// `program()` time.
+    pub faults: FaultModel,
+    /// Program-and-verify loop parameters (default: single-shot write,
+    /// bit-identical to the legacy programming path).
+    pub programming: ProgrammingParams,
 }
 
 impl Default for InferenceRPUConfig {
@@ -160,7 +168,17 @@ impl Default for InferenceRPUConfig {
             drift_compensation: true,
             modifier: WeightModifier::None,
             weight_scaling_omega: 1.0,
+            faults: FaultModel::default(),
+            programming: ProgrammingParams::default(),
         }
+    }
+}
+
+impl InferenceRPUConfig {
+    /// Validate the fault and programming sub-configurations.
+    pub fn validate(&self) -> Result<(), String> {
+        self.faults.validate()?;
+        self.programming.validate()
     }
 }
 

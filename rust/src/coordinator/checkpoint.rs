@@ -232,7 +232,35 @@ fn splits_from_json(j: &Json, what: &str) -> Result<Vec<(usize, usize)>, String>
     Ok(out)
 }
 
+/// FNV-1a 64 digest of a grid checkpoint's payload: every shard's f32
+/// bit patterns in (layer, shard, row-major) order, followed by each
+/// layer's bias. Bit patterns — not float values — so the digest pins
+/// the exact stored weights, and any truncated, reordered, or corrupted
+/// value changes it.
+fn grids_checksum(layers: &GridLayers) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u32| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for l in layers {
+        for s in &l.shards {
+            for v in s.data() {
+                eat(v.to_bits());
+            }
+        }
+        for v in &l.bias {
+            eat(v.to_bits());
+        }
+    }
+    h
+}
+
 /// Serialize grid layers to a JSON document (`aihwsim-checkpoint-v2-grid`).
+/// The document carries a payload `checksum` (see [`grids_checksum`])
+/// that [`grids_from_json`] verifies on load.
 pub fn grids_to_json(layers: &GridLayers) -> Json {
     let items: Vec<Json> = layers
         .iter()
@@ -252,11 +280,20 @@ pub fn grids_to_json(layers: &GridLayers) -> Json {
         .collect();
     let mut top = BTreeMap::new();
     top.insert("format".to_string(), Json::str("aihwsim-checkpoint-v2-grid"));
+    // hex string, not a JSON number: a u64 digest does not survive the
+    // f64 round-trip a numeric field would go through
+    top.insert(
+        "checksum".to_string(),
+        Json::str(format!("{:016x}", grids_checksum(layers))),
+    );
     top.insert("layers".to_string(), Json::Arr(items));
     Json::Obj(top)
 }
 
-/// Parse grid layers back from JSON.
+/// Parse grid layers back from JSON, verifying shapes and (when present)
+/// the payload checksum — a corrupt or truncated file is a clear error,
+/// never silently-garbage weights. Checkpoints written before the
+/// checksum existed load unverified.
 pub fn grids_from_json(j: &Json) -> Result<GridLayers, String> {
     if j.str_or("format", "") != "aihwsim-checkpoint-v2-grid" {
         return Err("not an aihwsim grid checkpoint".into());
@@ -312,6 +349,15 @@ pub fn grids_from_json(j: &Json) -> Result<GridLayers, String> {
         let bias =
             item.get("bias").and_then(Json::to_f32_vec).ok_or(format!("layer {i}: bias"))?;
         out.push(GridLayer { out_features, in_features, row_splits, col_splits, shards, bias });
+    }
+    if let Some(stored) = j.get("checksum").and_then(Json::as_str) {
+        let computed = format!("{:016x}", grids_checksum(&out));
+        if stored != computed {
+            return Err(format!(
+                "checksum mismatch: file says {stored}, payload hashes to {computed} \
+                 (corrupt or truncated checkpoint)"
+            ));
+        }
     }
     Ok(out)
 }
@@ -500,6 +546,45 @@ mod tests {
         let mut single = TileGrid::analog(3, 4, false, RPUConfig::perfect(), &mut Rng::new(7));
         let m = GridLayer::from_grid(&mut single).mapping();
         assert_eq!((m.max_input_size, m.max_output_size), (0, 0));
+    }
+
+    #[test]
+    fn grid_checkpoint_checksum_catches_corruption() {
+        use crate::config::{MappingParameter, RPUConfig};
+        let mut cfg = RPUConfig::perfect();
+        cfg.mapping = MappingParameter::max_size(4);
+        let mut grid = TileGrid::analog(6, 10, true, cfg, &mut Rng::new(21));
+        grid.set_weights(&Matrix::rand_uniform(6, 10, -0.6, 0.6, &mut Rng::new(22)));
+        let layers = vec![GridLayer::from_grid(&mut grid)];
+        let text = grids_to_json(&layers).to_string();
+        let cs = format!("{:016x}", grids_checksum(&layers));
+        assert!(text.contains(&cs), "document must embed the payload digest");
+        // intact document verifies
+        assert!(grids_from_json(&Json::parse(&text).unwrap()).is_ok());
+        // swapped digest → clear error, not garbage weights
+        let tampered = text.replace(&cs, "deadbeefdeadbeef");
+        let err = grids_from_json(&Json::parse(&tampered).unwrap()).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // pre-checksum (v2) documents still load, unverified
+        match Json::parse(&text).unwrap() {
+            Json::Obj(mut m) => {
+                m.remove("checksum");
+                let back = grids_from_json(&Json::Obj(m)).unwrap();
+                assert_eq!(back[0].assemble().0, layers[0].assemble().0);
+            }
+            _ => panic!("checkpoint must be a JSON object"),
+        }
+        // changed payload under the original digest → caught
+        let mut other = layers.clone();
+        other[0].bias[0] += 1.0;
+        let forged = {
+            let mut doc = grids_to_json(&other);
+            if let Json::Obj(m) = &mut doc {
+                m.insert("checksum".to_string(), Json::str(cs));
+            }
+            doc.to_string()
+        };
+        assert!(grids_from_json(&Json::parse(&forged).unwrap()).is_err());
     }
 
     #[test]

@@ -221,6 +221,41 @@ where
     DriftEvalReport { points }
 }
 
+/// The fault-rate axis on top of [`drift_evaluate`]: run the full
+/// (time × repeat) sweep once per fault rate and return
+/// `(rate, report)` pairs — the accuracy-vs-fault-rate grid behind the
+/// CLI `fault-sweep` mode.
+///
+/// `build(seed, rate)` must return a converted, un-programmed network
+/// whose inference config injects hard faults at `rate` (e.g. via
+/// [`crate::faults::FaultModel::stuck`]); everything else follows the
+/// [`drift_evaluate`] contract. Rates run serially (each inner sweep is
+/// already cell-parallel) and every rate re-derives the same repeat
+/// seeds from `cfg.seed`, so rate `0.0` reproduces the plain
+/// [`drift_evaluate`] numbers bit-for-bit and the rate axis isolates
+/// the fault effect from programming-instance variation.
+pub fn fault_sweep<F>(
+    build: F,
+    ds: &Dataset,
+    rates: &[f64],
+    cfg: &DriftEvalConfig,
+) -> Vec<(f64, DriftEvalReport)>
+where
+    F: Fn(u64, f64) -> Sequential + Sync,
+{
+    assert!(!rates.is_empty(), "empty fault-rate schedule");
+    for &rate in rates {
+        assert!(
+            rate.is_finite() && (0.0..=1.0).contains(&rate),
+            "fault rate must be a probability in [0, 1], got {rate}"
+        );
+    }
+    rates
+        .iter()
+        .map(|&rate| (rate, drift_evaluate(|seed| build(seed, rate), ds, cfg)))
+        .collect()
+}
+
 // -------------------------------------------------- checkpoint rebuilds
 
 /// Rebuild the `--arch mlp` topology (Tanh hidden units, LogSoftmax head)
@@ -542,5 +577,34 @@ mod tests {
         let w0 = weights_of(repeat_seed(cfg.seed, 0));
         let w1 = weights_of(repeat_seed(cfg.seed, 1));
         assert_ne!(w0.data(), w1.data(), "repeat programming instances must differ");
+    }
+
+    #[test]
+    fn fault_sweep_degrades_gracefully_and_pins_zero_rate() {
+        use crate::faults::FaultModel;
+        let mut rng = Rng::new(16);
+        let (layers, ds) = trained_layers(&mut rng);
+        let build = |seed: u64, rate: f64| {
+            let mut icfg = InferenceRPUConfig::default();
+            icfg.faults = FaultModel::stuck(rate);
+            let mut r = Rng::new(seed);
+            let mut net = mlp_from_layers(&layers, &MappingParameter::unlimited(), &mut r);
+            net.convert_to_inference(&icfg, &mut r);
+            net
+        };
+        let cfg = DriftEvalConfig { times: vec![25.0], n_repeats: 2, batch: 32, seed: 4321 };
+        let sweep = fault_sweep(&build, &ds, &[0.0, 0.02, 0.5], &cfg);
+        assert_eq!(sweep.len(), 3);
+        // rate 0 reproduces the plain drift_evaluate numbers bit-for-bit
+        let plain = drift_evaluate(|seed| build(seed, 0.0), &ds, &cfg);
+        assert_eq!(sweep[0].1.points[0].acc, plain.points[0].acc);
+        // graceful degradation: a 2% defect rate stays usable, half-dead
+        // crosspoints do real damage
+        let a0 = sweep[0].1.points[0].acc_mean;
+        let a2 = sweep[1].1.points[0].acc_mean;
+        let a50 = sweep[2].1.points[0].acc_mean;
+        assert!(a0 > 0.8, "healthy accuracy {a0}");
+        assert!(a2 > a0 - 0.25, "2% faults must degrade gracefully: {a0} -> {a2}");
+        assert!(a50 < a0, "50% faults must hurt: {a0} -> {a50}");
     }
 }

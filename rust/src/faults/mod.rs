@@ -1,0 +1,402 @@
+//! Hard-fault injection for analog crossbars: device defect maps and
+//! program-and-verify parameters.
+//!
+//! The paper's §5 inference flow models *soft* non-idealities
+//! (programming noise, drift, read noise); real arrays additionally
+//! suffer *hard* faults — crosspoints stuck at a conductance, and whole
+//! rows/columns killed by line failures. This module provides:
+//!
+//! * [`FaultModel`] — JSON-configurable per-tile fault probabilities,
+//! * [`DefectMap`] — a concrete per-crosspoint fault assignment sampled
+//!   deterministically from a split RNG stream at program time,
+//! * [`FaultStats`] — mergeable defect counters that `TileGrid`
+//!   aggregates alongside conductance statistics,
+//! * [`ProgrammingParams`] — the iterative write→read→compare
+//!   (program-and-verify) loop configuration used by
+//!   `InferenceTile::program`.
+//!
+//! Determinism contract: [`DefectMap::sample`] draws a fixed number of
+//! RNG values that depends only on the tile shape (`rows + cols` line
+//! draws followed by one draw per crosspoint in row-major order), so a
+//! map is bit-reproducible from its stream at any `AIHWSIM_THREADS`.
+
+use crate::util::rng::Rng;
+
+/// One crosspoint's hard-fault class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CellFault {
+    /// Healthy device: programs and drifts normally.
+    Ok,
+    /// Stuck at minimum conductance — the pair reads as weight 0 and
+    /// never drifts (also the effect of a dead row/column line).
+    StuckGmin,
+    /// Stuck at maximum conductance — the pair reads as weight +1
+    /// (g⁺ pinned to `g_max`, g⁻ at minimum).
+    StuckGmax,
+    /// Stuck at an arbitrary conductance in µS on the positive device.
+    StuckValue(f32),
+}
+
+/// Per-tile hard-fault probabilities (all default to 0 = healthy array).
+///
+/// Cell-level probabilities are exclusive per crosspoint (their sum must
+/// be ≤ 1); line-level probabilities apply per row/column and override
+/// cell faults with [`CellFault::StuckGmin`] (an open line conducts
+/// nothing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Probability a crosspoint is stuck at minimum conductance.
+    pub p_stuck_gmin: f64,
+    /// Probability a crosspoint is stuck at maximum conductance.
+    pub p_stuck_gmax: f64,
+    /// Probability a crosspoint is stuck at [`FaultModel::stuck_value`].
+    pub p_stuck_value: f64,
+    /// Conductance (µS) used by `p_stuck_value` faults.
+    pub stuck_value: f32,
+    /// Probability an entire output row is dead (line failure).
+    pub p_dead_row: f64,
+    /// Probability an entire input column is dead (line failure).
+    pub p_dead_col: f64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            p_stuck_gmin: 0.0,
+            p_stuck_gmax: 0.0,
+            p_stuck_value: 0.0,
+            stuck_value: 0.0,
+            p_dead_row: 0.0,
+            p_dead_col: 0.0,
+        }
+    }
+}
+
+impl FaultModel {
+    /// A symmetric stuck-at model with total crosspoint fault rate
+    /// `rate` (half stuck-at-gmin, half stuck-at-gmax) and no line
+    /// faults — the axis used by the CLI `fault-sweep` grid.
+    pub fn stuck(rate: f64) -> Self {
+        FaultModel { p_stuck_gmin: rate * 0.5, p_stuck_gmax: rate * 0.5, ..Default::default() }
+    }
+
+    /// True when every probability is zero — `InferenceTile::program`
+    /// then skips defect-map sampling entirely (no RNG draws), keeping
+    /// the legacy programming stream bit-identical.
+    pub fn is_zero(&self) -> bool {
+        self.p_stuck_gmin == 0.0
+            && self.p_stuck_gmax == 0.0
+            && self.p_stuck_value == 0.0
+            && self.p_dead_row == 0.0
+            && self.p_dead_col == 0.0
+    }
+
+    /// Validate all probabilities (finite, within [0, 1], cell-level sum
+    /// ≤ 1) and the stuck conductance (finite, ≥ 0).
+    pub fn validate(&self) -> Result<(), String> {
+        let probs = [
+            ("faults.p_stuck_gmin", self.p_stuck_gmin),
+            ("faults.p_stuck_gmax", self.p_stuck_gmax),
+            ("faults.p_stuck_value", self.p_stuck_value),
+            ("faults.p_dead_row", self.p_dead_row),
+            ("faults.p_dead_col", self.p_dead_col),
+        ];
+        for (name, p) in probs {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be a probability in [0, 1], got {p}"));
+            }
+        }
+        let cell_sum = self.p_stuck_gmin + self.p_stuck_gmax + self.p_stuck_value;
+        if cell_sum > 1.0 {
+            return Err(format!(
+                "faults: cell fault probabilities sum to {cell_sum} > 1 \
+                 (p_stuck_gmin + p_stuck_gmax + p_stuck_value must be <= 1)"
+            ));
+        }
+        if !self.stuck_value.is_finite() || self.stuck_value < 0.0 {
+            return Err(format!(
+                "faults.stuck_value must be a finite conductance >= 0 uS, got {}",
+                self.stuck_value
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Mergeable defect counters for one tile (or, merged, one grid/layer).
+///
+/// `n_stuck_*` count *crosspoints* by their final fault class — cells on
+/// a dead line are counted as stuck-at-gmin — while `n_dead_rows` /
+/// `n_dead_cols` count the failed *lines* themselves.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Total crosspoints covered by these counters.
+    pub n_cells: usize,
+    /// Crosspoints whose final class is [`CellFault::StuckGmin`].
+    pub n_stuck_gmin: usize,
+    /// Crosspoints whose final class is [`CellFault::StuckGmax`].
+    pub n_stuck_gmax: usize,
+    /// Crosspoints whose final class is [`CellFault::StuckValue`].
+    pub n_stuck_value: usize,
+    /// Dead output rows (line failures).
+    pub n_dead_rows: usize,
+    /// Dead input columns (line failures).
+    pub n_dead_cols: usize,
+}
+
+impl FaultStats {
+    /// Counters for a healthy region of `n_cells` crosspoints.
+    pub fn healthy(n_cells: usize) -> Self {
+        FaultStats { n_cells, ..Default::default() }
+    }
+
+    /// Total defective crosspoints (any non-`Ok` class).
+    pub fn n_defective(&self) -> usize {
+        self.n_stuck_gmin + self.n_stuck_gmax + self.n_stuck_value
+    }
+
+    /// Defective fraction of all covered crosspoints (0 when empty).
+    pub fn fraction_defective(&self) -> f64 {
+        if self.n_cells == 0 {
+            0.0
+        } else {
+            self.n_defective() as f64 / self.n_cells as f64
+        }
+    }
+
+    /// Accumulate another region's counters (grid/layer aggregation).
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.n_cells += other.n_cells;
+        self.n_stuck_gmin += other.n_stuck_gmin;
+        self.n_stuck_gmax += other.n_stuck_gmax;
+        self.n_stuck_value += other.n_stuck_value;
+        self.n_dead_rows += other.n_dead_rows;
+        self.n_dead_cols += other.n_dead_cols;
+    }
+}
+
+/// A sampled per-crosspoint fault assignment for one `rows × cols` tile
+/// (row-major, matching the tile's weight layout).
+#[derive(Clone, Debug)]
+pub struct DefectMap {
+    rows: usize,
+    cols: usize,
+    faults: Vec<CellFault>,
+    stats: FaultStats,
+}
+
+impl DefectMap {
+    /// Sample a map from `model` using `rng` (typically a dedicated
+    /// `split()` of the tile's stream). Draw order is fixed by shape
+    /// alone: `rows` dead-row draws, `cols` dead-col draws, then one
+    /// uniform per crosspoint in row-major order.
+    pub fn sample(model: &FaultModel, rows: usize, cols: usize, rng: &mut Rng) -> DefectMap {
+        let dead_row: Vec<bool> = (0..rows).map(|_| rng.bernoulli(model.p_dead_row)).collect();
+        let dead_col: Vec<bool> = (0..cols).map(|_| rng.bernoulli(model.p_dead_col)).collect();
+        let t_gmin = model.p_stuck_gmin;
+        let t_gmax = t_gmin + model.p_stuck_gmax;
+        let t_value = t_gmax + model.p_stuck_value;
+        let mut faults = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                // one draw per cell regardless of line state, so the
+                // stream position depends only on the tile shape
+                let u = rng.uniform();
+                let f = if dead_row[r] || dead_col[c] {
+                    CellFault::StuckGmin
+                } else if u < t_gmin {
+                    CellFault::StuckGmin
+                } else if u < t_gmax {
+                    CellFault::StuckGmax
+                } else if u < t_value {
+                    CellFault::StuckValue(model.stuck_value)
+                } else {
+                    CellFault::Ok
+                };
+                faults.push(f);
+            }
+        }
+        let mut stats = FaultStats::healthy(rows * cols);
+        stats.n_dead_rows = dead_row.iter().filter(|&&d| d).count();
+        stats.n_dead_cols = dead_col.iter().filter(|&&d| d).count();
+        for f in &faults {
+            match f {
+                CellFault::Ok => {}
+                CellFault::StuckGmin => stats.n_stuck_gmin += 1,
+                CellFault::StuckGmax => stats.n_stuck_gmax += 1,
+                CellFault::StuckValue(_) => stats.n_stuck_value += 1,
+            }
+        }
+        DefectMap { rows, cols, faults, stats }
+    }
+
+    /// Output rows covered by this map.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Input columns covered by this map.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Fault class of the crosspoint at flat row-major index `i`.
+    pub fn fault(&self, i: usize) -> CellFault {
+        self.faults[i]
+    }
+
+    /// True when the crosspoint at flat index `i` is defective (its
+    /// conductance is pinned — programming retries must skip it).
+    pub fn is_defective(&self, i: usize) -> bool {
+        self.faults[i] != CellFault::Ok
+    }
+
+    /// Defect counters for this map.
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+}
+
+/// Iterative program-and-verify configuration (paper-adjacent: Le Gallo
+/// et al. 2023 program PCM with write→read→compare loops).
+///
+/// The defaults reproduce the legacy single-shot programming path
+/// bit-for-bit: one write, no verify reads, no rescale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgrammingParams {
+    /// Maximum write iterations (1 = single-shot legacy behavior; the
+    /// first iteration is the full-noise write, each retry reprograms
+    /// only the out-of-tolerance healthy cells).
+    pub max_program_iter: usize,
+    /// Per-weight acceptance threshold in normalized weight units — a
+    /// cell within `tolerance` of its target after read-back is left
+    /// alone.
+    pub tolerance: f32,
+    /// Multiplier applied to the programming-noise scale on every retry
+    /// (careful, slower writes): retry `k` programs at
+    /// `backoff^k × prog_noise_scale`.
+    pub backoff: f32,
+    /// After the verify loop, fold a least-squares scalar `α` (fitted
+    /// over healthy cells) into the tile's output scaling to compensate
+    /// systematic programming error.
+    pub alpha_rescale: bool,
+}
+
+impl Default for ProgrammingParams {
+    fn default() -> Self {
+        ProgrammingParams {
+            max_program_iter: 1,
+            tolerance: 0.02,
+            backoff: 0.5,
+            alpha_rescale: false,
+        }
+    }
+}
+
+impl ProgrammingParams {
+    /// Validate iteration count and thresholds with actionable messages.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_program_iter == 0 {
+            return Err("programming.max_program_iter must be >= 1 (1 = single-shot)".into());
+        }
+        if !self.tolerance.is_finite() || self.tolerance < 0.0 {
+            return Err(format!(
+                "programming.tolerance must be a finite weight error >= 0, got {}",
+                self.tolerance
+            ));
+        }
+        if !self.backoff.is_finite() || self.backoff <= 0.0 {
+            return Err(format!(
+                "programming.backoff must be a finite noise-scale factor > 0, got {}",
+                self.backoff
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_model_is_zero_and_valid() {
+        let m = FaultModel::default();
+        assert!(m.is_zero());
+        assert!(m.validate().is_ok());
+        assert!(!FaultModel::stuck(0.01).is_zero());
+    }
+
+    #[test]
+    fn validate_rejects_bad_probabilities() {
+        for bad in [
+            FaultModel { p_stuck_gmin: -0.1, ..Default::default() },
+            FaultModel { p_stuck_gmax: 1.5, ..Default::default() },
+            FaultModel { p_dead_row: f64::NAN, ..Default::default() },
+            FaultModel { p_stuck_gmin: 0.6, p_stuck_gmax: 0.6, ..Default::default() },
+            FaultModel { p_stuck_value: 0.1, stuck_value: f32::NAN, ..Default::default() },
+            FaultModel { p_stuck_value: 0.1, stuck_value: -1.0, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_counts_match() {
+        let m = FaultModel {
+            p_stuck_gmin: 0.05,
+            p_stuck_gmax: 0.05,
+            p_stuck_value: 0.02,
+            stuck_value: 10.0,
+            p_dead_row: 0.1,
+            p_dead_col: 0.1,
+            ..Default::default()
+        };
+        let a = DefectMap::sample(&m, 20, 30, &mut Rng::new(7));
+        let b = DefectMap::sample(&m, 20, 30, &mut Rng::new(7));
+        assert_eq!(a.faults, b.faults, "same stream must give the same map");
+        let s = a.stats();
+        assert_eq!(s.n_cells, 600);
+        let recount = a.faults.iter().filter(|f| **f != CellFault::Ok).count();
+        assert_eq!(s.n_defective(), recount);
+        assert!((s.fraction_defective() - recount as f64 / 600.0).abs() < 1e-12);
+        // dead lines force entire rows/cols to StuckGmin
+        for r in 0..20 {
+            let row_dead = (0..30).all(|c| a.fault(r * 30 + c) == CellFault::StuckGmin);
+            if row_dead {
+                assert!(s.n_dead_rows > 0 || s.n_stuck_gmin >= 30);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_model_samples_healthy_map() {
+        let m = FaultModel::default();
+        let map = DefectMap::sample(&m, 8, 8, &mut Rng::new(1));
+        assert_eq!(map.stats().n_defective(), 0);
+        assert!((0..64).all(|i| !map.is_defective(i)));
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let m = FaultModel::stuck(0.2);
+        let a = DefectMap::sample(&m, 16, 16, &mut Rng::new(3)).stats();
+        let b = DefectMap::sample(&m, 8, 8, &mut Rng::new(4)).stats();
+        let mut merged = a;
+        merged.merge(&b);
+        assert_eq!(merged.n_cells, a.n_cells + b.n_cells);
+        assert_eq!(merged.n_defective(), a.n_defective() + b.n_defective());
+    }
+
+    #[test]
+    fn programming_params_validate() {
+        assert!(ProgrammingParams::default().validate().is_ok());
+        assert!(ProgrammingParams { max_program_iter: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ProgrammingParams { tolerance: f32::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ProgrammingParams { backoff: 0.0, ..Default::default() }.validate().is_err());
+    }
+}

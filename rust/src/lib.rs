@@ -7,6 +7,7 @@
 //!
 //! Layer map:
 //! * `config`/`device`/`tile`/`noise` — the RPU core (analog tile model)
+//! * `faults` — hard-fault injection (defect maps, program-and-verify)
 //! * `nn`/`optim`/`data` — the DNN front-end (AnalogLinear & friends)
 //! * `serve` — concurrent inference serving (shared read path + micro-batching queue)
 //! * `runtime` — PJRT loader for the AOT-compiled JAX/Pallas artifacts
@@ -17,6 +18,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod data;
+pub mod faults;
 pub mod nn;
 pub mod noise;
 pub mod optim;

@@ -7,6 +7,7 @@
 //!   drift        — PCM conductance drift traces (Fig. 3C)
 //!   e2e          — runtime-backed (AOT/PJRT) hardware-aware training
 //!   serve-bench  — concurrent-serving benchmark (micro-batching queue)
+//!   fault-sweep  — accuracy-vs-fault-rate robustness grid (defect maps)
 //!   presets      — list device presets
 //!
 //! Common options: `--config <file.json>` loads an RPUConfig (see
@@ -18,7 +19,11 @@
 
 use aihwsim::config::{loader, presets, ForwardBackend, RPUConfig};
 use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
-use aihwsim::coordinator::evaluator::{accuracy_over_time, DriftEvalConfig};
+use aihwsim::coordinator::evaluator::{
+    accuracy_over_time, fault_sweep, mlp_from_layers, repeat_seed, DriftEvalConfig,
+};
+use aihwsim::faults::{FaultModel, FaultStats};
+use aihwsim::nn::AnalogLinear;
 use aihwsim::coordinator::experiments;
 #[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
@@ -51,6 +56,9 @@ fn usage() -> ! {
            serve-bench  --dims d0,d1,... --clients 1,4,8,16 --windows-us 0,100,1000 \\\n\
                         --max-batch N --requests-per-client N --out BENCH_serving.json \\\n\
                         --config file.json (training + inference + serving sections)\n\
+           fault-sweep  --dims d0,d1,... --rates r1,r2,... --t-inference s1,s2,... \\\n\
+                        --n-reps N --epochs N --out BENCH_faults.json \\\n\
+                        --config file.json (training + inference sections)\n\
            presets\n\
          common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)\n\
                  --kernel-backend auto|scalar|tiled|simd (force the MVM kernel\n\
@@ -417,6 +425,7 @@ fn serve_cell(
         batch_window_us: window_us,
         max_batch,
         queue_depth: (4 * max_batch).max(64),
+        request_timeout_us: 0,
     };
     let batcher = MicroBatcher::new(net, opts).unwrap_or_else(|e| {
         eprintln!("serve-bench: {e}");
@@ -439,7 +448,9 @@ fn serve_cell(
                             .collect();
                         let req_rng = session.split();
                         let t1 = std::time::Instant::now();
-                        let y = batcher.submit(x, req_rng);
+                        let y = batcher
+                            .submit(x, req_rng)
+                            .expect("serve-bench: healthy request failed");
                         lat.push(t1.elapsed().as_secs_f64() * 1e3);
                         std::hint::black_box(y);
                     }
@@ -557,6 +568,156 @@ fn cmd_serve_bench(args: &Args) {
     info(&format!("wrote {out}"));
 }
 
+/// Accuracy-vs-fault-rate robustness grid (`BENCH_faults.json`): train a
+/// small FP reference MLP once, then run the full (time × repeat) drift
+/// sweep at every fault rate, injecting stuck-cell defects through the
+/// inference config at program time (see [`FaultModel::stuck`]). Rate 0
+/// reproduces the plain drift sweep bit-for-bit, so the rate axis
+/// isolates the hard-fault effect.
+fn cmd_fault_sweep(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let (cfg, cfg_json) = load_config(args);
+    let dims = usize_list(args, "dims", &[64, 32, 4]);
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        eprintln!("--dims: need at least two positive layer sizes");
+        std::process::exit(2);
+    }
+    let side = (dims[0] as f64).sqrt() as usize;
+    if side * side != dims[0] {
+        eprintln!("--dims: first layer size must be a square (synthetic side² images)");
+        std::process::exit(2);
+    }
+    let rates: Vec<f64> = match args.f32_list("rates") {
+        None => vec![0.0, 0.001, 0.01, 0.05, 0.1],
+        Some(Ok(v)) if !v.is_empty() => v.into_iter().map(|r| r as f64).collect(),
+        Some(Ok(_)) => {
+            eprintln!("--rates: empty schedule");
+            std::process::exit(2);
+        }
+        Some(Err(e)) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if rates.iter().any(|r| !r.is_finite() || !(0.0..=1.0).contains(r)) {
+        eprintln!("--rates: fault rates must be probabilities in [0, 1]");
+        std::process::exit(2);
+    }
+    let out = args.str_or("out", "BENCH_faults.json");
+
+    // inference options: combined --config "inference" section, then CLI
+    let mut iopts = aihwsim::config::loader::InferenceOptions::default();
+    if let Some(json) = &cfg_json {
+        if json.get("inference").is_some() {
+            match loader::inference_options_from_json(json) {
+                Ok(o) => iopts = o,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    if let Some(times) = t_inference_list(args) {
+        iopts.t_inference = times;
+    }
+    let n_repeats = args.usize_or("n-reps", iopts.n_repeats);
+
+    // train the FP reference once; every (rate × repeat × time) cell
+    // reprograms these same weights onto freshly faulted devices
+    let classes = *dims.last().unwrap();
+    let samples = args.usize_or("samples", 240);
+    let mut rng = Rng::new(seed);
+    let ds = synthetic_images(samples, classes, side, 1, &mut rng);
+    let mut model = mlp(&dims, Backend::FloatingPoint, &cfg, &mut rng);
+    let tc = trainer::TrainConfig {
+        epochs: args.usize_or("epochs", 10),
+        batch_size: args.usize_or("batch", 16),
+        lr: args.f32_or("lr", 0.5),
+        seed,
+        log_every: 0,
+        csv_path: None,
+    };
+    let report = trainer::train_classifier(&mut model, &ds, &ds, &tc);
+    info(&format!("fault-sweep: FP reference trained, acc {:.3}", report.final_test_acc()));
+    let layers = collect_linear_layers(&mut model);
+    let mapping = cfg.mapping.clone();
+    let icfg = iopts.config.clone();
+    let build = |s: u64, rate: f64| {
+        let mut icfg_r = icfg.clone();
+        icfg_r.faults = FaultModel::stuck(rate);
+        let mut r = Rng::new(s);
+        let mut net = mlp_from_layers(&layers, &mapping, &mut r);
+        net.convert_to_inference(&icfg_r, &mut r);
+        net
+    };
+    let eval_cfg =
+        DriftEvalConfig { times: iopts.t_inference.clone(), n_repeats, batch: 32, seed };
+    let sweep = fault_sweep(&build, &ds, &rates, &eval_cfg);
+
+    let mut entries = Vec::new();
+    println!("{:>10} {:>12} {:>10} {:>10} {:>10}", "rate", "t_seconds", "acc_mean", "acc_std", "defects");
+    for (rate, report) in &sweep {
+        // measured defect fraction: program the first repeat's instance
+        // once and merge the per-layer grid fault counters
+        let mut probe = build(repeat_seed(seed, 0), *rate);
+        probe.program();
+        let mut stats = FaultStats::default();
+        for idx in (0..).step_by(2).take(dims.len() - 1) {
+            if let Some(lin) = probe
+                .module_mut(idx)
+                .as_any_mut()
+                .and_then(|a| a.downcast_mut::<AnalogLinear>())
+            {
+                if let Some(s) = lin.grid_mut().fault_stats() {
+                    stats.merge(&s);
+                }
+            }
+        }
+        let frac = stats.fraction_defective();
+        for p in &report.points {
+            println!(
+                "{rate:>10.4} {t:>12.0} {m:>10.3} {s:>10.3} {frac:>10.4}",
+                t = p.t,
+                m = p.acc_mean,
+                s = p.acc_std,
+            );
+            entries.push(Json::obj(vec![
+                ("fault_rate", Json::num(*rate)),
+                ("t_seconds", Json::num(p.t as f64)),
+                ("acc_mean", Json::num(p.acc_mean)),
+                ("acc_std", Json::num(p.acc_std)),
+                ("measured_fault_fraction", Json::num(frac)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("dims", Json::arr_f32(&dims.iter().map(|&d| d as f32).collect::<Vec<f32>>())),
+        ("rates", Json::arr_f32(&rates.iter().map(|&r| r as f32).collect::<Vec<f32>>())),
+        ("t_inference", Json::arr_f32(&iopts.t_inference)),
+        ("n_repeats", Json::num(n_repeats as f64)),
+        ("fp_reference_acc", Json::num(report.final_test_acc())),
+        ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
+        ("backend", Json::str(aihwsim::tile::backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(
+                aihwsim::tile::backend::detected_features()
+                    .iter()
+                    .map(|f| Json::str(f))
+                    .collect(),
+            ),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write(&out, doc.to_string_pretty()).unwrap_or_else(|e| {
+        eprintln!("fault-sweep: cannot write {out}: {e}");
+        std::process::exit(1);
+    });
+    info(&format!("wrote {out}"));
+}
+
 fn cmd_presets() {
     for name in presets::SINGLE_PRESET_NAMES {
         let cfg = presets::by_name(name).unwrap();
@@ -576,6 +737,7 @@ fn main() {
         Some("drift") => cmd_drift(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("fault-sweep") => cmd_fault_sweep(&args),
         Some("presets") => cmd_presets(),
         _ => usage(),
     }

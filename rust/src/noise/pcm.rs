@@ -17,6 +17,7 @@
 //! * **global drift compensation**: the ratio of a calibration readout at
 //!   t vs t₀ rescales the digital output (Joshi et al. eq. 7).
 
+use crate::faults::{CellFault, DefectMap};
 use crate::util::rng::Rng;
 
 /// Parameters of the PCM statistical model.
@@ -143,6 +144,43 @@ impl ProgrammedWeights {
             pairs.push(PcmPair { g_plus, g_minus, nu_plus, nu_minus });
         }
         ProgrammedWeights { pairs, w_bound, params: params.clone() }
+    }
+
+    /// Re-program the single crosspoint at flat index `i` toward
+    /// `target_w` (weight units), drawing fresh programming noise scaled
+    /// by `noise_scale` — the program-and-verify retry primitive (retries
+    /// model slower, more careful writes via `noise_scale < 1`). The
+    /// drift exponents are re-sampled for the re-written devices, exactly
+    /// as in [`ProgrammedWeights::program`] (4 RNG draws per call).
+    pub fn reprogram_cell(&mut self, i: usize, target_w: f32, noise_scale: f32, rng: &mut Rng) {
+        let params = &self.params;
+        let wn = (target_w / self.w_bound).clamp(-1.0, 1.0);
+        let g_target = wn.abs() * params.g_max;
+        let sig = params.sigma_prog(g_target) * noise_scale;
+        let g_prog = (g_target + sig * rng.normal() as f32).max(0.0);
+        let g_res = (params.sigma_prog(0.0) * noise_scale * rng.normal() as f32).abs();
+        let (g_plus, g_minus) = if wn >= 0.0 { (g_prog, g_res) } else { (g_res, g_prog) };
+        let nu_plus = params.sample_nu(g_plus.max(0.1), rng);
+        let nu_minus = params.sample_nu(g_minus.max(0.1), rng);
+        self.pairs[i] = PcmPair { g_plus, g_minus, nu_plus, nu_minus };
+    }
+
+    /// Overlay a hard-fault defect map: defective crosspoints get their
+    /// conductances pinned (stuck devices neither program nor drift —
+    /// ν = 0 keeps `weights_at`/`mean_conductance_at` time-invariant for
+    /// them). Healthy cells are untouched.
+    pub fn apply_defects(&mut self, map: &DefectMap) {
+        assert_eq!(self.pairs.len(), map.rows() * map.cols(), "defect map shape mismatch");
+        let g_max = self.params.g_max;
+        for (i, pair) in self.pairs.iter_mut().enumerate() {
+            let pinned = match map.fault(i) {
+                CellFault::Ok => continue,
+                CellFault::StuckGmin => 0.0,
+                CellFault::StuckGmax => g_max,
+                CellFault::StuckValue(v) => v.clamp(0.0, g_max),
+            };
+            *pair = PcmPair { g_plus: pinned, g_minus: 0.0, nu_plus: 0.0, nu_minus: 0.0 };
+        }
     }
 
     /// Effective weights at time `t` (s), *without* read noise (read noise
@@ -287,6 +325,70 @@ mod tests {
         let mc = md * gamma;
         assert!((mc - m0).abs() < 0.3 * (m0 - md).abs() + 0.01,
             "m0 {m0} drifted {md} compensated {mc}");
+    }
+
+    #[test]
+    fn defect_overlay_pins_cells_across_time() {
+        use crate::faults::FaultModel;
+        let p = PCMNoiseParams::default();
+        let mut rng = Rng::new(11);
+        let w = vec![0.5f32; 64];
+        let mut prog = ProgrammedWeights::program(&w, 1.0, &p, &mut rng);
+        let model = FaultModel {
+            p_stuck_gmin: 0.2,
+            p_stuck_gmax: 0.2,
+            p_stuck_value: 0.1,
+            stuck_value: 10.0,
+            ..Default::default()
+        };
+        let map = DefectMap::sample(&model, 8, 8, &mut rng.split());
+        prog.apply_defects(&map);
+        let early = prog.weights_at(p.t0);
+        let late = prog.weights_at(1e7);
+        for i in 0..64 {
+            match map.fault(i) {
+                CellFault::Ok => {}
+                CellFault::StuckGmin => {
+                    assert_eq!(early[i], 0.0);
+                    assert_eq!(late[i], 0.0);
+                }
+                CellFault::StuckGmax => {
+                    assert_eq!(early[i], 1.0);
+                    assert_eq!(late[i], 1.0, "stuck devices must not drift");
+                }
+                CellFault::StuckValue(v) => {
+                    assert!((early[i] - v / p.g_max).abs() < 1e-6);
+                    assert_eq!(early[i], late[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reprogram_cell_with_backoff_tightens() {
+        let p = PCMNoiseParams::default();
+        let mut rng = Rng::new(5);
+        let w = vec![0.6f32; 512];
+        let mut prog = ProgrammedWeights::program(&w, 1.0, &p, &mut rng);
+        // re-write every cell at 1/8 noise: error should shrink markedly
+        let mae0: f32 = prog
+            .weights_at(p.t0)
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / w.len() as f32;
+        for i in 0..w.len() {
+            prog.reprogram_cell(i, w[i], 0.125, &mut rng);
+        }
+        let mae1: f32 = prog
+            .weights_at(p.t0)
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / w.len() as f32;
+        assert!(mae1 < mae0 * 0.5, "mae {mae0} -> {mae1}");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! path from the per-request scratch, one converted network can serve any
 //! number of threads at once. This module adds the serving layer on top:
 //!
-//! * [`ServeOptions`] — batch window / max batch / queue depth knobs
-//!   (JSON-loadable via `crate::config::loader::serving_options_from_json`).
+//! * [`ServeOptions`] — batch window / max batch / queue depth / deadline
+//!   knobs (JSON-loadable via
+//!   `crate::config::loader::serving_options_from_json`).
 //! * [`MicroBatcher`] — a leader/follower combining queue. Concurrent
 //!   single-sample requests are coalesced into one fused batched MVM per
 //!   layer; per-request outputs are handed back to their submitters.
@@ -25,12 +26,37 @@
 //! `max_batch` requests, runs one shared forward under the execution
 //! lock (batches are serialized — intra-batch parallelism comes from the
 //! kernel threadpool), distributes the output rows, and wakes everyone.
+//!
+//! **Failure isolation.** [`MicroBatcher::submit`] returns a `Result`:
+//! one bad request must fail alone instead of taking the process (or its
+//! co-riders' liveness) with it. Three layers enforce this:
+//!
+//! 1. the fused forward runs under [`std::panic::catch_unwind`] — a
+//!    panicking batch delivers [`ServeError::BatchPanicked`] to exactly
+//!    the requests that shared it, then the leader hands the queue off
+//!    normally (`busy` is always cleared, followers always wake);
+//! 2. every internal lock/condvar acquisition recovers from poisoning
+//!    (`unwrap_or_else(|e| e.into_inner())`) — a panicked holder from an
+//!    earlier batch cannot cascade into unrelated clients, and the
+//!    guarded state is re-validated on every use (scratch buffers are
+//!    resized/overwritten per batch);
+//! 3. an optional per-request deadline (`request_timeout_us`) bounds how
+//!    long a request may sit behind a full queue or an open batch
+//!    window: on expiry the request withdraws itself from the queue and
+//!    returns [`ServeError::Timeout`] (a request already being executed
+//!    is never abandoned — its result is seconds away by construction).
+//!
+//! The `AIHWSIM_INJECT_PANIC` environment hook (used by the CI serving
+//! stress job and the isolation regression tests) makes the executor
+//! panic when a batch contains a non-finite input value, exercising path
+//! 1 + 2 on demand without touching production behavior.
 
 use crate::nn::{LayerFwdCtx, Module};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Tuning knobs for the micro-batching request queue.
@@ -46,11 +72,16 @@ pub struct ServeOptions {
     /// Backpressure bound: `submit` blocks while this many requests are
     /// already queued.
     pub queue_depth: usize,
+    /// Per-request deadline in microseconds, measured from the `submit`
+    /// call. A request that is still waiting (for queue space, or in the
+    /// queue) when its deadline expires withdraws and returns
+    /// [`ServeError::Timeout`]. `0` disables the deadline.
+    pub request_timeout_us: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { batch_window_us: 100, max_batch: 32, queue_depth: 1024 }
+        ServeOptions { batch_window_us: 100, max_batch: 32, queue_depth: 1024, request_timeout_us: 0 }
     }
 }
 
@@ -73,10 +104,55 @@ impl ServeOptions {
     }
 }
 
+/// Why a request failed without an output row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The per-request deadline (`request_timeout_us`) expired while the
+    /// request was still waiting for queue space or batch dispatch.
+    Timeout,
+    /// The fused forward of the batch this request rode in panicked
+    /// (caught by the executor); the batcher keeps serving.
+    BatchPanicked,
+    /// The request's input width differs from the batch it was coalesced
+    /// into — it is rejected individually, its co-riders proceed.
+    WidthMismatch {
+        /// The batch's input width.
+        expected: usize,
+        /// This request's input width.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Timeout => write!(f, "request deadline expired before dispatch"),
+            ServeError::BatchPanicked => {
+                write!(f, "the batched forward panicked (recovered; request not served)")
+            }
+            ServeError::WidthMismatch { expected, got } => {
+                write!(f, "request input width {got} does not match the batch width {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Per-request completion mailbox.
 #[derive(Default)]
 struct Slot {
-    out: Mutex<Option<Vec<f32>>>,
+    out: Mutex<Option<Result<Vec<f32>, ServeError>>>,
+}
+
+impl Slot {
+    fn take(&self) -> Option<Result<Vec<f32>, ServeError>> {
+        self.out.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    fn put(&self, v: Result<Vec<f32>, ServeError>) {
+        *self.out.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+    }
 }
 
 /// One queued request: input row, its private noise stream, its mailbox.
@@ -143,17 +219,48 @@ impl<'a> MicroBatcher<'a> {
         &self.opts
     }
 
-    /// Serve one request: blocks until the output row is ready and
-    /// returns it. `rng` is the request's private noise stream — the
-    /// caller owns seeding (e.g. one [`Rng::split`] per request off a
-    /// session stream), and the result is bitwise determined by
-    /// `(network state, x, rng)` alone, independent of batch placement.
-    pub fn submit(&self, x: Vec<f32>, rng: Rng) -> Vec<f32> {
+    /// Acquire the queue mutex, recovering from poisoning: a thread that
+    /// panicked while holding the lock (e.g. a leader unwinding through
+    /// an injected fault) must not deadlock or crash unrelated clients.
+    /// The queue invariants survive a recovered acquisition because every
+    /// holder restores them before any operation that can unwind.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Serve one request: blocks until the output row is ready (or the
+    /// request fails alone) and returns it. `rng` is the request's
+    /// private noise stream — the caller owns seeding (e.g. one
+    /// [`Rng::split`] per request off a session stream), and a
+    /// successful result is bitwise determined by `(network state, x,
+    /// rng)` alone, independent of batch placement.
+    ///
+    /// Errors: [`ServeError::Timeout`] when the configured deadline
+    /// expires before dispatch, [`ServeError::BatchPanicked`] when the
+    /// fused forward of this request's batch panicked,
+    /// [`ServeError::WidthMismatch`] when the input width differs from
+    /// the batch's.
+    pub fn submit(&self, x: Vec<f32>, rng: Rng) -> Result<Vec<f32>, ServeError> {
+        let deadline = (self.opts.request_timeout_us > 0)
+            .then(|| Instant::now() + Duration::from_micros(self.opts.request_timeout_us));
         let slot = Arc::new(Slot::default());
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             while st.pending.len() >= self.opts.queue_depth {
-                st = self.cv.wait(st).unwrap();
+                match deadline {
+                    Some(d) => {
+                        let now = Instant::now();
+                        if now >= d {
+                            return Err(ServeError::Timeout);
+                        }
+                        st = self
+                            .cv
+                            .wait_timeout(st, d - now)
+                            .unwrap_or_else(|e| e.into_inner())
+                            .0;
+                    }
+                    None => st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner()),
+                }
             }
             st.pending.push_back(PendingReq {
                 x,
@@ -165,14 +272,27 @@ impl<'a> MicroBatcher<'a> {
         }
         let window = Duration::from_micros(self.opts.batch_window_us);
         loop {
-            let st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             // completion check under the state lock: the leader fills
             // mailboxes *before* clearing `busy` under this same lock,
             // so a filled slot is always observed before we could wait
-            if let Some(y) = slot.out.lock().unwrap().take() {
-                return y;
+            if let Some(res) = slot.take() {
+                return res;
             }
             let now = Instant::now();
+            if let Some(d) = deadline {
+                if now >= d {
+                    // withdraw if still queued; a request already drained
+                    // into a batch is moments from its real result, so
+                    // keep waiting for it instead of abandoning the slot
+                    let before = st.pending.len();
+                    st.pending.retain(|r| !Arc::ptr_eq(&r.slot, &slot));
+                    if st.pending.len() != before {
+                        self.cv.notify_all();
+                        return Err(ServeError::Timeout);
+                    }
+                }
+            }
             let ready = !st.busy
                 && !st.pending.is_empty()
                 && (st.pending.len() >= self.opts.max_batch
@@ -184,21 +304,36 @@ impl<'a> MicroBatcher<'a> {
             }
             if st.busy || st.pending.is_empty() {
                 // a leader is running (or our request rides its batch):
-                // it will notify when done
-                drop(self.cv.wait(st).unwrap());
+                // it will notify when done; a deadline still bounds the
+                // wait so withdrawal is re-checked on time
+                match deadline {
+                    Some(d) => drop(
+                        self.cv
+                            .wait_timeout(st, d.saturating_duration_since(now))
+                            .unwrap_or_else(|e| e.into_inner())
+                            .0,
+                    ),
+                    None => drop(self.cv.wait(st).unwrap_or_else(|e| e.into_inner())),
+                }
             } else {
                 // window still open: sleep until the oldest request's
-                // deadline, or until the queue changes
+                // dispatch time (or our own deadline), or until the
+                // queue changes
                 let age = now.duration_since(st.pending.front().unwrap().enqueued);
-                let timeout = window.saturating_sub(age);
-                drop(self.cv.wait_timeout(st, timeout).unwrap().0);
+                let mut timeout = window.saturating_sub(age);
+                if let Some(d) = deadline {
+                    timeout = timeout.min(d.saturating_duration_since(now));
+                }
+                drop(self.cv.wait_timeout(st, timeout).unwrap_or_else(|e| e.into_inner()).0);
             }
         }
     }
 
     /// Become the leader: drain up to `max_batch` requests, execute the
-    /// fused forward, deliver the rows, release the queue.
-    fn lead(&self, mut st: std::sync::MutexGuard<'_, QueueState>) {
+    /// fused forward, deliver the rows (or the failure), release the
+    /// queue. `execute` never unwinds, so `busy` is always cleared and
+    /// followers always wake — leader hand-off survives a bad batch.
+    fn lead(&self, mut st: MutexGuard<'_, QueueState>) {
         st.busy = true;
         let n = st.pending.len().min(self.opts.max_batch);
         let batch: Vec<PendingReq> = st.pending.drain(..n).collect();
@@ -206,30 +341,80 @@ impl<'a> MicroBatcher<'a> {
 
         self.execute(batch);
 
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.busy = false;
         self.cv.notify_all();
     }
 
-    /// Run one coalesced batch through the shared read path.
+    /// Run one coalesced batch through the shared read path. Never
+    /// unwinds: a panicking forward is caught and delivered as
+    /// [`ServeError::BatchPanicked`] to exactly the requests that shared
+    /// the batch; width-mismatched requests are rejected individually
+    /// before the forward so their co-riders still get real outputs.
     fn execute(&self, mut batch: Vec<PendingReq>) {
-        let n = batch.len();
         let in_features = batch[0].x.len();
-        let mut ex = self.exec.lock().unwrap();
+        // reject mismatched widths individually (one bad request fails
+        // alone — the rest of the batch proceeds)
+        batch.retain(|req| {
+            if req.x.len() == in_features {
+                true
+            } else {
+                req.slot.put(Err(ServeError::WidthMismatch {
+                    expected: in_features,
+                    got: req.x.len(),
+                }));
+                false
+            }
+        });
+        if batch.is_empty() {
+            return;
+        }
+        let n = batch.len();
+        // a previous leader may have poisoned this lock by panicking in
+        // the forward; the scratch is resized/overwritten per batch, so
+        // recovery is safe
+        let mut ex = self.exec.lock().unwrap_or_else(|e| e.into_inner());
         let ExecState { ctx, xbuf, ybuf, rngs } = &mut *ex;
-        if xbuf.rows() != n || xbuf.cols() != in_features {
-            *xbuf = Matrix::zeros(n, in_features);
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if xbuf.rows() != n || xbuf.cols() != in_features {
+                *xbuf = Matrix::zeros(n, in_features);
+            }
+            for (b, req) in batch.iter().enumerate() {
+                xbuf.row_mut(b).copy_from_slice(&req.x);
+            }
+            inject_panic_hook(xbuf);
+            rngs.clear();
+            rngs.extend(batch.iter().map(|r| r.rng.clone()));
+            self.net.forward_shared(xbuf, ybuf, rngs, ctx);
+        }));
+        match outcome {
+            Ok(()) => {
+                for (b, req) in batch.drain(..).enumerate() {
+                    req.slot.put(Ok(ybuf.row(b).to_vec()));
+                }
+            }
+            Err(_) => {
+                for req in batch.drain(..) {
+                    req.slot.put(Err(ServeError::BatchPanicked));
+                }
+            }
         }
-        for (b, req) in batch.iter().enumerate() {
-            assert_eq!(req.x.len(), in_features, "all requests must share the input width");
-            xbuf.row_mut(b).copy_from_slice(&req.x);
-        }
-        rngs.clear();
-        rngs.extend(batch.iter().map(|r| r.rng.clone()));
-        self.net.forward_shared(xbuf, ybuf, rngs, ctx);
-        for (b, req) in batch.drain(..).enumerate() {
-            *req.slot.out.lock().unwrap() = Some(ybuf.row(b).to_vec());
-        }
+    }
+}
+
+/// Test/CI fault hook: when the `AIHWSIM_INJECT_PANIC` environment
+/// variable is set (to anything but `0`) and the assembled batch
+/// contains a non-finite input value, panic inside the executor — the
+/// serving stress job runs the whole test suite with the hook armed to
+/// prove no-deadlock/no-hang, and the isolation regression tests submit
+/// a NaN request to trigger it on demand. Inert in production: real
+/// requests are finite and the hook requires the env opt-in anyway.
+fn inject_panic_hook(xbuf: &Matrix) {
+    if std::env::var("AIHWSIM_INJECT_PANIC").map_or(true, |v| v == "0") {
+        return;
+    }
+    if xbuf.data().iter().any(|v| !v.is_finite()) {
+        panic!("injected fault: non-finite input with AIHWSIM_INJECT_PANIC armed");
     }
 }
 
@@ -244,12 +429,20 @@ mod tests {
         assert!(ServeOptions::default().validate().is_ok());
         assert!(ServeOptions { max_batch: 0, ..Default::default() }.validate().is_err());
         assert!(ServeOptions { queue_depth: 0, ..Default::default() }.validate().is_err());
-        assert!(ServeOptions { max_batch: 64, queue_depth: 32, batch_window_us: 0 }
+        assert!(ServeOptions { max_batch: 64, queue_depth: 32, ..Default::default() }
             .validate()
             .is_err());
-        assert!(ServeOptions { max_batch: 8, queue_depth: 8, batch_window_us: 0 }
+        assert!(ServeOptions { max_batch: 8, queue_depth: 8, ..Default::default() }
             .validate()
             .is_ok());
+    }
+
+    #[test]
+    fn serve_error_display() {
+        assert!(ServeError::Timeout.to_string().contains("deadline"));
+        assert!(ServeError::BatchPanicked.to_string().contains("panicked"));
+        let e = ServeError::WidthMismatch { expected: 6, got: 4 };
+        assert!(e.to_string().contains('6') && e.to_string().contains('4'));
     }
 
     #[test]
@@ -266,7 +459,7 @@ mod tests {
         let net = mlp(&[6, 10, 4], Backend::FloatingPoint, &RPUConfig::default(), &mut rng);
         let batcher = MicroBatcher::new(
             &net,
-            ServeOptions { batch_window_us: 200, max_batch: 8, queue_depth: 64 },
+            ServeOptions { batch_window_us: 200, max_batch: 8, queue_depth: 64, ..Default::default() },
         )
         .unwrap();
 
@@ -294,10 +487,9 @@ mod tests {
                         (0..6)
                             .map(|k| {
                                 let i = t * 6 + k;
-                                batcher.submit(
-                                    requests[i].clone(),
-                                    Rng::new(1000 + i as u64),
-                                )
+                                batcher
+                                    .submit(requests[i].clone(), Rng::new(1000 + i as u64))
+                                    .expect("healthy request must serve")
                             })
                             .collect()
                     })
@@ -318,12 +510,36 @@ mod tests {
         let net = mlp(&[3, 5, 2], Backend::FloatingPoint, &RPUConfig::default(), &mut rng);
         let batcher = MicroBatcher::new(
             &net,
-            ServeOptions { batch_window_us: 0, max_batch: 4, queue_depth: 16 },
+            ServeOptions { batch_window_us: 0, max_batch: 4, queue_depth: 16, ..Default::default() },
         )
         .unwrap();
-        let y = batcher.submit(vec![0.1, -0.2, 0.3], Rng::new(7));
+        let y = batcher.submit(vec![0.1, -0.2, 0.3], Rng::new(7)).unwrap();
         assert_eq!(y.len(), 2);
         let p: f32 = y.iter().map(|v| v.exp()).sum();
         assert!((p - 1.0).abs() < 1e-5, "log-softmax head must normalize, got {p}");
+    }
+
+    #[test]
+    fn deadline_expires_behind_open_window() {
+        // a long batch window with a single queued request: the only way
+        // out before the window closes is the per-request deadline
+        let mut rng = Rng::new(4);
+        let net = mlp(&[3, 5, 2], Backend::FloatingPoint, &RPUConfig::default(), &mut rng);
+        let batcher = MicroBatcher::new(
+            &net,
+            ServeOptions {
+                batch_window_us: 60_000_000, // 60 s: never closes in-test
+                max_batch: 4,
+                queue_depth: 16,
+                request_timeout_us: 5_000, // 5 ms
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let res = batcher.submit(vec![0.1, 0.2, 0.3], Rng::new(9));
+        assert_eq!(res, Err(ServeError::Timeout));
+        assert!(t0.elapsed() < Duration::from_secs(30), "deadline must beat the window");
+        // the withdrawn request must not linger in the queue
+        assert!(batcher.lock_state().pending.is_empty());
     }
 }

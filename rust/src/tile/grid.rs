@@ -41,6 +41,7 @@
 //! the levels is future work.
 
 use crate::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
+use crate::faults::FaultStats;
 use crate::tile::pulsed_ops::UpdateStats;
 use crate::tile::{AnalogTile, FloatingPointTile, ForwardCtx, InferenceTile, ProgrammingState, Tile};
 use crate::util::matrix::Matrix;
@@ -724,20 +725,25 @@ impl TileGrid {
     /// Aggregate lifecycle state: `Ideal` when every shard is ideal,
     /// `Unprogrammed` when any inference shard still holds only target
     /// weights, else `Programmed` at the first shard's inference time
-    /// (all shards move together through [`Self::drift_to`]).
+    /// (all shards move together through [`Self::drift_to`]) with the
+    /// **worst** (largest) per-shard residual programming error.
     pub fn programming_state(&self) -> ProgrammingState {
         let mut programmed_at: Option<f32> = None;
+        let mut worst_residual = 0.0f32;
         for tile in &self.tiles {
             match tile.programming_state() {
                 ProgrammingState::Ideal => {}
                 ProgrammingState::Unprogrammed => return ProgrammingState::Unprogrammed,
-                ProgrammingState::Programmed { t_inference } => {
+                ProgrammingState::Programmed { t_inference, residual } => {
                     programmed_at.get_or_insert(t_inference);
+                    worst_residual = worst_residual.max(residual);
                 }
             }
         }
         match programmed_at {
-            Some(t_inference) => ProgrammingState::Programmed { t_inference },
+            Some(t_inference) => {
+                ProgrammingState::Programmed { t_inference, residual: worst_residual }
+            }
             None => ProgrammingState::Ideal,
         }
     }
@@ -764,6 +770,20 @@ impl TileGrid {
         let mean = mean_acc / n_total;
         let var = (m2_acc / n_total - mean * mean).max(0.0);
         Some((mean, var.sqrt()))
+    }
+
+    /// Merge of the shards' hard-fault counters (see [`crate::faults`])
+    /// — `None` when no shard reports them (training/FP grids or before
+    /// programming), otherwise the summed [`FaultStats`] over every
+    /// programmed shard.
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        let mut acc: Option<FaultStats> = None;
+        for tile in &self.tiles {
+            if let Some(s) = tile.fault_stats() {
+                acc.get_or_insert_with(FaultStats::default).merge(&s);
+            }
+        }
+        acc
     }
 }
 
@@ -972,12 +992,34 @@ mod tests {
         grid.convert_to_inference(&icfg, &mut rng);
         grid.program();
         let t0 = 20.0;
-        assert_eq!(grid.programming_state(), ProgrammingState::Programmed { t_inference: t0 });
+        match grid.programming_state() {
+            ProgrammingState::Programmed { t_inference, residual } => {
+                assert_eq!(t_inference, t0);
+                assert!(residual > 0.0 && residual.is_finite(), "residual {residual}");
+            }
+            s => panic!("expected Programmed at t0, got {s:?}"),
+        }
+        // the aggregate residual is the worst shard's
+        let worst = (0..grid.num_tiles())
+            .map(|i| match grid.tiles[i].programming_state() {
+                ProgrammingState::Programmed { residual, .. } => residual,
+                _ => 0.0,
+            })
+            .fold(0.0f32, f32::max);
+        let stats = grid.fault_stats().expect("programmed grid reports fault stats");
+        assert_eq!(stats.n_cells, 60);
+        assert_eq!(stats.n_defective(), 0, "healthy config: zero-count stats");
         let w0 = grid.get_weights().fro_norm();
         let (m0, s0) = grid.conductance_stats(t0).unwrap();
         assert!(m0 > 0.0 && s0 > 0.0);
         grid.drift_to(1e7);
-        assert_eq!(grid.programming_state(), ProgrammingState::Programmed { t_inference: 1e7 });
+        match grid.programming_state() {
+            ProgrammingState::Programmed { t_inference, residual } => {
+                assert_eq!(t_inference, 1e7);
+                assert_eq!(residual, worst, "residual must survive drift");
+            }
+            s => panic!("expected Programmed at 1e7, got {s:?}"),
+        }
         let w1 = grid.get_weights().fro_norm();
         assert!(w1 < w0, "drift shrinks the grid's logical weights: {w0} -> {w1}");
         let (m1, _) = grid.conductance_stats(1e7).unwrap();

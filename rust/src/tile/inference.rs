@@ -23,6 +23,7 @@
 //! un-programmed state is explicit and tested.
 
 use crate::config::InferenceRPUConfig;
+use crate::faults::{DefectMap, FaultStats};
 use crate::noise::pcm::ProgrammedWeights;
 use crate::tile::forward::{
     analog_mvm, analog_mvm_batch, analog_mvm_batch_rows, MvmBatchScratch, MvmScratch,
@@ -42,6 +43,15 @@ pub struct InferenceTile {
     out_scale: f32,
     /// Programmed devices (after `program`).
     programmed: Option<ProgrammedWeights>,
+    /// Hard-fault defect map sampled at `program()` time (`None` when
+    /// the configured [`crate::faults::FaultModel`] is all-zero).
+    defects: Option<DefectMap>,
+    /// Residual programming error after the (optional) verify loop:
+    /// mean |w_read − w_target| over healthy cells at `t0`.
+    residual: f32,
+    /// Least-squares output rescale fitted by the optional α-compensation
+    /// pass (`programming.alpha_rescale`); 1.0 otherwise.
+    prog_alpha: f32,
     /// Cached drifted state.
     t_inference: f32,
     drifted: Vec<f32>,
@@ -61,6 +71,9 @@ impl InferenceTile {
             target: vec![0.0; out_size * in_size],
             out_scale: 1.0,
             programmed: None,
+            defects: None,
+            residual: 0.0,
+            prog_alpha: 1.0,
             t_inference: 0.0,
             drifted: vec![0.0; out_size * in_size],
             read_var: vec![0.0; out_size * in_size],
@@ -85,6 +98,15 @@ impl InferenceTile {
             // independent noise on both devices of the pair, in weight units
             self.read_var[i] = (sp * sp + sm * sm) / (p.g_max * p.g_max);
         }
+        // stuck devices are pinned: no drift (ν = 0 in the overlay) and
+        // no 1/f read noise either
+        if let Some(map) = &self.defects {
+            for (i, v) in self.read_var.iter_mut().enumerate() {
+                if map.is_defective(i) {
+                    *v = 0.0;
+                }
+            }
+        }
         self.gdc_factor = if self.config.drift_compensation {
             prog.drift_compensation(self.t_inference, &mut self.rng)
         } else {
@@ -100,6 +122,24 @@ impl InferenceTile {
     /// GDC factor currently applied (1.0 when compensation is off).
     pub fn gdc_factor(&self) -> f32 {
         self.gdc_factor
+    }
+
+    /// Residual programming error measured by the last `program()` call
+    /// (0.0 before programming).
+    pub fn residual(&self) -> f32 {
+        self.residual
+    }
+
+    /// α-compensation output rescale fitted by the last `program()`
+    /// (1.0 unless `programming.alpha_rescale` is on).
+    pub fn prog_alpha(&self) -> f32 {
+        self.prog_alpha
+    }
+
+    /// Combined digital output factor: layer scaling × drift
+    /// compensation × programming α-compensation.
+    fn out_factor(&self) -> f32 {
+        self.out_scale * self.gdc_factor * self.prog_alpha
     }
 
     /// `(weights, per-element read-noise variance)` the read path sees:
@@ -155,7 +195,7 @@ impl Tile for InferenceTile {
         );
         let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
         crate::tile::forward::mvm_plain_kb(kb, w, self.out_size, self.in_size, d, g, true);
-        let s = self.out_scale * self.gdc_factor;
+        let s = self.out_factor();
         if s != 1.0 {
             for v in g.iter_mut() {
                 *v *= s;
@@ -170,7 +210,7 @@ impl Tile for InferenceTile {
     fn get_weights(&mut self) -> Matrix {
         let w = if self.programmed.is_some() { self.drifted.clone() } else { self.target.clone() };
         let mut m = Matrix::from_vec(self.out_size, self.in_size, w);
-        m.scale(self.out_scale * self.gdc_factor);
+        m.scale(self.out_factor());
         m
     }
 
@@ -194,7 +234,7 @@ impl Tile for InferenceTile {
         );
         let w = if self.programmed.is_some() { &self.drifted } else { &self.target };
         crate::tile::forward::mvm_plain_batch_kb(kb, w, self.out_size, self.in_size, d, g, true);
-        let s = self.out_scale * self.gdc_factor;
+        let s = self.out_factor();
         if s != 1.0 {
             g.scale(s);
         }
@@ -209,18 +249,87 @@ impl Tile for InferenceTile {
         let inv = 1.0 / self.out_scale;
         self.target = w.data().iter().map(|&v| (v * inv).clamp(-1.0, 1.0)).collect();
         self.programmed = None;
+        self.defects = None;
+        self.residual = 0.0;
+        self.prog_alpha = 1.0;
         self.gdc_factor = 1.0;
     }
 
     fn post_batch(&mut self) {}
 
-    /// Program the stored weights onto PCM (applies programming noise) and
-    /// position the tile at `t = t0`.
+    /// Program the stored weights onto PCM and position the tile at
+    /// `t = t0`.
+    ///
+    /// The full sequence (each stage a no-op at its default config, so
+    /// the default path stays bit-identical to the legacy single-shot
+    /// write):
+    /// 1. **Defect map** — when `config.faults` is non-zero, sample a
+    ///    [`DefectMap`] from a dedicated `rng.split()` stream (one split;
+    ///    skipped entirely for a healthy model).
+    /// 2. **Initial write** — the statistical programming noise over all
+    ///    cells, then pin defective crosspoints per the map.
+    /// 3. **Program-and-verify** — up to `max_program_iter − 1` retries:
+    ///    deterministic read-back at `t0`, re-write only the healthy
+    ///    cells whose |error| exceeds `tolerance`, with the noise scale
+    ///    multiplied by `backoff` each round (slower, careful writes).
+    /// 4. **Read-back report** — the residual error over healthy cells
+    ///    (exposed via [`Tile::programming_state`]) and the optional
+    ///    least-squares α output-rescale compensation.
     fn program(&mut self) {
-        let prog =
-            ProgrammedWeights::program(&self.target, 1.0, &self.config.noise_model, &mut self.rng);
-        self.programmed = Some(prog);
         let t0 = self.config.noise_model.t0;
+        self.defects = if self.config.faults.is_zero() {
+            None
+        } else {
+            let mut frng = self.rng.split();
+            Some(DefectMap::sample(&self.config.faults, self.out_size, self.in_size, &mut frng))
+        };
+        let mut prog =
+            ProgrammedWeights::program(&self.target, 1.0, &self.config.noise_model, &mut self.rng);
+        if let Some(map) = &self.defects {
+            prog.apply_defects(map);
+        }
+        let pp = self.config.programming.clone();
+        if pp.max_program_iter > 1 {
+            let mut scale = pp.backoff;
+            for _ in 1..pp.max_program_iter {
+                let read = prog.weights_at(t0);
+                let mut rewrote = false;
+                for i in 0..self.target.len() {
+                    if self.defects.as_ref().is_some_and(|m| m.is_defective(i)) {
+                        continue; // known-bad cell: retrying cannot help
+                    }
+                    if (read[i] - self.target[i]).abs() > pp.tolerance {
+                        prog.reprogram_cell(i, self.target[i], scale, &mut self.rng);
+                        rewrote = true;
+                    }
+                }
+                if !rewrote {
+                    break; // every healthy cell verified within tolerance
+                }
+                scale *= pp.backoff;
+            }
+        }
+        // deterministic read-back at t0: residual error + optional α fit
+        let read = prog.weights_at(t0);
+        let mut n = 0usize;
+        let mut abs_err = 0.0f64;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for i in 0..self.target.len() {
+            if self.defects.as_ref().is_some_and(|m| m.is_defective(i)) {
+                continue;
+            }
+            n += 1;
+            abs_err += (read[i] - self.target[i]).abs() as f64;
+            num += self.target[i] as f64 * read[i] as f64;
+            den += read[i] as f64 * read[i] as f64;
+        }
+        self.residual = if n == 0 { 0.0 } else { (abs_err / n as f64) as f32 };
+        self.prog_alpha = if pp.alpha_rescale && den > 1e-12 {
+            ((num / den) as f32).clamp(0.5, 2.0)
+        } else {
+            1.0
+        };
+        self.programmed = Some(prog);
         self.drift_impl(t0);
     }
 
@@ -232,10 +341,25 @@ impl Tile for InferenceTile {
 
     fn programming_state(&self) -> ProgrammingState {
         if self.programmed.is_some() {
-            ProgrammingState::Programmed { t_inference: self.t_inference }
+            ProgrammingState::Programmed {
+                t_inference: self.t_inference,
+                residual: self.residual,
+            }
         } else {
             ProgrammingState::Unprogrammed
         }
+    }
+
+    /// Defect counters of the sampled map — zero counts when the fault
+    /// model is empty, `None` before programming.
+    fn fault_stats(&self) -> Option<FaultStats> {
+        if self.programmed.is_none() {
+            return None;
+        }
+        Some(match &self.defects {
+            Some(map) => map.stats(),
+            None => FaultStats::healthy(self.out_size * self.in_size),
+        })
     }
 
     /// Observability for the Fig. 3C experiment: (mean, std) conductance
@@ -273,7 +397,7 @@ impl Tile for InferenceTile {
             &mut ctx.rng,
             &mut ctx.scratch,
         );
-        let s = self.out_scale * self.gdc_factor;
+        let s = self.out_factor();
         if s != 1.0 {
             for v in y.iter_mut() {
                 *v *= s;
@@ -301,7 +425,7 @@ impl Tile for InferenceTile {
             &mut ctx.rng,
             &mut ctx.batch_scratch,
         );
-        let s = self.out_scale * self.gdc_factor;
+        let s = self.out_factor();
         if s != 1.0 {
             y.scale(s);
         }
@@ -326,7 +450,7 @@ impl Tile for InferenceTile {
             false,
             rngs,
         );
-        let s = self.out_scale * self.gdc_factor;
+        let s = self.out_factor();
         if s != 1.0 {
             y.scale(s);
         }
@@ -405,7 +529,13 @@ mod tests {
         t.program();
         let w0 = t.get_weights().fro_norm();
         t.drift_to(1e6);
-        assert_eq!(t.programming_state(), ProgrammingState::Programmed { t_inference: 1e6 });
+        match t.programming_state() {
+            ProgrammingState::Programmed { t_inference, residual } => {
+                assert_eq!(t_inference, 1e6);
+                assert!(residual.is_finite() && residual >= 0.0);
+            }
+            s => panic!("expected Programmed, got {s:?}"),
+        }
         let w1 = t.get_weights().fro_norm();
         assert!(w1 < w0 * 0.95, "drift must shrink weights: {w0} -> {w1}");
     }
@@ -465,5 +595,142 @@ mod tests {
         let x = Matrix::zeros(1, 8);
         let d = Matrix::zeros(1, 4);
         t.update(&x, &d, 0.1);
+    }
+
+    #[test]
+    fn program_and_verify_converges_below_tolerance() {
+        // pinned acceptance test: on healthy devices the verify loop must
+        // push every cell's read-back error below the tolerance within
+        // max_program_iter (geometric noise backoff makes late retries
+        // near-exact)
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.programming.max_program_iter = 10;
+        cfg.programming.tolerance = 0.02;
+        cfg.programming.backoff = 0.5;
+        let mut t = InferenceTile::new(16, 16, cfg, Rng::new(42));
+        let mut w = Matrix::zeros(16, 16);
+        for i in 0..16 {
+            for j in 0..16 {
+                w.set(i, j, ((i * 16 + j) as f32 / 256.0) - 0.5);
+            }
+        }
+        t.set_weights(&w);
+        t.program();
+        match t.programming_state() {
+            ProgrammingState::Programmed { residual, .. } => {
+                assert!(
+                    residual <= 0.02,
+                    "verify loop must converge below tolerance, residual {residual}"
+                );
+            }
+            s => panic!("expected Programmed, got {s:?}"),
+        }
+        // single-shot programming of the same weights is measurably worse
+        let mut t1 = mk_tile(42);
+        let mut w4 = Matrix::zeros(4, 8);
+        for i in 0..4 {
+            for j in 0..8 {
+                w4.set(i, j, ((i * 8 + j) as f32 / 32.0) - 0.5);
+            }
+        }
+        t1.set_weights(&w4);
+        t1.program();
+        assert!(t1.residual() > 0.0, "single-shot residual must be reported");
+    }
+
+    #[test]
+    fn verify_defaults_reproduce_single_shot_bitwise() {
+        // the legacy pin: defaults (no faults, max_program_iter 1) must
+        // consume the exact same RNG stream and produce the exact same
+        // programmed state as the historical one-shot write
+        let mut a = mk_tile(9);
+        let mut b = mk_tile(9);
+        // different verify knobs are irrelevant while max_program_iter
+        // stays 1: no verify read, no retry draws, no α fit
+        b.config.programming = crate::faults::ProgrammingParams {
+            max_program_iter: 1,
+            tolerance: 0.5,
+            backoff: 0.9,
+            alpha_rescale: false,
+        };
+        let w = test_weights();
+        a.set_weights(&w);
+        b.set_weights(&w);
+        a.program();
+        b.program();
+        a.drift_to(3600.0);
+        b.drift_to(3600.0);
+        assert_eq!(a.get_weights().data(), b.get_weights().data());
+    }
+
+    #[test]
+    fn defect_map_sampling_is_deterministic_and_pins_cells() {
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.faults = crate::faults::FaultModel {
+            p_stuck_gmin: 0.15,
+            p_stuck_gmax: 0.15,
+            p_dead_row: 0.1,
+            ..Default::default()
+        };
+        cfg.drift_compensation = false;
+        let mk = |seed| {
+            let mut t = InferenceTile::new(4, 8, cfg.clone(), Rng::new(seed));
+            t.set_weights(&test_weights());
+            t.program();
+            t
+        };
+        let mut a = mk(21);
+        let mut b = mk(21);
+        assert_eq!(a.get_weights().data(), b.get_weights().data(), "same stream, same map");
+        let stats = a.fault_stats().expect("programmed tile reports fault stats");
+        assert_eq!(stats.n_cells, 32);
+        assert!(stats.n_defective() > 0, "15%+15% stuck rates must hit a 32-cell tile");
+        // stuck cells do not move with drift
+        let w0 = a.get_weights();
+        a.drift_to(1e7);
+        b.drift_to(1e7);
+        let w1 = a.get_weights();
+        let mut pinned_checked = 0;
+        for i in 0..32 {
+            if a.defects.as_ref().unwrap().is_defective(i) {
+                assert_eq!(w0.data()[i], w1.data()[i], "defective cell {i} drifted");
+                pinned_checked += 1;
+            }
+        }
+        assert!(pinned_checked > 0);
+        // healthy model → zero-count stats, no map
+        let mut h = mk_tile(22);
+        h.set_weights(&test_weights());
+        h.program();
+        let hs = h.fault_stats().unwrap();
+        assert_eq!(hs.n_defective(), 0);
+        assert_eq!(hs.n_cells, 32);
+    }
+
+    #[test]
+    fn alpha_rescale_improves_reconstruction() {
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.drift_compensation = false;
+        cfg.programming.alpha_rescale = true;
+        let mut t = InferenceTile::new(16, 16, cfg, Rng::new(33));
+        let mut w = Matrix::zeros(16, 16);
+        for i in 0..256 {
+            w.data_mut()[i] = ((i as f32) / 256.0) - 0.5;
+        }
+        t.set_weights(&w);
+        t.program();
+        let alpha = t.prog_alpha();
+        assert!(alpha != 1.0, "alpha fit must engage");
+        assert!((0.5..=2.0).contains(&alpha), "alpha {alpha} outside clamp");
+        // α is the least-squares minimizer over healthy cells, so the
+        // rescaled read-back cannot be worse than the raw one
+        let raw = t.drifted.clone();
+        let err = |scale: f32| -> f64 {
+            raw.iter()
+                .zip(&t.target)
+                .map(|(r, tgt)| ((r * scale - tgt) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(err(alpha) <= err(1.0) + 1e-9);
     }
 }

@@ -72,6 +72,11 @@ pub enum ProgrammingState {
     Programmed {
         /// Current inference time in seconds after programming.
         t_inference: f32,
+        /// Residual programming error: mean |w_programmed − w_target| in
+        /// normalized weight units over *healthy* crosspoints, measured
+        /// by a deterministic read-back at `t0` after the (optional)
+        /// program-and-verify loop. Grids report the worst shard.
+        residual: f32,
     },
 }
 
@@ -138,6 +143,14 @@ pub trait Tile: Send + Sync {
     /// `t` (the Fig. 3C observable). `None` for tiles without programmed
     /// devices ([`ProgrammingState::Programmed`] tiles return `Some`).
     fn conductance_stats(&self, _t: f32) -> Option<(f64, f64)> {
+        None
+    }
+
+    /// Hard-fault counters of this tile's sampled defect map (see
+    /// [`crate::faults`]). `Some` once an inference tile is programmed
+    /// (zero counts when its fault model is empty); `None` for
+    /// training/FP tiles. [`TileGrid`] merges these across its shards.
+    fn fault_stats(&self) -> Option<crate::faults::FaultStats> {
         None
     }
 

@@ -10,11 +10,16 @@
 //!   alone, inside a coalesced batch of 8, or through the
 //!   [`MicroBatcher`] — including multi-shard grids and conv layers.
 //! * **Thread invariance.** `AIHWSIM_THREADS` never changes results.
+//! * **Failure isolation.** One bad request fails alone: an injected
+//!   panic inside a batched forward, a width-mismatched rider, or a
+//!   saturated queue never wedges the engine or perturbs the outputs of
+//!   healthy requests.
 
 use aihwsim::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
+use aihwsim::faults::FaultModel;
 use aihwsim::nn::sequential::{lenet, mlp, Backend, Sequential};
 use aihwsim::nn::{LayerFwdCtx, Module};
-use aihwsim::serve::{MicroBatcher, ServeOptions};
+use aihwsim::serve::{MicroBatcher, ServeError, ServeOptions};
 use aihwsim::tile::{ForwardCtx, InferenceTile, Tile};
 use aihwsim::util::matrix::Matrix;
 use aihwsim::util::rng::Rng;
@@ -232,7 +237,7 @@ fn engine_coalesced_batch_matches_direct_and_alone() {
     let x8 = test_inputs(8, 9);
     let batcher = MicroBatcher::new(
         &model,
-        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64 },
+        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64, ..Default::default() },
     )
     .unwrap();
     let served: Vec<Vec<f32>> = std::thread::scope(|s| {
@@ -240,7 +245,9 @@ fn engine_coalesced_batch_matches_direct_and_alone() {
             .map(|b| {
                 let batcher = &batcher;
                 let x8 = &x8;
-                s.spawn(move || batcher.submit(x8.row(b).to_vec(), Rng::new(900 + b as u64)))
+                s.spawn(move || {
+                    batcher.submit(x8.row(b).to_vec(), Rng::new(900 + b as u64)).unwrap()
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -263,7 +270,7 @@ fn engine_matches_legacy_forward_on_deterministic_reads() {
     let y_legacy = model.forward(&x8);
     let batcher = MicroBatcher::new(
         &model,
-        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64 },
+        ServeOptions { batch_window_us: 200_000, max_batch: 8, queue_depth: 64, ..Default::default() },
     )
     .unwrap();
     let served: Vec<Vec<f32>> = std::thread::scope(|s| {
@@ -271,7 +278,7 @@ fn engine_matches_legacy_forward_on_deterministic_reads() {
             .map(|b| {
                 let batcher = &batcher;
                 let x8 = &x8;
-                s.spawn(move || batcher.submit(x8.row(b).to_vec(), Rng::new(b as u64)))
+                s.spawn(move || batcher.submit(x8.row(b).to_vec(), Rng::new(b as u64)).unwrap())
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -305,7 +312,12 @@ fn engine_outputs_bit_identical_across_thread_counts() {
         with_threads(threads, || {
             let batcher = MicroBatcher::new(
                 &model,
-                ServeOptions { batch_window_us: 100_000, max_batch: 4, queue_depth: 16 },
+                ServeOptions {
+                    batch_window_us: 100_000,
+                    max_batch: 4,
+                    queue_depth: 16,
+                    ..Default::default()
+                },
             )
             .unwrap();
             std::thread::scope(|s| {
@@ -313,7 +325,9 @@ fn engine_outputs_bit_identical_across_thread_counts() {
                     .map(|b| {
                         let batcher = &batcher;
                         let x = &x;
-                        s.spawn(move || batcher.submit(x.row(b).to_vec(), Rng::new(60 + b as u64)))
+                        s.spawn(move || {
+                            batcher.submit(x.row(b).to_vec(), Rng::new(60 + b as u64)).unwrap()
+                        })
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -321,4 +335,138 @@ fn engine_outputs_bit_identical_across_thread_counts() {
         })
     };
     assert_eq!(serve_all("1"), serve_all("4"));
+}
+
+// ------------------------------------------------ failure isolation
+
+#[test]
+fn saturated_queue_backpressure_serves_everyone() {
+    // 8 closed-loop clients × 8 requests over a 2-deep queue with
+    // immediate dispatch: submit must block (never fail, never drop)
+    // under saturation, and every request must come back Ok
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let batcher = MicroBatcher::new(
+        &model,
+        ServeOptions { batch_window_us: 0, max_batch: 2, queue_depth: 2, ..Default::default() },
+    )
+    .unwrap();
+    let x = test_inputs(1, 9);
+    let served: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let batcher = &batcher;
+                let x = &x;
+                s.spawn(move || {
+                    let mut session = Rng::new(8000 + t as u64);
+                    (0..8)
+                        .filter(|_| batcher.submit(x.row(0).to_vec(), session.split()).is_ok())
+                        .count()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    assert_eq!(served, 64);
+}
+
+#[test]
+fn width_mismatched_rider_fails_alone() {
+    // a long batch window coalesces a well-formed request with a
+    // wrong-width one: the mismatch comes back as its own error while
+    // the healthy co-rider is served normally
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let batcher = MicroBatcher::new(
+        &model,
+        ServeOptions { batch_window_us: 500_000, max_batch: 8, queue_depth: 16, ..Default::default() },
+    )
+    .unwrap();
+    let x = test_inputs(1, 9);
+    let (good, bad) = std::thread::scope(|s| {
+        let good = {
+            let batcher = &batcher;
+            let x = &x;
+            s.spawn(move || batcher.submit(x.row(0).to_vec(), Rng::new(1)))
+        };
+        // enqueue the bad request second so the batch width is the
+        // network's: the window is open long enough to coalesce both
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let bad = { s.spawn(|| batcher.submit(vec![0.5; 4], Rng::new(2))) };
+        (good.join().unwrap(), bad.join().unwrap())
+    });
+    let y = good.expect("healthy co-rider must serve");
+    assert_eq!(y.len(), 4);
+    assert_eq!(bad, Err(ServeError::WidthMismatch { expected: 9, got: 4 }));
+    // the reference output: the healthy request is also batch-invariant
+    // with respect to its failed co-rider
+    let mut x1 = Matrix::zeros(1, 9);
+    x1.row_mut(0).copy_from_slice(x.row(0));
+    assert_eq!(y.as_slice(), shared_forward(&model, &x1, &[1]).row(0));
+}
+
+#[test]
+fn injected_panic_fails_alone_and_engine_keeps_serving() {
+    // the AIHWSIM_INJECT_PANIC hook fires on non-finite batch input:
+    // the poisoned request gets Err(BatchPanicked), and the engine —
+    // locks recovered, leadership handed off — keeps serving later
+    // requests with bit-identical outputs
+    let model = converted_mlp(&[9, 7, 4], false, 5, None);
+    let x = test_inputs(4, 9);
+    let expected: Vec<Vec<f32>> = (0..4)
+        .map(|b| {
+            let mut x1 = Matrix::zeros(1, 9);
+            x1.row_mut(0).copy_from_slice(x.row(b));
+            shared_forward(&model, &x1, &[700 + b as u64]).row(0).to_vec()
+        })
+        .collect();
+    // the env hook is process-global: serialize with the other
+    // env-mutating tests and restore afterwards
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let saved = std::env::var("AIHWSIM_INJECT_PANIC").ok();
+    std::env::set_var("AIHWSIM_INJECT_PANIC", "1");
+    let batcher = MicroBatcher::new(
+        &model,
+        ServeOptions { batch_window_us: 0, max_batch: 4, queue_depth: 16, ..Default::default() },
+    )
+    .unwrap();
+    let res = batcher.submit(vec![f32::NAN; 9], Rng::new(666));
+    assert_eq!(res, Err(ServeError::BatchPanicked));
+    for b in 0..4 {
+        let y = batcher.submit(x.row(b).to_vec(), Rng::new(700 + b as u64)).unwrap();
+        assert_eq!(y, expected[b], "request {b} after recovered panic");
+    }
+    match saved {
+        Some(v) => std::env::set_var("AIHWSIM_INJECT_PANIC", v),
+        None => std::env::remove_var("AIHWSIM_INJECT_PANIC"),
+    }
+}
+
+// ------------------------------------------------ fault determinism
+
+#[test]
+fn fault_maps_bit_identical_across_thread_counts() {
+    // defect maps are sampled from split RNG streams drawn serially
+    // before the grid's parallel program fan-out, so a fault-injected
+    // network must read bit-identically at any AIHWSIM_THREADS
+    let outputs = |threads: &str| -> Vec<f32> {
+        with_threads(threads, || {
+            let mut rng = Rng::new(31);
+            let mut cfg = RPUConfig::default();
+            cfg.mapping = MappingParameter { max_input_size: 4, max_output_size: 4 };
+            let mut model = mlp(&[10, 8, 3], Backend::Analog, &cfg, &mut rng);
+            let mut icfg = InferenceRPUConfig::default();
+            icfg.faults = FaultModel {
+                p_stuck_gmin: 0.05,
+                p_stuck_gmax: 0.05,
+                p_dead_row: 0.02,
+                ..Default::default()
+            };
+            model.convert_to_inference(&icfg, &mut rng);
+            model.program();
+            model.drift_to(3600.0);
+            model.set_train(false);
+            let x = test_inputs(4, 10);
+            shared_forward(&model, &x, &[1, 2, 3, 4]).data().to_vec()
+        })
+    };
+    assert_eq!(outputs("1"), outputs("4"));
 }
