@@ -46,6 +46,62 @@ pub enum WeightNoiseType {
     RelativeToWeight,
 }
 
+/// Full-scale range policy for the explicit ADC quantizer
+/// ([`AdcParameters`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdcRange {
+    /// Static symmetric full scale ±value, in analog output units (i.e.
+    /// before the noise-management input scale is undone digitally).
+    Fixed(f32),
+    /// Per-column full scale: output column `i` uses its worst-case
+    /// analog accumulation `inp_bound · Σ_j |w_ij|`, computed from the
+    /// weights the kernel actually reads (drifted weights included).
+    PerColumn,
+    /// Shared data-dependent full scale: the absolute maximum of the
+    /// current output row (a "sample-and-scale" ADC).
+    AutoMax,
+}
+
+/// Explicit ADC quantization policy, applied per output column at the
+/// end of the fused MVM epilogue — after output noise, `out_bound`
+/// clipping and the legacy `out_res` quantizer, before the digital
+/// scale-undo.
+///
+/// `bits == 0` disables the policy entirely: the epilogue is then
+/// bit-identical to the pre-policy pipeline and draws no RNG, which is
+/// what the slicing/ADC parity tests pin. When enabled the quantizer is
+/// deterministic round-to-nearest with `2^bits − 1` levels over
+/// `[-range, range]`; values beyond the full scale clip to ±range.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcParameters {
+    /// Quantizer resolution in bits: 0 = off, otherwise 2..=16
+    /// (enforced by [`IOParameters::validate`]).
+    pub bits: u32,
+    /// Full-scale range policy.
+    pub range: AdcRange,
+}
+
+impl Default for AdcParameters {
+    fn default() -> Self {
+        AdcParameters { bits: 0, range: AdcRange::AutoMax }
+    }
+}
+
+impl AdcParameters {
+    /// True when the policy is disabled (`bits == 0`).
+    pub fn is_off(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Quantization step for full-scale range `r`: `2r / (2^bits − 2)`,
+    /// mirroring the `inp_res`/`out_res` convention so that ±r land
+    /// exactly on the quantization grid.
+    pub fn step(&self, r: f32) -> f32 {
+        debug_assert!(self.bits >= 2);
+        2.0 * r / ((1u32 << self.bits) - 2) as f32
+    }
+}
+
 /// Analog MVM non-ideality parameters for one direction (forward or
 /// backward — the paper allows them to differ, §3).
 #[derive(Clone, Debug)]
@@ -72,6 +128,9 @@ pub struct IOParameters {
     pub out_noise: f32,
     /// Stochastic rounding in the ADC.
     pub out_sto_round: bool,
+    /// Explicit ADC quantization policy (JSON `adc`); off by default so
+    /// the legacy `out_res` pipeline is unchanged.
+    pub adc: AdcParameters,
     /// Weight read-noise std (σ_w); see `w_noise_type`.
     pub w_noise: f32,
     pub w_noise_type: WeightNoiseType,
@@ -108,6 +167,7 @@ impl Default for IOParameters {
             out_res: 1.0 / 510.0,
             out_noise: 0.06,
             out_sto_round: false,
+            adc: AdcParameters::default(),
             w_noise: 0.0,
             w_noise_type: WeightNoiseType::AdditiveConstant,
             noise_management: NoiseManagement::AbsMax,
@@ -184,6 +244,17 @@ impl IOParameters {
         positive("inp_bound", self.inp_bound)?;
         positive("out_bound", self.out_bound)?;
         positive("nm_constant", self.nm_constant)?;
+        match self.adc.bits {
+            0 | 2..=16 => {}
+            b => return Err(format!("io.adc.bits: must be 0 (off) or 2..=16, got {b}")),
+        }
+        if let (true, AdcRange::Fixed(r)) = (self.adc.bits > 0, self.adc.range) {
+            if !(r.is_finite() && r > 0.0) {
+                return Err(format!(
+                    "io.adc.range: fixed full scale must be finite and > 0, got {r}"
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -227,5 +298,43 @@ mod tests {
             let err = io.validate().expect_err(what);
             assert!(err.starts_with("io."), "{what}: {err}");
         }
+    }
+
+    #[test]
+    fn adc_policy_defaults_off_and_step_grid() {
+        let adc = AdcParameters::default();
+        assert!(adc.is_off());
+        // 8-bit over ±2: step = 4/254; full scale lands on the grid.
+        let adc = AdcParameters { bits: 8, range: AdcRange::Fixed(2.0) };
+        let step = adc.step(2.0);
+        assert!((2.0 / step - 127.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn validate_rejects_bad_adc_knobs() {
+        let bad_bits = [1u32, 17, 32];
+        for b in bad_bits {
+            let io = IOParameters {
+                adc: AdcParameters { bits: b, range: AdcRange::AutoMax },
+                ..Default::default()
+            };
+            let err = io.validate().expect_err("bad adc bits");
+            assert!(err.starts_with("io.adc.bits"), "{err}");
+        }
+        let bad_ranges = [f32::INFINITY, f32::NAN, 0.0, -3.0];
+        for r in bad_ranges {
+            let io = IOParameters {
+                adc: AdcParameters { bits: 8, range: AdcRange::Fixed(r) },
+                ..Default::default()
+            };
+            let err = io.validate().expect_err("bad adc range");
+            assert!(err.starts_with("io.adc.range"), "{err}");
+        }
+        // A disabled policy never fails validation, whatever the range.
+        let io = IOParameters {
+            adc: AdcParameters { bits: 0, range: AdcRange::Fixed(f32::NAN) },
+            ..Default::default()
+        };
+        assert!(io.validate().is_ok());
     }
 }

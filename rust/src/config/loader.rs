@@ -27,7 +27,7 @@
 //! code.
 
 use super::device::{DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind};
-use super::io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use super::io::{AdcRange, BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
 use crate::tile::backend::ForwardBackend;
 use super::update::{PulseType, UpdateParameters};
 use super::{presets, InferenceRPUConfig, RPUConfig, WeightModifier};
@@ -253,6 +253,42 @@ fn io_from_json(j: &Json, base: IOParameters) -> Result<IOParameters, String> {
         io.backend = ForwardBackend::parse(v).unwrap_or(ForwardBackend::Auto);
     }
     io.backend_fma = j.bool_or("backend_fma", io.backend_fma);
+    // ADC quantization policy. Unlike the `backend` convention, a bad
+    // `adc` block is a HARD error: silently falling back to an ideal
+    // readout would fake hardware the user asked to degrade.
+    if let Some(a) = j.get("adc") {
+        if let Some(b) = a.get("bits") {
+            io.adc.bits = b
+                .as_usize()
+                .ok_or("io.adc.bits: must be a non-negative integer (0 = off)")?
+                as u32;
+        }
+        let fixed = a.get("fixed_range").and_then(Json::as_f64);
+        match a.get("range") {
+            None => {
+                // a bare fixed_range implies the fixed policy
+                if let Some(r) = fixed {
+                    io.adc.range = AdcRange::Fixed(r as f32);
+                }
+            }
+            Some(v) => match v.as_str() {
+                Some("auto_max") => io.adc.range = AdcRange::AutoMax,
+                Some("per_column") => io.adc.range = AdcRange::PerColumn,
+                Some("fixed") => {
+                    let r = fixed
+                        .ok_or("io.adc: range \"fixed\" needs a 'fixed_range' full scale")?;
+                    io.adc.range = AdcRange::Fixed(r as f32);
+                }
+                other => {
+                    let shown = other.unwrap_or("<non-string>");
+                    return Err(format!(
+                        "io.adc.range: unknown policy '{shown}' \
+                         (expected \"auto_max\", \"per_column\", or \"fixed\")"
+                    ))
+                }
+            },
+        }
+    }
     io.validate()?;
     Ok(io)
 }
@@ -325,6 +361,20 @@ pub fn inference_options_from_json(j: &Json) -> Result<InferenceOptions, String>
     }
     if let Some(p) = j.get("programming") {
         opts.config.programming = programming_from_json(p)?;
+    }
+    // weight bit-slicing: hard errors, like `adc` — a silently ignored
+    // slicing block would evaluate different hardware than requested
+    if let Some(s) = j.get("slicing") {
+        if let Some(v) = s.get("slices") {
+            opts.config.slicing.slices =
+                v.as_usize().ok_or("slicing.slices: must be a positive integer")?;
+        }
+        if let Some(v) = s.get("bits_per_slice") {
+            opts.config.slicing.bits_per_slice = v
+                .as_usize()
+                .ok_or("slicing.bits_per_slice: must be a positive integer")?
+                as u32;
+        }
     }
     if let Some(ts) = j.get("t_inference") {
         let ts = ts.to_f32_vec().ok_or("t_inference: must be an array of seconds")?;
@@ -728,6 +778,67 @@ mod tests {
         ] {
             assert!(inference_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn adc_and_slicing_parsing() {
+        // absent sections → policy off / single slice
+        let opts = inference_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(opts.config.forward.adc.is_off());
+        assert_eq!(opts.config.slicing.slices, 1);
+        // full document, nested under "inference" like the CLI sees it
+        let j = Json::parse(
+            r#"{"inference": {
+                "forward": {"adc": {"bits": 8, "range": "per_column"}},
+                "slicing": {"slices": 4, "bits_per_slice": 4}
+            }}"#,
+        )
+        .unwrap();
+        let opts = inference_options_from_json(&j).unwrap();
+        assert_eq!(opts.config.forward.adc.bits, 8);
+        assert_eq!(opts.config.forward.adc.range, AdcRange::PerColumn);
+        assert_eq!(opts.config.slicing.slices, 4);
+        assert_eq!(opts.config.slicing.bits_per_slice, 4);
+        // a bare fixed_range implies the fixed policy
+        let j = Json::parse(r#"{"forward": {"adc": {"bits": 6, "fixed_range": 2.5}}}"#).unwrap();
+        let opts = inference_options_from_json(&j).unwrap();
+        assert_eq!(opts.config.forward.adc.range, AdcRange::Fixed(2.5));
+        // the training loader takes the same forward.adc block
+        let j = Json::parse(r#"{"forward": {"adc": {"bits": 4, "range": "auto_max"}}}"#).unwrap();
+        let cfg = rpu_config_from_json(&j).unwrap();
+        assert_eq!(cfg.forward.adc.bits, 4);
+        assert_eq!(cfg.forward.adc.range, AdcRange::AutoMax);
+    }
+
+    #[test]
+    fn adc_and_slicing_bad_inputs_error() {
+        for bad in [
+            // shape errors caught by the parser layer
+            r#"{"forward": {"adc": {"bits": -2}}}"#,
+            r#"{"forward": {"adc": {"bits": 6.5}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "range": "banana"}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "range": "fixed"}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "range": 3}}}"#,
+            r#"{"slicing": {"slices": -1}}"#,
+            r#"{"slicing": {"slices": 2.5}}"#,
+            // value errors caught by validate(): out-of-range bits,
+            // non-finite / non-positive fixed scales, degenerate slicing
+            r#"{"forward": {"adc": {"bits": 1}}}"#,
+            r#"{"forward": {"adc": {"bits": 17}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "fixed_range": 1e999}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "fixed_range": -1.0}}}"#,
+            r#"{"forward": {"adc": {"bits": 8, "fixed_range": 0.0}}}"#,
+            r#"{"slicing": {"slices": 0}}"#,
+            r#"{"slicing": {"slices": 17}}"#,
+            r#"{"slicing": {"bits_per_slice": 0}}"#,
+            r#"{"slicing": {"bits_per_slice": 9}}"#,
+        ] {
+            assert!(inference_options_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        // adc off (bits 0) tolerates an unused fixed_range — disabled
+        // hardware cannot be misconfigured
+        let j = Json::parse(r#"{"forward": {"adc": {"bits": 0, "fixed_range": -3.0}}}"#).unwrap();
+        assert!(inference_options_from_json(&j).unwrap().config.forward.adc.is_off());
     }
 
     #[test]

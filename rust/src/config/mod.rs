@@ -13,7 +13,9 @@ pub use device::{
     DeviceConfig, PulsedDeviceParams, SingleDeviceConfig, StepKind, VectorUpdatePolicy,
 };
 pub use crate::tile::backend::ForwardBackend;
-pub use io::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+pub use io::{
+    AdcParameters, AdcRange, BoundManagement, IOParameters, NoiseManagement, WeightNoiseType,
+};
 pub use update::{PulseType, UpdateParameters};
 
 use crate::faults::{FaultModel, ProgrammingParams};
@@ -141,6 +143,50 @@ impl RPUConfig {
     }
 }
 
+/// Weight bit-slicing parameters for inference tiles
+/// ([`crate::tile::SlicedInferenceTile`]): each logical weight is split
+/// over `slices` conductance arrays with per-slice significance
+/// `2^(−bits_per_slice·k)` (slice 0 most significant) and recombined by
+/// digital shift-add after each slice's own analog MVM. `slices == 1`
+/// is the plain single-array tile, bit-identical to the pre-slicing
+/// pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlicingParameters {
+    /// Number of conductance slices per weight (1 = plain tile).
+    pub slices: usize,
+    /// Significance bits carried by each slice: slice `k` contributes
+    /// with weight `2^(−bits_per_slice·k)`.
+    pub bits_per_slice: u32,
+}
+
+impl Default for SlicingParameters {
+    fn default() -> Self {
+        SlicingParameters { slices: 1, bits_per_slice: 4 }
+    }
+}
+
+impl SlicingParameters {
+    /// Per-slice significance base `2^bits_per_slice`.
+    pub fn base(&self) -> f32 {
+        (1u64 << self.bits_per_slice) as f32
+    }
+
+    /// Reject degenerate slicing setups: zero slices, zero significance
+    /// bits (all slices equal weight), or unphysically deep stacks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.slices == 0 || self.slices > 16 {
+            return Err(format!("slicing.slices: must be in 1..=16, got {}", self.slices));
+        }
+        if self.bits_per_slice == 0 || self.bits_per_slice > 8 {
+            return Err(format!(
+                "slicing.bits_per_slice: must be in 1..=8, got {}",
+                self.bits_per_slice
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Configuration of an *inference* analog tile (paper §5): ideal training
 /// behaviour, but `program()`/`drift()` apply the statistical PCM model.
 #[derive(Clone, Debug)]
@@ -158,6 +204,9 @@ pub struct InferenceRPUConfig {
     /// Program-and-verify loop parameters (default: single-shot write,
     /// bit-identical to the legacy programming path).
     pub programming: ProgrammingParams,
+    /// Weight bit-slicing (JSON `slicing`; default 1 slice = the plain
+    /// single-array tile).
+    pub slicing: SlicingParameters,
 }
 
 impl Default for InferenceRPUConfig {
@@ -170,15 +219,17 @@ impl Default for InferenceRPUConfig {
             weight_scaling_omega: 1.0,
             faults: FaultModel::default(),
             programming: ProgrammingParams::default(),
+            slicing: SlicingParameters::default(),
         }
     }
 }
 
 impl InferenceRPUConfig {
-    /// Validate the fault and programming sub-configurations.
+    /// Validate the fault, programming and slicing sub-configurations.
     pub fn validate(&self) -> Result<(), String> {
         self.faults.validate()?;
-        self.programming.validate()
+        self.programming.validate()?;
+        self.slicing.validate()
     }
 }
 
@@ -206,6 +257,22 @@ mod tests {
         assert_eq!(m.max_output_size, 512);
         assert_eq!(MappingParameter::unlimited().max_input_size, 0);
         assert_eq!(MappingParameter::max_size(64).max_output_size, 64);
+    }
+
+    #[test]
+    fn slicing_defaults_and_validation() {
+        let s = SlicingParameters::default();
+        assert_eq!(s.slices, 1);
+        assert_eq!(s.base(), 16.0);
+        assert!(s.validate().is_ok());
+        assert!(SlicingParameters { slices: 0, ..s }.validate().is_err());
+        assert!(SlicingParameters { slices: 17, ..s }.validate().is_err());
+        assert!(SlicingParameters { bits_per_slice: 0, ..s }.validate().is_err());
+        assert!(SlicingParameters { bits_per_slice: 9, ..s }.validate().is_err());
+        // an invalid slicing block fails the whole inference config
+        let mut cfg = InferenceRPUConfig::default();
+        cfg.slicing.slices = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -180,22 +180,46 @@ where
     let seeds: Vec<u64> = (0..nr).map(|r| repeat_seed(cfg.seed, r)).collect();
     let cells: Vec<(f64, Vec<(f64, f64)>)> = par_map(nt * nr, |cell| {
         let (ti, r) = (cell / nr, cell % nr);
-        let t = cfg.times[ti];
-        let mut net = build(seeds[r]);
-        net.set_train(false);
-        net.program();
-        net.drift_to(t);
-        let cond = net.conductance_stats(t);
-        assert!(
-            !cond.is_empty(),
-            "drift_evaluate: builder returned a network with no programmed inference tiles \
-             — convert it with Module::convert_to_inference before returning"
-        );
-        let acc = dataset_accuracy(&mut net, ds, cfg.batch);
-        (acc, cond)
+        program_and_measure(build(seeds[r]), ds, cfg.times[ti], cfg.batch)
     });
-    let points = cfg
-        .times
+    DriftEvalReport { points: aggregate_points(&cfg.times, nr, &cells) }
+}
+
+/// The self-contained (time × repeat) cell body shared by
+/// [`drift_evaluate`] and [`design_sweep`]: program the freshly built
+/// network, drift it to `t`, and measure accuracy plus per-layer
+/// conductance. Every cell builds its own instance, so results are
+/// independent of scheduling.
+fn program_and_measure(
+    mut net: Sequential,
+    ds: &Dataset,
+    t: f32,
+    batch: usize,
+) -> (f64, Vec<(f64, f64)>) {
+    net.set_train(false);
+    net.program();
+    net.drift_to(t);
+    let cond = net.conductance_stats(t);
+    assert!(
+        !cond.is_empty(),
+        "drift evaluation: builder returned a network with no programmed inference tiles \
+         — convert it with Module::convert_to_inference before returning"
+    );
+    let acc = dataset_accuracy(&mut net, ds, batch);
+    (acc, cond)
+}
+
+/// Fold one cell block of `(accuracy, per-layer conductance)` results —
+/// laid out time-major, `nr` repeats per time — into per-time points
+/// with repeat statistics (shared by [`drift_evaluate`] and
+/// [`design_sweep`], which is what makes a one-cell sweep reproduce
+/// `drift_evaluate` bit-for-bit).
+fn aggregate_points(
+    times: &[f32],
+    nr: usize,
+    cells: &[(f64, Vec<(f64, f64)>)],
+) -> Vec<DriftEvalPoint> {
+    times
         .iter()
         .enumerate()
         .map(|(ti, &t)| {
@@ -217,8 +241,96 @@ where
             }
             DriftEvalPoint { t, acc, acc_mean: mean, acc_std: var.sqrt(), layer_conductance }
         })
-        .collect();
-    DriftEvalReport { points }
+        .collect()
+}
+
+/// One point of the hardware design space explored by [`design_sweep`]:
+/// a bit-slicing depth × ADC resolution × hard-fault rate combination.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepCell {
+    /// Conductance slices per weight (1 = plain tile).
+    pub slices: usize,
+    /// ADC resolution in bits (0 = ideal readout, ADC policy off).
+    pub adc_bits: u32,
+    /// Stuck-device probability (see [`crate::faults::FaultModel::stuck`]).
+    pub fault_rate: f64,
+}
+
+/// One output row of [`design_sweep`]: a design-space cell evaluated at
+/// one `t_inference`, with repeat statistics.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub cell: SweepCell,
+    pub point: DriftEvalPoint,
+}
+
+/// Cartesian design-space grid, slices-major (slices outer, then ADC
+/// bits, then fault rates) — the deterministic cell order the CLI `sweep`
+/// mode reports rows in.
+pub fn sweep_grid(slices: &[usize], adc_bits: &[u32], rates: &[f64]) -> Vec<SweepCell> {
+    let mut cells = Vec::with_capacity(slices.len() * adc_bits.len() * rates.len());
+    for &s in slices {
+        for &b in adc_bits {
+            for &r in rates {
+                cells.push(SweepCell { slices: s, adc_bits: b, fault_rate: r });
+            }
+        }
+    }
+    cells
+}
+
+/// The design-space sweep engine: evaluate `build`'s network at **every**
+/// `(cell, t_inference, repeat)` point of the grid, flattened into one
+/// parallel map — no barrier between cells, so a large grid saturates the
+/// thread pool end to end.
+///
+/// `build(seed, cell)` must return a converted, un-programmed network
+/// configured for `cell` (slicing depth, ADC bits, fault rate); the
+/// repeat seeds derive from `cfg.seed` exactly as in [`drift_evaluate`],
+/// and every `(t, repeat)` instance is self-contained. Two consequences,
+/// both pinned by tests:
+/// * the sweep is bit-deterministic at any `AIHWSIM_THREADS`;
+/// * a one-cell sweep reproduces [`drift_evaluate`] on the same builder
+///   bit-for-bit (identical seeds, identical cell bodies, shared
+///   aggregation).
+///
+/// Rows come back cell-major in grid order, `times.len()` rows per cell.
+pub fn design_sweep<F>(
+    build: F,
+    ds: &Dataset,
+    cells: &[SweepCell],
+    cfg: &DriftEvalConfig,
+) -> Vec<SweepRow>
+where
+    F: Fn(u64, &SweepCell) -> Sequential + Sync,
+{
+    assert!(!cells.is_empty(), "empty design-space grid");
+    assert!(!cfg.times.is_empty(), "empty t_inference schedule");
+    for c in cells {
+        assert!(c.slices >= 1, "sweep cell: slices must be >= 1, got {}", c.slices);
+        assert!(
+            c.fault_rate.is_finite() && (0.0..=1.0).contains(&c.fault_rate),
+            "sweep cell: fault rate must be a probability in [0, 1], got {}",
+            c.fault_rate
+        );
+    }
+    let nr = cfg.n_repeats.max(1);
+    let nt = cfg.times.len();
+    let seeds: Vec<u64> = (0..nr).map(|r| repeat_seed(cfg.seed, r)).collect();
+    let per_cell = nt * nr;
+    let raw: Vec<(f64, Vec<(f64, f64)>)> = par_map(cells.len() * per_cell, |i| {
+        let (ci, rem) = (i / per_cell, i % per_cell);
+        let (ti, r) = (rem / nr, rem % nr);
+        program_and_measure(build(seeds[r], &cells[ci]), ds, cfg.times[ti], cfg.batch)
+    });
+    let mut rows = Vec::with_capacity(cells.len() * nt);
+    for (ci, cell) in cells.iter().enumerate() {
+        let block = &raw[ci * per_cell..(ci + 1) * per_cell];
+        for point in aggregate_points(&cfg.times, nr, block) {
+            rows.push(SweepRow { cell: *cell, point });
+        }
+    }
+    rows
 }
 
 /// The fault-rate axis on top of [`drift_evaluate`]: run the full
@@ -606,5 +718,74 @@ mod tests {
         assert!(a0 > 0.8, "healthy accuracy {a0}");
         assert!(a2 > a0 - 0.25, "2% faults must degrade gracefully: {a0} -> {a2}");
         assert!(a50 < a0, "50% faults must hurt: {a0} -> {a50}");
+    }
+
+    /// Builder for the design-space tests: configures slicing depth, ADC
+    /// resolution, and fault rate from the cell.
+    fn sweep_build(layers: &Layers, seed: u64, cell: &SweepCell) -> Sequential {
+        use crate::config::{AdcParameters, AdcRange};
+        use crate::faults::FaultModel;
+        let mut icfg = InferenceRPUConfig::default();
+        icfg.slicing.slices = cell.slices;
+        icfg.forward.adc = AdcParameters { bits: cell.adc_bits, range: AdcRange::AutoMax };
+        icfg.faults = FaultModel::stuck(cell.fault_rate);
+        let mut r = Rng::new(seed);
+        let mut net = mlp_from_layers(layers, &MappingParameter::unlimited(), &mut r);
+        net.convert_to_inference(&icfg, &mut r);
+        net
+    }
+
+    #[test]
+    fn design_sweep_one_cell_reproduces_drift_evaluate_bitwise() {
+        // the headline sweep pin: a one-cell grid must be exactly the
+        // plain drift_evaluate on the same builder — same repeat seeds,
+        // same cell bodies, shared aggregation
+        let mut rng = Rng::new(17);
+        let (layers, ds) = trained_layers(&mut rng);
+        let cfg = DriftEvalConfig { times: vec![25.0, 86400.0], n_repeats: 2, batch: 32, seed: 7 };
+        let cell = SweepCell { slices: 2, adc_bits: 8, fault_rate: 0.01 };
+        let rows = design_sweep(|s, c| sweep_build(&layers, s, c), &ds, &[cell], &cfg);
+        let plain = drift_evaluate(|s| sweep_build(&layers, s, &cell), &ds, &cfg);
+        assert_eq!(rows.len(), plain.points.len());
+        for (row, point) in rows.iter().zip(plain.points.iter()) {
+            assert_eq!(row.cell, cell);
+            assert_eq!(row.point.t, point.t);
+            assert_eq!(row.point.acc, point.acc, "per-repeat accuracies must match bitwise");
+            assert_eq!(row.point.acc_mean, point.acc_mean);
+            assert_eq!(row.point.acc_std, point.acc_std);
+            assert_eq!(row.point.layer_conductance, point.layer_conductance);
+        }
+    }
+
+    #[test]
+    fn design_sweep_grid_order_and_knob_effects() {
+        let mut rng = Rng::new(18);
+        let (layers, ds) = trained_layers(&mut rng);
+        let cells = sweep_grid(&[1, 2], &[0, 4], &[0.0]);
+        assert_eq!(cells.len(), 4);
+        // slices-major cell order
+        assert_eq!(cells[0], SweepCell { slices: 1, adc_bits: 0, fault_rate: 0.0 });
+        assert_eq!(cells[1], SweepCell { slices: 1, adc_bits: 4, fault_rate: 0.0 });
+        assert_eq!(cells[2], SweepCell { slices: 2, adc_bits: 0, fault_rate: 0.0 });
+        let cfg = DriftEvalConfig { times: vec![25.0], n_repeats: 2, batch: 32, seed: 11 };
+        let rows = design_sweep(|s, c| sweep_build(&layers, s, c), &ds, &cells, &cfg);
+        assert_eq!(rows.len(), 4, "one row per cell per time point");
+        for (row, cell) in rows.iter().zip(cells.iter()) {
+            assert_eq!(row.cell, *cell, "rows come back in grid order");
+            assert_eq!(row.point.acc.len(), 2);
+            assert!(row.point.acc_mean.is_finite() && row.point.acc_std >= 0.0);
+        }
+        // the knobs genuinely reach the hardware: every cell stays usable
+        // at t0, and a crude 4-bit ADC cannot beat the ideal readout by
+        // more than noise
+        for row in &rows {
+            assert!(row.point.acc_mean > 0.5, "cell {:?}: acc {}", row.cell, row.point.acc_mean);
+        }
+        assert!(
+            rows[1].point.acc_mean <= rows[0].point.acc_mean + 0.1,
+            "4-bit ADC ({}) vs ideal readout ({})",
+            rows[1].point.acc_mean,
+            rows[0].point.acc_mean
+        );
     }
 }

@@ -11,6 +11,7 @@ pub mod params;
 pub mod trainer;
 
 pub use evaluator::{
-    accuracy_over_time, drift_evaluate, DriftEvalConfig, DriftEvalPoint, DriftEvalReport,
+    accuracy_over_time, design_sweep, drift_evaluate, sweep_grid, DriftEvalConfig, DriftEvalPoint,
+    DriftEvalReport, SweepCell, SweepRow,
 };
 pub use trainer::{evaluate, train_classifier, TrainConfig, TrainReport};

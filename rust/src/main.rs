@@ -8,6 +8,8 @@
 //!   e2e          — runtime-backed (AOT/PJRT) hardware-aware training
 //!   serve-bench  — concurrent-serving benchmark (micro-batching queue)
 //!   fault-sweep  — accuracy-vs-fault-rate robustness grid (defect maps)
+//!   sweep        — design-space sweep: bit-slicing × ADC bits × fault
+//!                  rates × t_inference, all cells in one parallel grid
 //!   presets      — list device presets
 //!
 //! Common options: `--config <file.json>` loads an RPUConfig (see
@@ -17,10 +19,11 @@
 //! auto|scalar|tiled|simd` forces the MVM kernel backend for the whole
 //! process (same effect as `AIHWSIM_BACKEND`, which it overrides).
 
-use aihwsim::config::{loader, presets, ForwardBackend, RPUConfig};
+use aihwsim::config::{loader, presets, AdcParameters, AdcRange, ForwardBackend, RPUConfig};
 use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
 use aihwsim::coordinator::evaluator::{
-    accuracy_over_time, fault_sweep, mlp_from_layers, repeat_seed, DriftEvalConfig,
+    accuracy_over_time, design_sweep, fault_sweep, mlp_from_layers, repeat_seed, sweep_grid,
+    DriftEvalConfig,
 };
 use aihwsim::faults::{FaultModel, FaultStats};
 use aihwsim::nn::AnalogLinear;
@@ -58,6 +61,11 @@ fn usage() -> ! {
                         --config file.json (training + inference + serving sections)\n\
            fault-sweep  --dims d0,d1,... --rates r1,r2,... --t-inference s1,s2,... \\\n\
                         --n-reps N --epochs N --out BENCH_faults.json \\\n\
+                        --config file.json (training + inference sections)\n\
+           sweep        --dims d0,d1,... --slices 1,2,4 --adc-bits 0,6,8 \\\n\
+                        --adc-range auto_max|per_column|fixed --adc-fixed-range F \\\n\
+                        --rates 0.0,0.01 --t-inference s1,s2,... --n-reps N \\\n\
+                        --epochs N --out BENCH_sweeps.json --csv path \\\n\
                         --config file.json (training + inference sections)\n\
            presets\n\
          common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)\n\
@@ -718,6 +726,210 @@ fn cmd_fault_sweep(args: &Args) {
     info(&format!("wrote {out}"));
 }
 
+/// Design-space sweep (`BENCH_sweeps.json`): train a small FP reference
+/// MLP once, then evaluate every (slices × adc_bits × fault_rate) cell of
+/// the hardware grid over the full (time × repeat) drift schedule — all
+/// cells flattened into **one** parallel map (see
+/// [`aihwsim::coordinator::evaluator::design_sweep`]). Rows are
+/// bit-deterministic at any `--threads`, and a one-cell grid reproduces
+/// the plain drift evaluation bit-for-bit.
+fn cmd_sweep(args: &Args) {
+    let seed = args.u64_or("seed", 42);
+    let (cfg, cfg_json) = load_config(args);
+    let dims = usize_list(args, "dims", &[64, 32, 4]);
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        eprintln!("--dims: need at least two positive layer sizes");
+        std::process::exit(2);
+    }
+    let side = (dims[0] as f64).sqrt() as usize;
+    if side * side != dims[0] {
+        eprintln!("--dims: first layer size must be a square (synthetic side² images)");
+        std::process::exit(2);
+    }
+    let slices = usize_list(args, "slices", &[1, 2, 4]);
+    let adc_bits: Vec<u32> =
+        usize_list(args, "adc-bits", &[0, 8]).into_iter().map(|b| b as u32).collect();
+    let rates: Vec<f64> = match args.f32_list("rates") {
+        None => vec![0.0],
+        Some(Ok(v)) if !v.is_empty() => v.into_iter().map(|r| r as f64).collect(),
+        Some(Ok(_)) => {
+            eprintln!("--rates: empty schedule");
+            std::process::exit(2);
+        }
+        Some(Err(e)) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if rates.iter().any(|r| !r.is_finite() || !(0.0..=1.0).contains(r)) {
+        eprintln!("--rates: fault rates must be probabilities in [0, 1]");
+        std::process::exit(2);
+    }
+    let out = args.str_or("out", "BENCH_sweeps.json");
+
+    // inference options: combined --config "inference" section, then CLI
+    let mut iopts = aihwsim::config::loader::InferenceOptions::default();
+    if let Some(json) = &cfg_json {
+        if json.get("inference").is_some() {
+            match loader::inference_options_from_json(json) {
+                Ok(o) => iopts = o,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    if let Some(times) = t_inference_list(args) {
+        iopts.t_inference = times;
+    }
+    let n_repeats = args.usize_or("n-reps", iopts.n_repeats);
+    // ADC range policy for the swept bits (the per-cell bits override
+    // whatever the config file set; the range policy is grid-wide)
+    let adc_range = match args.get("adc-range") {
+        None => iopts.config.forward.adc.range,
+        Some("auto_max") => AdcRange::AutoMax,
+        Some("per_column") => AdcRange::PerColumn,
+        Some("fixed") => match args.get("adc-fixed-range").and_then(|v| v.parse::<f32>().ok()) {
+            Some(r) => AdcRange::Fixed(r),
+            None => {
+                eprintln!("--adc-range fixed needs --adc-fixed-range <full scale>");
+                std::process::exit(2);
+            }
+        },
+        Some(other) => {
+            eprintln!("--adc-range: expected auto_max|per_column|fixed, got '{other}'");
+            std::process::exit(2);
+        }
+    };
+
+    let cells = sweep_grid(&slices, &adc_bits, &rates);
+    // validate every distinct hardware configuration up front — bad knobs
+    // are config errors (exit 2), not mid-sweep panics
+    for cell in &cells {
+        let mut probe = iopts.config.clone();
+        probe.slicing.slices = cell.slices;
+        probe.forward.adc = AdcParameters { bits: cell.adc_bits, range: adc_range };
+        probe.faults = FaultModel::stuck(cell.fault_rate);
+        if let Err(e) = probe.validate().and_then(|_| probe.forward.validate()) {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+
+    // train the FP reference once; every cell reprograms these same
+    // weights onto its own hardware variant
+    let classes = *dims.last().unwrap();
+    let samples = args.usize_or("samples", 240);
+    let mut rng = Rng::new(seed);
+    let ds = synthetic_images(samples, classes, side, 1, &mut rng);
+    let mut model = mlp(&dims, Backend::FloatingPoint, &cfg, &mut rng);
+    let tc = trainer::TrainConfig {
+        epochs: args.usize_or("epochs", 10),
+        batch_size: args.usize_or("batch", 16),
+        lr: args.f32_or("lr", 0.5),
+        seed,
+        log_every: 0,
+        csv_path: None,
+    };
+    let report = trainer::train_classifier(&mut model, &ds, &ds, &tc);
+    info(&format!("sweep: FP reference trained, acc {:.3}", report.final_test_acc()));
+    let layers = collect_linear_layers(&mut model);
+    let mapping = cfg.mapping.clone();
+    let icfg = iopts.config.clone();
+    let build = |s: u64, cell: &aihwsim::coordinator::SweepCell| {
+        let mut icfg_c = icfg.clone();
+        icfg_c.slicing.slices = cell.slices;
+        icfg_c.forward.adc = AdcParameters { bits: cell.adc_bits, range: adc_range };
+        icfg_c.faults = FaultModel::stuck(cell.fault_rate);
+        let mut r = Rng::new(s);
+        let mut net = mlp_from_layers(&layers, &mapping, &mut r);
+        net.convert_to_inference(&icfg_c, &mut r);
+        net
+    };
+    let eval_cfg =
+        DriftEvalConfig { times: iopts.t_inference.clone(), n_repeats, batch: 32, seed };
+    info(&format!(
+        "sweep: {} cells × {} times × {n_repeats} repeats = {} instances on {} threads",
+        cells.len(),
+        iopts.t_inference.len(),
+        cells.len() * iopts.t_inference.len() * n_repeats,
+        aihwsim::util::threadpool::num_threads()
+    ));
+    let rows = design_sweep(&build, &ds, &cells, &eval_cfg);
+
+    let mut csv = args.get("csv").map(|p| {
+        CsvLogger::create(
+            p,
+            &["slices", "adc_bits", "fault_rate", "t_seconds", "acc_mean", "acc_std"],
+        )
+        .unwrap()
+    });
+    let mut entries = Vec::new();
+    println!(
+        "{:>8} {:>9} {:>10} {:>12} {:>10} {:>10}",
+        "slices", "adc_bits", "rate", "t_seconds", "acc_mean", "acc_std"
+    );
+    for row in &rows {
+        let p = &row.point;
+        println!(
+            "{sl:>8} {ab:>9} {rate:>10.4} {t:>12.0} {m:>10.3} {s:>10.3}",
+            sl = row.cell.slices,
+            ab = row.cell.adc_bits,
+            rate = row.cell.fault_rate,
+            t = p.t,
+            m = p.acc_mean,
+            s = p.acc_std,
+        );
+        if let Some(c) = csv.as_mut() {
+            c.row(&[
+                row.cell.slices as f64,
+                row.cell.adc_bits as f64,
+                row.cell.fault_rate,
+                p.t as f64,
+                p.acc_mean,
+                p.acc_std,
+            ])
+            .unwrap();
+        }
+        entries.push(Json::obj(vec![
+            ("slices", Json::num(row.cell.slices as f64)),
+            ("adc_bits", Json::num(row.cell.adc_bits as f64)),
+            ("fault_rate", Json::num(row.cell.fault_rate)),
+            ("t_seconds", Json::num(p.t as f64)),
+            ("acc_mean", Json::num(p.acc_mean)),
+            ("acc_std", Json::num(p.acc_std)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sweeps")),
+        ("dims", Json::arr_f32(&dims.iter().map(|&d| d as f32).collect::<Vec<f32>>())),
+        ("slices", Json::arr_f32(&slices.iter().map(|&s| s as f32).collect::<Vec<f32>>())),
+        ("adc_bits", Json::arr_f32(&adc_bits.iter().map(|&b| b as f32).collect::<Vec<f32>>())),
+        ("rates", Json::arr_f32(&rates.iter().map(|&r| r as f32).collect::<Vec<f32>>())),
+        ("t_inference", Json::arr_f32(&iopts.t_inference)),
+        ("n_repeats", Json::num(n_repeats as f64)),
+        ("fp_reference_acc", Json::num(report.final_test_acc())),
+        ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
+        ("backend", Json::str(aihwsim::tile::backend::global_default().name())),
+        (
+            "cpu_features",
+            Json::Arr(
+                aihwsim::tile::backend::detected_features()
+                    .iter()
+                    .map(|f| Json::str(f))
+                    .collect(),
+            ),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write(&out, doc.to_string_pretty()).unwrap_or_else(|e| {
+        eprintln!("sweep: cannot write {out}: {e}");
+        std::process::exit(1);
+    });
+    info(&format!("wrote {out}"));
+}
+
 fn cmd_presets() {
     for name in presets::SINGLE_PRESET_NAMES {
         let cfg = presets::by_name(name).unwrap();
@@ -738,6 +950,7 @@ fn main() {
         Some("e2e") => cmd_e2e(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("fault-sweep") => cmd_fault_sweep(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("presets") => cmd_presets(),
         _ => usage(),
     }

@@ -38,7 +38,9 @@
 //! [`Rng::fill_normal_f32`] fills into a scratch buffer, one pass per
 //! pipeline stage, never one scalar Box–Muller call per element.
 
-use crate::config::{BoundManagement, IOParameters, NoiseManagement, WeightNoiseType};
+use crate::config::{
+    AdcParameters, AdcRange, BoundManagement, IOParameters, NoiseManagement, WeightNoiseType,
+};
 use crate::tile::backend::{self, Kb, PlainTask};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -53,6 +55,7 @@ pub struct MvmScratch {
     xq: Vec<f32>,
     var: Vec<f32>,
     noise: Vec<f32>,
+    adc_ranges: Vec<f32>,
 }
 
 /// Reusable state for the batched kernel: one decorrelated RNG stream per
@@ -164,19 +167,124 @@ fn noise_epilogue(
     }
 }
 
-/// ADC stage for one output row: clip, quantize, undo the input scaling.
+/// The explicit ADC policy quantizer ([`AdcParameters`]): deterministic
+/// per-output-column uniform quantization of the analog output row,
+/// applied after the legacy `out_res` stage and before the digital
+/// scale-undo. Draws no RNG and is a strict no-op when `bits == 0`, so a
+/// disabled policy is bit-identical to the pre-policy pipeline (the
+/// slicing/ADC parity tests pin this).
+///
+/// Quantization is round-to-nearest with `2^bits − 1` levels over
+/// `[-r, r]`. It runs in normalized space — `t = clamp(v/r, ±1)`,
+/// `round(t·h)/h · r` with `h = 2^(bits−1) − 1` half-levels — so a
+/// full-scale input maps back to exactly ±r (`r/r` is exactly 1.0) and
+/// re-quantizing a quantized row recovers the same level index. That
+/// makes every policy bitwise idempotent, including the data-dependent
+/// `AutoMax` whose full scale is the row's own absolute maximum.
+fn adc_policy_row(y: &mut [f32], adc: &AdcParameters, col_ranges: Option<&[f32]>) {
+    if adc.is_off() {
+        return;
+    }
+    let h = ((1u32 << adc.bits) / 2 - 1) as f32;
+    let quant = |v: f32, r: f32| -> f32 {
+        if r <= 0.0 {
+            return 0.0;
+        }
+        let t = (v / r).clamp(-1.0, 1.0);
+        (t * h).round() / h * r
+    };
+    match adc.range {
+        AdcRange::Fixed(r) => {
+            for yi in y.iter_mut() {
+                *yi = quant(*yi, r);
+            }
+        }
+        AdcRange::AutoMax => {
+            let r = y.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for yi in y.iter_mut() {
+                *yi = quant(*yi, r);
+            }
+        }
+        AdcRange::PerColumn => {
+            let ranges = col_ranges.expect("PerColumn ADC needs per-column ranges");
+            debug_assert_eq!(ranges.len(), y.len());
+            for (yi, &r) in y.iter_mut().zip(ranges.iter()) {
+                *yi = quant(*yi, r);
+            }
+        }
+    }
+}
+
+/// Worst-case analog accumulation per output column,
+/// `inp_bound · Σ_j |w_ij|` — the static full-scale ranges used by
+/// [`AdcRange::PerColumn`]. A property of the programmed array plus the
+/// DAC bound, so the ranges are identical for every batch row and every
+/// bound-management retry; the fixed sequential summation order keeps
+/// them deterministic.
+fn adc_col_ranges(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    transposed: bool,
+    inp_bound: f32,
+    out: &mut Vec<f32>,
+) {
+    let out_size = if transposed { cols } else { rows };
+    out.clear();
+    out.resize(out_size, 0.0);
+    if !transposed {
+        for (r, o) in out.iter_mut().enumerate() {
+            let s: f32 = w[r * cols..(r + 1) * cols].iter().map(|v| v.abs()).sum();
+            *o = inp_bound * s;
+        }
+    } else {
+        for r in 0..rows {
+            for (o, &v) in out.iter_mut().zip(w[r * cols..(r + 1) * cols].iter()) {
+                *o += v.abs();
+            }
+        }
+        out.iter_mut().for_each(|o| *o *= inp_bound);
+    }
+}
+
+/// ADC stage for one output row: clip, quantize (legacy `out_res` stage,
+/// then the explicit [`AdcParameters`] policy), undo the input scaling.
+/// With the policy off this is byte-for-byte the pre-policy stage.
 #[inline]
-fn adc_row(y: &mut [f32], scale: f32, io: &IOParameters, rng: &mut Rng) {
+fn adc_row(
+    y: &mut [f32],
+    scale: f32,
+    io: &IOParameters,
+    rng: &mut Rng,
+    adc_ranges: Option<&[f32]>,
+) {
     let out_step = io.out_res * 2.0 * io.out_bound;
+    if io.adc.is_off() {
+        for yi in y.iter_mut() {
+            let c = yi.clamp(-io.out_bound, io.out_bound);
+            *yi = quantize(c, out_step, io.out_sto_round, rng) * scale;
+        }
+        return;
+    }
     for yi in y.iter_mut() {
         let c = yi.clamp(-io.out_bound, io.out_bound);
-        *yi = quantize(c, out_step, io.out_sto_round, rng) * scale;
+        *yi = quantize(c, out_step, io.out_sto_round, rng);
+    }
+    adc_policy_row(y, &io.adc, adc_ranges);
+    for yi in y.iter_mut() {
+        *yi *= scale;
     }
 }
 
 /// Pure output-noise row for an all-zero input (nothing reaches the DAC).
 #[inline]
-fn zero_input_row(y: &mut [f32], io: &IOParameters, rng: &mut Rng, noise: &mut Vec<f32>) {
+fn zero_input_row(
+    y: &mut [f32],
+    io: &IOParameters,
+    rng: &mut Rng,
+    noise: &mut Vec<f32>,
+    adc_ranges: Option<&[f32]>,
+) {
     let out_step = io.out_res * 2.0 * io.out_bound;
     if io.out_noise > 0.0 {
         let z = draw_noise(noise, y.len(), rng);
@@ -188,6 +296,7 @@ fn zero_input_row(y: &mut [f32], io: &IOParameters, rng: &mut Rng, noise: &mut V
         let v = io.out_noise * *yi;
         *yi = quantize(v.clamp(-io.out_bound, io.out_bound), out_step, io.out_sto_round, rng);
     }
+    adc_policy_row(y, &io.adc, adc_ranges);
 }
 
 /// One analog MVM: `y = W·x` (or `Wᵀ·x` if `transposed`) through the
@@ -243,11 +352,19 @@ fn analog_mvm_from(
         return;
     }
 
+    // Static per-column ADC full scales, when that policy is selected
+    // (an array property: computed once, shared by every BM attempt).
+    let adc_pc = !io.adc.is_off() && io.adc.range == AdcRange::PerColumn;
+    if adc_pc {
+        adc_col_ranges(w, rows, cols, transposed, io.inp_bound, &mut scratch.adc_ranges);
+    }
+
     // --- noise management: dynamic input scaling ---
     let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
     if amax == 0.0 {
         // all-zero input: output is pure output noise through the ADC
-        zero_input_row(y, io, rng, &mut scratch.noise);
+        let ranges = if adc_pc { Some(&scratch.adc_ranges[..]) } else { None };
+        zero_input_row(y, io, rng, &mut scratch.noise, ranges);
         return;
     }
     let nm_scale = nm_scale_for(io, amax);
@@ -307,7 +424,8 @@ fn analog_mvm_from(
         }
 
         // --- ADC: clip, quantize, undo input scaling ---
-        adc_row(y, scale, io, rng);
+        let ranges = if adc_pc { Some(&scratch.adc_ranges[..]) } else { None };
+        adc_row(y, scale, io, rng, ranges);
         return;
     }
     unreachable!("bound-management loop always returns");
@@ -450,6 +568,15 @@ fn batch_worker(
     // instead of redrawing per element.
     let mut scalar = MvmScratch::default();
 
+    // Static per-column ADC full scales, when that policy is selected:
+    // identical for every row, so computed once per worker chunk.
+    let adc_pc = !io.adc.is_off() && io.adc.range == AdcRange::PerColumn;
+    let mut pc_ranges = Vec::new();
+    if adc_pc {
+        adc_col_ranges(w, rows, cols, transposed, io.inp_bound, &mut pc_ranges);
+    }
+    let adc_ranges = if adc_pc { Some(&pc_ranges[..]) } else { None };
+
     for block in chunk.chunks_mut(BATCH_BLOCK) {
         // --- DAC: per-row noise management, clip, quantize, input noise ---
         for (s, task) in block.iter_mut().enumerate() {
@@ -519,7 +646,7 @@ fn batch_worker(
         // --- per-row epilogue: noises, bound management, ADC ---
         for (s, task) in block.iter_mut().enumerate() {
             if zero[s] {
-                zero_input_row(task.y, io, task.rng, &mut scalar.noise);
+                zero_input_row(task.y, io, task.rng, &mut scalar.noise, adc_ranges);
                 continue;
             }
             if add_const {
@@ -555,7 +682,7 @@ fn batch_worker(
                 );
                 continue;
             }
-            adc_row(task.y, scales[s], io, task.rng);
+            adc_row(task.y, scales[s], io, task.rng, adc_ranges);
         }
     }
 }
@@ -1278,6 +1405,90 @@ mod tests {
             let expect = wm.tmatvec(d.row(b));
             for (a, e) in g.row(b).iter().zip(expect.iter()) {
                 assert!((a - e).abs() < 1e-4);
+            }
+        }
+    }
+
+    // ---------------- explicit ADC policy tests ----------------
+
+    #[test]
+    fn adc_policy_fixed_grid_clips_and_rounds() {
+        // bits=2 over ±1: step = 2/(2^2−2) = 1 → levels {-1, 0, 1}
+        let adc = AdcParameters { bits: 2, range: AdcRange::Fixed(1.0) };
+        let mut y = vec![0.3, 0.6, -0.6, 5.0, -5.0, 0.0];
+        adc_policy_row(&mut y, &adc, None);
+        assert_eq!(y, vec![0.0, 1.0, -1.0, 1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn adc_policy_idempotent_all_ranges() {
+        let w = vec![0.4, -0.3, 0.2, 0.7, 0.1, -0.9];
+        let mut ranges = Vec::new();
+        adc_col_ranges(&w, 2, 3, false, 1.0, &mut ranges);
+        for range in [AdcRange::Fixed(2.0), AdcRange::AutoMax, AdcRange::PerColumn] {
+            let adc = AdcParameters { bits: 6, range };
+            let mut y = vec![0.377, -0.613];
+            let cr = if range == AdcRange::PerColumn { Some(&ranges[..]) } else { None };
+            adc_policy_row(&mut y, &adc, cr);
+            let once = y.clone();
+            adc_policy_row(&mut y, &adc, cr);
+            assert_eq!(y, once, "{range:?} must be idempotent");
+        }
+    }
+
+    #[test]
+    fn adc_policy_per_column_worst_case_ranges() {
+        let w = vec![0.5, -0.5, 0.25, 0.25, 0.0, 0.0]; // 3x2
+        let mut r = Vec::new();
+        adc_col_ranges(&w, 3, 2, false, 1.0, &mut r);
+        assert_eq!(r, vec![1.0, 0.5, 0.0]);
+        let mut rt = Vec::new();
+        adc_col_ranges(&w, 3, 2, true, 2.0, &mut rt);
+        assert_eq!(rt, vec![2.0 * 0.75, 2.0 * 0.75]);
+        // a zero-range column (all-zero weights) quantizes to exactly 0
+        let adc = AdcParameters { bits: 4, range: AdcRange::PerColumn };
+        let mut y = vec![0.9, 0.3, 0.7];
+        adc_policy_row(&mut y, &adc, Some(&r));
+        assert_eq!(y[2], 0.0);
+        assert!(y[0] <= 1.0 && y[1] <= 0.5);
+    }
+
+    #[test]
+    fn adc_policy_off_is_bitwise_noop() {
+        // full-noise pipeline, same seed: a disabled policy (bits=0) must
+        // not perturb a single bit, whatever the configured range
+        let mut rng = Rng::new(31);
+        let w: Vec<f32> = (0..8 * 6).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x: Vec<f32> = (0..6).map(|_| rng.uniform_f32() - 0.5).collect();
+        let io_ref = IOParameters::inference_default();
+        let mut io_off = io_ref.clone();
+        io_off.adc = AdcParameters { bits: 0, range: AdcRange::Fixed(3.0) };
+        let mut s = MvmScratch::default();
+        let (mut y1, mut y2) = (vec![0.0; 8], vec![0.0; 8]);
+        analog_mvm(&w, 8, 6, &x, &mut y1, &io_ref, None, false, &mut Rng::new(7), &mut s);
+        analog_mvm(&w, 8, 6, &x, &mut y2, &io_off, None, false, &mut Rng::new(7), &mut s);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn adc_policy_batch_matches_scalar_bitwise() {
+        // deterministic config (no noise draws) → batched and scalar
+        // pipelines share adc_row and must agree bit-for-bit
+        let mut rng = Rng::new(32);
+        let w: Vec<f32> = (0..5 * 7).map(|_| rng.uniform_f32() - 0.5).collect();
+        let x = rand_matrix(9, 7, &mut rng);
+        for range in [AdcRange::Fixed(1.5), AdcRange::AutoMax, AdcRange::PerColumn] {
+            let mut io = io_quiet();
+            io.adc = AdcParameters { bits: 6, range };
+            let mut y = Matrix::zeros(9, 5);
+            let mut bs = MvmBatchScratch::default();
+            analog_mvm_batch(&w, 5, 7, &x, &mut y, &io, None, false, &mut rng, &mut bs);
+            let mut s = MvmScratch::default();
+            for b in 0..9 {
+                let mut yr = vec![0.0; 5];
+                let mut r = Rng::new(0);
+                analog_mvm(&w, 5, 7, x.row(b), &mut yr, &io, None, false, &mut r, &mut s);
+                assert_eq!(y.row(b), &yr[..], "{range:?} row {b}");
             }
         }
     }

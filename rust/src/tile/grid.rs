@@ -43,7 +43,10 @@
 use crate::config::{InferenceRPUConfig, MappingParameter, RPUConfig};
 use crate::faults::FaultStats;
 use crate::tile::pulsed_ops::UpdateStats;
-use crate::tile::{AnalogTile, FloatingPointTile, ForwardCtx, InferenceTile, ProgrammingState, Tile};
+use crate::tile::{
+    AnalogTile, FloatingPointTile, ForwardCtx, InferenceTile, ProgrammingState,
+    SlicedInferenceTile, Tile,
+};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_for_each_mut;
@@ -696,9 +699,17 @@ impl TileGrid {
             let (_, rlen) = self.row_splits[t / nc];
             let (_, clen) = self.col_splits[t % nc];
             let w = tile.get_weights();
-            let mut inf = InferenceTile::new(rlen, clen, config.clone(), rng.split());
-            inf.set_weights(&w);
-            *tile = Box::new(inf);
+            // still exactly one rng.split() per shard in row-major order;
+            // the sliced tile sub-splits its own stream internally
+            if config.slicing.slices > 1 {
+                let mut inf = SlicedInferenceTile::new(rlen, clen, config.clone(), rng.split());
+                inf.set_weights(&w);
+                *tile = Box::new(inf);
+            } else {
+                let mut inf = InferenceTile::new(rlen, clen, config.clone(), rng.split());
+                inf.set_weights(&w);
+                *tile = Box::new(inf);
+            }
         }
         // stale training caches must not reach the inference tiles (their
         // update path panics by contract)

@@ -169,6 +169,15 @@ impl InferenceTile {
         self.scratch = ctx.scratch;
         self.batch_scratch = ctx.batch_scratch;
     }
+
+    /// Swap the tile's private RNG stream with `r`. The bit-sliced
+    /// composite tile ([`crate::tile::SlicedInferenceTile`]) lends slice
+    /// 0's stream to its own legacy `&mut` forward wrapper this way, so
+    /// the single-slice degenerate case consumes exactly the stream a
+    /// plain tile would.
+    pub(crate) fn swap_rng(&mut self, r: &mut Rng) {
+        std::mem::swap(&mut self.rng, r);
+    }
 }
 
 impl Tile for InferenceTile {

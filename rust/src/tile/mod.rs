@@ -9,11 +9,13 @@ pub mod fp;
 pub mod grid;
 pub mod inference;
 pub mod pulsed_ops;
+pub mod slicing;
 
 pub use analog::AnalogTile;
 pub use fp::FloatingPointTile;
 pub use grid::TileGrid;
 pub use inference::InferenceTile;
+pub use slicing::SlicedInferenceTile;
 
 use crate::tile::forward::{MvmBatchScratch, MvmScratch};
 use crate::tile::pulsed_ops::UpdateStats;
