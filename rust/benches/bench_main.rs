@@ -16,11 +16,14 @@
 use std::time::Instant;
 
 use aihwsim::config::{
-    presets, DeviceConfig, IOParameters, InferenceRPUConfig, MappingParameter, RPUConfig,
-    UpdateParameters,
+    presets, AdcParameters, AdcRange, DeviceConfig, IOParameters, InferenceRPUConfig,
+    MappingParameter, RPUConfig, UpdateParameters,
 };
 use aihwsim::tile::TileGrid;
-use aihwsim::coordinator::evaluator::{drift_evaluate, DriftEvalConfig};
+use aihwsim::coordinator::evaluator::{
+    design_sweep_report, design_sweep_uncached, drift_evaluate, sweep_grid, DriftEvalConfig,
+    SweepCell,
+};
 use aihwsim::coordinator::experiments::{device_response, pcm_drift};
 #[cfg(feature = "pjrt")]
 use aihwsim::coordinator::hwa_pipeline::HwaPipeline;
@@ -680,6 +683,68 @@ fn bench_drift_eval(csv: &mut CsvLogger) {
     println!("  wrote BENCH_inference.json");
 }
 
+// ------------------------------------------- §5 programmed snapshots
+
+/// Programmed-state snapshot cache: the cached sweep engine (program one
+/// network per `(slices, fault_rate)` class × repeat, fan the
+/// `t_inference × adc_bits` points out over `clone_box` snapshots)
+/// against the per-point reference engine that reprograms for every
+/// point. The grid is the headline case — one class, 4 ADC settings ×
+/// 4 times × 2 repeats — so the cache does 2 programmings where the
+/// reference does 32. Rows are asserted bitwise identical; the CI hard
+/// gate on the same shape reads the CLI's BENCH_sweeps.json instead.
+fn bench_sweep_cache(csv: &mut CsvLogger) {
+    let mut dsrng = Rng::new(71);
+    let ds = synthetic_images(96, 4, 8, 1, &mut dsrng);
+    let cells = sweep_grid(&[1], &[0, 4, 6, 8], &[0.0]);
+    let cfg = DriftEvalConfig {
+        times: vec![25.0, 3600.0, 86400.0, 3.15e7],
+        n_repeats: 2,
+        batch: 32,
+        seed: 13,
+    };
+    let build = |seed: u64, cell: &SweepCell| {
+        let mut icfg = InferenceRPUConfig::default();
+        icfg.slicing.slices = cell.slices;
+        icfg.forward.adc = AdcParameters { bits: cell.adc_bits, range: AdcRange::AutoMax };
+        icfg.faults = FaultModel::stuck(cell.fault_rate);
+        let mut r = Rng::new(seed);
+        let mut net = mlp(&[64, 32, 4], Backend::FloatingPoint, &RPUConfig::perfect(), &mut r);
+        net.convert_to_inference(&icfg, &mut r);
+        net
+    };
+    let mut report = None;
+    let t_cached = time_median(3, || {
+        report = Some(design_sweep_report(&build, &ds, &cells, &cfg));
+    });
+    let mut rows_uncached = Vec::new();
+    let t_uncached = time_median(3, || {
+        rows_uncached = design_sweep_uncached(&build, &ds, &cells, &cfg);
+    });
+    let report = report.unwrap();
+    for (a, b) in report.rows.iter().zip(rows_uncached.iter()) {
+        assert_eq!(a.point.acc, b.point.acc, "cached sweep diverged from the per-point engine");
+    }
+    let speedup = t_uncached / t_cached;
+    println!(
+        "  {} points, {} classes: {} programmings cached vs {} uncached",
+        report.n_points, report.n_classes, report.n_programmings, report.n_points
+    );
+    println!(
+        "  cached {:8.1} ms   per-point {:8.1} ms   speedup {:.2}x (bitwise identical)",
+        t_cached * 1e3,
+        t_uncached * 1e3,
+        speedup
+    );
+    csv.row_str(&[
+        "sweep_cache".into(),
+        format!("{:.3}", t_cached * 1e3),
+        format!("{:.3}", t_uncached * 1e3),
+        format!("{:.2}", speedup),
+    ])
+    .unwrap();
+}
+
 // ------------------------------------------------ §Faults programming
 
 /// Programming cost of the fault/verify path (DESIGN.md "Fault
@@ -821,6 +886,9 @@ fn main() {
     }
     if section("Eq5b_program_verify (fault/verify programming cost)", &filter) {
         bench_program_verify(&mut csv);
+    }
+    if section("Eq5c_sweep_cache (programmed snapshots vs per-point reprogramming)", &filter) {
+        bench_sweep_cache(&mut csv);
     }
     #[cfg(feature = "pjrt")]
     if section("E7_pjrt_step", &filter) {

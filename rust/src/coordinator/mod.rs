@@ -11,7 +11,8 @@ pub mod params;
 pub mod trainer;
 
 pub use evaluator::{
-    accuracy_over_time, design_sweep, drift_evaluate, sweep_grid, DriftEvalConfig, DriftEvalPoint,
-    DriftEvalReport, SweepCell, SweepRow,
+    accuracy_over_time, design_sweep, design_sweep_report, design_sweep_with_observer,
+    drift_evaluate, sweep_grid, DriftEvalConfig, DriftEvalPoint, DriftEvalReport, SweepCell,
+    SweepReport, SweepRow,
 };
 pub use trainer::{evaluate, train_classifier, TrainConfig, TrainReport};

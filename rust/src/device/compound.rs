@@ -43,6 +43,7 @@ fn one_sided_replay_row(
 // ---------------------------------------------------------------- Vector
 
 /// Unit cell with several devices updated together or alternately.
+#[derive(Clone)]
 pub struct VectorArray {
     subs: Vec<SingleDeviceArray>,
     gammas: Vec<f32>,
@@ -140,6 +141,10 @@ impl DeviceArray for VectorArray {
         self.subs[0].cols()
     }
 
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        Box::new(self.clone())
+    }
+
     fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
         match self.policy {
             VectorUpdatePolicy::All => {
@@ -235,6 +240,7 @@ impl DeviceArray for VectorArray {
 // -------------------------------------------------------------- Transfer
 
 /// Tiki-Taka transfer compound (paper Fig. 4).
+#[derive(Clone)]
 pub struct TransferArray {
     /// Fast gradient-accumulation tile (A).
     fast: SingleDeviceArray,
@@ -337,6 +343,10 @@ impl DeviceArray for TransferArray {
         self.fast.cols()
     }
 
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        Box::new(self.clone())
+    }
+
     fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {
         self.fast.pulse(idx, up, rng);
         if self.gamma != 0.0 {
@@ -413,6 +423,7 @@ impl DeviceArray for TransferArray {
 // -------------------------------------------------------------- OneSided
 
 /// Two uni-directional devices per cell: w = g⁺ − g⁻.
+#[derive(Clone)]
 pub struct OneSidedArray {
     plus: SingleDeviceArray,
     minus: SingleDeviceArray,
@@ -486,6 +497,10 @@ impl DeviceArray for OneSidedArray {
     }
     fn cols(&self) -> usize {
         self.plus.cols()
+    }
+
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        Box::new(self.clone())
     }
 
     fn pulse(&mut self, idx: usize, up: bool, rng: &mut Rng) {

@@ -101,6 +101,15 @@ pub trait DeviceArray: Send + Sync {
         pulses
     }
 
+    /// Deep-copy the array — state, bounds, and all frozen d2d samples —
+    /// without touching any RNG (the snapshot seam behind
+    /// [`crate::tile::Tile::clone_box`]). The default panics so
+    /// test-local minimal impls stay compile-compatible; every built-in
+    /// array implements it.
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        panic!("this DeviceArray does not implement snapshots (clone_device)");
+    }
+
     /// Row-sharded batch update: replay the plan for **every** row with
     /// one RNG stream per row (`row_rngs.len() == rows`). Implementations
     /// shard the rows over worker threads — crosspoint state is
@@ -163,6 +172,9 @@ impl DeviceArray for SequentialRef {
     }
     fn reset_cols(&mut self, cols: &[usize], rng: &mut Rng) {
         self.0.reset_cols(cols, rng);
+    }
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        Box::new(SequentialRef(self.0.clone_device()))
     }
     fn update_row_block(
         &mut self,

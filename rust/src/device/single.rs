@@ -29,6 +29,7 @@ enum StepData {
 }
 
 /// Array of single resistive devices.
+#[derive(Clone)]
 pub struct SingleDeviceArray {
     rows: usize,
     cols: usize,
@@ -367,6 +368,10 @@ impl DeviceArray for SingleDeviceArray {
     }
     fn cols(&self) -> usize {
         self.cols
+    }
+
+    fn clone_device(&self) -> Box<dyn DeviceArray> {
+        Box::new(self.clone())
     }
 
     #[inline]

@@ -22,8 +22,8 @@
 use aihwsim::config::{loader, presets, AdcParameters, AdcRange, ForwardBackend, RPUConfig};
 use aihwsim::coordinator::checkpoint::{collect_grid_layers, collect_linear_layers};
 use aihwsim::coordinator::evaluator::{
-    accuracy_over_time, design_sweep, fault_sweep, mlp_from_layers, repeat_seed, sweep_grid,
-    DriftEvalConfig,
+    accuracy_over_time, design_sweep_uncached, design_sweep_with_observer, fault_sweep,
+    mlp_from_layers, repeat_seed, sweep_grid, DriftEvalConfig, SweepRow,
 };
 use aihwsim::faults::{FaultModel, FaultStats};
 use aihwsim::nn::AnalogLinear;
@@ -65,7 +65,9 @@ fn usage() -> ! {
            sweep        --dims d0,d1,... --slices 1,2,4 --adc-bits 0,6,8 \\\n\
                         --adc-range auto_max|per_column|fixed --adc-fixed-range F \\\n\
                         --rates 0.0,0.01 --t-inference s1,s2,... --n-reps N \\\n\
-                        --epochs N --out BENCH_sweeps.json --csv path \\\n\
+                        --epochs N --out BENCH_sweeps.json --csv path (rows\n\
+                        stream as cells complete) --bench-uncached (also time\n\
+                        the per-point engine and report the snapshot speedup) \\\n\
                         --config file.json (training + inference sections)\n\
            presets\n\
          common: --threads N (pin worker threads; overrides AIHWSIM_THREADS)\n\
@@ -728,11 +730,15 @@ fn cmd_fault_sweep(args: &Args) {
 
 /// Design-space sweep (`BENCH_sweeps.json`): train a small FP reference
 /// MLP once, then evaluate every (slices × adc_bits × fault_rate) cell of
-/// the hardware grid over the full (time × repeat) drift schedule — all
-/// cells flattened into **one** parallel map (see
-/// [`aihwsim::coordinator::evaluator::design_sweep`]). Rows are
-/// bit-deterministic at any `--threads`, and a one-cell grid reproduces
-/// the plain drift evaluation bit-for-bit.
+/// the hardware grid over the full (time × repeat) drift schedule through
+/// the programmed-state snapshot cache — program once per
+/// `(repeat, slices, fault_rate)` class, fan the `(t_inference ×
+/// adc_bits)` points out over clones (see
+/// [`aihwsim::coordinator::evaluator::design_sweep_with_observer`]).
+/// Rows are bit-deterministic at any `--threads` and bit-identical to
+/// the per-point engine (`--bench-uncached` re-runs it to time the
+/// speedup and asserts row equality). CSV rows stream to `--csv` in grid
+/// order as cells complete, with per-cell progress on stderr.
 fn cmd_sweep(args: &Args) {
     let seed = args.u64_or("seed", 42);
     let (cfg, cfg_json) = load_config(args);
@@ -849,49 +855,123 @@ fn cmd_sweep(args: &Args) {
     };
     let eval_cfg =
         DriftEvalConfig { times: iopts.t_inference.clone(), n_repeats, batch: 32, seed };
+    let n_points = cells.len() * iopts.t_inference.len() * n_repeats;
     info(&format!(
-        "sweep: {} cells × {} times × {n_repeats} repeats = {} instances on {} threads",
+        "sweep: {} cells × {} times × {n_repeats} repeats = {n_points} points on {} threads",
         cells.len(),
         iopts.t_inference.len(),
-        cells.len() * iopts.t_inference.len() * n_repeats,
         aihwsim::util::threadpool::num_threads()
     ));
-    let rows = design_sweep(&build, &ds, &cells, &eval_cfg);
 
-    let mut csv = args.get("csv").map(|p| {
-        CsvLogger::create(
+    // CSV header lands on disk before the sweep starts; rows stream in
+    // grid order as cells complete (buffered until the next-in-order cell
+    // is done), with per-cell progress on stderr
+    let csv = args.get("csv").map(|p| {
+        let mut c = CsvLogger::create(
             p,
             &["slices", "adc_bits", "fault_rate", "t_seconds", "acc_mean", "acc_std"],
         )
-        .unwrap()
+        .unwrap();
+        c.flush().unwrap();
+        c
     });
-    let mut entries = Vec::new();
     println!(
         "{:>8} {:>9} {:>10} {:>12} {:>10} {:>10}",
         "slices", "adc_bits", "rate", "t_seconds", "acc_mean", "acc_std"
     );
-    for row in &rows {
-        let p = &row.point;
-        println!(
-            "{sl:>8} {ab:>9} {rate:>10.4} {t:>12.0} {m:>10.3} {s:>10.3}",
-            sl = row.cell.slices,
-            ab = row.cell.adc_bits,
-            rate = row.cell.fault_rate,
-            t = p.t,
-            m = p.acc_mean,
-            s = p.acc_std,
-        );
-        if let Some(c) = csv.as_mut() {
-            c.row(&[
-                row.cell.slices as f64,
-                row.cell.adc_bits as f64,
-                row.cell.fault_rate,
-                p.t as f64,
-                p.acc_mean,
-                p.acc_std,
-            ])
-            .unwrap();
+    struct SweepStream {
+        pending: Vec<Option<Vec<SweepRow>>>,
+        next: usize,
+        finished: usize,
+        csv: Option<CsvLogger>,
+    }
+    impl SweepStream {
+        fn flush_ready(&mut self) {
+            while self.next < self.pending.len() {
+                let Some(rows) = self.pending[self.next].take() else { break };
+                for row in &rows {
+                    let p = &row.point;
+                    println!(
+                        "{sl:>8} {ab:>9} {rate:>10.4} {t:>12.0} {m:>10.3} {s:>10.3}",
+                        sl = row.cell.slices,
+                        ab = row.cell.adc_bits,
+                        rate = row.cell.fault_rate,
+                        t = p.t,
+                        m = p.acc_mean,
+                        s = p.acc_std,
+                    );
+                    if let Some(c) = self.csv.as_mut() {
+                        c.row(&[
+                            row.cell.slices as f64,
+                            row.cell.adc_bits as f64,
+                            row.cell.fault_rate,
+                            p.t as f64,
+                            p.acc_mean,
+                            p.acc_std,
+                        ])
+                        .unwrap();
+                    }
+                }
+                if let Some(c) = self.csv.as_mut() {
+                    c.flush().unwrap();
+                }
+                self.next += 1;
+            }
         }
+    }
+    let stream = std::sync::Mutex::new(SweepStream {
+        pending: vec![None; cells.len()],
+        next: 0,
+        finished: 0,
+        csv,
+    });
+    let t_cached = std::time::Instant::now();
+    let sweep_report = design_sweep_with_observer(&build, &ds, &cells, &eval_cfg, |ci, rows| {
+        let mut st = stream.lock().unwrap();
+        st.pending[ci] = Some(rows.to_vec());
+        st.finished += 1;
+        eprintln!(
+            "sweep: cell {}/{} done (slices={}, adc_bits={}, rate={})",
+            st.finished,
+            cells.len(),
+            cells[ci].slices,
+            cells[ci].adc_bits,
+            cells[ci].fault_rate
+        );
+        st.flush_ready();
+    });
+    let cached_ms = t_cached.elapsed().as_secs_f64() * 1e3;
+    let rows = &sweep_report.rows;
+    info(&format!(
+        "sweep: {} program-and-verify runs for {} points ({} classes × {n_repeats} repeats) in {cached_ms:.0} ms",
+        sweep_report.n_programmings, sweep_report.n_points, sweep_report.n_classes
+    ));
+
+    // --bench-uncached: time the per-point reference engine on the same
+    // grid, assert bitwise row equality, and report the snapshot speedup
+    let mut uncached_ms = None;
+    if args.has_flag("bench-uncached") {
+        let t_un = std::time::Instant::now();
+        let reference = design_sweep_uncached(&build, &ds, &cells, &eval_cfg);
+        let ms = t_un.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(rows.len(), reference.len());
+        for (a, b) in rows.iter().zip(reference.iter()) {
+            assert_eq!(
+                a.point.acc, b.point.acc,
+                "cached sweep diverged from the per-point engine at cell {:?} t {}",
+                a.cell, a.point.t
+            );
+        }
+        info(&format!(
+            "sweep: cached {cached_ms:.0} ms vs uncached {ms:.0} ms — {:.2}x speedup, rows bitwise identical",
+            ms / cached_ms.max(1e-9)
+        ));
+        uncached_ms = Some(ms);
+    }
+
+    let mut entries = Vec::new();
+    for row in rows {
+        let p = &row.point;
         entries.push(Json::obj(vec![
             ("slices", Json::num(row.cell.slices as f64)),
             ("adc_bits", Json::num(row.cell.adc_bits as f64)),
@@ -901,7 +981,7 @@ fn cmd_sweep(args: &Args) {
             ("acc_std", Json::num(p.acc_std)),
         ]));
     }
-    let doc = Json::obj(vec![
+    let mut doc_fields = vec![
         ("bench", Json::str("sweeps")),
         ("dims", Json::arr_f32(&dims.iter().map(|&d| d as f32).collect::<Vec<f32>>())),
         ("slices", Json::arr_f32(&slices.iter().map(|&s| s as f32).collect::<Vec<f32>>())),
@@ -909,20 +989,26 @@ fn cmd_sweep(args: &Args) {
         ("rates", Json::arr_f32(&rates.iter().map(|&r| r as f32).collect::<Vec<f32>>())),
         ("t_inference", Json::arr_f32(&iopts.t_inference)),
         ("n_repeats", Json::num(n_repeats as f64)),
+        ("n_points", Json::num(sweep_report.n_points as f64)),
+        ("n_classes", Json::num(sweep_report.n_classes as f64)),
+        ("n_programmings", Json::num(sweep_report.n_programmings as f64)),
+        ("cached_ms", Json::num(cached_ms)),
         ("fp_reference_acc", Json::num(report.final_test_acc())),
         ("threads", Json::num(aihwsim::util::threadpool::num_threads() as f64)),
-        ("backend", Json::str(aihwsim::tile::backend::global_default().name())),
-        (
-            "cpu_features",
-            Json::Arr(
-                aihwsim::tile::backend::detected_features()
-                    .iter()
-                    .map(|f| Json::str(f))
-                    .collect(),
-            ),
+    ];
+    if let Some(ms) = uncached_ms {
+        doc_fields.push(("uncached_ms", Json::num(ms)));
+        doc_fields.push(("speedup", Json::num(ms / cached_ms.max(1e-9))));
+    }
+    doc_fields.push(("backend", Json::str(aihwsim::tile::backend::global_default().name())));
+    doc_fields.push((
+        "cpu_features",
+        Json::Arr(
+            aihwsim::tile::backend::detected_features().iter().map(|f| Json::str(f)).collect(),
         ),
-        ("results", Json::Arr(entries)),
-    ]);
+    ));
+    doc_fields.push(("results", Json::Arr(entries)));
+    let doc = Json::obj(doc_fields);
     std::fs::write(&out, doc.to_string_pretty()).unwrap_or_else(|e| {
         eprintln!("sweep: cannot write {out}: {e}");
         std::process::exit(1);

@@ -9,7 +9,7 @@ use crate::util::rng::Rng;
 macro_rules! act_module {
     ($name:ident, $fwd:expr, $bwd:expr, $doc:literal) => {
         #[doc = $doc]
-        #[derive(Default)]
+        #[derive(Clone, Default)]
         pub struct $name {
             cache: Option<Matrix>,
         }
@@ -49,6 +49,23 @@ macro_rules! act_module {
             fn set_train(&mut self, _train: bool) {}
             fn name(&self) -> String {
                 stringify!($name).to_string()
+            }
+
+            fn clone_box(&self) -> Box<dyn Module> {
+                Box::new(self.clone())
+            }
+
+            /// Cache-free elementwise eval into `y` with the caller's
+            /// buffer — exact digital op, identical to
+            /// [`Module::forward`]'s output.
+            fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, _ctx: &mut LayerFwdCtx) {
+                if y.rows() != x.rows() || y.cols() != x.cols() {
+                    *y = Matrix::zeros(x.rows(), x.cols());
+                }
+                let f: fn(f32) -> f32 = $fwd;
+                for (yv, &xv) in y.data_mut().iter_mut().zip(x.data().iter()) {
+                    *yv = f(xv);
+                }
             }
 
             fn supports_shared(&self) -> bool {
@@ -93,7 +110,7 @@ act_module!(
 
 /// Log-softmax over the last dimension (digital), typically followed by
 /// [`crate::nn::loss::nll_loss`].
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct LogSoftmax {
     cache: Option<Matrix>,
 }
@@ -143,6 +160,27 @@ impl Module for LogSoftmax {
     fn set_train(&mut self, _train: bool) {}
     fn name(&self) -> String {
         "LogSoftmax".into()
+    }
+
+    fn clone_box(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    /// Cache-free per-row log-softmax into `y` with the caller's buffer
+    /// — same max-shifted logsumexp, identical output to
+    /// [`Module::forward`].
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, _ctx: &mut LayerFwdCtx) {
+        if y.rows() != x.rows() || y.cols() != x.cols() {
+            *y = Matrix::zeros(x.rows(), x.cols());
+        }
+        for b in 0..x.rows() {
+            let xrow = x.row(b);
+            let mx = xrow.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = xrow.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            for (yv, &xv) in y.row_mut(b).iter_mut().zip(xrow.iter()) {
+                *yv = xv - lse;
+            }
+        }
     }
 
     fn supports_shared(&self) -> bool {

@@ -25,6 +25,8 @@ use crate::util::rng::Rng;
 
 /// 2-D convolution layer backed by a tile grid of shape
 /// `out_ch × (in_ch·k·k)`.
+/// `Clone` is the deep snapshot (see [`TileGrid`]'s `Clone`).
+#[derive(Clone)]
 pub struct AnalogConv2d {
     grid: TileGrid,
     in_ch: usize,
@@ -250,6 +252,53 @@ impl Module for AnalogConv2d {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+
+    fn clone_box(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn set_adc_bits(&mut self, bits: u32) {
+        self.grid.set_adc_bits(bits);
+    }
+
+    /// Buffer-reusing eval forward: the same im2col lowering and grid
+    /// read as [`Module::forward`] in eval mode (each shard consumes its
+    /// own RNG stream — bitwise identical), with the patch matrix, grid
+    /// output, and MVM scratch all living in `ctx`.
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut LayerFwdCtx) {
+        if self.grid.is_train() && self.grid.is_analog() {
+            // train-mode analog grids apply weight modifiers and cache
+            // activations — keep the legacy path bit-for-bit
+            *y = self.forward(x);
+            return;
+        }
+        let b = x.rows();
+        assert_eq!(x.cols(), self.in_ch * self.in_size * self.in_size, "input shape");
+        let p = self.out_size * self.out_size;
+        let LayerFwdCtx { grid, patches, patches_out, .. } = ctx;
+        if patches.rows() != b * p || patches.cols() != self.in_ch * self.k * self.k {
+            *patches = Matrix::zeros(b * p, self.in_ch * self.k * self.k);
+        }
+        for bi in 0..b {
+            self.im2col(x.row(bi), patches, bi * p);
+        }
+        if patches_out.rows() != b * p || patches_out.cols() != self.out_ch {
+            *patches_out = Matrix::zeros(b * p, self.out_ch);
+        }
+        self.grid.forward_eval_into(patches, patches_out, grid);
+        // reshape (B·P)×out_ch → B×(out_ch·P)
+        if y.rows() != b || y.cols() != self.out_ch * p {
+            *y = Matrix::zeros(b, self.out_ch * p);
+        }
+        for bi in 0..b {
+            for pi in 0..p {
+                let src = patches_out.row(bi * p + pi);
+                for (c, &v) in src.iter().enumerate() {
+                    y.row_mut(bi)[c * p + pi] = v;
+                }
+            }
+        }
     }
 
     fn convert_to_inference(

@@ -17,6 +17,8 @@ use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// Fully-connected layer on a grid of analog (or FP baseline) tiles.
+/// `Clone` is the deep snapshot (see [`TileGrid`]'s `Clone`).
+#[derive(Clone)]
 pub struct AnalogLinear {
     grid: TileGrid,
 }
@@ -131,6 +133,27 @@ impl Module for AnalogLinear {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+
+    fn clone_box(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn set_adc_bits(&mut self, bits: u32) {
+        self.grid.set_adc_bits(bits);
+    }
+
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut LayerFwdCtx) {
+        if self.grid.is_train() && self.grid.is_analog() {
+            // train-mode analog grids apply weight modifiers and cache
+            // activations — keep the legacy path bit-for-bit
+            *y = self.grid.forward(x);
+            return;
+        }
+        if y.rows() != x.rows() || y.cols() != self.grid.out_size() {
+            *y = Matrix::zeros(x.rows(), self.grid.out_size());
+        }
+        self.grid.forward_eval_into(x, y, &mut ctx.grid);
     }
 
     fn convert_to_inference(

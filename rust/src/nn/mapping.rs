@@ -15,6 +15,8 @@ use crate::util::rng::Rng;
 
 /// A fully-connected layer split over multiple analog tiles along the
 /// input dimension (each tile at most `max_in` columns wide).
+/// `Clone` is the deep snapshot (see [`TileGrid`]'s `Clone`).
+#[derive(Clone)]
 pub struct TiledLinear {
     grid: TileGrid,
 }
@@ -83,6 +85,27 @@ impl Module for TiledLinear {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+
+    fn clone_box(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn set_adc_bits(&mut self, bits: u32) {
+        self.grid.set_adc_bits(bits);
+    }
+
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut LayerFwdCtx) {
+        if self.grid.is_train() && self.grid.is_analog() {
+            // train-mode analog grids apply weight modifiers and cache
+            // activations — keep the legacy path bit-for-bit
+            *y = self.grid.forward(x);
+            return;
+        }
+        if y.rows() != x.rows() || y.cols() != self.grid.out_size() {
+            *y = Matrix::zeros(x.rows(), self.grid.out_size());
+        }
+        self.grid.forward_eval_into(x, y, &mut ctx.grid);
     }
 
     fn convert_to_inference(

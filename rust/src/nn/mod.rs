@@ -93,6 +93,35 @@ pub trait Module: Send + Sync {
         None
     }
 
+    // ------------------------------------------------ snapshots
+
+    /// Deep-copy the module — weights, programmed device state, private
+    /// RNG streams — without drawing from any RNG, so a cloned network
+    /// behaves bitwise exactly like the original would from this state
+    /// on (the programmed-state snapshot seam, see
+    /// [`crate::tile::Tile::clone_box`]). The default panics so minimal
+    /// custom modules keep compiling; every built-in module implements
+    /// it.
+    fn clone_box(&self) -> Box<dyn Module> {
+        panic!("{}: this module does not implement snapshots (clone_box)", self.name());
+    }
+
+    /// Re-target every tile's explicit ADC quantizer to `bits` (0 = off)
+    /// without touching programmed state or any RNG (see
+    /// [`crate::tile::Tile::set_adc_bits`]). No-op for digital modules.
+    fn set_adc_bits(&mut self, _bits: u32) {}
+
+    /// Evaluation forward with caller-owned buffers: bitwise identical
+    /// to `*y = self.forward(x)` in eval mode (same tile-owned RNG
+    /// streams), but scratch comes from the reused [`LayerFwdCtx`] so
+    /// repeated evaluation loops stop re-allocating per batch.
+    /// Implementations must resize `y` themselves when its shape does
+    /// not match. The default simply delegates to [`Self::forward`].
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut LayerFwdCtx) {
+        let _ = ctx;
+        *y = self.forward(x);
+    }
+
     // ------------------------------------------------ inference lifecycle
 
     /// Swap this module's analog tile shards for PCM inference tiles in
@@ -137,5 +166,13 @@ pub trait Module: Send + Sync {
     fn forward_shared(&self, x: &Matrix, y: &mut Matrix, rngs: &mut [Rng], ctx: &mut LayerFwdCtx) {
         let _ = (x, y, rngs, ctx);
         panic!("{}: this module does not implement the shared read path", self.name());
+    }
+}
+
+/// Snapshots make boxed modules clonable — [`Sequential`] derives its
+/// deep copy from this.
+impl Clone for Box<dyn Module> {
+    fn clone(&self) -> Self {
+        self.clone_box()
     }
 }

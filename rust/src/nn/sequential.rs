@@ -6,6 +6,10 @@ use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// A sequence of modules executed in order.
+/// `Clone` is the deep snapshot: each child clones via
+/// [`Module::clone_box`], so a converted-and-programmed network can be
+/// duplicated without touching any RNG.
+#[derive(Clone)]
 pub struct Sequential {
     modules: Vec<Box<dyn Module>>,
 }
@@ -87,6 +91,51 @@ impl Module for Sequential {
 
     fn name(&self) -> String {
         "Sequential".into()
+    }
+
+    fn clone_box(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+
+    fn set_adc_bits(&mut self, bits: u32) {
+        for m in self.modules.iter_mut() {
+            m.set_adc_bits(bits);
+        }
+    }
+
+    /// Chain the children's `forward_eval` through the context's
+    /// reusable `ping`/`pong` activation pair. Bitwise identical to
+    /// [`Module::forward`]'s `h = m.forward(&h)` chain (each child's
+    /// `forward_eval` is bitwise ≡ its `forward` in eval mode), but all
+    /// intermediate activations live in two reused buffers instead of a
+    /// fresh allocation per layer per batch.
+    fn forward_eval(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut crate::nn::LayerFwdCtx) {
+        let n = self.modules.len();
+        if n == 0 {
+            *y = x.clone();
+            return;
+        }
+        let crate::nn::LayerFwdCtx { children, ping, pong, .. } = ctx;
+        if children.len() != n {
+            children.resize_with(n, crate::nn::LayerFwdCtx::default);
+        }
+        // invariant: before iteration i > 0, `a` holds layer i-1's output
+        let (mut a, mut b): (&mut Matrix, &mut Matrix) = (ping, pong);
+        for (i, (m, child)) in self.modules.iter_mut().zip(children.iter_mut()).enumerate() {
+            let last = i + 1 == n;
+            if i == 0 {
+                if last {
+                    m.forward_eval(x, y, child);
+                } else {
+                    m.forward_eval(x, a, child);
+                }
+            } else if last {
+                m.forward_eval(a, y, child);
+            } else {
+                m.forward_eval(a, b, child);
+                std::mem::swap(&mut a, &mut b);
+            }
+        }
     }
 
     /// Convert every analog layer in order — each layer draws its RNG

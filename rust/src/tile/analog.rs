@@ -29,6 +29,28 @@ pub struct AnalogTile {
     pub last_update_stats: UpdateStats,
 }
 
+/// Deep snapshot: device state (via [`DeviceArray::clone_device`]),
+/// config, output scale, any active modified weights, and the private
+/// RNG stream are copied without drawing from any RNG; scratch buffers
+/// and the observability counters reset (they are not model state).
+impl Clone for AnalogTile {
+    fn clone(&self) -> Self {
+        AnalogTile {
+            out_size: self.out_size,
+            in_size: self.in_size,
+            device: self.device.clone_device(),
+            config: self.config.clone(),
+            rng: self.rng.clone(),
+            out_scale: self.out_scale,
+            modified: self.modified.clone(),
+            mvm_scratch: MvmScratch::default(),
+            batch_scratch: MvmBatchScratch::default(),
+            upd_scratch: UpdateScratch::default(),
+            last_update_stats: self.last_update_stats,
+        }
+    }
+}
+
 impl AnalogTile {
     /// Create a tile with zeroed device weights.
     pub fn new(out_size: usize, in_size: usize, config: RPUConfig, mut rng: Rng) -> Self {
@@ -199,6 +221,10 @@ impl Tile for AnalogTile {
 
     fn update_stats(&self) -> Option<UpdateStats> {
         Some(self.last_update_stats)
+    }
+
+    fn clone_box(&self) -> Box<dyn Tile> {
+        Box::new(self.clone())
     }
 
     /// Fused batched forward: the weights are read once per mini-batch and

@@ -12,6 +12,7 @@ use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// Exact digital tile.
+#[derive(Clone)]
 pub struct FloatingPointTile {
     w: Matrix,
 }
@@ -56,6 +57,10 @@ impl Tile for FloatingPointTile {
     }
 
     fn post_batch(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn Tile> {
+        Box::new(self.clone())
+    }
 
     /// Exact batched GEMM `Y = X·Wᵀ` (blocked + parallel over the batch).
     fn forward_batch(&mut self, x: &Matrix, y: &mut Matrix) {

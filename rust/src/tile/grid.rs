@@ -172,6 +172,30 @@ pub struct TileGrid {
     pub last_update_stats: UpdateStats,
 }
 
+/// Deep snapshot of the whole grid: every shard clones via
+/// [`Tile::clone_box`] (state + private RNG stream, no RNG drawn), the
+/// digital bias and caches copy verbatim, and the scratch buffers reset
+/// to empty (rebuilt on demand, never observable in results).
+impl Clone for TileGrid {
+    fn clone(&self) -> Self {
+        TileGrid {
+            tiles: self.tiles.clone(),
+            row_splits: self.row_splits.clone(),
+            col_splits: self.col_splits.clone(),
+            out_size: self.out_size,
+            in_size: self.in_size,
+            bias: self.bias.clone(),
+            bias_grad: self.bias_grad.clone(),
+            x_cache: self.x_cache.clone(),
+            d_cache: self.d_cache.clone(),
+            train: self.train,
+            is_analog: self.is_analog,
+            scratch: GridScratch::default(),
+            last_update_stats: self.last_update_stats,
+        }
+    }
+}
+
 impl TileGrid {
     /// Analog grid: one [`AnalogTile`] per shard, each with its own split
     /// RNG stream and device array, initialized uniformly in
@@ -376,6 +400,61 @@ impl TileGrid {
             for (r, &(rstart, _)) in self.row_splits.iter().enumerate() {
                 for c in 0..nc {
                     let part = &scratch.fwd_parts[r * nc + c];
+                    if c == 0 {
+                        y.scatter_col_block(rstart, part);
+                    } else {
+                        y.add_col_block(rstart, part);
+                    }
+                }
+            }
+        }
+
+        if let Some(bias) = &self.bias {
+            y.add_row_bias(bias);
+        }
+    }
+
+    /// Evaluation forward `y = x·Wᵀ + b` with caller-owned buffers: the
+    /// exact `forward_into` structure (same shard order, same per-shard
+    /// RNG streams — each tile consumes its *own* stream via
+    /// [`Tile::forward_batch_ctx`], so the result is bitwise identical
+    /// to [`Self::forward`] in eval mode), but every partial, block, and
+    /// MVM scratch buffer comes from the reused [`GridForwardCtx`] —
+    /// repeated evaluation loops stop re-allocating per batch. Eval-mode
+    /// read: no weight modifier, nothing cached.
+    pub fn forward_eval_into(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut GridForwardCtx) {
+        assert_eq!(x.cols(), self.in_size, "input features");
+        assert_eq!(y.cols(), self.out_size);
+        assert_eq!(x.rows(), y.rows());
+        let (nr, nc) = (self.row_splits.len(), self.col_splits.len());
+        ctx.ensure(x.rows(), &self.row_splits, &self.col_splits);
+        let GridForwardCtx { x_blocks, parts, tile_ctxs, .. } = ctx;
+
+        if nr == 1 && nc == 1 {
+            self.tiles[0].forward_batch_ctx(x, y, &mut tile_ctxs[0]);
+        } else {
+            if nc > 1 {
+                for (c, &(start, _)) in self.col_splits.iter().enumerate() {
+                    x.copy_col_block(start, &mut x_blocks[c]);
+                }
+            }
+            let x_blocks = &*x_blocks;
+            let mut tasks: Vec<(&mut Box<dyn Tile>, &mut Matrix, &mut ForwardCtx)> = self
+                .tiles
+                .iter_mut()
+                .zip(parts.iter_mut())
+                .zip(tile_ctxs.iter_mut())
+                .map(|((tile, part), tctx)| (tile, part, tctx))
+                .collect();
+            par_for_each_mut(&mut tasks, |t, task| {
+                let (tile, part, tctx) = (&mut *task.0, &mut *task.1, &mut *task.2);
+                let xin = if nc == 1 { x } else { &x_blocks[t % nc] };
+                tile.forward_batch_ctx(xin, part, tctx);
+            });
+            // digital partial-sum reduction, same ordering as forward_into
+            for (r, &(rstart, _)) in self.row_splits.iter().enumerate() {
+                for c in 0..nc {
+                    let part = &parts[r * nc + c];
                     if c == 0 {
                         y.scatter_col_block(rstart, part);
                     } else {
@@ -717,6 +796,15 @@ impl TileGrid {
         self.d_cache = None;
         self.is_analog = true;
         self.train = false;
+    }
+
+    /// Re-target every shard's explicit ADC quantizer to `bits` (0 =
+    /// off) without touching programmed state or any RNG — the snapshot
+    /// engine's ADC-axis fan-out (see [`Tile::set_adc_bits`]).
+    pub fn set_adc_bits(&mut self, bits: u32) {
+        for tile in self.tiles.iter_mut() {
+            tile.set_adc_bits(bits);
+        }
     }
 
     /// Program every shard onto its physical devices, shard-parallel with

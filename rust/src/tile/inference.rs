@@ -61,6 +61,34 @@ pub struct InferenceTile {
     batch_scratch: MvmBatchScratch,
 }
 
+/// Deep snapshot: weights, programmed devices, drifted caches, and the
+/// private RNG stream are copied byte for byte; scratch buffers reset to
+/// empty (they are not state — the MVM pipeline sizes them on demand).
+/// No RNG is drawn, so the copy behaves bitwise exactly like the
+/// original would from this state on.
+impl Clone for InferenceTile {
+    fn clone(&self) -> Self {
+        InferenceTile {
+            out_size: self.out_size,
+            in_size: self.in_size,
+            config: self.config.clone(),
+            rng: self.rng.clone(),
+            target: self.target.clone(),
+            out_scale: self.out_scale,
+            programmed: self.programmed.clone(),
+            defects: self.defects.clone(),
+            residual: self.residual,
+            prog_alpha: self.prog_alpha,
+            t_inference: self.t_inference,
+            drifted: self.drifted.clone(),
+            read_var: self.read_var.clone(),
+            gdc_factor: self.gdc_factor,
+            scratch: MvmScratch::default(),
+            batch_scratch: MvmBatchScratch::default(),
+        }
+    }
+}
+
 impl InferenceTile {
     pub fn new(out_size: usize, in_size: usize, config: InferenceRPUConfig, rng: Rng) -> Self {
         InferenceTile {
@@ -232,6 +260,17 @@ impl Tile for InferenceTile {
         self.with_own_ctx(|tile, ctx| tile.forward_batch_shared(x, y, ctx));
     }
 
+    /// Same stream, caller's scratch: lend the tile's own RNG into `ctx`
+    /// (the evaluation loop's reused buffers) and run the shared batched
+    /// kernel — bitwise identical to [`Tile::forward_batch`], which lends
+    /// the same stream into a throwaway context.
+    fn forward_batch_ctx(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut ForwardCtx) {
+        std::mem::swap(&mut self.rng, &mut ctx.rng);
+        let this: &Self = self;
+        this.forward_batch_shared(x, y, ctx);
+        std::mem::swap(&mut self.rng, &mut ctx.rng);
+    }
+
     /// Exact transposed GEMM (inference chips have no analog backward).
     fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {
         assert_eq!(d.cols(), self.out_size);
@@ -357,6 +396,16 @@ impl Tile for InferenceTile {
         } else {
             ProgrammingState::Unprogrammed
         }
+    }
+
+    fn clone_box(&self) -> Box<dyn Tile> {
+        Box::new(self.clone())
+    }
+
+    /// Re-target only the quantizer resolution; the range policy and all
+    /// other forward non-idealities stay as configured.
+    fn set_adc_bits(&mut self, bits: u32) {
+        self.config.forward.adc.bits = bits;
     }
 
     /// Defect counters of the sampled map — zero counts when the fault

@@ -123,6 +123,32 @@ pub trait Tile: Send + Sync {
         None
     }
 
+    // ------------------------------------------------ snapshots
+
+    /// Deep-copy the tile — weights, programmed/drifted device state,
+    /// and the private RNG stream, byte for byte — without drawing from
+    /// any RNG. This is the programmed-state snapshot seam: the sweep
+    /// engine programs a network once, then clones it per
+    /// `(t_inference, adc_bits)` read-out point, and every clone behaves
+    /// bitwise exactly like the original would from that state on.
+    /// Scratch buffers are *not* part of the state and may reset to
+    /// empty in the copy.
+    ///
+    /// The default panics so minimal test-only tiles keep compiling;
+    /// every built-in tile implements it.
+    fn clone_box(&self) -> Box<dyn Tile> {
+        panic!("this tile does not implement snapshots (clone_box)");
+    }
+
+    /// Re-target the explicit ADC quantizer to `bits` (0 = off) without
+    /// touching any other forward non-ideality or the configured
+    /// [`crate::config::AdcRange`] policy. The sweep engine calls this on
+    /// snapshots to fan one programmed state out over the ADC-resolution
+    /// axis — programming never reads the ADC config, so two sweep cells
+    /// differing only in `adc_bits` share one programmed state. No-op
+    /// for tiles without an ADC (training/FP tiles).
+    fn set_adc_bits(&mut self, _bits: u32) {}
+
     // ------------------------------------------------ inference lifecycle
 
     /// Program the stored weights onto the tile's physical devices
@@ -171,6 +197,18 @@ pub trait Tile: Send + Sync {
             // x and y are distinct matrices, so the row borrows are disjoint
             self.forward(x.row(b), y.row_mut(b));
         }
+    }
+
+    /// Batched forward with caller-provided scratch: bitwise identical
+    /// to [`Self::forward_batch`] (same weights, same RNG stream — the
+    /// tile's *own* stream, not `ctx.rng`), but the MVM scratch buffers
+    /// come from `ctx` so repeated evaluation loops stop re-growing
+    /// per-tile allocations. The default simply delegates to
+    /// `forward_batch`; shared-path tiles override it to lend their RNG
+    /// into `ctx` and run the shared kernel with `ctx`'s scratch.
+    fn forward_batch_ctx(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut ForwardCtx) {
+        let _ = &mut ctx.batch_scratch;
+        self.forward_batch(x, y);
     }
 
     /// Batched backward: `d` is B×out, `g` B×in (see [`Self::forward_batch`]
@@ -230,6 +268,14 @@ pub trait Tile: Send + Sync {
             self.forward_shared(x.row(b), y.row_mut(b), ctx);
             std::mem::swap(rng, &mut ctx.rng);
         }
+    }
+}
+
+/// Snapshots make boxed tiles clonable — [`crate::tile::TileGrid`] and
+/// the `nn` modules derive their own deep copies from this.
+impl Clone for Box<dyn Tile> {
+    fn clone(&self) -> Self {
+        self.clone_box()
     }
 }
 

@@ -42,6 +42,10 @@ use crate::util::rng::Rng;
 
 /// Bit-sliced PCM inference tile: a stack of [`InferenceTile`] slices
 /// with per-slice significance and digital shift-add recombination.
+/// `Clone` is the deep snapshot — every slice copies its programmed
+/// state and private RNG stream without drawing from any RNG (see
+/// [`InferenceTile`]'s `Clone`).
+#[derive(Clone)]
 pub struct SlicedInferenceTile {
     out_size: usize,
     in_size: usize,
@@ -274,6 +278,34 @@ impl Tile for SlicedInferenceTile {
         let this: &Self = self;
         this.forward_batch_shared(x, y, &mut ctx);
         self.slices[0].swap_rng(&mut ctx.rng);
+    }
+
+    /// Caller-scratch variant of [`Tile::forward_batch`]: slice 0's
+    /// private stream is lent into `ctx` (whose scratch the kernels then
+    /// reuse), exactly like the throwaway-context path above — so the
+    /// two are bitwise identical.
+    fn forward_batch_ctx(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut ForwardCtx) {
+        if self.slices.len() == 1 {
+            return self.slices[0].forward_batch_ctx(x, y, ctx);
+        }
+        self.slices[0].swap_rng(&mut ctx.rng);
+        let this: &Self = self;
+        this.forward_batch_shared(x, y, ctx);
+        self.slices[0].swap_rng(&mut ctx.rng);
+    }
+
+    fn clone_box(&self) -> Box<dyn Tile> {
+        Box::new(self.clone())
+    }
+
+    /// Fan the quantizer resolution out to every slice (each slice's own
+    /// analog MVM carries the ADC) and keep the composite config in sync
+    /// for future reads of it.
+    fn set_adc_bits(&mut self, bits: u32) {
+        self.config.forward.adc.bits = bits;
+        for s in self.slices.iter_mut() {
+            s.set_adc_bits(bits);
+        }
     }
 
     fn backward_batch(&mut self, d: &Matrix, g: &mut Matrix) {

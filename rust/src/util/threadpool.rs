@@ -106,6 +106,36 @@ where
     par_chunks_mut(tasks, min_chunk, f);
 }
 
+/// Split `0..n` into the same contiguous ranges [`par_chunks_mut`] would
+/// use (at most `num_threads()` chunks of `min_chunk`-bounded size) and
+/// run `f(range)` for each range on a worker thread. Built for stateful
+/// sweep workers that walk an index range in order carrying per-worker
+/// scratch (e.g. one live network snapshot) — the range split depends
+/// only on `n`, `min_chunk`, and the thread count, never on timing.
+pub fn par_ranges<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let fref = &f;
+            s.spawn(move || fref(start..end));
+            start = end;
+        }
+    });
+}
+
 /// Parallel-for over an index range: runs `f(i)` for i in 0..n with results
 /// collected in order. `f` must be cheap to call in any order.
 pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
@@ -228,6 +258,29 @@ mod tests {
             *v = acc;
         }
         assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn par_ranges_cover_disjointly_and_match_chunking() {
+        // every index covered exactly once, ranges contiguous
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(257, 1, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+        // min_chunk == n collapses to one serial range
+        let calls = AtomicUsize::new(0);
+        par_ranges(64, 64, |range| {
+            assert_eq!(range, 0..64);
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // empty is a no-op
+        par_ranges(0, 1, |_| panic!("should not run"));
     }
 
     #[test]

@@ -12,12 +12,20 @@
 //! 3. **Sweep determinism** — `design_sweep` rows are bitwise identical
 //!    at `AIHWSIM_THREADS` ∈ {1, 4} (the standing thread-invariance
 //!    contract, extended to the design-space engine).
+//! 4. **Snapshot-cache equivalence** — the programmed-state snapshot
+//!    engine (program once per `(slices, fault_rate)` class × repeat,
+//!    fan dependent points out over clones) is bitwise the per-point
+//!    reference engine on multi-shard + sliced + faulty grids, for
+//!    `design_sweep` and `fault_sweep` alike.
 
 use aihwsim::config::{
     AdcParameters, AdcRange, InferenceRPUConfig, MappingParameter,
 };
 use aihwsim::coordinator::checkpoint::Layers;
-use aihwsim::coordinator::evaluator::mlp_from_layers;
+use aihwsim::coordinator::evaluator::{
+    design_sweep_report, design_sweep_uncached, drift_evaluate_uncached, fault_sweep,
+    mlp_from_layers,
+};
 use aihwsim::coordinator::{design_sweep, sweep_grid, DriftEvalConfig, SweepCell, SweepRow};
 use aihwsim::data::synthetic_images;
 use aihwsim::faults::FaultModel;
@@ -288,5 +296,92 @@ fn design_sweep_rows_are_bitwise_identical_across_thread_counts() {
         assert_eq!(a.point.acc_std, b.point.acc_std);
         assert_eq!(a.point.layer_conductance, b.point.layer_conductance);
         assert_eq!(a.point.acc.len(), 2, "one accuracy per repeat");
+    }
+}
+
+// ---------------------------------------- 5. snapshot-cache equivalence
+
+/// Builder for the snapshot-equivalence tests: a multi-shard mapping
+/// (12×16 → 2×2 shards, 4×12 → 1×2 shards) so clones carry whole tile
+/// grids, not single tiles.
+fn sharded_build(
+    layers: &Layers,
+    cell: &SweepCell,
+    seed: u64,
+) -> aihwsim::nn::Sequential {
+    let mapping = MappingParameter { max_input_size: 8, max_output_size: 6 };
+    let mut icfg = InferenceRPUConfig::default();
+    icfg.slicing.slices = cell.slices;
+    icfg.forward.adc = AdcParameters { bits: cell.adc_bits, range: AdcRange::AutoMax };
+    icfg.faults = FaultModel::stuck(cell.fault_rate);
+    let mut r = Rng::new(seed);
+    let mut net = mlp_from_layers(layers, &mapping, &mut r);
+    net.convert_to_inference(&icfg, &mut r);
+    net
+}
+
+/// The snapshot-cache engine must be bitwise the per-point reference on
+/// a grid that exercises every hard case at once: multi-shard mapping,
+/// multi-slice tiles, stuck faults, and ADC settings that differ within
+/// a programming class. Also pins the work accounting: ADC bits must
+/// collapse into their `(slices, fault_rate)` class.
+#[test]
+fn cached_sweep_is_bitwise_the_per_point_engine_on_sharded_sliced_faulty_grids() {
+    let layers = tiny_layers(&mut Rng::new(14));
+    let ds = synthetic_images(48, 4, 4, 1, &mut Rng::new(2));
+    let cells = sweep_grid(&[1, 2], &[0, 6], &[0.0, 0.05]);
+    let cfg = DriftEvalConfig { times: vec![25.0, 86400.0], n_repeats: 2, batch: 16, seed: 17 };
+    let build = |seed: u64, cell: &SweepCell| sharded_build(&layers, cell, seed);
+    let report = design_sweep_report(&build, &ds, &cells, &cfg);
+    let reference = design_sweep_uncached(&build, &ds, &cells, &cfg);
+    assert_eq!(report.n_points, 32, "8 cells × 2 times × 2 repeats");
+    assert_eq!(report.n_classes, 4, "ADC bits must not split programming classes");
+    assert_eq!(report.n_programmings, 8, "4 classes × 2 repeats");
+    assert_eq!(report.rows.len(), reference.len());
+    for (a, b) in report.rows.iter().zip(&reference) {
+        assert_eq!(a.cell, b.cell);
+        assert_eq!(a.point.t, b.point.t);
+        assert_eq!(a.point.acc, b.point.acc, "cached row diverged from per-point engine");
+        assert_eq!(a.point.acc_mean, b.point.acc_mean);
+        assert_eq!(a.point.acc_std, b.point.acc_std);
+        assert_eq!(a.point.layer_conductance, b.point.layer_conductance);
+    }
+}
+
+/// `fault_sweep` rides the snapshot engine as one flattened point list
+/// (no barrier between rates). It must stay bitwise the legacy
+/// composition — an independent per-rate `drift_evaluate_uncached` —
+/// and thread-invariant at pools of 1 and 4.
+#[test]
+fn fault_sweep_matches_per_rate_reference_and_is_thread_invariant() {
+    let layers = tiny_layers(&mut Rng::new(23));
+    let ds = synthetic_images(48, 4, 4, 1, &mut Rng::new(4));
+    let rates = [0.0f64, 0.05];
+    let cfg = DriftEvalConfig { times: vec![25.0, 3600.0], n_repeats: 2, batch: 16, seed: 29 };
+    let build = |seed: u64, rate: f64| {
+        let cell = SweepCell { slices: 2, adc_bits: 0, fault_rate: rate };
+        sharded_build(&layers, &cell, seed)
+    };
+    let run = |threads: &str| with_threads(threads, || fault_sweep(&build, &ds, &rates, &cfg));
+    let sweep1 = run("1");
+    let sweep4 = run("4");
+    assert_eq!(sweep1.len(), rates.len());
+    for ((rate, report), (rate4, report4)) in sweep1.iter().zip(&sweep4) {
+        // the per-rate legacy reference: reprogram for every point
+        let reference = drift_evaluate_uncached(|s| build(s, *rate), &ds, &cfg);
+        assert_eq!(report.points.len(), reference.points.len());
+        for (a, b) in report.points.iter().zip(&reference.points) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.acc, b.acc, "fault sweep diverged from per-rate reference");
+            assert_eq!(a.acc_mean, b.acc_mean);
+            assert_eq!(a.acc_std, b.acc_std);
+            assert_eq!(a.layer_conductance, b.layer_conductance);
+        }
+        // thread invariance of the flattened engine
+        assert_eq!(rate, rate4);
+        for (a, b) in report.points.iter().zip(&report4.points) {
+            assert_eq!(a.acc, b.acc, "fault sweep must be thread-invariant");
+            assert_eq!(a.layer_conductance, b.layer_conductance);
+        }
     }
 }
